@@ -1,0 +1,40 @@
+//! Data-dependent filters demo (Appendix B): the future-work direction the
+//! paper highlights — causal, input-gated convolution filters — served by
+//! Algorithm 5's parallelogram tiling with *exactly* the lazy semantics.
+//!
+//!     cargo run --release --example datadep_filters
+
+use flash_inference::engine::datadep::{DataDepCfg, DataDepEngine};
+use flash_inference::util::benchkit::fmt_ns;
+
+fn main() {
+    let len: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(2048);
+    let cfg = DataDepCfg { m: 4, d: 32, len, seed: 7 };
+    println!(
+        "data-dependent LCSM: M={} D={} L={len}; rho[l,t] = base[l,t] * sigmoid(y_l[t])",
+        cfg.m, cfg.d
+    );
+    let eng = DataDepEngine::new(cfg);
+
+    println!("\nrunning lazy O(L²) reference ...");
+    let lazy = eng.generate_lazy(len);
+    println!("  {} | {:.2e} mixer FLOPs", fmt_ns(lazy.wall.as_nanos() as f64),
+             lazy.flops.mixer_flops as f64);
+
+    println!("running Algorithm 5 (relaxed parallelogram tiling) ...");
+    let alg5 = eng.generate_alg5(len);
+    println!("  {} | {:.2e} mixer FLOPs | {} tile convs",
+             fmt_ns(alg5.wall.as_nanos() as f64),
+             alg5.flops.mixer_flops as f64,
+             alg5.flops.tau_calls);
+
+    let err = alg5.streams.rel_l2(&lazy.streams);
+    println!("\nexactness: rel_l2(alg5, lazy) = {err:.2e}");
+    println!(
+        "speedup:   {:.2}x wall, {:.1}x FLOPs",
+        lazy.wall.as_secs_f64() / alg5.wall.as_secs_f64(),
+        lazy.flops.mixer_flops as f64 / alg5.flops.mixer_flops as f64
+    );
+    assert!(err < 1e-4, "exactness violated");
+    println!("OK — data-dependent filters served exactly in O(L log² L).");
+}

@@ -1,0 +1,58 @@
+//! Quickstart: load a model build, run Flash Inference, print the result.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Walks the full three-layer stack: the HLO artifacts (lowered once from
+//! JAX/Pallas by `make artifacts`) are compiled on the PJRT CPU client and
+//! driven by the rust tile scheduler — no python anywhere on this path.
+
+use flash_inference::engine::{Engine, EngineOpts, Method};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+use flash_inference::util::benchkit::fmt_ns;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts/synthetic".into());
+    let len: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(512);
+
+    // 1. load the artifact build (manifest + weights + PJRT client)
+    let rt = Runtime::load(&dir)?;
+    let d = rt.dims;
+    println!(
+        "loaded {dir}: {} | M={} mixers, D={} dims, L={} max positions, B={}",
+        d.variant.as_str(), d.m, d.d, d.l, d.b
+    );
+
+    // 2. build the engine: Flash tiling with the calibrated Hybrid tau
+    let mut engine = Engine::new(
+        &rt,
+        EngineOpts { method: Method::Flash, tau: TauKind::Hybrid, ..Default::default() },
+    )?;
+    engine.prewarm(len)?;
+
+    // 3. generate autoregressively
+    let out = engine.generate(len)?;
+    let m = &out.metrics;
+    println!(
+        "generated {} positions in {} — {:.0} tok/s",
+        out.steps,
+        fmt_ns(m.wall.as_nanos() as f64),
+        out.steps as f64 / m.wall.as_secs_f64()
+    );
+    println!(
+        "breakdown: mixer {} ({:.1}%), blocks+head {} , sampling {}",
+        fmt_ns(m.totals.mixer_ns),
+        100.0 * m.totals.mixer_ns / m.totals.total_ns(),
+        fmt_ns(m.totals.step_ns),
+        fmt_ns(m.totals.sample_ns)
+    );
+    println!(
+        "tau calls: {} across {} tile sizes (O(L log^2 L) schedule)",
+        out.flops.tau_calls,
+        out.flops.tau_call_hist.len()
+    );
+    if let Some(tokens) = &out.tokens {
+        println!("first tokens: {:?}", &tokens[0][..tokens[0].len().min(12)]);
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run):
+//! start the HTTP server in-process on the Hyena build, replay a Poisson
+//! workload trace of batched requests over loopback, and report
+//! latency/throughput — a small but real serving deployment of the system.
+//!
+//!     make artifacts && cargo run --release --example serve_and_query
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use flash_inference::config::ServerConfig;
+use flash_inference::metrics::LatencyRecorder;
+use flash_inference::server::Server;
+use flash_inference::trace::{TraceConfig, WorkloadTrace};
+use flash_inference::util::json::Json;
+
+fn post_generate(addr: std::net::SocketAddr, max_tokens: usize) -> anyhow::Result<(usize, f64)> {
+    let body = format!("{{\"max_tokens\": {max_tokens}}}");
+    let raw = format!(
+        "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let t0 = Instant::now();
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(raw.as_bytes())?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let payload = buf.split("\r\n\r\n").nth(1).unwrap_or("{}");
+    let j = Json::parse(payload).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+    let toks = j.get("tokens").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(max_tokens);
+    Ok((toks, latency_ms))
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts/hyena".into());
+    let cfg = ServerConfig {
+        port: 0, // ephemeral
+        artifacts: artifacts.clone().into(),
+        ..Default::default()
+    };
+    println!("starting server on {artifacts} ...");
+    let server = Server::start(cfg)?;
+    println!("serving at http://{}", server.addr);
+
+    // Poisson trace: 24 requests, ~2 rps, 16-128 tokens each
+    let trace = WorkloadTrace::generate(TraceConfig {
+        rate: 2.0,
+        num_requests: 24,
+        min_tokens: 16,
+        max_tokens: 128,
+        seed: 7,
+    });
+    println!(
+        "replaying {} requests over ~{:.1}s ({} tokens total)",
+        trace.requests.len(),
+        trace.duration_s(),
+        trace.total_tokens()
+    );
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let addr = server.addr;
+    for req in trace.requests.clone() {
+        handles.push(std::thread::spawn(move || {
+            let wait = Duration::from_secs_f64(req.arrival_s);
+            let since = t0.elapsed();
+            if wait > since {
+                std::thread::sleep(wait - since);
+            }
+            post_generate(addr, req.max_tokens)
+        }));
+    }
+
+    let mut lat = LatencyRecorder::unbounded();
+    let mut tokens = 0usize;
+    let mut failures = 0usize;
+    for h in handles {
+        match h.join().unwrap() {
+            Ok((toks, ms)) => {
+                tokens += toks;
+                lat.record_ns(ms * 1e6);
+            }
+            Err(e) => {
+                eprintln!("request failed: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n=== serving results ===");
+    println!("requests: {} ok, {} failed", lat.count(), failures);
+    println!("tokens:   {tokens} in {wall:.2}s  ->  {:.1} tok/s", tokens as f64 / wall);
+    println!(
+        "latency:  p50 {:.1}ms  p95 {:.1}ms  max {:.1}ms",
+        lat.percentile_ns(50.0) / 1e6,
+        lat.percentile_ns(95.0) / 1e6,
+        lat.max_ns() / 1e6
+    );
+
+    // scrape the server's own metrics
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(b"GET /metrics HTTP/1.1\r\n\r\n")?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    let metrics = buf.split("\r\n\r\n").nth(1).unwrap_or("");
+    println!("\n=== server metrics ===");
+    for line in metrics.lines().filter(|l| !l.starts_with('#')) {
+        println!("  {line}");
+    }
+    server.stop();
+    Ok(())
+}

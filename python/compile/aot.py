@@ -1,0 +1,284 @@
+"""AOT lowering: JAX/Pallas -> HLO-text artifacts + manifest + weights.
+
+This is the ONLY python entrypoint in the system (`make artifacts`). It
+emits, per model build:
+
+    artifacts/<name>/
+        manifest.json        artifact + config + ABI description
+        model.bin            weights (tensorbin v1)
+        golden.bin           deterministic rollout trace (exactness oracle)
+        step.hlo.txt         per-position red-cell + block chain (Alg 2 l.6-8)
+        filter_gen.hlo.txt   implicit filter -> rho[M, L, D]
+        tau_fft_{U}.hlo.txt  FFT tile, one per power-of-two U (Appendix C)
+        tau_direct_{U}.hlo.txt  Pallas direct tile (Conv1D analogue)
+        prefill_{P}.hlo.txt  optional prompt prefill
+
+HLO *text* is the interchange format: jax >= 0.5 serializes HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` crate binds) rejects; the text parser reassigns ids.
+
+Input-name convention in the manifest:
+    "$name"  runtime value, fresh every call (pending column, token, ...)
+    "@name"  derived once at engine init (rho0, rho DFT caches, ...)
+    "name"   weight from model.bin, uploaded once as a persistent buffer
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as mdl
+from . import tensorbin
+from .kernels.fft_tile import fft_tile
+from .kernels.tile_conv import tile_conv
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _io_entry(name: str, arr_or_spec) -> Dict[str, Any]:
+    shape = list(arr_or_spec.shape)
+    return {"name": name, "shape": shape, "dtype": "f32"}
+
+
+class Build:
+    """One artifact directory for one ModelConfig."""
+
+    def __init__(self, cfg: mdl.ModelConfig, out_dir: str):
+        cfg.validate()
+        self.cfg = cfg
+        self.out = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.weights = mdl.init_weights(cfg)
+        self.manifest: Dict[str, Any] = {
+            "version": 1,
+            "config": {
+                "variant": cfg.variant, "M": cfg.M, "D": cfg.D, "H": cfg.H,
+                "L": cfg.L, "B": cfg.B, "V": cfg.V, "G": cfg.G,
+                "filter_hidden": cfg.filter_hidden,
+                "filter_freqs": cfg.filter_freqs, "seed": cfg.seed,
+            },
+            "weights_file": "model.bin",
+            "golden": None,
+            "artifacts": [],
+        }
+
+    def _emit(self, name: str, fn, arg_names: Sequence[str], args,
+              out_names: Sequence[str], extra: Dict[str, Any] | None = None):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        if not isinstance(outs, tuple):
+            outs = (outs,)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [_io_entry(n, a) for n, a in zip(arg_names, args)],
+            "outputs": [_io_entry(n, o) for n, o in zip(out_names, outs)],
+        }
+        if extra:
+            entry.update(extra)
+        self.manifest["artifacts"].append(entry)
+        print(f"  [{time.time()-t0:6.2f}s] {name}: "
+              f"{[tuple(a.shape) for a in args]} -> {[tuple(o.shape) for o in outs]}")
+
+    # ---- individual artifacts -------------------------------------------
+
+    def emit_filter_gen(self):
+        cfg = self.cfg
+        names = mdl.filter_weight_names(cfg)
+        args = [jax.ShapeDtypeStruct(self.weights[n].shape, jnp.float32)
+                for n in names]
+        self._emit("filter_gen", mdl.filter_gen_fn(cfg), names, args, ["rho"])
+
+    def emit_step(self):
+        cfg = self.cfg
+        step = mdl.step_fn(cfg)
+        wnames = mdl.step_weight_names(cfg)
+        sd = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+        if cfg.variant == "synthetic":
+            arg_names = ["$pending_col", "$a0", "@rho0"] + wnames
+            args = [sd(cfg.M, cfg.B, cfg.D), sd(cfg.B, cfg.D), sd(cfg.M, cfg.D)]
+            out_names = ["streams_col", "out"]
+        else:
+            arg_names = ["$pending_col", "$a0", "$scstate", "@rho0"] + wnames
+            args = [sd(cfg.M, cfg.B, cfg.D), sd(cfg.B, cfg.D),
+                    sd(cfg.ops, 2, cfg.B, 3 * cfg.D), sd(cfg.M, cfg.D)]
+            out_names = ["streams_col", "out", "scstate"]
+        args += [sd(*self.weights[n].shape) for n in wnames]
+        self._emit("step", step, arg_names, args, out_names)
+
+    def emit_taus(self):
+        cfg = self.cfg
+        sd = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+        u = 1
+        while u <= cfg.L // 2:
+            # FFT tile (precomputed filter DFT, split re/im — Appendix C)
+            self._emit(
+                f"tau_fft_{u}",
+                lambda y, re, im: (fft_tile(y, re, im),),
+                ["$y", "@rho_re", "@rho_im"],
+                [sd(cfg.G, u, cfg.D), sd(cfg.G, u + 1, cfg.D),
+                 sd(cfg.G, u + 1, cfg.D)],
+                ["out"],
+                {"kind": "tau_fft", "u": u},
+            )
+            # Pallas direct tile (quadratic in U)
+            self._emit(
+                f"tau_direct_{u}",
+                lambda y, seg: (tile_conv(y, seg),),
+                ["$y", "@rho_seg"],
+                [sd(cfg.G, u, cfg.D), sd(cfg.G, 2 * u, cfg.D)],
+                ["out"],
+                {"kind": "tau_direct", "u": u},
+            )
+            u *= 2
+
+    def emit_prefill(self, P: int):
+        cfg = self.cfg
+        assert 0 < P < cfg.L and P & (P - 1) == 0
+        sd = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+        wnames = mdl.step_weight_names(cfg)
+        fn = mdl.prefill_fn(cfg, P)
+        args = [sd(cfg.B, P, cfg.D), sd(cfg.M, cfg.L, cfg.D)]
+        args += [sd(*self.weights[n].shape) for n in wnames]
+        arg_names = ["$emb", "@rho"] + wnames
+        if cfg.variant == "synthetic":
+            out_names = ["streams", "fut", "out"]
+        else:
+            out_names = ["streams", "fut", "out", "scstate"]
+        self._emit(f"prefill_{P}", fn, arg_names, args, out_names,
+                   {"kind": "prefill", "p": P})
+
+    # ---- golden rollout (exactness oracle for the rust engines) ---------
+
+    def emit_golden(self, steps: int):
+        cfg = self.cfg
+        w = self.weights
+        rho = mdl.filter_gen(cfg, w["filt.w1"], w["filt.b1"], w["filt.w2"],
+                             w["filt.alpha"])
+        rho_np = np.asarray(rho)
+        step = mdl.step_fn(cfg)
+        wnames = mdl.step_weight_names(cfg)
+        ws = [w[n] for n in wnames]
+        rho0 = rho[:, 0, :]
+
+        # deterministic start: embedding of token 0 (hyena) or unit vec
+        if cfg.variant == "hyena":
+            a0 = jnp.tile(w["embed"][0][None, :], (cfg.B, 1))
+        else:
+            a0 = jnp.ones((cfg.B, cfg.D), jnp.float32) / np.sqrt(cfg.D)
+        scstate = (jnp.zeros((cfg.ops, 2, cfg.B, 3 * cfg.D), jnp.float32)
+                   if cfg.variant == "hyena" else None)
+
+        streams = np.zeros((cfg.M, cfg.B, steps, cfg.D), np.float32)
+        outs = []
+        tokens = []
+        a0s = []
+        for i in range(steps):
+            a0s.append(np.asarray(a0))
+            pend = np.zeros((cfg.M, cfg.B, cfg.D), np.float32)
+            for l in range(cfg.M):
+                for j in range(i):
+                    pend[l] += streams[l, :, j, :] * rho_np[l, i - j, :]
+            if cfg.variant == "synthetic":
+                s_col, out = step(jnp.asarray(pend), a0, rho0, *ws)
+                a0 = out  # noise-free sampler (sigma = 0)
+            else:
+                s_col, out, scstate = step(jnp.asarray(pend), a0, scstate,
+                                           rho0, *ws)
+                tok = int(jnp.argmax(out[0]))
+                tokens.append(tok)
+                a0 = jnp.tile(w["embed"][tok][None, :], (cfg.B, 1))
+            streams[:, :, i, :] = np.asarray(s_col)
+            outs.append(np.asarray(out))
+        tensors = {
+            "streams": streams,
+            "outs": np.stack(outs, axis=1),  # [B, steps, ·]
+            "a0s": np.stack(a0s, axis=1),    # [B, steps, D]
+        }
+        if tokens:
+            tensors["tokens"] = np.asarray(tokens, np.float32)[None, :]
+        tensorbin.write(os.path.join(self.out, "golden.bin"), tensors)
+        self.manifest["golden"] = {"file": "golden.bin", "steps": steps}
+        print(f"  golden rollout: {steps} steps")
+
+    def finish(self):
+        tensorbin.write(os.path.join(self.out, "model.bin"),
+                        {k: np.asarray(v) for k, v in self.weights.items()})
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"  wrote {self.out}/manifest.json "
+              f"({len(self.manifest['artifacts'])} artifacts)")
+
+
+def build_one(cfg: mdl.ModelConfig, out_dir: str, golden_steps: int,
+              prefill: int) -> None:
+    print(f"build {out_dir}: variant={cfg.variant} M={cfg.M} D={cfg.D} "
+          f"L={cfg.L} B={cfg.B}")
+    b = Build(cfg, out_dir)
+    b.emit_filter_gen()
+    b.emit_step()
+    b.emit_taus()
+    if prefill:
+        b.emit_prefill(prefill)
+    if golden_steps:
+        b.emit_golden(golden_steps)
+    b.finish()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts root directory")
+    ap.add_argument("--variant", default="both",
+                    choices=["synthetic", "hyena", "both"])
+    ap.add_argument("--m", type=int, default=6)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--hidden", type=int, default=0, help="0 = 2*D")
+    ap.add_argument("--l", type=int, default=4096)
+    ap.add_argument("--b", type=int, default=1)
+    ap.add_argument("--v", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--golden-steps", type=int, default=48)
+    ap.add_argument("--prefill", type=int, default=0,
+                    help="also emit a prefill artifact for this prompt length")
+    ap.add_argument("--name", default="", help="subdirectory name override")
+    args = ap.parse_args()
+
+    variants = ["synthetic", "hyena"] if args.variant == "both" else [args.variant]
+    builds = []
+    for variant in variants:
+        cfg = mdl.ModelConfig(
+            variant=variant, M=args.m, D=args.d,
+            H=args.hidden or 2 * args.d, L=args.l, B=args.b, V=args.v,
+            seed=args.seed)
+        sub = args.name or variant
+        out_dir = os.path.join(args.out, sub)
+        build_one(cfg, out_dir, args.golden_steps, args.prefill)
+        builds.append(sub)
+    # top-level stamp (Makefile dependency anchor)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"builds": builds}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

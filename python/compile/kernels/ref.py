@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+Every Pallas kernel in this package is checked against the functions here
+(pytest + hypothesis). These are also the semantic definition of the tile
+primitive `tau` from the paper:
+
+    tau(y, [l,r], rho, [l',r'])_t = sum_{i=l}^{r} y_i * rho_{t-i}     (Lemma 1)
+
+with the Flash-Inference tile shape l = i-U+1, r = i, l' = i+1, r' = i+U,
+so in tile-local coordinates (j = input offset, k = output offset):
+
+    out[k] = sum_{j=0}^{U-1} y[j] * rho[U + k - j],   k = 0..U-1
+
+where rho is the length-2U filter prefix rho[0..2U-1] (index 0 is unused by
+the tile — it belongs to the red cell / diagonal).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tau_ref(y: jnp.ndarray, rho_seg: jnp.ndarray) -> jnp.ndarray:
+    """Reference tile contribution.
+
+    Args:
+      y:        [G, U, D] tile inputs (positions i-U+1 .. i of the stream).
+      rho_seg:  [G, 2U, D] filter prefix rho[0 .. 2U-1] per group/channel.
+
+    Returns:
+      [G, U, D] contributions to outputs at positions i+1 .. i+U.
+    """
+    G, U, D = y.shape
+    assert rho_seg.shape == (G, 2 * U, D)
+    # out[g, k, d] = sum_j y[g, j, d] * rho[g, U + k - j, d]
+    ks = jnp.arange(U)[:, None]  # [U, 1]
+    js = jnp.arange(U)[None, :]  # [1, U]
+    idx = U + ks - js  # [U, U] values in [1, 2U-1]
+    gathered = rho_seg[:, idx, :]  # [G, U, U, D]
+    return jnp.einsum("gjd,gkjd->gkd", y, gathered)
+
+
+def tau_ref_absolute(y_full: jnp.ndarray, rho: jnp.ndarray, l: int, r: int,
+                     lp: int, rp: int) -> jnp.ndarray:
+    """Lemma-1 tau in absolute coordinates (1-indexed inclusive ranges).
+
+    y_full: [T, D] full stream, rho: [T, D]. Returns [rp-lp+1, D] where
+    row t-lp = sum_{i=l}^{r} y_i * rho_{t-i} for t in [lp, rp].
+    """
+    out = []
+    for t in range(lp, rp + 1):
+        acc = jnp.zeros(y_full.shape[1], y_full.dtype)
+        for i in range(l, r + 1):
+            if 0 <= t - i:
+                acc = acc + y_full[i - 1] * rho[t - i]
+        out.append(acc)
+    return jnp.stack(out)
+
+
+def causal_conv_ref(y: jnp.ndarray, rho: jnp.ndarray) -> jnp.ndarray:
+    """Full causal depthwise convolution (training-style).
+
+    y: [..., T, D], rho: [T, D]  ->  z[..., t, d] = sum_{i<=t} y_i * rho_{t-i}.
+    FFT-based, exact up to f32 roundoff.
+    """
+    T = y.shape[-2]
+    n = 2 * T
+    yf = jnp.fft.rfft(y, n=n, axis=-2)
+    rf = jnp.fft.rfft(rho, n=n, axis=-2)
+    z = jnp.fft.irfft(yf * rf, n=n, axis=-2)
+    return z[..., :T, :].astype(y.dtype)
+
+
+def causal_conv_naive(y: jnp.ndarray, rho: jnp.ndarray) -> jnp.ndarray:
+    """O(T^2) direct causal conv — the ultimate ground truth for tests."""
+    T, D = y.shape[-2], y.shape[-1]
+    out = jnp.zeros_like(y)
+    for t in range(T):
+        acc = jnp.zeros(y.shape[:-2] + (D,), y.dtype)
+        for i in range(t + 1):
+            acc = acc + y[..., i, :] * rho[t - i]
+        out = out.at[..., t, :].set(acc)
+    return out
+
+
+def cmul_ref(are: jnp.ndarray, aim: jnp.ndarray, bre: jnp.ndarray,
+             bim: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Complex multiply on split-real tensors (same shape each)."""
+    return are * bre - aim * bim, are * bim + aim * bre
+
+
+def fft_tile_ref(y: jnp.ndarray, rho_seg: jnp.ndarray) -> jnp.ndarray:
+    """FFT-path tile (Appendix C: one 2U cyclic convolution, middle U kept).
+
+    Same I/O contract as tau_ref; used to check the fft_tile artifact path.
+    """
+    G, U, D = y.shape
+    n = 2 * U
+    yf = jnp.fft.rfft(y, n=n, axis=1)
+    rf = jnp.fft.rfft(rho_seg, n=n, axis=1)
+    z = jnp.fft.irfft(yf * rf, n=n, axis=1)
+    return z[:, U:2 * U, :].astype(y.dtype)

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: direct depthwise tile convolution (the `tau` tile).
+
+This is the quadratic-in-U tile primitive — the analogue of the paper's
+Conv1D / FlashConv1D implementations of tau. Its FLOP count is U^2 * D per
+group, but for small tiles it beats the FFT path because it has no
+transform overhead; the Hybrid dispatcher (rust, L3) picks it for small U
+exactly like the paper's hybrid picks Conv1D/FlashConv1D.
+
+Tile-local contract (see kernels/ref.py):
+
+    out[g, k, d] = sum_{j=0}^{U-1} y[g, j, d] * rho_seg[g, U + k - j, d]
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid is (G, D/BLOCK_D); each
+program holds y[U, BLOCK_D] and rho_seg[2U, BLOCK_D] in VMEM and runs a
+U-step MAC loop on the VPU (depthwise conv has no contraction dimension, so
+the MXU is idle — the FFT path is the MXU-free roofline alternative).
+VMEM footprint: (U + 2U + U) * BLOCK_D * 4B; at U=2048, BLOCK_D=128 this is
+4 MB, comfortably under the ~16 MB budget and double-bufferable.
+
+Kernels are lowered with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode emits plain HLO with identical
+semantics (correctness is what we measure on this testbed — see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# D-blocking used when D is a multiple of the block; otherwise a single
+# program spans the whole D axis (correctness first, structure documented).
+BLOCK_D = 128
+
+
+def _tile_conv_kernel(y_ref, rho_ref, o_ref):
+    """One (g, d-block) program: U-step shifted MAC over the tile."""
+    U = y_ref.shape[0]
+    y = y_ref[...]          # [U, Db]   (VMEM-resident)
+    rho = rho_ref[...]      # [2U, Db]
+
+    def body(j, acc):
+        # rho[U - j + k] for k = 0..U-1  ->  slice [U-j, 2U-j)
+        seg = jax.lax.dynamic_slice_in_dim(rho, U - j, U, axis=0)
+        return acc + y[j][None, :] * seg
+
+    o_ref[...] = jax.lax.fori_loop(0, U, body, jnp.zeros_like(o_ref))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tile_conv(y: jnp.ndarray, rho_seg: jnp.ndarray, *,
+              interpret: bool = True) -> jnp.ndarray:
+    """Direct tile convolution. y: [G, U, D], rho_seg: [G, 2U, D] -> [G, U, D]."""
+    G, U, D = y.shape
+    assert rho_seg.shape == (G, 2 * U, D), (y.shape, rho_seg.shape)
+    db = BLOCK_D if D % BLOCK_D == 0 else D
+    grid = (G, D // db)
+    return pl.pallas_call(
+        _tile_conv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, U, db), lambda g, d: (g, 0, d)),
+            pl.BlockSpec((None, 2 * U, db), lambda g, d: (g, 0, d)),
+        ],
+        out_specs=pl.BlockSpec((None, U, db), lambda g, d: (g, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((G, U, D), y.dtype),
+        interpret=interpret,
+    )(y, rho_seg)

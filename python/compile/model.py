@@ -1,0 +1,366 @@
+"""L2: the LCSM model (JAX), in the paper's a/b decomposition.
+
+Two variants share one artifact ABI (DESIGN.md §1):
+
+  * ``synthetic`` — the paper's §5 synthetic setting: M depthwise long-conv
+    mixers, block_l = MLP(D -> 2D -> D, GELU) with residual, sampler is
+    "last activation + noise" (noise added rust-side).
+  * ``hyena``     — §5.1: M/2 order-3 Hyena operators. Each operator:
+    RMSNorm, in-projection D -> 3D split into (v, x1, x2) after a width-3
+    causal short conv, two long-conv mixers gated by x1/x2, out-projection,
+    residual; LM head over a V-token vocab.
+
+The decomposition mirrors the paper exactly:
+
+  streams[l]  = the sequence the l-th mixer convolves (its `y`),
+  pending[l]  = b_l, the partially-accumulated mixer output, filled by
+                gray tiles (tau, L3) and finished by the red cell here,
+  step        = the per-position red-cell + block chain across all M
+                layers (Algorithms 2-4, lines 6-8), as a lax.scan.
+
+Everything here is lowered ONCE by aot.py to HLO text; python never runs at
+inference time. The `step` scan is the only sequential-in-layers piece —
+the gray tiles (tau artifacts / native rust kernels) are what the paper
+parallelizes across layers (Algorithm 3), and they live entirely in L3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model/artifact configuration (baked into artifact shapes)."""
+
+    variant: str = "synthetic"  # "synthetic" | "hyena"
+    M: int = 6          # number of mixer layers (hyena: 2 * ops)
+    D: int = 64         # embedding dim
+    H: int = 128        # block MLP hidden dim (synthetic)
+    L: int = 4096       # max sequence length (power of two)
+    B: int = 1          # batch (requests stepped in lockstep)
+    V: int = 256        # vocab size (hyena LM head)
+    filter_hidden: int = 32   # implicit-filter MLP hidden dim
+    filter_freqs: int = 8     # sinusoidal feature pairs
+    seed: int = 0
+
+    @property
+    def ops(self) -> int:
+        assert self.variant == "hyena"
+        assert self.M % 2 == 0, "hyena needs an even number of mixers"
+        return self.M // 2
+
+    @property
+    def G(self) -> int:
+        """Fused tile group axis: batch x mixer layers."""
+        return self.B * self.M
+
+    def validate(self) -> None:
+        assert self.variant in ("synthetic", "hyena"), self.variant
+        assert self.L & (self.L - 1) == 0, "L must be a power of two"
+        assert self.M >= 1 and self.D >= 1 and self.B >= 1
+        if self.variant == "hyena":
+            assert self.M % 2 == 0
+
+
+# ---------------------------------------------------------------------------
+# weights
+# ---------------------------------------------------------------------------
+
+def weight_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) list — the step/filter artifact input order
+    and the model.bin tensor inventory are both derived from this."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    M, D, H = cfg.M, cfg.D, cfg.H
+    if cfg.variant == "synthetic":
+        specs += [
+            ("blk.w1", (M, D, H)),
+            ("blk.b1", (M, H)),
+            ("blk.w2", (M, H, D)),
+            ("blk.b2", (M, D)),
+        ]
+    else:
+        ops = cfg.ops
+        specs += [
+            ("op.wp", (ops, D, 3 * D)),      # in-projection
+            ("op.bp", (ops, 3 * D)),
+            ("op.scw", (ops, 3, 3 * D)),     # width-3 causal short conv
+            ("op.wo", (ops, D, D)),          # out-projection
+            ("op.bo", (ops, D)),
+            ("head.wv", (D, cfg.V)),         # LM head
+            ("embed", (cfg.V, D)),           # token embedding (also used rust-side)
+        ]
+    # implicit filter parameterization (shared structure across variants)
+    K = 2 * cfg.filter_freqs + 1
+    specs += [
+        ("filt.w1", (K, cfg.filter_hidden)),
+        ("filt.b1", (cfg.filter_hidden,)),
+        ("filt.w2", (cfg.filter_hidden, M * D)),
+        ("filt.alpha", (M, D)),              # per-channel decay rates
+    ]
+    return specs
+
+
+def filter_weight_names(cfg: ModelConfig) -> List[str]:
+    return ["filt.w1", "filt.b1", "filt.w2", "filt.alpha"]
+
+
+def step_weight_names(cfg: ModelConfig) -> List[str]:
+    if cfg.variant == "synthetic":
+        return ["blk.w1", "blk.b1", "blk.w2", "blk.b2"]
+    return ["op.wp", "op.bp", "op.scw", "op.wo", "op.bo", "head.wv"]
+
+
+def init_weights(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Random init (paper §5: values do not affect runtime). Scales are
+    chosen so activations stay bounded over L-step rollouts."""
+    key = jax.random.PRNGKey(cfg.seed)
+    out: Dict[str, jnp.ndarray] = {}
+    for name, shape in weight_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".b1", ".b2", ".bp", ".bo")):
+            w = jnp.zeros(shape, jnp.float32)
+        elif name == "filt.alpha":
+            # decay exponents in [2, 12]: effective filter support ~ L/alpha
+            w = jax.random.uniform(sub, shape, jnp.float32, 2.0, 12.0)
+        elif name == "op.scw":
+            # near-identity short conv
+            w = 0.1 * jax.random.normal(sub, shape, jnp.float32)
+            w = w.at[:, 0, :].add(1.0)
+        elif name == "embed":
+            w = jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            w = jax.random.normal(sub, shape, jnp.float32) / math.sqrt(fan_in)
+        out[name] = w
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shared nn pieces
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# implicit filter (rho) generation — run once at engine init
+# ---------------------------------------------------------------------------
+
+def pos_features(L: int, freqs: int) -> jnp.ndarray:
+    """Sinusoidal positional features, [L, 2*freqs + 1]."""
+    t = jnp.arange(L, dtype=jnp.float32) / float(L)
+    feats = [t[:, None]]
+    for k in range(1, freqs + 1):
+        feats.append(jnp.sin(2.0 * jnp.pi * k * t)[:, None])
+        feats.append(jnp.cos(2.0 * jnp.pi * k * t)[:, None])
+    return jnp.concatenate(feats, axis=1)
+
+
+def filter_gen(cfg: ModelConfig, w1, b1, w2, alpha) -> jnp.ndarray:
+    """Hyena implicit filter: rho[m, t, d] = decay * MLP(pos_feats)(t).
+
+    Normalized per (m, d) so that sum_t |rho| <= 1: keeps long-rollout
+    activations bounded regardless of random init (values never affect
+    runtime, but NaNs would poison exactness tests).
+    Returns rho in [M, L, D].
+    """
+    feats = pos_features(cfg.L, cfg.filter_freqs)          # [L, K]
+    h = gelu(feats @ w1 + b1)                              # [L, Fh]
+    r = h @ w2                                             # [L, M*D]
+    r = r.reshape(cfg.L, cfg.M, cfg.D).transpose(1, 0, 2)  # [M, L, D]
+    t = jnp.arange(cfg.L, dtype=jnp.float32) / float(cfg.L)
+    decay = jnp.exp(-jnp.abs(alpha)[:, None, :] * t[None, :, None])
+    rho = r * decay
+    norm = jnp.sum(jnp.abs(rho), axis=1, keepdims=True) + 1.0
+    return (rho / norm).astype(jnp.float32)
+
+
+def filter_gen_fn(cfg: ModelConfig):
+    def fn(w1, b1, w2, alpha):
+        return (filter_gen(cfg, w1, b1, w2, alpha),)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# step: per-position red-cell + block chain (Algorithm 2/4 lines 6-8)
+# ---------------------------------------------------------------------------
+
+def step_fn(cfg: ModelConfig):
+    """Build the per-position step function for AOT lowering.
+
+    Inputs (runtime values prefixed $ in the manifest):
+      pending_col [M, B, D]  b_{l,i} accumulated by past gray tiles
+      a0          [B, D]     current token embedding / previous output
+      scstate     [ops, 2, B, 3D]   (hyena only) short-conv state
+      *weights               per step_weight_names(cfg)
+
+    Outputs:
+      streams_col [M, B, D]  mixer-input streams at position i (tile fodder)
+      out         [B, D] (synthetic: a_M) | [B, V] (hyena: logits)
+      rho0 read   happens in-graph: rho0 [M, D] is a runtime input too —
+                  it is a slice of filter_gen output owned by rust.
+      scstate_new            (hyena only)
+    """
+    # NOTE (perf, EXPERIMENTS.md §Perf L2): the layer loop is UNROLLED in
+    # python rather than expressed as lax.scan. XLA-CPU lowers scan to a
+    # while loop with per-iteration dynamic slices of the stacked weights,
+    # which costs ~3x the fused static graph at these sizes (M <= 36); the
+    # unrolled HLO stays small because M is small.
+    if cfg.variant == "synthetic":
+
+        def step(pending_col, a0, rho0, w1, b1, w2, b2):
+            u = a0
+            streams = []
+            for l in range(cfg.M):
+                streams.append(u)
+                b = pending_col[l] + u * rho0[l][None, :]   # red cell
+                h = gelu(rmsnorm(b) @ w1[l] + b1[l])        # block_l
+                u = b + h @ w2[l] + b2[l]                   # residual
+            return jnp.stack(streams), rmsnorm(u)
+
+        return step
+
+    def step(pending_col, a0, scstate, rho0, wp, bp, scw, wo, bo, wv):
+        ops = cfg.ops
+        pend_ops = pending_col.reshape(ops, 2, cfg.B, cfg.D)
+        rho0_ops = rho0.reshape(ops, 2, cfg.D)
+        u = a0
+        streams = []
+        new_states = []
+        for op in range(ops):
+            z = rmsnorm(u) @ wp[op] + bp[op]                 # [B, 3D]
+            # causal width-3 short conv: state = (z_{i-1}, z_{i-2})
+            zc = scw[op, 0][None, :] * z \
+                + scw[op, 1][None, :] * scstate[op, 0] \
+                + scw[op, 2][None, :] * scstate[op, 1]
+            new_states.append(jnp.stack([z, scstate[op, 0]]))
+            v, x1, x2 = jnp.split(zc, 3, axis=-1)
+            b1_ = pend_ops[op, 0] + v * rho0_ops[op, 0][None, :]   # red cell
+            h1 = x1 * b1_                                    # gate (block_{2op})
+            b2_ = pend_ops[op, 1] + h1 * rho0_ops[op, 1][None, :]  # red cell
+            h2 = x2 * b2_                                    # gate (block_{2op+1})
+            u = u + h2 @ wo[op] + bo[op]                     # out-proj + residual
+            streams += [v, h1]
+        logits = rmsnorm(u) @ wv                             # [B, V]
+        return jnp.stack(streams), logits, jnp.stack(new_states)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# full forward (training-style) — tests, golden traces, prefill
+# ---------------------------------------------------------------------------
+
+def forward_fn(cfg: ModelConfig, T: int):
+    """Teacher-forced forward over T positions; must agree exactly (up to
+    f32 roundoff) with running `step` sequentially with lazily computed
+    pending columns. This is the correctness anchor for the whole a/b
+    decomposition."""
+    from .kernels.ref import causal_conv_ref
+
+    if cfg.variant == "synthetic":
+
+        def fwd(emb, rho, w1, b1, w2, b2):
+            # emb [B, T, D]; rho [M, L, D]
+            u = emb
+            streams = []
+            for l in range(cfg.M):
+                streams.append(u)
+                z = causal_conv_ref(u, rho[l, :T])           # [B, T, D]
+                h = gelu(rmsnorm(z) @ w1[l] + b1[l])
+                u = z + h @ w2[l] + b2[l]
+            outs = rmsnorm(u)                                # [B, T, D]
+            return jnp.stack(streams), outs
+
+        return fwd
+
+    def fwd(emb, rho, wp, bp, scw, wo, bo, wv):
+        u = emb  # [B, T, D]
+        streams = []
+        for op in range(cfg.ops):
+            z = rmsnorm(u) @ wp[op] + bp[op]                 # [B, T, 3D]
+            zm1 = jnp.pad(z, ((0, 0), (1, 0), (0, 0)))[:, :T]
+            zm2 = jnp.pad(z, ((0, 0), (2, 0), (0, 0)))[:, :T]
+            zc = scw[op, 0] * z + scw[op, 1] * zm1 + scw[op, 2] * zm2
+            v, x1, x2 = jnp.split(zc, 3, axis=-1)
+            c1 = causal_conv_ref(v, rho[2 * op, :T])
+            h1 = x1 * c1
+            c2 = causal_conv_ref(h1, rho[2 * op + 1, :T])
+            h2 = x2 * c2
+            u = u + h2 @ wo[op] + bo[op]
+            streams += [v, h1]
+        logits = rmsnorm(u) @ wv                             # [B, T, V]
+        return jnp.stack(streams), logits
+
+    return fwd
+
+
+def prefill_fn(cfg: ModelConfig, P: int):
+    """Prompt handling (Massaroli et al. Lemma 2.1 / paper §2.3.1): run a
+    training-style forward over the P prompt positions, then emit the
+    aggregated contribution of prompt streams to every future position
+    ("fill in all contributions of y_[1..P] to z_[P+1..L] and forget the
+    prompt ever existed"). After this, Algorithm 2 runs with re-based
+    indices and P=0 semantics.
+
+    Returns:
+      streams [M, B, P, D], fut [M, B, L-P, D], out (last position),
+      scstate at position P (hyena).
+    """
+    from .kernels.ref import causal_conv_ref
+
+    fwd = forward_fn(cfg, P)
+
+    def future_contrib(streams, rho):
+        # fut[l, b, t, d] = sum_{i=1..P} streams[l,b,i,d] * rho[l, (P+t)-i, d]
+        # one length-2L' FFT per (l, b): pad streams to L, convolve, slice.
+        n = 2 * cfg.L
+        sf = jnp.fft.rfft(streams, n=n, axis=2)              # [M, B, F, D]
+        rf = jnp.fft.rfft(rho, n=n, axis=1)                  # [M, F, D]
+        z = jnp.fft.irfft(sf * rf[:, None], n=n, axis=2)
+        return z[:, :, P:cfg.L, :].astype(jnp.float32)
+
+    if cfg.variant == "synthetic":
+
+        def fn(emb, rho, w1, b1, w2, b2):
+            streams, outs = fwd(emb, rho, w1, b1, w2, b2)
+            fut = future_contrib(streams, rho)
+            return streams, fut, outs[:, -1]
+
+        return fn
+
+    def fn(emb, rho, wp, bp, scw, wo, bo, wv):
+        streams, logits = fwd(emb, rho, wp, bp, scw, wo, bo, wv)
+        fut = future_contrib(streams, rho)
+        # reconstruct short-conv state at the end of the prompt:
+        # state = (z_P, z_{P-1}) per op, where z is the pre-shortconv proj.
+        states = []
+        u = emb
+        for op in range(cfg.ops):
+            z = rmsnorm(u) @ wp[op] + bp[op]
+            zm1 = jnp.pad(z, ((0, 0), (1, 0), (0, 0)))[:, :P]
+            zm2 = jnp.pad(z, ((0, 0), (2, 0), (0, 0)))[:, :P]
+            zc = scw[op, 0] * z + scw[op, 1] * zm1 + scw[op, 2] * zm2
+            v, x1, x2 = jnp.split(zc, 3, axis=-1)
+            c1 = causal_conv_ref(v, rho[2 * op, :P])
+            h1 = x1 * c1
+            c2 = causal_conv_ref(h1, rho[2 * op + 1, :P])
+            h2 = x2 * c2
+            states.append(jnp.stack([z[:, -1], z[:, -2] if P >= 2
+                                     else jnp.zeros_like(z[:, -1])]))
+            u = u + h2 @ wo[op] + bo[op]
+        scstate = jnp.stack(states)                          # [ops, 2, B, 3D]
+        return streams, fut, logits[:, -1], scstate
+
+    return fn

@@ -1,0 +1,65 @@
+"""tensor-bin v1: the weight interchange format between aot.py and rust.
+
+Layout (little-endian):
+
+    8 bytes   magic  b"FTBIN1\\0\\0"
+    8 bytes   u64    header_len (bytes of UTF-8 JSON that follow)
+    N bytes   JSON   {"tensors": [{"name", "shape", "dtype", "offset", "nbytes"}]}
+    ...       raw tensor data, each tensor at `offset` from the start of the
+              data section, contiguous row-major
+
+Only f32 is used today; the dtype field exists so the format never needs a
+version bump for bf16/f64. The rust reader lives in rust/src/model/weights.rs
+and is covered by a byte-level round-trip test on both sides.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"FTBIN1\x00\x00"
+
+
+def write(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    entries = []
+    offset = 0
+    blobs = []
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+        nbytes = arr.nbytes
+        entries.append({
+            "name": name,
+            "shape": list(arr.shape),
+            "dtype": "f32",
+            "offset": offset,
+            "nbytes": nbytes,
+        })
+        blobs.append(arr.tobytes())
+        offset += nbytes
+    header = json.dumps({"tensors": entries}).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def read(path: str) -> Dict[str, np.ndarray]:
+    """Reader (tests + debugging; rust has its own)."""
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        assert magic == MAGIC, f"bad magic {magic!r}"
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen).decode("utf-8"))
+        data = f.read()
+    out = {}
+    for e in header["tensors"]:
+        assert e["dtype"] == "f32"
+        raw = data[e["offset"]:e["offset"] + e["nbytes"]]
+        out[e["name"]] = np.frombuffer(raw, np.float32).reshape(e["shape"]).copy()
+    return out

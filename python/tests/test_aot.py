@@ -1,0 +1,124 @@
+"""AOT pipeline: manifest structure, tensorbin round-trip, artifact ABI.
+
+Builds a tiny config into tmp_path and checks the contract the rust
+runtime depends on (names, shapes, file presence, golden trace shape).
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M, tensorbin
+
+
+@pytest.fixture(scope="module", params=["synthetic", "hyena"])
+def build(request, tmp_path_factory):
+    out = str(tmp_path_factory.mktemp(f"art_{request.param}"))
+    cfg = M.ModelConfig(variant=request.param, M=4, D=16, H=32, L=32, B=1,
+                        V=32, seed=5)
+    aot.build_one(cfg, out, golden_steps=10, prefill=8)
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    return cfg, out, manifest
+
+
+def test_manifest_config(build):
+    cfg, out, man = build
+    c = man["config"]
+    assert c["variant"] == cfg.variant
+    assert (c["M"], c["D"], c["L"], c["B"], c["G"]) == \
+        (cfg.M, cfg.D, cfg.L, cfg.B, cfg.G)
+
+
+def test_all_artifact_files_exist_and_parse(build):
+    cfg, out, man = build
+    names = {a["name"] for a in man["artifacts"]}
+    assert "step" in names and "filter_gen" in names
+    u = 1
+    while u <= cfg.L // 2:
+        assert f"tau_fft_{u}" in names and f"tau_direct_{u}" in names
+        u *= 2
+    for a in man["artifacts"]:
+        path = os.path.join(out, a["file"])
+        assert os.path.exists(path)
+        text = open(path).read()
+        assert text.startswith("HloModule"), a["name"]
+        assert "ENTRY" in text
+
+
+def test_tau_artifact_shapes(build):
+    cfg, out, man = build
+    for a in man["artifacts"]:
+        if a.get("kind") == "tau_fft":
+            u = a["u"]
+            shapes = [tuple(i["shape"]) for i in a["inputs"]]
+            assert shapes == [(cfg.G, u, cfg.D), (cfg.G, u + 1, cfg.D),
+                              (cfg.G, u + 1, cfg.D)]
+            assert tuple(a["outputs"][0]["shape"]) == (cfg.G, u, cfg.D)
+        if a.get("kind") == "tau_direct":
+            u = a["u"]
+            shapes = [tuple(i["shape"]) for i in a["inputs"]]
+            assert shapes == [(cfg.G, u, cfg.D), (cfg.G, 2 * u, cfg.D)]
+
+
+def test_step_io_convention(build):
+    cfg, out, man = build
+    step = next(a for a in man["artifacts"] if a["name"] == "step")
+    in_names = [i["name"] for i in step["inputs"]]
+    assert in_names[0] == "$pending_col"
+    assert in_names[1] == "$a0"
+    assert "@rho0" in in_names
+    # every non-$/@ input exists in model.bin
+    weights = tensorbin.read(os.path.join(out, "model.bin"))
+    for i in step["inputs"]:
+        n = i["name"]
+        if not n.startswith(("$", "@")):
+            assert n in weights
+            assert list(weights[n].shape) == i["shape"]
+
+
+def test_model_bin_roundtrip(build):
+    cfg, out, man = build
+    w0 = M.init_weights(cfg)
+    w1 = tensorbin.read(os.path.join(out, "model.bin"))
+    assert set(w1) == set(w0)
+    for k in w0:
+        np.testing.assert_array_equal(np.asarray(w0[k]), w1[k])
+
+
+def test_golden_trace_shape_and_determinism(build):
+    cfg, out, man = build
+    g = tensorbin.read(os.path.join(out, "golden.bin"))
+    steps = man["golden"]["steps"]
+    assert g["streams"].shape == (cfg.M, cfg.B, steps, cfg.D)
+    assert np.all(np.isfinite(g["streams"]))
+    if cfg.variant == "hyena":
+        assert "tokens" in g
+        assert g["tokens"].shape[1] == steps
+
+
+def test_tensorbin_roundtrip_bytes(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.standard_normal((3, 4)).astype(np.float32),
+        "b.c": rng.standard_normal((2, 1, 5)).astype(np.float32),
+        "scalar": np.asarray([1.5], np.float32),
+    }
+    p = str(tmp_path / "t.bin")
+    tensorbin.write(p, tensors)
+    back = tensorbin.read(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(tensors[k], back[k])
+
+
+def test_hlo_text_is_loadable_format(build):
+    """The HLO text must carry f32 tuples — spot-check the step entry."""
+    cfg, out, man = build
+    text = open(os.path.join(out, "step.hlo.txt")).read()
+    assert "f32[" in text
+    # return_tuple=True: the root is a tuple
+    assert "tuple(" in text or "(f32[" in text

@@ -1,0 +1,159 @@
+"""L2 model correctness: the a/b (streams/pending) decomposition.
+
+The anchor property: running `step` sequentially with *lazily* computed
+pending columns must reproduce the training-style full forward exactly.
+This validates the red-cell/gray-tile split that the whole Flash Inference
+tiling rests on — any indexing error in rho offsets or stream definitions
+breaks it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def lazy_rollout(cfg, w, rho, emb, steps):
+    """Sequential step() with O(i) lazy pending computation (the paper's
+    lazy baseline, in python). Returns streams [M,B,T,D], outs [B,T,·]."""
+    step = M.step_fn(cfg)
+    rho_np = np.asarray(rho)
+    rho0 = rho[:, 0, :]
+    ws = [w[n] for n in M.step_weight_names(cfg)]
+    scstate = (jnp.zeros((cfg.ops, 2, cfg.B, 3 * cfg.D), jnp.float32)
+               if cfg.variant == "hyena" else None)
+    streams = np.zeros((cfg.M, cfg.B, steps, cfg.D), np.float32)
+    outs = []
+    for i in range(steps):
+        pend = np.zeros((cfg.M, cfg.B, cfg.D), np.float32)
+        for l in range(cfg.M):
+            for j in range(i):
+                pend[l] += streams[l, :, j, :] * rho_np[l, i - j, :]
+        a0 = emb[:, i, :]
+        if cfg.variant == "synthetic":
+            s_col, out = step(jnp.asarray(pend), a0, rho0, *ws)
+        else:
+            s_col, out, scstate = step(jnp.asarray(pend), a0, scstate,
+                                       rho0, *ws)
+        streams[:, :, i, :] = np.asarray(s_col)
+        outs.append(np.asarray(out))
+    return streams, np.stack(outs, axis=1)
+
+
+def make(variant, **kw):
+    d = dict(variant=variant, M=4, D=16, H=32, L=64, B=2, V=32, seed=3)
+    d.update(kw)
+    cfg = M.ModelConfig(**d)
+    cfg.validate()
+    w = M.init_weights(cfg)
+    rho = M.filter_gen(cfg, w["filt.w1"], w["filt.b1"], w["filt.w2"],
+                       w["filt.alpha"])
+    return cfg, w, rho
+
+
+@pytest.mark.parametrize("variant", ["synthetic", "hyena"])
+@pytest.mark.parametrize("steps", [1, 2, 17, 24])
+def test_step_matches_forward(variant, steps):
+    cfg, w, rho = make(variant)
+    rng = np.random.default_rng(7)
+    emb = jnp.asarray(rng.standard_normal((cfg.B, steps, cfg.D)), jnp.float32)
+    fwd = M.forward_fn(cfg, steps)
+    ws = [w[n] for n in M.step_weight_names(cfg)]
+    streams_full, outs_full = fwd(emb, rho, *ws)
+    streams_seq, outs_seq = lazy_rollout(cfg, w, rho, emb, steps)
+    np.testing.assert_allclose(streams_seq, np.asarray(streams_full),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(outs_seq, np.asarray(outs_full),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("variant", ["synthetic", "hyena"])
+def test_weight_specs_cover_step_and_filter(variant):
+    cfg, w, _ = make(variant)
+    names = {n for n, _ in M.weight_specs(cfg)}
+    for n in M.step_weight_names(cfg) + M.filter_weight_names(cfg):
+        assert n in names
+    for n, shape in M.weight_specs(cfg):
+        assert tuple(w[n].shape) == shape
+
+
+def test_filter_gen_shape_and_normalization():
+    cfg, w, rho = make("synthetic")
+    assert rho.shape == (cfg.M, cfg.L, cfg.D)
+    # normalized: conv with any bounded stream stays bounded
+    l1 = np.sum(np.abs(np.asarray(rho)), axis=1)
+    assert np.all(l1 <= 1.0 + 1e-5)
+    assert np.all(np.isfinite(np.asarray(rho)))
+
+
+def test_filter_gen_decay():
+    """Later filter taps are exponentially damped."""
+    cfg, w, rho = make("synthetic", L=256)
+    r = np.abs(np.asarray(rho))
+    head = r[:, :32, :].mean()
+    tail = r[:, -32:, :].mean()
+    assert tail < head * 0.5
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 16)),
+                    jnp.float32)
+    y = M.rmsnorm(x)
+    np.testing.assert_allclose(np.mean(np.square(np.asarray(y)), axis=-1),
+                               np.ones(4), rtol=1e-4)
+
+
+@pytest.mark.parametrize("variant", ["synthetic", "hyena"])
+def test_step_deterministic(variant):
+    cfg, w, rho = make(variant)
+    step = M.step_fn(cfg)
+    ws = [w[n] for n in M.step_weight_names(cfg)]
+    rho0 = rho[:, 0, :]
+    rng = np.random.default_rng(0)
+    pend = jnp.asarray(rng.standard_normal((cfg.M, cfg.B, cfg.D)), jnp.float32)
+    a0 = jnp.asarray(rng.standard_normal((cfg.B, cfg.D)), jnp.float32)
+    if variant == "synthetic":
+        o1 = step(pend, a0, rho0, *ws)
+        o2 = step(pend, a0, rho0, *ws)
+    else:
+        sc = jnp.zeros((cfg.ops, 2, cfg.B, 3 * cfg.D), jnp.float32)
+        o1 = step(pend, a0, sc, rho0, *ws)
+        o2 = step(pend, a0, sc, rho0, *ws)
+    for a, b in zip(jax.tree_util.tree_leaves(o1),
+                    jax.tree_util.tree_leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hyena_rejects_odd_m():
+    with pytest.raises(AssertionError):
+        M.ModelConfig(variant="hyena", M=3).validate()
+
+
+def test_l_power_of_two_enforced():
+    with pytest.raises(AssertionError):
+        M.ModelConfig(L=100).validate()
+
+
+@pytest.mark.parametrize("variant", ["synthetic", "hyena"])
+def test_prefill_matches_lazy_continuation(variant):
+    """Prefill fut[l, :, t, :] must equal the prompt's aggregated
+    contribution to position P+1+t — i.e. continuing generation after
+    prefill sees exactly the pending a lazy full-history run would."""
+    P = 8
+    cfg, w, rho = make(variant, L=32)
+    rng = np.random.default_rng(11)
+    emb = jnp.asarray(rng.standard_normal((cfg.B, P, cfg.D)), jnp.float32)
+    ws = [w[n] for n in M.step_weight_names(cfg)]
+    pf = M.prefill_fn(cfg, P)
+    res = pf(emb, rho, *ws)
+    streams, fut = res[0], res[1]
+    rho_np, s_np = np.asarray(rho), np.asarray(streams)
+    for l in range(cfg.M):
+        for t in range(cfg.L - P):
+            want = np.zeros((cfg.B, cfg.D), np.float32)
+            for i in range(P):
+                want += s_np[l, :, i, :] * rho_np[l, (P + t) - i, :]
+            np.testing.assert_allclose(np.asarray(fut)[l, :, t, :], want,
+                                       rtol=3e-4, atol=3e-4)

@@ -1,0 +1,77 @@
+//! Figure 2a: end-to-end inference time breakdown on the Hyena
+//! architecture — Hybrid vs the (layer-parallel) lazy and eager baselines,
+//! across sequence lengths. The paper reports up to 1.6x end-to-end; the
+//! crossover structure (flash wins, margin grows with L) is the claim.
+//!
+//! Knobs: FI_ARTIFACTS_HYENA (dir), FI_MAX_LEN, FI_WARMUP, FI_RUNS.
+
+use flash_inference::engine::{Engine, EngineOpts, Method};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+use flash_inference::util::benchkit::{self, Table};
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) =
+        benchkit::require_artifacts(&benchkit::env_str("FI_ARTIFACTS_HYENA", "artifacts/hyena"))
+    else {
+        return Ok(());
+    };
+    let rt = Runtime::load(&dir)?;
+    let max_len = benchkit::env_usize("FI_MAX_LEN", rt.dims.l);
+    let warmup = benchkit::env_usize("FI_WARMUP", 1);
+    let runs = benchkit::env_usize("FI_RUNS", 2);
+
+    println!("\n=== Fig 2a: end-to-end inference time breakdown (Hyena) ===");
+    println!(
+        "model: M={} D={} B={} | warmup={warmup} runs={runs}\n",
+        rt.dims.m, rt.dims.d, rt.dims.b
+    );
+
+    let methods: [(&str, Method, TauKind); 3] = [
+        ("lazy", Method::Lazy, TauKind::RustDirect),
+        ("eager", Method::Eager, TauKind::RustDirect),
+        ("hybrid", Method::Flash, TauKind::Hybrid),
+    ];
+
+    let mut table = Table::new(&[
+        "L", "method", "total_ms", "mixer_ms", "non_mixer_ms", "tok_per_s", "speedup",
+    ]);
+    let mut len = 256;
+    while len <= max_len {
+        let mut totals: Vec<(String, f64, f64, f64)> = Vec::new();
+        for (name, method, tau) in methods {
+            let mut eng = Engine::new(&rt, EngineOpts { method, tau, ..Default::default() })?;
+            eng.prewarm(len)?;
+            let mut mixer = 0.0;
+            let mut non_mixer = 0.0;
+            let stats = benchkit::bench(warmup, runs, || {
+                let out = eng.generate(len).expect("generate");
+                mixer = out.metrics.totals.mixer_ns;
+                non_mixer = out.metrics.totals.non_mixer_ns();
+            });
+            totals.push((name.to_string(), stats.median_ns, mixer, non_mixer));
+        }
+        let best_baseline =
+            totals.iter().filter(|t| t.0 != "hybrid").map(|t| t.1).fold(f64::MAX, f64::min);
+        for (name, total, mixer, non_mixer) in &totals {
+            table.row(vec![
+                len.to_string(),
+                name.clone(),
+                format!("{:.1}", total / 1e6),
+                format!("{:.1}", mixer / 1e6),
+                format!("{:.1}", non_mixer / 1e6),
+                format!("{:.0}", len as f64 / (total / 1e9)),
+                if name == "hybrid" {
+                    format!("{:.2}x", best_baseline / total)
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+        len *= 4;
+    }
+    table.print();
+    let csv = table.write_csv("fig2a_e2e")?;
+    println!("\ncsv: {}", csv.display());
+    Ok(())
+}

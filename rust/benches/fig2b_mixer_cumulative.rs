@@ -1,0 +1,63 @@
+//! Figure 2b: cumulative time spent in the mixer (long-convolution) part
+//! of Hyena inference as generation progresses — the paper's "50x better
+//! scaling" plot. Quadratic baselines vs the quasilinear tiling.
+//!
+//! Knobs: FI_ARTIFACTS_HYENA, FI_MAX_LEN.
+
+use flash_inference::engine::{Engine, EngineOpts, Method};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+use flash_inference::util::benchkit::{self, Table};
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) =
+        benchkit::require_artifacts(&benchkit::env_str("FI_ARTIFACTS_HYENA", "artifacts/hyena"))
+    else {
+        return Ok(());
+    };
+    let rt = Runtime::load(&dir)?;
+    let len = benchkit::env_usize("FI_MAX_LEN", rt.dims.l);
+
+    println!("\n=== Fig 2b: cumulative mixer time vs position (Hyena, L={len}) ===\n");
+
+    let methods: [(&str, Method, TauKind); 3] = [
+        ("lazy", Method::Lazy, TauKind::RustDirect),
+        ("eager", Method::Eager, TauKind::RustDirect),
+        ("hybrid", Method::Flash, TauKind::Hybrid),
+    ];
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    for (name, method, tau) in methods {
+        let mut eng = Engine::new(&rt, EngineOpts { method, tau, ..Default::default() })?;
+        eng.prewarm(len)?;
+        // one warmup, one measured (paper protocol scaled to this testbed)
+        eng.generate(len)?;
+        let out = eng.generate(len)?;
+        series.push((name.to_string(), out.metrics.cumulative_mixer_ns()));
+    }
+
+    let mut table = Table::new(&["position", "lazy_ms", "eager_ms", "hybrid_ms", "lazy/hybrid"]);
+    let mut cp = 64;
+    while cp <= len {
+        let at = |s: &[f64]| s[cp - 1] / 1e6;
+        let lazy = at(&series[0].1);
+        let eager = at(&series[1].1);
+        let hybrid = at(&series[2].1);
+        table.row(vec![
+            cp.to_string(),
+            format!("{lazy:.1}"),
+            format!("{eager:.1}"),
+            format!("{hybrid:.2}"),
+            format!("{:.1}x", lazy / hybrid.max(1e-9)),
+        ]);
+        cp *= 2;
+    }
+    table.print();
+    let final_ratio = series[0].1[len - 1] / series[2].1[len - 1].max(1e-9);
+    println!(
+        "\nfinal cumulative mixer ratio (lazy/hybrid) at L={len}: {final_ratio:.1}x \
+         (paper: up to 50x at L=2^17 on H100)"
+    );
+    let csv = table.write_csv("fig2b_mixer_cumulative")?;
+    println!("csv: {}", csv.display());
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Figure 2c: per-token response time. Hybrid shows low variance except
+//! spikes exactly at positions processing large tiles — and those are rare
+//! (93.75% of tokens use U <= 8).
+//!
+//! Knobs: FI_ARTIFACTS_HYENA, FI_MAX_LEN.
+
+use flash_inference::engine::{Engine, EngineOpts, Method};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+use flash_inference::tiling::tile_side;
+use flash_inference::util::benchkit::{self, fmt_ns, Table};
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) =
+        benchkit::require_artifacts(&benchkit::env_str("FI_ARTIFACTS_HYENA", "artifacts/hyena"))
+    else {
+        return Ok(());
+    };
+    let rt = Runtime::load(&dir)?;
+    let len = benchkit::env_usize("FI_MAX_LEN", rt.dims.l);
+
+    println!("\n=== Fig 2c: per-token response time (Hyena hybrid, L={len}) ===\n");
+    let mut eng = Engine::new(
+        &rt,
+        EngineOpts { method: Method::Flash, tau: TauKind::Hybrid, ..Default::default() },
+    )?;
+    eng.prewarm(len)?;
+    eng.generate(len)?; // warmup
+    let out = eng.generate(len)?;
+    let lats = out.metrics.token_latencies_ns();
+
+    // bucket by tile side processed at each position
+    let mut table = Table::new(&["tile_U", "positions", "share_%", "mean_tok_ms", "max_tok_ms"]);
+    let mut u = 1usize;
+    while u <= len / 2 {
+        let idx: Vec<usize> =
+            (1..len).filter(|&i| tile_side(i) == u).collect();
+        if idx.is_empty() {
+            break;
+        }
+        let mean = idx.iter().map(|&i| lats[i - 1]).sum::<f64>() / idx.len() as f64;
+        let max = idx.iter().map(|&i| lats[i - 1]).fold(0.0, f64::max);
+        table.row(vec![
+            u.to_string(),
+            idx.len().to_string(),
+            format!("{:.2}", 100.0 * idx.len() as f64 / (len - 1) as f64),
+            format!("{:.3}", mean / 1e6),
+            format!("{:.3}", max / 1e6),
+        ]);
+        u *= 2;
+    }
+    table.print();
+
+    let small = (1..len).filter(|&i| tile_side(i) <= 8).count();
+    println!(
+        "\npositions with U <= 8: {:.2}% (paper: 93.75%)",
+        100.0 * small as f64 / (len - 1) as f64
+    );
+
+    // variance summary + the spike positions
+    let mut sorted = lats.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "token latency: p50 {} | p90 {} | p99 {} | max {}",
+        fmt_ns(sorted[len / 2]),
+        fmt_ns(sorted[len * 9 / 10]),
+        fmt_ns(sorted[len * 99 / 100]),
+        fmt_ns(sorted[len - 1]),
+    );
+    let mut spikes: Vec<(usize, f64)> = (1..=len).map(|i| (i, lats[i - 1])).collect();
+    spikes.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("slowest positions (expect large power-of-two tile sites):");
+    for (pos, ns) in spikes.iter().take(6) {
+        let u = if *pos < len { tile_side(*pos) } else { 0 };
+        println!("  position {pos:>6} (tile U={u:>5}): {}", fmt_ns(*ns));
+    }
+    table.write_csv("fig2c_per_token")?;
+    Ok(())
+}

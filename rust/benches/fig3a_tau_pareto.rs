@@ -1,0 +1,60 @@
+//! Figure 3a: isolated tau latency vs tile size — the four implementations
+//! form a Pareto frontier (direct wins small U on overhead, FFT wins large
+//! U on FLOPs; native beats framework-dispatched at both ends), which the
+//! Hybrid traces.
+//!
+//! Knobs: FI_ARTIFACTS_SYN, FI_MAX_LEN, FI_WARMUP, FI_RUNS.
+
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::{calibrate, RhoCache};
+use flash_inference::util::benchkit::{self, fmt_ns, Table};
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = benchkit::require_artifacts(&benchkit::env_str(
+        "FI_ARTIFACTS_SYN",
+        "artifacts/synthetic",
+    )) else {
+        return Ok(());
+    };
+    let rt = Runtime::load(&dir)?;
+    let max_u = benchkit::env_usize("FI_MAX_LEN", rt.dims.l) / 2;
+    let warmup = benchkit::env_usize("FI_WARMUP", 2);
+    let runs = benchkit::env_usize("FI_RUNS", 4);
+
+    println!("\n=== Fig 3a: tau implementations pareto frontier (synthetic) ===");
+    println!("G={} D={} | per-tile medians over {runs} runs, {warmup} warmup\n", rt.dims.g, rt.dims.d);
+
+    let cache = RhoCache::new(&rt)?;
+    let (table, rows) = calibrate(&cache, max_u, warmup, runs)?;
+
+    let mut t = Table::new(&[
+        "U", "rust_direct", "rust_fft", "pjrt_direct", "pjrt_fft", "winner",
+    ]);
+    for row in &rows {
+        let mut cells = vec![row.u.to_string()];
+        for (_, ns) in &row.medians_ns {
+            cells.push(fmt_ns(*ns));
+        }
+        cells.push(row.winner.as_str().to_string());
+        t.row(cells);
+    }
+    t.print();
+
+    // the frontier claim: the winner changes across the U range
+    let winners: std::collections::BTreeSet<&str> =
+        rows.iter().map(|r| r.winner.as_str()).collect();
+    println!(
+        "\ndistinct per-U winners: {winners:?} — {}",
+        if winners.len() > 1 {
+            "pareto frontier confirmed (no single impl dominates)"
+        } else {
+            "single impl dominates on this testbed"
+        }
+    );
+
+    let path = dir.join("hybrid.json");
+    table.save(&path)?;
+    println!("wrote calibration to {}", path.display());
+    t.write_csv("fig3a_tau_pareto")?;
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Figure 3b: cumulative mixer time of a full generation run under each
+//! fixed tau implementation vs the Hybrid — Hybrid achieves the best of
+//! all of them (it picks the frontier point per tile size).
+//!
+//! Knobs: FI_ARTIFACTS_SYN, FI_MAX_LEN.
+
+use flash_inference::engine::{Engine, EngineOpts, Method};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+use flash_inference::util::benchkit::{self, Table};
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = benchkit::require_artifacts(&benchkit::env_str(
+        "FI_ARTIFACTS_SYN",
+        "artifacts/synthetic",
+    )) else {
+        return Ok(());
+    };
+    let rt = Runtime::load(&dir)?;
+    let len = benchkit::env_usize("FI_MAX_LEN", rt.dims.l.min(2048));
+
+    println!("\n=== Fig 3b: cumulative mixer time per tau impl (synthetic, L={len}) ===\n");
+
+    let kinds = [
+        TauKind::RustDirect,
+        TauKind::RustFft,
+        TauKind::PjrtDirect,
+        TauKind::PjrtFft,
+        TauKind::Hybrid,
+    ];
+    let mut series = Vec::new();
+    for kind in kinds {
+        let mut eng = Engine::new(
+            &rt,
+            EngineOpts { method: Method::Flash, tau: kind, ..Default::default() },
+        )?;
+        eng.prewarm(len)?;
+        eng.generate(len)?; // warmup
+        let out = eng.generate(len)?;
+        series.push((kind, out.metrics.cumulative_mixer_ns()));
+    }
+
+    let mut headers = vec!["position".to_string()];
+    headers.extend(kinds.iter().map(|k| format!("{}_ms", k.as_str().replace('-', "_"))));
+    let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(&hdr_refs);
+    let mut cp = 64;
+    while cp <= len {
+        let mut row = vec![cp.to_string()];
+        for (_, s) in &series {
+            row.push(format!("{:.2}", s[cp - 1] / 1e6));
+        }
+        table.row(row);
+        cp *= 2;
+    }
+    table.print();
+
+    println!("\nfinal cumulative mixer time (lower is better):");
+    let hybrid_total = series.last().unwrap().1[len - 1];
+    for (kind, s) in &series {
+        let total = s[len - 1];
+        println!(
+            "  {:<12} {:>9.2} ms{}",
+            kind.as_str(),
+            total / 1e6,
+            if *kind != TauKind::Hybrid && hybrid_total <= total * 1.05 {
+                "   (hybrid <= this impl ✓)"
+            } else {
+                ""
+            }
+        );
+    }
+    table.write_csv("fig3b_mixer_impls")?;
+    Ok(())
+}

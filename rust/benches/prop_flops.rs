@@ -1,0 +1,77 @@
+//! Propositions 1 & 2: the tau-call histogram (2^{P-1-q} calls of side
+//! 2^q) and the O(L log² L) vs Ω(L²) FLOP totals — measured from an
+//! instrumented run and checked against the closed forms.
+//!
+//! Knobs: FI_ARTIFACTS_SYN, FI_MAX_LEN.
+
+use flash_inference::engine::{Engine, EngineOpts, Method};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+use flash_inference::tiling::{flops, tau_call_histogram};
+use flash_inference::util::benchkit::{self, Table};
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = benchkit::require_artifacts(&benchkit::env_str(
+        "FI_ARTIFACTS_SYN",
+        "artifacts/synthetic",
+    )) else {
+        return Ok(());
+    };
+    let rt = Runtime::load(&dir)?;
+    let (g, d) = (rt.dims.g, rt.dims.d);
+    let mut failures = 0;
+
+    for len in [256usize, benchkit::env_usize("FI_MAX_LEN", rt.dims.l)] {
+        println!("\n=== Propositions 1 & 2 at L={len} (G={g}, D={d}) ===\n");
+        let mut eng = Engine::new(
+            &rt,
+            EngineOpts { method: Method::Flash, tau: TauKind::RustFft, ..Default::default() },
+        )?;
+        eng.prewarm(len)?;
+        let out = eng.generate(len)?;
+
+        // Proposition 1: call histogram
+        let mut table = Table::new(&["U", "measured_calls", "predicted_calls", "ok"]);
+        let predicted: std::collections::BTreeMap<usize, usize> =
+            tau_call_histogram(len).into_iter().collect();
+        for (&u, &c) in &out.flops.tau_call_hist {
+            let want = predicted.get(&u).copied().unwrap_or(0) as u64;
+            if c != want {
+                failures += 1;
+            }
+            table.row(vec![
+                u.to_string(),
+                c.to_string(),
+                want.to_string(),
+                if c == want { "✓".into() } else { "MISMATCH".into() },
+            ]);
+        }
+        table.print();
+
+        // Proposition 2 / §5.4(1): FLOP totals
+        let measured = out.flops.mixer_flops;
+        let predicted_flops = flops::flash_total_flops(len, g, d, true);
+        let lazy = flops::lazy_total_flops(len, g, d);
+        let eager = flops::eager_total_flops(len, g, d);
+        let ok = measured == predicted_flops;
+        if !ok {
+            failures += 1;
+        }
+        println!("\nmixer FLOPs:");
+        println!("  flash measured:  {measured:>16}");
+        println!("  flash predicted: {predicted_flops:>16}  {}", if ok { "✓" } else { "MISMATCH" });
+        println!("  lazy  closed:    {lazy:>16}  ({:.1}x flash)", lazy as f64 / measured as f64);
+        println!("  eager closed:    {eager:>16}");
+        println!(
+            "  tau activation IO: {} values = {:.1}% of the O(L^2) the baselines touch",
+            out.flops.tau_io_values,
+            100.0 * out.flops.tau_io_values as f64 / (lazy as f64 / 2.0 / d as f64 * d as f64)
+        );
+    }
+
+    println!(
+        "\nprop_flops: {}",
+        if failures == 0 { "ALL CHECKS PASS" } else { "FAILURES PRESENT" }
+    );
+    std::process::exit(i32::from(failures > 0));
+}

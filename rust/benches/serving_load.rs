@@ -1,0 +1,98 @@
+//! Serving load test (beyond the paper's figures, backing the serving
+//! claims of the framework): replay Poisson traces against the HTTP
+//! server at increasing arrival rates, report throughput and latency.
+//!
+//! Knobs: FI_ARTIFACTS_SYN, FI_REQS.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use flash_inference::config::ServerConfig;
+use flash_inference::metrics::LatencyRecorder;
+use flash_inference::server::Server;
+use flash_inference::trace::{TraceConfig, WorkloadTrace};
+use flash_inference::util::benchkit::{self, Table};
+
+fn post_generate(addr: std::net::SocketAddr, max_tokens: usize) -> anyhow::Result<f64> {
+    let body = format!("{{\"max_tokens\": {max_tokens}}}");
+    let raw = format!(
+        "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let t0 = Instant::now();
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(raw.as_bytes())?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    anyhow::ensure!(buf.contains("200 OK"), "bad response: {}", &buf[..buf.len().min(200)]);
+    Ok(t0.elapsed().as_secs_f64() * 1e3)
+}
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = benchkit::require_artifacts(&benchkit::env_str(
+        "FI_ARTIFACTS_SYN",
+        "artifacts/synthetic",
+    )) else {
+        return Ok(());
+    };
+    let n = benchkit::env_usize("FI_REQS", 16);
+
+    println!("\n=== serving load: Poisson replay vs arrival rate ===\n");
+    let server = Server::start(ServerConfig {
+        port: 0,
+        artifacts: dir,
+        ..Default::default()
+    })?;
+    let addr = server.addr;
+
+    let mut table = Table::new(&[
+        "rate_rps", "requests", "ok", "wall_s", "tok_per_s", "p50_ms", "p95_ms", "max_ms",
+    ]);
+    for rate in [1.0f64, 4.0, 16.0] {
+        let trace = WorkloadTrace::generate(TraceConfig {
+            rate,
+            num_requests: n,
+            min_tokens: 16,
+            max_tokens: 128,
+            seed: 42,
+        });
+        let total_tokens = trace.total_tokens();
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for req in trace.requests {
+            handles.push(std::thread::spawn(move || {
+                let wait = std::time::Duration::from_secs_f64(req.arrival_s);
+                let since = t0.elapsed();
+                if wait > since {
+                    std::thread::sleep(wait - since);
+                }
+                post_generate(addr, req.max_tokens)
+            }));
+        }
+        let mut lat = LatencyRecorder::unbounded();
+        let mut ok = 0;
+        for h in handles {
+            if let Ok(ms) = h.join().unwrap() {
+                lat.record_ns(ms * 1e6);
+                ok += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            format!("{rate:.0}"),
+            n.to_string(),
+            ok.to_string(),
+            format!("{wall:.2}"),
+            format!("{:.0}", total_tokens as f64 / wall),
+            format!("{:.1}", lat.percentile_ns(50.0) / 1e6),
+            format!("{:.1}", lat.percentile_ns(95.0) / 1e6),
+            format!("{:.1}", lat.max_ns() / 1e6),
+        ]);
+    }
+    table.print();
+    table.write_csv("serving_load")?;
+    server.stop();
+    Ok(())
+}

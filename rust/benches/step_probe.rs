@@ -1,0 +1,107 @@
+//! Perf probe: decompose the per-token `step` cost (upload / execute /
+//! fetch) — the quantitative basis for EXPERIMENTS.md §Perf's conclusion
+//! that the non-mixer path sits at the PJRT-CPU compute floor (the paper's
+//! Fig 3c observation on this testbed).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use flash_inference::runtime::{BoundArtifact, Runtime};
+use flash_inference::util::benchkit;
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = benchkit::require_artifacts(&benchkit::env_str(
+        "FI_ARTIFACTS_SYN",
+        "artifacts/synthetic",
+    )) else {
+        return Ok(());
+    };
+    let rt = Runtime::load(&dir)?;
+    let dims = rt.dims;
+    let (m, b, d, g) = (dims.m, dims.b, dims.d, dims.g);
+    let rho0 = vec![0.01f32; m * d];
+    let mut derived = HashMap::new();
+    derived.insert("@rho0".to_string(), Arc::new(rt.upload(&rho0, &[m, d])?));
+    let step = BoundArtifact::bind(&rt, "step", &derived)?;
+    let pend = vec![0.1f32; g * d];
+    let a0 = vec![0.2f32; b * d];
+    let n = benchkit::env_usize("FI_RUNS", 2000);
+
+    for _ in 0..100 {
+        let pb = rt.upload(&pend, &[m, b, d])?;
+        let ab = rt.upload(&a0, &[b, d])?;
+        let _ = step.call(&[&pb, &ab])?;
+    }
+
+    println!("\n=== step-call cost decomposition ({n} iters) ===\n");
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let _pb = rt.upload(&pend, &[m, b, d])?;
+        let _ab = rt.upload(&a0, &[b, d])?;
+    }
+    let upload = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+
+    let pb = rt.upload(&pend, &[m, b, d])?;
+    let ab = rt.upload(&a0, &[b, d])?;
+    let exe = rt.executable("step")?;
+    let mut wi = Vec::new();
+    for inp in &exe.spec.inputs {
+        if inp.is_weight() {
+            wi.push(rt.weight_buffer(&inp.name)?);
+        }
+    }
+    let rho0b = rt.upload(&rho0, &[m, d])?;
+    let mut widx = 0;
+    let args: Vec<&xla::PjRtBuffer> = exe
+        .spec
+        .inputs
+        .iter()
+        .map(|inp| {
+            if inp.name == "$pending_col" {
+                &pb
+            } else if inp.name == "$a0" {
+                &ab
+            } else if inp.name == "@rho0" {
+                &rho0b
+            } else {
+                let r = wi[widx].as_ref();
+                widx += 1;
+                r
+            }
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let _outs = exe.call_buffers(&args)?;
+    }
+    let execute = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let outs = exe.call_buffers(&args)?;
+        let _lit = outs[0][0].to_literal_sync()?;
+    }
+    let exec_lit = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let outs = step.call(&[&pb, &ab])?;
+        let _v: Vec<f32> = outs[0].to_vec()?;
+    }
+    let full = t0.elapsed().as_secs_f64() * 1e6 / n as f64;
+
+    println!("  upload ($-inputs)      {upload:>8.1} us");
+    println!("  execute (on-device)    {execute:>8.1} us");
+    println!("  + literal fetch        {:>8.1} us", exec_lit - execute);
+    println!("  + decompose + to_vec   {:>8.1} us", full - exec_lit);
+    println!("  = full step            {full:>8.1} us");
+    println!(
+        "\nweight streaming floor: M(2DH)·4B = {} KB/token ⇒ the execute cost \
+         is dominated by real XLA-CPU compute, not dispatch (~10us, cf. the \
+         U=1 pjrt tau call in fig3a).",
+        m * 2 * d * dims.h * 4 / 1024
+    );
+    Ok(())
+}

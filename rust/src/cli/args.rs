@@ -1,0 +1,186 @@
+//! CLI argument parsing substrate (clap is unavailable offline).
+//!
+//! Grammar: `flashinfer <command> [--flag value] [--switch] [positional..]`
+//! Flags may be `--name value` or `--name=value`; unknown flags are
+//! rejected against a per-command schema so typos fail loudly.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+/// Declarative flag schema for one command.
+pub struct Schema {
+    /// flag name -> (takes_value, help)
+    entries: BTreeMap<&'static str, (bool, &'static str)>,
+}
+
+impl Schema {
+    pub fn new() -> Schema {
+        Schema { entries: BTreeMap::new() }
+    }
+
+    pub fn value(mut self, name: &'static str, help: &'static str) -> Schema {
+        self.entries.insert(name, (true, help));
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Schema {
+        self.entries.insert(name, (false, help));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut out = String::new();
+        for (name, (takes, help)) in &self.entries {
+            let arg = if *takes { format!("--{name} <v>") } else { format!("--{name}") };
+            out.push_str(&format!("    {arg:<28} {help}\n"));
+        }
+        out
+    }
+
+    /// Parse `argv` (after the command word).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut switches = BTreeSet::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let Some((takes_value, _)) = self.entries.get(name.as_str()) else {
+                    bail!("unknown flag --{name}\nvalid flags:\n{}", self.help_text());
+                };
+                if *takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        bail!("--{name} takes no value");
+                    }
+                    switches.insert(name);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { values, switches, positional })
+    }
+}
+
+impl Default for Schema {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeSet<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: '{v}' is not a valid integer")),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: '{v}' is not a valid number")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: '{v}' is not a valid integer")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schema() -> Schema {
+        Schema::new()
+            .value("len", "tokens to generate")
+            .value("tau", "tau impl")
+            .switch("verbose", "chatty output")
+    }
+
+    fn parse(s: &[&str]) -> Result<Args> {
+        schema().parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_values_switches_positionals() {
+        let a = parse(&["--len", "256", "--verbose", "artifacts/x", "--tau=hybrid"]).unwrap();
+        assert_eq!(a.get_usize("len", 0).unwrap(), 256);
+        assert_eq!(a.get("tau"), Some("hybrid"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["artifacts/x"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_usize("len", 42).unwrap(), 42);
+        assert_eq!(a.get_or("tau", "hybrid"), "hybrid");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown_flag() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value_and_bad_ints() {
+        assert!(parse(&["--len"]).is_err());
+        let a = parse(&["--len", "abc"]).unwrap();
+        assert!(a.get_usize("len", 0).is_err());
+    }
+
+    #[test]
+    fn switch_with_value_rejected() {
+        assert!(parse(&["--verbose=yes"]).is_err());
+    }
+}

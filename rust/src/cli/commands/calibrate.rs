@@ -1,0 +1,54 @@
+//! `flashinfer calibrate` — measure every τ impl per tile size, print the
+//! Pareto table (Fig 3a's data) and write hybrid.json for the Hybrid τ.
+
+use anyhow::Result;
+
+use crate::cli::args::Schema;
+use crate::runtime::Runtime;
+use crate::tau::{calibrate, RhoCache};
+use crate::util::benchkit::{fmt_ns, Table};
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let schema = Schema::new()
+        .value("artifacts", "artifact build dir (default artifacts/synthetic)")
+        .value("max-u", "largest tile size to calibrate (default L/2)")
+        .value("warmup", "warmup runs per point (default 2, paper protocol)")
+        .value("runs", "measured runs per point (default 4, paper protocol)")
+        .switch("dry-run", "measure and print but do not write hybrid.json")
+        .switch("help", "show this help");
+    if super::maybe_help("flashinfer calibrate", &schema, argv) {
+        return Ok(0);
+    }
+    let a = schema.parse(argv)?;
+    let dir = std::path::PathBuf::from(a.get_or("artifacts", "artifacts/synthetic"));
+
+    let rt = Runtime::load(&dir)?;
+    let max_u = a.get_usize("max-u", rt.dims.l / 2)?;
+    let warmup = a.get_usize("warmup", 2)?;
+    let runs = a.get_usize("runs", 4)?;
+
+    println!(
+        "calibrating tau impls on {} (G={}, D={}, U up to {max_u})",
+        dir.display(), rt.dims.g, rt.dims.d
+    );
+    let cache = RhoCache::new(&rt)?;
+    let (table, rows) = calibrate(&cache, max_u, warmup, runs)?;
+
+    let mut t = Table::new(&["U", "rust-direct", "rust-fft", "pjrt-direct", "pjrt-fft", "winner"]);
+    for row in &rows {
+        let mut cells = vec![row.u.to_string()];
+        for (_, ns) in &row.medians_ns {
+            cells.push(fmt_ns(*ns));
+        }
+        cells.push(row.winner.as_str().to_string());
+        t.row(cells);
+    }
+    t.print();
+
+    if !a.has("dry-run") {
+        let path = dir.join("hybrid.json");
+        table.save(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(0)
+}

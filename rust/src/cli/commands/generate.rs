@@ -1,0 +1,75 @@
+//! `flashinfer generate` — one generation session with a timing report.
+
+use anyhow::Result;
+
+use crate::cli::args::Schema;
+use crate::config::ServerConfig;
+use crate::engine::Engine;
+use crate::runtime::Runtime;
+use crate::util::benchkit::fmt_ns;
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let schema = super::engine_schema(Schema::new())
+        .value("len", "positions to generate (power of two, default 256)")
+        .switch("per-token", "print the per-token latency trace")
+        .switch("flops", "print the FLOP/tau-call accounting");
+    if super::maybe_help("flashinfer generate", &schema, argv) {
+        return Ok(0);
+    }
+    let a = schema.parse(argv)?;
+    let mut cfg = ServerConfig::default();
+    cfg.apply_args(&a)?;
+    let len = a.get_usize("len", 256)?;
+
+    let rt = Runtime::load(&cfg.artifacts)?;
+    let d = rt.dims;
+    println!(
+        "model: variant={} M={} D={} L={} B={} | method={} tau={}",
+        d.variant.as_str(), d.m, d.d, d.l, d.b,
+        cfg.engine.method.as_str(), cfg.engine.tau.as_str()
+    );
+
+    let mut engine = Engine::new(&rt, cfg.engine)?;
+    let t0 = std::time::Instant::now();
+    engine.prewarm(len)?;
+    println!("prewarm: {}", fmt_ns(t0.elapsed().as_nanos() as f64));
+
+    let out = engine.generate(len)?;
+    let m = &out.metrics;
+    println!(
+        "generated {} positions in {} (mixer {}, step {}, sample {})",
+        out.steps,
+        fmt_ns(m.wall.as_nanos() as f64),
+        fmt_ns(m.totals.mixer_ns),
+        fmt_ns(m.totals.step_ns),
+        fmt_ns(m.totals.sample_ns),
+    );
+    println!(
+        "throughput: {:.1} tok/s | mixer share {:.1}%",
+        out.steps as f64 / m.wall.as_secs_f64(),
+        100.0 * m.totals.mixer_ns / m.totals.total_ns()
+    );
+    if let Some(tokens) = &out.tokens {
+        let prefix: Vec<String> =
+            tokens[0].iter().take(16).map(|t| t.to_string()).collect();
+        println!("lane 0 tokens: [{} ...]", prefix.join(", "));
+    }
+
+    if a.has("flops") {
+        println!(
+            "mixer FLOPs: {:.3e} | tau calls: {} | tau IO values: {:.3e}",
+            out.flops.mixer_flops as f64,
+            out.flops.tau_calls,
+            out.flops.tau_io_values as f64
+        );
+        for (u, c) in &out.flops.tau_call_hist {
+            println!("  U={u:>5}: {c} calls");
+        }
+    }
+    if a.has("per-token") {
+        for (i, ns) in out.metrics.token_latencies_ns().iter().enumerate() {
+            println!("{:>6} {}", i + 1, fmt_ns(*ns));
+        }
+    }
+    Ok(0)
+}

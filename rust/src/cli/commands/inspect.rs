@@ -1,0 +1,74 @@
+//! `flashinfer inspect` — print an artifact build's manifest, ABI and
+//! weight inventory (debugging / ops aid).
+
+use anyhow::Result;
+
+use crate::cli::args::Schema;
+use crate::runtime::Manifest;
+use crate::model::Weights;
+use crate::util::benchkit::Table;
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let schema = Schema::new()
+        .value("artifacts", "artifact build dir (default artifacts/synthetic)")
+        .switch("weights", "list every weight tensor")
+        .switch("abi", "list every artifact's inputs/outputs")
+        .switch("help", "show this help");
+    if super::maybe_help("flashinfer inspect", &schema, argv) {
+        return Ok(0);
+    }
+    let a = schema.parse(argv)?;
+    let dir = std::path::PathBuf::from(a.get_or("artifacts", "artifacts/synthetic"));
+
+    let man = Manifest::load(&dir)?;
+    let d = man.dims;
+    println!("artifact build: {}", dir.display());
+    println!(
+        "  variant={} M={} D={} H={} L={} B={} V={} G={}",
+        d.variant.as_str(), d.m, d.d, d.h, d.l, d.b, d.v, d.g
+    );
+    println!("  artifacts: {}", man.artifacts.len());
+    if let Some(g) = &man.golden {
+        println!("  golden: {} steps ({})", g.steps, g.file.display());
+    }
+
+    let mut t = Table::new(&["artifact", "kind", "param", "inputs", "outputs", "file_kb"]);
+    for art in &man.artifacts {
+        let size = std::fs::metadata(man.dir.join(&art.file))
+            .map(|m| m.len() / 1024)
+            .unwrap_or(0);
+        t.row(vec![
+            art.name.clone(),
+            art.kind.clone().unwrap_or_else(|| "-".into()),
+            art.param.map(|p| p.to_string()).unwrap_or_else(|| "-".into()),
+            art.inputs.len().to_string(),
+            art.outputs.len().to_string(),
+            size.to_string(),
+        ]);
+    }
+    t.print();
+
+    if a.has("abi") {
+        for art in &man.artifacts {
+            println!("\n{}:", art.name);
+            for i in &art.inputs {
+                println!("  in  {:<16} {:?}", i.name, i.shape);
+            }
+            for o in &art.outputs {
+                println!("  out {:<16} {:?}", o.name, o.shape);
+            }
+        }
+    }
+
+    if a.has("weights") {
+        let w = Weights::load(&man.weights_file)?;
+        let mut names: Vec<&str> = w.names().collect();
+        names.sort();
+        println!("\nweights ({} tensors):", w.len());
+        for n in names {
+            let t = w.get(n)?;
+            println!("  {:<16} {:?} ({} values)", n, t.shape(), t.len());
+        }
+    }
+    Ok(0)
+}

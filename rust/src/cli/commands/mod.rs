@@ -1,0 +1,72 @@
+//! Subcommand implementations for the `flashinfer` binary.
+
+pub mod calibrate;
+pub mod generate;
+pub mod inspect;
+pub mod serve;
+pub mod validate;
+
+use anyhow::Result;
+
+use super::args::Schema;
+
+pub const USAGE: &str = "\
+flashinfer — Flash Inference for long convolution sequence models (ICLR 2025)
+
+USAGE: flashinfer <command> [flags]
+
+COMMANDS:
+    generate    run one generation session and print timing/output summary
+    serve       start the HTTP serving front-end
+    calibrate   micro-bench tau impls per tile size, write hybrid.json
+    validate    cross-check flash == lazy == eager == python golden
+    inspect     print manifest/config/weights summary for an artifact dir
+
+Run `flashinfer <command> --help` for per-command flags.
+";
+
+/// Dispatch on the command word.
+pub fn run(argv: Vec<String>) -> Result<i32> {
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(2);
+    };
+    let rest = argv[1..].to_vec();
+    match cmd.as_str() {
+        "generate" => generate::run(&rest),
+        "serve" => serve::run(&rest),
+        "calibrate" => calibrate::run(&rest),
+        "validate" => validate::run(&rest),
+        "inspect" => inspect::run(&rest),
+        "--help" | "-h" | "help" => {
+            print!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+/// Flags shared by engine-running commands.
+pub fn engine_schema(s: Schema) -> Schema {
+    s.value("artifacts", "artifact build dir (default artifacts/synthetic)")
+        .value("method", "flash|lazy|eager (default flash)")
+        .value("tau", "rust-direct|rust-fft|pjrt-direct|pjrt-fft|hybrid")
+        .value("threads", "native-tau worker threads (default 0 = inline)")
+        .value("sigma", "synthetic sampler noise (default 0)")
+        .value("temperature", "LM sampling temperature (default 0 = argmax)")
+        .value("top-k", "LM top-k (default 0 = all)")
+        .value("seed", "sampler seed (default 0)")
+        .switch("help", "show this help")
+}
+
+pub fn maybe_help(args_help: &str, schema: &Schema, argv: &[String]) -> bool {
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{args_help}\nFLAGS:\n{}", schema.help_text());
+        return true;
+    }
+    false
+}

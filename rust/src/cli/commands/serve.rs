@@ -1,0 +1,40 @@
+//! `flashinfer serve` — start the HTTP serving front-end.
+
+use anyhow::Result;
+
+use crate::cli::args::Schema;
+use crate::config::ServerConfig;
+use crate::server::Server;
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let schema = super::engine_schema(Schema::new())
+        .value("config", "JSON config file (defaults < file < flags)")
+        .value("host", "bind host (default 127.0.0.1)")
+        .value("port", "bind port (default 7070)")
+        .value("batch-window-ms", "batcher fill window (default 5)")
+        .value("max-tokens", "default tokens per request (default 256)");
+    if super::maybe_help("flashinfer serve", &schema, argv) {
+        return Ok(0);
+    }
+    let a = schema.parse(argv)?;
+    let mut cfg = match a.get("config") {
+        Some(path) => ServerConfig::from_file(std::path::Path::new(path))?,
+        None => ServerConfig::default(),
+    };
+    cfg.apply_args(&a)?;
+
+    let server = Server::start(cfg.clone())?;
+    println!(
+        "flashinfer serving {} on http://{} (batch B from artifacts, window {}ms)",
+        cfg.artifacts.display(),
+        server.addr,
+        cfg.batch_window_ms
+    );
+    println!("  GET  /health | GET /metrics | GET /v1/info");
+    println!("  POST /v1/generate  {{\"max_tokens\": 128}}");
+
+    // serve until killed
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

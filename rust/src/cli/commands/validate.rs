@@ -1,0 +1,102 @@
+//! `flashinfer validate` — exactness audit: flash == lazy == eager across
+//! every τ implementation, plus the python golden rollout when present.
+//! This is the runnable form of the paper's "exact inference" claim.
+
+use anyhow::Result;
+
+use crate::cli::args::Schema;
+use crate::engine::{Engine, EngineOpts, Method};
+use crate::model::Weights;
+use crate::runtime::Runtime;
+use crate::tau::TauKind;
+use crate::util::benchkit::Table;
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let schema = Schema::new()
+        .value("artifacts", "artifact build dir (default artifacts/synthetic)")
+        .value("len", "positions to generate (default 64)")
+        .value("tol", "relative L2 tolerance (default 1e-4)")
+        .switch("help", "show this help");
+    if super::maybe_help("flashinfer validate", &schema, argv) {
+        return Ok(0);
+    }
+    let a = schema.parse(argv)?;
+    let dir = std::path::PathBuf::from(a.get_or("artifacts", "artifacts/synthetic"));
+    let len = a.get_usize("len", 64)?;
+    let tol = a.get_f32("tol", 1e-4)?;
+
+    let rt = Runtime::load(&dir)?;
+    println!("validating {} at len={len}, tol={tol}", dir.display());
+
+    let gen = |method: Method, tau: TauKind| -> Result<crate::engine::GenOutput> {
+        let mut eng = Engine::new(
+            &rt,
+            EngineOpts { method, tau, record_streams: true, ..Default::default() },
+        )?;
+        eng.generate(len)
+    };
+
+    let reference = gen(Method::Lazy, TauKind::RustDirect)?;
+    let ref_streams = reference.streams.as_ref().unwrap();
+
+    let mut table = Table::new(&["engine", "tau", "rel_l2_vs_lazy", "status"]);
+    let mut failures = 0;
+    let mut check = |name: &str, tau: &str, err: f32| {
+        let ok = err < tol;
+        if !ok {
+            failures += 1;
+        }
+        table.row(vec![
+            name.into(),
+            tau.into(),
+            format!("{err:.2e}"),
+            if ok { "OK".into() } else { "FAIL".into() },
+        ]);
+    };
+
+    let eager = gen(Method::Eager, TauKind::RustDirect)?;
+    check("eager", "-", eager.streams.as_ref().unwrap().rel_l2(ref_streams));
+    for tau in TauKind::ALL_FIXED.iter().chain([TauKind::Hybrid].iter()) {
+        let out = gen(Method::Flash, *tau)?;
+        check("flash", tau.as_str(), out.streams.as_ref().unwrap().rel_l2(ref_streams));
+    }
+    table.print();
+
+    // golden rollout comparison (python lazy reference from aot.py)
+    if let Some(golden) = &rt.manifest.golden {
+        let g = Weights::load(&golden.file)?;
+        let want = g.get("streams")?;
+        let steps = golden.steps.min(len);
+        let dims = rt.dims;
+        let mut max_err = 0.0f32;
+        for m in 0..dims.m {
+            for b in 0..dims.b {
+                let gi = m * dims.b + b;
+                for t in 0..steps {
+                    let row = ref_streams.at2(gi, t);
+                    for k in 0..dims.d {
+                        let w = want.data()[((m * dims.b + b) * golden.steps + t) * dims.d + k];
+                        max_err = max_err.max((row[k] - w).abs());
+                    }
+                }
+            }
+        }
+        let ok = max_err < 5e-3;
+        println!(
+            "python golden ({} steps): max_abs_err = {max_err:.2e} {}",
+            steps,
+            if ok { "OK" } else { "FAIL" }
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+
+    if failures == 0 {
+        println!("validate: ALL OK");
+        Ok(0)
+    } else {
+        println!("validate: {failures} FAILURES");
+        Ok(1)
+    }
+}

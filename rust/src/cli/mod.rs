@@ -1,0 +1,4 @@
+//! Command-line interface: argument parsing substrate + subcommands.
+
+pub mod args;
+pub mod commands;

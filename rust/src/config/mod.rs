@@ -1,0 +1,177 @@
+//! Configuration system: JSON config files + CLI overrides, layered as
+//! defaults < file < flags (the launcher pattern of vLLM/MaxText-style
+//! frameworks, sized to this system).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::cli::args::Args;
+use crate::engine::{EngineOpts, Method};
+use crate::tau::TauKind;
+use crate::util::json::Json;
+
+/// Server-level configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub host: String,
+    pub port: u16,
+    /// Artifact build directory (one model per server).
+    pub artifacts: PathBuf,
+    /// How long the batcher waits to fill a batch before running it.
+    pub batch_window_ms: u64,
+    /// Default/maximum tokens per request.
+    pub default_max_tokens: usize,
+    pub max_max_tokens: usize,
+    pub engine: EngineOpts,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            host: "127.0.0.1".into(),
+            port: 7070,
+            artifacts: PathBuf::from("artifacts/synthetic"),
+            batch_window_ms: 5,
+            default_max_tokens: 256,
+            max_max_tokens: 4096,
+            engine: EngineOpts::default(),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Layer a JSON config file over the defaults.
+    pub fn from_file(path: &Path) -> Result<ServerConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut cfg = ServerConfig::default();
+        cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.get("host").and_then(Json::as_str) {
+            self.host = v.to_string();
+        }
+        if let Some(v) = j.get("port").and_then(Json::as_usize) {
+            self.port = v as u16;
+        }
+        if let Some(v) = j.get("artifacts").and_then(Json::as_str) {
+            self.artifacts = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("batch_window_ms").and_then(Json::as_usize) {
+            self.batch_window_ms = v as u64;
+        }
+        if let Some(v) = j.get("default_max_tokens").and_then(Json::as_usize) {
+            self.default_max_tokens = v;
+        }
+        if let Some(v) = j.get("max_max_tokens").and_then(Json::as_usize) {
+            self.max_max_tokens = v;
+        }
+        if let Some(e) = j.get("engine") {
+            if let Some(v) = e.get("method").and_then(Json::as_str) {
+                self.engine.method = Method::parse(v)?;
+            }
+            if let Some(v) = e.get("tau").and_then(Json::as_str) {
+                self.engine.tau = TauKind::parse(v)?;
+            }
+            if let Some(v) = e.get("threads").and_then(Json::as_usize) {
+                self.engine.threads = v;
+            }
+            if let Some(v) = e.get("sample_sigma").and_then(Json::as_f64) {
+                self.engine.sample_sigma = v as f32;
+            }
+            if let Some(v) = e.get("temperature").and_then(Json::as_f64) {
+                self.engine.temperature = v as f32;
+            }
+            if let Some(v) = e.get("top_k").and_then(Json::as_usize) {
+                self.engine.top_k = v;
+            }
+            if let Some(v) = e.get("seed").and_then(Json::as_i64) {
+                self.engine.seed = v as u64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Layer CLI flags (highest precedence).
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(v) = a.get("host") {
+            self.host = v.to_string();
+        }
+        self.port = a.get_usize("port", self.port as usize)? as u16;
+        if let Some(v) = a.get("artifacts") {
+            self.artifacts = PathBuf::from(v);
+        }
+        self.batch_window_ms = a.get_u64("batch-window-ms", self.batch_window_ms)?;
+        self.default_max_tokens = a.get_usize("max-tokens", self.default_max_tokens)?;
+        if let Some(v) = a.get("method") {
+            self.engine.method = Method::parse(v)?;
+        }
+        if let Some(v) = a.get("tau") {
+            self.engine.tau = TauKind::parse(v)?;
+        }
+        self.engine.threads = a.get_usize("threads", self.engine.threads)?;
+        self.engine.sample_sigma = a.get_f32("sigma", self.engine.sample_sigma)?;
+        self.engine.temperature = a.get_f32("temperature", self.engine.temperature)?;
+        self.engine.top_k = a.get_usize("top-k", self.engine.top_k)?;
+        self.engine.seed = a.get_u64("seed", self.engine.seed)?;
+        Ok(())
+    }
+
+    pub fn bind_addr(&self) -> String {
+        format!("{}:{}", self.host, self.port)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::args::Schema;
+
+    #[test]
+    fn defaults_then_json_then_args() {
+        let mut cfg = ServerConfig::default();
+        let j = Json::parse(
+            r#"{"port": 9000, "engine": {"method": "lazy", "tau": "rust-fft",
+                "temperature": 0.5}}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.port, 9000);
+        assert_eq!(cfg.engine.method, Method::Lazy);
+        assert_eq!(cfg.engine.tau, TauKind::RustFft);
+
+        let schema = Schema::new()
+            .value("port", "")
+            .value("method", "")
+            .value("tau", "")
+            .value("threads", "")
+            .value("sigma", "")
+            .value("temperature", "")
+            .value("top-k", "")
+            .value("seed", "")
+            .value("host", "")
+            .value("artifacts", "")
+            .value("batch-window-ms", "")
+            .value("max-tokens", "");
+        let a = schema
+            .parse(&["--method".to_string(), "flash".to_string(), "--port".to_string(), "7071".to_string()])
+            .unwrap();
+        cfg.apply_args(&a).unwrap();
+        assert_eq!(cfg.port, 7071);
+        assert_eq!(cfg.engine.method, Method::Flash);
+        // json-set value survives when no flag overrides it
+        assert!((cfg.engine.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(cfg.bind_addr(), "127.0.0.1:7071");
+    }
+
+    #[test]
+    fn bad_method_in_json_is_an_error() {
+        let mut cfg = ServerConfig::default();
+        let j = Json::parse(r#"{"engine": {"method": "warp"}}"#).unwrap();
+        assert!(cfg.apply_json(&j).is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Eager baseline (§3.1.1, Figure 1 bottom-left): as soon as a stream
+//! value is produced, push its contribution to *every* future pending
+//! position — O(L-i) MACs per lane at position i, Ω(L²) total.
+
+use crate::tiling::FlopCounter;
+use crate::util::tensor::Tensor;
+
+/// After `streams[:, i-1]` is written, accumulate
+/// `pending[g, t-1] += streams[g, i-1] ⊙ rho[m, t-i]` for `t in (i, len]`.
+pub fn eager_push(
+    streams: &Tensor,
+    pending: &mut Tensor,
+    rho: &Tensor,
+    b: usize,
+    i: usize,
+    len: usize,
+    flops: &mut FlopCounter,
+) {
+    let (g, d) = (streams.shape()[0], streams.shape()[2]);
+    if i >= len {
+        return;
+    }
+    let span = len - i;
+    for gi in 0..g {
+        let m = gi / b;
+        let y = streams.at2(gi, i - 1);
+        let dst = pending.block_mut(gi, i, len);
+        let rseg = rho.block(m, 1, span + 1);
+        for t in 0..span {
+            let o = &mut dst[t * d..(t + 1) * d];
+            let r = &rseg[t * d..(t + 1) * d];
+            for k in 0..d {
+                o[k] += y[k] * r[k];
+            }
+        }
+    }
+    flops.record_red(2 * span as u64 * g as u64 * d as u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pushes_to_all_future_positions() {
+        let mut streams = Tensor::zeros(&[1, 4, 1]);
+        streams.at2_mut(0, 0)[0] = 2.0;
+        let rho = Tensor::from_vec(&[1, 4, 1], vec![10.0, 100.0, 1000.0, 10000.0]).unwrap();
+        let mut pending = Tensor::zeros(&[1, 4, 1]);
+        let mut fl = FlopCounter::new();
+        eager_push(&streams, &mut pending, &rho, 1, 1, 4, &mut fl);
+        // pending[t] = y1 * rho[t-1] for t = 2..4
+        assert_eq!(pending.at2(0, 1)[0], 200.0);
+        assert_eq!(pending.at2(0, 2)[0], 2000.0);
+        assert_eq!(pending.at2(0, 3)[0], 20000.0);
+        assert_eq!(pending.at2(0, 0)[0], 0.0);
+        assert_eq!(fl.mixer_flops, 2 * 3);
+    }
+
+    #[test]
+    fn last_position_pushes_nothing() {
+        let streams = Tensor::zeros(&[1, 2, 1]);
+        let rho = Tensor::zeros(&[1, 2, 1]);
+        let mut pending = Tensor::zeros(&[1, 2, 1]);
+        let mut fl = FlopCounter::new();
+        eager_push(&streams, &mut pending, &rho, 1, 2, 2, &mut fl);
+        assert_eq!(fl.mixer_flops, 0);
+    }
+}

@@ -1,0 +1,57 @@
+//! Lazy baseline (§3.1.1, Figure 1 top-left): compute each pending column
+//! from scratch when it is needed — O(i) MACs per lane at position i,
+//! Ω(L²) total, touching the entire stream history every token.
+
+use crate::tiling::FlopCounter;
+use crate::util::tensor::Tensor;
+
+/// Compute `col[g] = sum_{j=1}^{i-1} streams[g, j-1] ⊙ rho[m, i-j]` for
+/// 1-indexed position `i` into `buf` (`[G, D]`). The red cell (j = i) is
+/// handled inside `step`, exactly as in the flash engine.
+pub fn lazy_pending_col(
+    streams: &Tensor,
+    rho: &Tensor,
+    b: usize,
+    i: usize,
+    buf: &mut Vec<f32>,
+    flops: &mut FlopCounter,
+) {
+    let (g, _, d) = (streams.shape()[0], streams.shape()[1], streams.shape()[2]);
+    buf.resize(g * d, 0.0);
+    buf.fill(0.0);
+    for gi in 0..g {
+        let m = gi / b;
+        let col = &mut buf[gi * d..(gi + 1) * d];
+        for j in 1..i {
+            let y = streams.at2(gi, j - 1);
+            let r = rho.at2(m, i - j);
+            crate::util::tensor::ops::add_mul(col, y, r);
+        }
+    }
+    if i > 1 {
+        flops.record_red(2 * (i as u64 - 1) * g as u64 * d as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_hand_computation() {
+        // G=1, D=1: streams = [2, 3], rho = [r0, r1, r2] = [10, 100, 1000]
+        let mut streams = Tensor::zeros(&[1, 4, 1]);
+        streams.at2_mut(0, 0)[0] = 2.0;
+        streams.at2_mut(0, 1)[0] = 3.0;
+        let rho = Tensor::from_vec(&[1, 4, 1], vec![10.0, 100.0, 1000.0, 10000.0]).unwrap();
+        let mut buf = Vec::new();
+        let mut fl = FlopCounter::new();
+        // i=3: col = y1*rho[2] + y2*rho[1] = 2*1000 + 3*100 = 2300
+        lazy_pending_col(&streams, &rho, 1, 3, &mut buf, &mut fl);
+        assert_eq!(buf, vec![2300.0]);
+        assert_eq!(fl.mixer_flops, 2 * 2);
+        // i=1: empty sum
+        lazy_pending_col(&streams, &rho, 1, 1, &mut buf, &mut fl);
+        assert_eq!(buf, vec![0.0]);
+    }
+}

@@ -1,0 +1,488 @@
+//! The inference engine: Algorithm 2/3's token loop over the PJRT `step`
+//! artifact and the τ gray tiles, plus the lazy/eager baselines (§3.1.1)
+//! on identical plumbing so every method is exactly comparable.
+//!
+//! Loop shape (Flash, per position i = 1..len):
+//!
+//! 1. `pending[:, i]` column + current `a0` → `step` artifact → red cells,
+//!    blocks, head (sequential across layers — the only part that must be);
+//! 2. sampler: `out` → next `a0` (and token ids for the LM variant);
+//! 3. gray tile `Tile::at(i)`: one τ call covering ALL layers at once
+//!    (Algorithm 3's across-layer parallelism as batching over `G = M·B`).
+//!
+//! The lazy engine replaces (3) with an O(i) recomputation of the next
+//! pending column; the eager engine replaces (3) with an O(len-i) push to
+//! all future columns. All three share `step`, the sampler, the store and
+//! the metrics, so Fig 2a/2b/2c compare only what the paper compares.
+
+pub mod datadep;
+pub mod eager;
+pub mod lazy;
+pub mod sampler;
+pub mod store;
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use sampler::{Sampler, SamplerCfg};
+pub use store::Store;
+
+use crate::metrics::{Breakdown, SessionMetrics};
+use crate::model::Variant;
+use crate::runtime::{BoundArtifact, Runtime};
+use crate::tau::{make_impl, RhoCache, TauKind};
+use crate::tiling::{FlopCounter, Tile};
+use crate::util::tensor::Tensor;
+
+/// Inference scheduling method.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// The paper's tiled O(L log² L) algorithm.
+    Flash,
+    /// O(L²) recompute-on-demand baseline.
+    Lazy,
+    /// O(L²) push-on-produce baseline.
+    Eager,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "flash" => Method::Flash,
+            "lazy" => Method::Lazy,
+            "eager" => Method::Eager,
+            other => bail!("unknown method '{other}' (flash|lazy|eager)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Method::Flash => "flash",
+            Method::Lazy => "lazy",
+            Method::Eager => "eager",
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOpts {
+    pub method: Method,
+    /// τ implementation (Flash only).
+    pub tau: TauKind,
+    /// Worker threads for native τ across-layer parallelism (0 = inline).
+    pub threads: usize,
+    /// Synthetic sampler noise (0 ⇒ deterministic golden rollout).
+    pub sample_sigma: f32,
+    /// LM sampling temperature (0 ⇒ argmax) and top-k (0 ⇒ all).
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+    /// Keep the full streams tensor in the output (tests/validation).
+    pub record_streams: bool,
+    /// Appendix D: store only M x (L/2) x D activations by reusing the
+    /// first half's rows for the second half (Flash method only).
+    pub half_store: bool,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts {
+            method: Method::Flash,
+            tau: TauKind::Hybrid,
+            threads: 0,
+            sample_sigma: 0.0,
+            temperature: 0.0,
+            top_k: 0,
+            seed: 0,
+            record_streams: false,
+            half_store: false,
+        }
+    }
+}
+
+/// Result of one generation session.
+#[derive(Debug)]
+pub struct GenOutput {
+    pub steps: usize,
+    /// Sampled token ids `[B][steps]` (LM variant only).
+    pub tokens: Option<Vec<Vec<u32>>>,
+    /// The step artifact's `out` at the last position (`[B, W]`).
+    pub last_out: Vec<f32>,
+    /// Per-position checksum of `out` (cheap whole-trajectory equality).
+    pub outs_checksum: Vec<f32>,
+    /// f32 values resident in the activation store (Appendix D accounting).
+    pub resident_values: usize,
+    pub metrics: SessionMetrics,
+    pub flops: FlopCounter,
+    /// Full `[G, steps, D]` streams tensor (when `record_streams`).
+    pub streams: Option<Tensor>,
+}
+
+/// A loaded model ready to run generation sessions.
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    pub cache: RhoCache<'rt>,
+    step: BoundArtifact,
+    opts: EngineOpts,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, opts: EngineOpts) -> Result<Engine<'rt>> {
+        let cache = RhoCache::new(rt).context("build rho cache")?;
+        let mut derived = std::collections::HashMap::new();
+        derived.insert("@rho0".to_string(), cache.rho0_buf.clone());
+        let step = BoundArtifact::bind(rt, "step", &derived).context("bind step artifact")?;
+        Ok(Engine { rt, cache, step, opts })
+    }
+
+    pub fn opts(&self) -> &EngineOpts {
+        &self.opts
+    }
+
+    pub fn runtime(&self) -> &'rt Runtime {
+        self.rt
+    }
+
+    /// Pre-compile/pre-derive everything a `len`-token session needs so the
+    /// measured loop contains no one-time costs (benches call this).
+    pub fn prewarm(&mut self, len: usize) -> Result<()> {
+        let with_pjrt = matches!(
+            self.opts.tau,
+            TauKind::PjrtDirect | TauKind::PjrtFft | TauKind::Hybrid
+        ) && self.opts.method == Method::Flash;
+        if self.opts.method == Method::Flash {
+            self.cache.prewarm(len / 2, with_pjrt)?;
+        }
+        Ok(())
+    }
+
+    fn make_sampler(&self) -> Result<Sampler> {
+        let dims = self.rt.dims;
+        Ok(match dims.variant {
+            Variant::Synthetic => Sampler::synthetic(self.opts.sample_sigma, self.opts.seed),
+            Variant::Hyena => {
+                let embed = self.rt.weights.get("embed")?.clone();
+                Sampler::lm(self.opts.temperature, self.opts.top_k, embed, self.opts.seed)
+            }
+        })
+    }
+
+    /// Initial `a0` — must mirror aot.py's golden rollout start exactly:
+    /// synthetic: 1/sqrt(D) everywhere; hyena: embedding of token 0.
+    fn initial_a0(&self) -> Result<Vec<f32>> {
+        let dims = self.rt.dims;
+        match dims.variant {
+            Variant::Synthetic => {
+                Ok(vec![1.0 / (dims.d as f32).sqrt(); dims.b * dims.d])
+            }
+            Variant::Hyena => {
+                let embed = self.rt.weights.get("embed")?;
+                let mut a0 = vec![0.0; dims.b * dims.d];
+                for bi in 0..dims.b {
+                    a0[bi * dims.d..(bi + 1) * dims.d].copy_from_slice(embed.row(0));
+                }
+                Ok(a0)
+            }
+        }
+    }
+
+    /// Autoregressively generate `len` positions (power of two, ≤ L).
+    pub fn generate(&mut self, len: usize) -> Result<GenOutput> {
+        let init = SessionInit { a0: self.initial_a0()?, ..Default::default() };
+        self.run_session(len, init)
+    }
+
+    /// Teacher-forced generation: the first `forced.len()/(B·D)` inputs are
+    /// taken from `forced` (`[T0, B, D]`) instead of the sampler. Used for
+    /// prompt processing validation (paper §2.3.1's setting with P > 0) and
+    /// for driving the model with real input sequences.
+    pub fn generate_teacher_forced(&mut self, len: usize, forced: &[f32]) -> Result<GenOutput> {
+        let dims = self.rt.dims;
+        let stride = dims.b * dims.d;
+        if forced.is_empty() || forced.len() % stride != 0 {
+            bail!("forced inputs must be a nonempty [T0, B, D] tensor");
+        }
+        let init = SessionInit {
+            a0: forced[..stride].to_vec(),
+            forced: Some(forced.to_vec()),
+            ..Default::default()
+        };
+        self.run_session(len, init)
+    }
+
+    /// Prompt prefill (Massaroli et al. Lemma 2.1 / paper §2.3.1): run the
+    /// `prefill_P` artifact over `prompt_emb` (`[B, P, D]`), seed the
+    /// pending store with the prompt's aggregated future contributions,
+    /// then "forget the prompt ever existed" and run Algorithm 2 with
+    /// re-based indices for `gen_len` more positions.
+    pub fn generate_with_prompt(&mut self, prompt_emb: &[f32], gen_len: usize) -> Result<GenOutput> {
+        let dims = self.rt.dims;
+        let (g, d, b) = (dims.g, dims.d, dims.b);
+        let p = prompt_emb.len() / (b * d);
+        if p * b * d != prompt_emb.len() {
+            bail!("prompt must be a [B, P, D] tensor");
+        }
+        let spec = self
+            .rt
+            .manifest
+            .best_prefill(p)
+            .filter(|a| a.param == Some(p))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no prefill artifact for P={p}; rebuild with `python -m compile.aot --prefill {p}`"
+                )
+            })?
+            .clone();
+        if gen_len + p > dims.l {
+            bail!("prompt {p} + generation {gen_len} exceeds L={}", dims.l);
+        }
+        if self.opts.half_store {
+            bail!("half_store + prompts is not supported (prompt contributions \
+                   reach past the halved store)");
+        }
+
+        // bind + run prefill (weights resolved from model.bin, @rho derived)
+        let mut derived = std::collections::HashMap::new();
+        derived.insert("@rho".to_string(), self.cache.rho_buf()?);
+        let prefill = BoundArtifact::bind(self.rt, &spec.name, &derived)?;
+        let eb = self.rt.upload(prompt_emb, &[b, p, d])?;
+        let outs = prefill.call(&[&eb])?;
+        // outputs: streams [M,B,P,D] (discarded — the prompt is forgotten),
+        // fut [M,B,L-P,D], out [B,W], scstate (hyena)
+        let fut = Runtime::literal_to_vec(&outs[1], g * (dims.l - p) * d)?;
+        let out0 = Runtime::literal_to_vec(&outs[2], b * dims.out_width())?;
+        let scstate = match dims.variant {
+            Variant::Hyena => Some(Runtime::literal_to_vec(
+                &outs[3],
+                dims.ops() * 2 * b * 3 * d,
+            )?),
+            Variant::Synthetic => None,
+        };
+
+        // the prompt's contribution to re-based position j is fut[:, j-1]
+        let mut sampler = self.make_sampler()?;
+        let mut a0 = vec![0.0f32; b * d];
+        let first_tokens = sampler.next_a0(&out0, b, &mut a0)?;
+        let init = SessionInit {
+            a0,
+            scstate_override: scstate,
+            pending_seed: Some((fut, dims.l - p)),
+            first_tokens,
+            ..Default::default()
+        };
+        self.run_session(gen_len, init)
+    }
+
+    fn run_session(&mut self, len: usize, init: SessionInit) -> Result<GenOutput> {
+        let dims = self.rt.dims;
+        if !len.is_power_of_two() || len > dims.l {
+            bail!("generation length {len} must be a power of two <= L={}", dims.l);
+        }
+        let (g, d, b) = (dims.g, dims.d, dims.b);
+        let wall0 = Instant::now();
+
+        // Appendix D: with the tiled method, after iteration len/2 nothing
+        // before position len/2 is ever read again, so the second half can
+        // reuse the first half's rows — the store holds M x (L/2) x D.
+        let half = self.opts.half_store && self.opts.method == Method::Flash && len >= 4;
+        if self.opts.half_store && self.opts.method != Method::Flash {
+            bail!("half_store (Appendix D) applies to the tiled method only");
+        }
+        let rows = if half { len / 2 } else { len };
+        let row_of = |pos1: usize| (pos1 - 1) % rows; // 1-indexed -> store row
+
+        let mut store = Store::new(g, rows, d);
+        if let Some((fut, fut_span)) = &init.pending_seed {
+            // seed pending with the prompt's future contributions
+            let span = (*fut_span).min(rows);
+            for gi in 0..g {
+                for t in 0..span {
+                    store
+                        .pending
+                        .at2_mut(gi, t)
+                        .copy_from_slice(&fut[(gi * fut_span + t) * d..(gi * fut_span + t) * d + d]);
+                }
+            }
+        }
+        let mut sampler = self.make_sampler()?;
+        let mut a0 = init.a0;
+        let mut scstate: Option<Vec<f32>> = match (&init.scstate_override, dims.variant) {
+            (Some(sc), _) => Some(sc.clone()),
+            (None, Variant::Hyena) => Some(vec![0.0; dims.ops() * 2 * b * 3 * d]),
+            (None, Variant::Synthetic) => None,
+        };
+        let sc_dims = [dims.ops(), 2, b, 3 * d];
+        let forced_steps = init.forced.as_ref().map(|f| f.len() / (b * d)).unwrap_or(0);
+
+        let mut tau = if self.opts.method == Method::Flash {
+            Some(make_impl(self.opts.tau, &self.cache, self.opts.threads)?)
+        } else {
+            None
+        };
+
+        let mut metrics = SessionMetrics::with_capacity(len);
+        let mut flops = FlopCounter::new();
+        let mut tokens: Option<Vec<Vec<u32>>> = match dims.variant {
+            Variant::Hyena => Some(vec![Vec::with_capacity(len); b]),
+            Variant::Synthetic => None,
+        };
+        if let (Some(first), Some(all)) = (&init.first_tokens, tokens.as_mut()) {
+            for (bi, t) in first.iter().enumerate() {
+                all[bi].push(*t);
+            }
+        }
+        let mut pend_col = Vec::with_capacity(g * d);
+        let mut last_out = Vec::new();
+        let mut outs_checksum = Vec::with_capacity(len);
+
+        for i in 1..=len {
+            let mut bd = Breakdown::default();
+
+            // ---- pending column (lazy recomputes; others read the store)
+            let t0 = Instant::now();
+            match self.opts.method {
+                Method::Lazy => {
+                    lazy::lazy_pending_col(&store.streams, &self.cache.rho, b, i,
+                                           &mut pend_col, &mut flops);
+                }
+                _ => store.gather_pending_col(row_of(i), &mut pend_col),
+            }
+            if half {
+                // the consumed column's row will be reused by a future tile
+                for gi in 0..g {
+                    store.pending.at2_mut(gi, row_of(i)).fill(0.0);
+                }
+            }
+            if self.opts.method == Method::Lazy {
+                bd.mixer_ns += t0.elapsed().as_nanos() as f64;
+            }
+
+            // ---- step: red cells + blocks + head (PJRT)
+            let t0 = Instant::now();
+            let pb = self.rt.upload(&pend_col, &[dims.m, b, d])?;
+            let ab = self.rt.upload(&a0, &[b, d])?;
+            let outs = match &scstate {
+                None => self.step.call(&[&pb, &ab])?,
+                Some(sc) => {
+                    let scb = self.rt.upload(sc, &sc_dims)?;
+                    self.step.call(&[&pb, &ab, &scb])?
+                }
+            };
+            let streams_col = Runtime::literal_to_vec(&outs[0], g * d)?;
+            store.set_streams_col(row_of(i), &streams_col);
+            last_out = Runtime::literal_to_vec(&outs[1], b * dims.out_width())?;
+            outs_checksum.push(last_out.iter().sum());
+            if let Some(sc) = scstate.as_mut() {
+                *sc = Runtime::literal_to_vec(&outs[2], sc.len())?;
+            }
+            flops.record_red(2 * g as u64 * d as u64); // red cells proper
+            bd.step_ns = t0.elapsed().as_nanos() as f64;
+
+            // ---- next input: teacher-forced or sampled
+            let t0 = Instant::now();
+            if i < forced_steps {
+                let stride = b * d;
+                a0.copy_from_slice(&init.forced.as_ref().unwrap()[i * stride..(i + 1) * stride]);
+            } else if let Some(toks) = sampler.next_a0(&last_out, b, &mut a0)? {
+                if let Some(all) = tokens.as_mut() {
+                    for (bi, t) in toks.into_iter().enumerate() {
+                        all[bi].push(t);
+                    }
+                }
+            }
+            bd.sample_ns = t0.elapsed().as_nanos() as f64;
+
+            // ---- gray work
+            if i < len {
+                let t0 = Instant::now();
+                match self.opts.method {
+                    Method::Flash => {
+                        let tile = Tile::at(i);
+                        // Appendix D: translate tile ranges into the wrapped
+                        // store (ranges never straddle the halfway boundary —
+                        // each lies in a U-aligned block, and rows | U).
+                        let tile = if half {
+                            let rs = row_of(tile.src_l);
+                            let rd = row_of(tile.dst_l);
+                            Tile {
+                                i: tile.i,
+                                u: tile.u,
+                                src_l: rs + 1,
+                                src_r: rs + tile.u,
+                                dst_l: rd + 1,
+                                dst_r: rd + tile.u,
+                            }
+                        } else {
+                            tile
+                        };
+                        let imp = tau.as_mut().unwrap();
+                        imp.apply(&store.streams, &mut store.pending, tile)?;
+                        flops.record_tau(
+                            tile.u,
+                            imp.tile_flops(tile.u, g, d),
+                            (2 * tile.u * g * d) as u64,
+                        );
+                        bd.mixer_ns += t0.elapsed().as_nanos() as f64;
+                    }
+                    Method::Eager => {
+                        eager::eager_push(&store.streams, &mut store.pending,
+                                          &self.cache.rho, b, i, len, &mut flops);
+                        bd.mixer_ns += t0.elapsed().as_nanos() as f64;
+                    }
+                    Method::Lazy => {}
+                }
+            }
+
+            metrics.push(bd);
+        }
+        metrics.wall = wall0.elapsed();
+
+        Ok(GenOutput {
+            steps: len,
+            tokens,
+            last_out,
+            outs_checksum,
+            resident_values: store.resident_values(),
+            metrics,
+            flops,
+            streams: if self.opts.record_streams { Some(store.streams) } else { None },
+        })
+    }
+}
+
+/// Internal session initialization (prompt seeding, forcing, overrides).
+#[derive(Default)]
+struct SessionInit {
+    a0: Vec<f32>,
+    /// Teacher-forced inputs `[T0, B, D]` (row 0 duplicates `a0`).
+    forced: Option<Vec<f32>>,
+    /// Short-conv state carried over from a prefill.
+    scstate_override: Option<Vec<f32>>,
+    /// `(fut, span)` — prompt contributions to the next `span` positions.
+    pending_seed: Option<(Vec<f32>, usize)>,
+    /// Tokens sampled from the prefill's last logits.
+    first_tokens: Option<Vec<u32>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [Method::Flash, Method::Lazy, Method::Eager] {
+            assert_eq!(Method::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(Method::parse("speculative").is_err());
+    }
+
+    #[test]
+    fn default_opts_are_flash_hybrid() {
+        let o = EngineOpts::default();
+        assert_eq!(o.method, Method::Flash);
+        assert_eq!(o.tau, TauKind::Hybrid);
+        assert_eq!(o.sample_sigma, 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Samplers: map the step artifact's `out` to the next position's input.
+//!
+//! * synthetic (§5): `a_{0,i+1} = out_i + sigma * noise` — "a function from
+//!   logits at the last layer and previous position to the next token's
+//!   embedding"; sigma=0 gives the deterministic golden rollout.
+//! * hyena LM: temperature / top-k sampling over V logits, then embedding
+//!   lookup.
+
+use anyhow::Result;
+
+use crate::util::prng::Prng;
+use crate::util::tensor::Tensor;
+
+/// Sampling configuration.
+#[derive(Debug, Clone, Copy)]
+pub enum SamplerCfg {
+    /// Next input = out + sigma * N(0, 1).
+    Synthetic { sigma: f32 },
+    /// Categorical over logits; `temperature == 0` means argmax.
+    Lm { temperature: f32, top_k: usize },
+}
+
+pub struct Sampler {
+    cfg: SamplerCfg,
+    prng: Prng,
+    /// `[V, D]` embedding table (LM only).
+    embed: Option<Tensor>,
+}
+
+impl Sampler {
+    pub fn synthetic(sigma: f32, seed: u64) -> Sampler {
+        Sampler { cfg: SamplerCfg::Synthetic { sigma }, prng: Prng::new(seed), embed: None }
+    }
+
+    pub fn lm(temperature: f32, top_k: usize, embed: Tensor, seed: u64) -> Sampler {
+        Sampler {
+            cfg: SamplerCfg::Lm { temperature, top_k },
+            prng: Prng::new(seed),
+            embed: Some(embed),
+        }
+    }
+
+    /// Consume `out` (`[B, W]`) and produce the next `a0` (`[B, D]`).
+    /// Returns the sampled token ids for LM sampling.
+    pub fn next_a0(&mut self, out: &[f32], b: usize, a0: &mut [f32]) -> Result<Option<Vec<u32>>> {
+        match self.cfg {
+            SamplerCfg::Synthetic { sigma } => {
+                debug_assert_eq!(out.len(), a0.len());
+                if sigma == 0.0 {
+                    a0.copy_from_slice(out);
+                } else {
+                    for (dst, &src) in a0.iter_mut().zip(out) {
+                        *dst = src + sigma * self.prng.normal_f32();
+                    }
+                }
+                Ok(None)
+            }
+            SamplerCfg::Lm { temperature, top_k } => {
+                let embed = self.embed.as_ref().expect("LM sampler needs embeddings");
+                let v = out.len() / b;
+                let d = embed.shape()[1];
+                let mut tokens = Vec::with_capacity(b);
+                for bi in 0..b {
+                    let logits = &out[bi * v..(bi + 1) * v];
+                    let tok = if temperature <= 0.0 {
+                        argmax(logits)
+                    } else {
+                        categorical(logits, temperature, top_k, &mut self.prng)
+                    };
+                    tokens.push(tok as u32);
+                    a0[bi * d..(bi + 1) * d].copy_from_slice(embed.row(tok));
+                }
+                Ok(Some(tokens))
+            }
+        }
+    }
+}
+
+fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Temperature softmax draw, optionally restricted to the top-k logits.
+fn categorical(logits: &[f32], temperature: f32, top_k: usize, prng: &mut Prng) -> usize {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if top_k > 0 && top_k < logits.len() {
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(top_k);
+    }
+    let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - m) / temperature) as f64).exp())
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let mut r = prng.uniform() * total;
+    for (w, &i) in weights.iter().zip(&idx) {
+        if r < *w {
+            return i;
+        }
+        r -= w;
+    }
+    *idx.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_sigma_zero_is_identity() {
+        let mut s = Sampler::synthetic(0.0, 1);
+        let out = vec![1.0, -2.0, 3.0];
+        let mut a0 = vec![0.0; 3];
+        assert!(s.next_a0(&out, 1, &mut a0).unwrap().is_none());
+        assert_eq!(a0, out);
+    }
+
+    #[test]
+    fn synthetic_noise_is_deterministic_per_seed() {
+        let out = vec![0.0; 8];
+        let run = |seed| {
+            let mut s = Sampler::synthetic(0.5, seed);
+            let mut a0 = vec![0.0; 8];
+            s.next_a0(&out, 1, &mut a0).unwrap();
+            a0
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn lm_argmax_picks_max_and_embeds() {
+        let embed = Tensor::from_vec(&[3, 2], vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]).unwrap();
+        let mut s = Sampler::lm(0.0, 0, embed, 0);
+        let logits = vec![0.1, 5.0, -1.0];
+        let mut a0 = vec![0.0; 2];
+        let toks = s.next_a0(&logits, 1, &mut a0).unwrap().unwrap();
+        assert_eq!(toks, vec![1]);
+        assert_eq!(a0, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn lm_temperature_samples_valid_tokens() {
+        let embed = Tensor::zeros(&[4, 2]);
+        let mut s = Sampler::lm(1.0, 2, embed, 3);
+        let logits = vec![0.0, 1.0, 2.0, 3.0];
+        let mut a0 = vec![0.0; 2];
+        for _ in 0..50 {
+            let toks = s.next_a0(&logits, 1, &mut a0).unwrap().unwrap();
+            // top_k = 2 restricts to tokens {2, 3}
+            assert!(toks[0] == 2 || toks[0] == 3, "tok={}", toks[0]);
+        }
+    }
+
+    #[test]
+    fn lm_batch_rows_sampled_independently() {
+        let embed = Tensor::from_vec(&[2, 1], vec![10.0, 20.0]).unwrap();
+        let mut s = Sampler::lm(0.0, 0, embed, 0);
+        let logits = vec![1.0, 0.0, 0.0, 1.0]; // b0 -> tok0, b1 -> tok1
+        let mut a0 = vec![0.0; 2];
+        let toks = s.next_a0(&logits, 2, &mut a0).unwrap().unwrap();
+        assert_eq!(toks, vec![0, 1]);
+        assert_eq!(a0, vec![10.0, 20.0]);
+    }
+}

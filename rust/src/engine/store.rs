@@ -1,0 +1,91 @@
+//! Activation store — the LCSM analogue of a KV cache (§3.3).
+//!
+//! Two `[G, T, D]` tensors:
+//! * `streams` — the mixer-input sequences (`y_l`), written one column per
+//!   token by `step`, read in blocks by the gray tiles;
+//! * `pending` — the partially-aggregated mixer outputs (`b_l`), written in
+//!   blocks by the gray tiles, consumed one column per token.
+//!
+//! §3.3's storage note is respected: there is no third tensor — a pending
+//! column is finalized by the red cell inside `step` and immediately turned
+//! into the streams column, so `b` never exists beyond one column. Peak
+//! memory accounting (`peak_scratch_values`) backs the Appendix D/E claims.
+
+use crate::util::tensor::Tensor;
+
+/// Per-session activation state.
+pub struct Store {
+    pub streams: Tensor,
+    pub pending: Tensor,
+    g: usize,
+    t: usize,
+    d: usize,
+}
+
+impl Store {
+    pub fn new(g: usize, t: usize, d: usize) -> Store {
+        Store {
+            streams: Tensor::zeros(&[g, t, d]),
+            pending: Tensor::zeros(&[g, t, d]),
+            g,
+            t,
+            d,
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.g, self.t, self.d)
+    }
+
+    /// Gather `pending[:, col, :]` into `buf` (`[G, D]`; with `g = m·B+b`
+    /// this is exactly the `[M, B, D]` layout the step artifact expects).
+    pub fn gather_pending_col(&self, col: usize, buf: &mut Vec<f32>) {
+        buf.resize(self.g * self.d, 0.0);
+        for gi in 0..self.g {
+            buf[gi * self.d..(gi + 1) * self.d].copy_from_slice(self.pending.at2(gi, col));
+        }
+    }
+
+    /// Scatter a `[G, D]` step output into `streams[:, col, :]`.
+    pub fn set_streams_col(&mut self, col: usize, vals: &[f32]) {
+        debug_assert_eq!(vals.len(), self.g * self.d);
+        for gi in 0..self.g {
+            self.streams
+                .at2_mut(gi, col)
+                .copy_from_slice(&vals[gi * self.d..(gi + 1) * self.d]);
+        }
+    }
+
+    /// Values resident in the store (activation memory, §3.3: 2·G·T·D —
+    /// the same O(M L D) the lazy approach stores, no extra tensors).
+    pub fn resident_values(&self) -> usize {
+        self.streams.len() + self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut s = Store::new(3, 4, 2);
+        let vals: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        s.set_streams_col(2, &vals);
+        assert_eq!(s.streams.at2(0, 2), &[0.0, 1.0]);
+        assert_eq!(s.streams.at2(2, 2), &[4.0, 5.0]);
+
+        for gi in 0..3 {
+            s.pending.at2_mut(gi, 1).copy_from_slice(&[gi as f32, -(gi as f32)]);
+        }
+        let mut buf = Vec::new();
+        s.gather_pending_col(1, &mut buf);
+        assert_eq!(buf, vec![0.0, -0.0, 1.0, -1.0, 2.0, -2.0]);
+    }
+
+    #[test]
+    fn resident_accounting() {
+        let s = Store::new(6, 8, 4);
+        assert_eq!(s.resident_values(), 2 * 6 * 8 * 4);
+    }
+}

@@ -1,0 +1,97 @@
+//! Scalar complex arithmetic for the FFT substrate.
+
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// A complex f32 (scalar path: tests, filter-spectrum precompute).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cpx {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Cpx {
+    pub const ZERO: Cpx = Cpx { re: 0.0, im: 0.0 };
+    pub const ONE: Cpx = Cpx { re: 1.0, im: 0.0 };
+
+    pub fn new(re: f32, im: f32) -> Cpx {
+        Cpx { re, im }
+    }
+
+    pub fn real(re: f32) -> Cpx {
+        Cpx { re, im: 0.0 }
+    }
+
+    /// e^{i theta}.
+    pub fn cis(theta: f64) -> Cpx {
+        Cpx { re: theta.cos() as f32, im: theta.sin() as f32 }
+    }
+
+    pub fn conj(self) -> Cpx {
+        Cpx { re: self.re, im: -self.im }
+    }
+
+    pub fn scale(self, s: f32) -> Cpx {
+        Cpx { re: self.re * s, im: self.im * s }
+    }
+
+    pub fn abs(self) -> f32 {
+        (self.re * self.re + self.im * self.im).sqrt()
+    }
+}
+
+impl Add for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn add(self, o: Cpx) -> Cpx {
+        Cpx { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl Sub for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn sub(self, o: Cpx) -> Cpx {
+        Cpx { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl Mul for Cpx {
+    type Output = Cpx;
+    #[inline]
+    fn mul(self, o: Cpx) -> Cpx {
+        Cpx {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl Neg for Cpx {
+    type Output = Cpx;
+    fn neg(self) -> Cpx {
+        Cpx { re: -self.re, im: -self.im }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Cpx::new(1.0, 2.0);
+        let b = Cpx::new(3.0, -1.0);
+        assert_eq!(a + b, Cpx::new(4.0, 1.0));
+        assert_eq!(a - b, Cpx::new(-2.0, 3.0));
+        assert_eq!(a * b, Cpx::new(5.0, 5.0)); // (1+2i)(3-i) = 3 - i + 6i + 2 = 5+5i
+        assert_eq!(a.conj(), Cpx::new(1.0, -2.0));
+    }
+
+    #[test]
+    fn cis_unit_circle() {
+        let w = Cpx::cis(std::f64::consts::FRAC_PI_2);
+        assert!((w.re - 0.0).abs() < 1e-6);
+        assert!((w.im - 1.0).abs() < 1e-6);
+        assert!((Cpx::cis(0.3).abs() - 1.0).abs() < 1e-6);
+    }
+}

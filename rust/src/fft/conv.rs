@@ -1,0 +1,222 @@
+//! FFT tile convolution (Lemma 1 + Appendix C) on the vectorized FFT.
+//!
+//! The tile at iteration i contributes streams[i-U+1..i] to pending
+//! [i+1..i+U]. Appendix C shows one *cyclic* convolution of order 2U
+//! suffices (the wrap-around lands outside the kept slice), and that the
+//! filter-prefix spectrum can be precomputed per (layer, U) — dropping the
+//! per-tile cost from 3 DFTs to 2.
+
+use super::plan::Plan;
+use super::vecfft;
+
+/// Reusable scratch planes for tile convolutions (sized to the largest
+/// tile at engine init; no allocation on the token loop).
+#[derive(Debug, Default)]
+pub struct TileScratch {
+    re: Vec<f32>,
+    im: Vec<f32>,
+}
+
+impl TileScratch {
+    pub fn with_capacity(max_n: usize, d: usize) -> TileScratch {
+        TileScratch { re: vec![0.0; max_n * d], im: vec![0.0; max_n * d] }
+    }
+
+    fn planes(&mut self, n: usize, d: usize) -> (&mut [f32], &mut [f32]) {
+        let len = n * d;
+        if self.re.len() < len {
+            self.re.resize(len, 0.0);
+            self.im.resize(len, 0.0);
+        }
+        (&mut self.re[..len], &mut self.im[..len])
+    }
+}
+
+/// Precompute the spectrum planes of a real filter segment.
+///
+/// `seg` is `[m][d]` (m <= plan.n; zero-padded). Returns `([n][d], [n][d])`
+/// re/im planes of its order-n DFT — the layout both the native path and
+/// the `tau_fft` PJRT artifacts consume (artifacts take bins `[0, n/2]`).
+pub fn spectrum_planes(plan: &Plan, seg: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = plan.n;
+    assert!(seg.len() <= n * d && seg.len() % d == 0);
+    let mut re = vec![0.0f32; n * d];
+    let mut im = vec![0.0f32; n * d];
+    re[..seg.len()].copy_from_slice(seg);
+    vecfft::forward(plan, &mut re, &mut im, d);
+    (re, im)
+}
+
+/// FFT tile: `out_add[k][:] += sum_j y[j][:] * rho[U+k-j][:]` using the
+/// precomputed filter spectrum.
+///
+/// * `plan`    — order-2U plan.
+/// * `y`       — `[U][d]` contiguous tile input.
+/// * `spec_*`  — `[2U][d]` filter-prefix spectrum planes.
+/// * `out_add` — `[U][d]`; the middle-U slice of the cyclic convolution is
+///   accumulated into it (the paper aggregates tiles in place, §3.3).
+///
+/// PERF NOTE: a D-blocked (cache-tiled) variant was measured at
+/// BLOCK_D ∈ {8, 16, 32} and was neutral-to-worse on this machine (the
+/// [2U][D] working set already streams well at D = 64; see EXPERIMENTS.md
+/// §Perf iteration log), so the simple whole-width path is kept.
+pub fn tile_conv_fft_into(
+    plan: &Plan,
+    y: &[f32],
+    spec_re: &[f32],
+    spec_im: &[f32],
+    out_add: &mut [f32],
+    scratch: &mut TileScratch,
+    d: usize,
+) {
+    let n = plan.n;
+    let u = n / 2;
+    debug_assert_eq!(y.len(), u * d);
+    debug_assert_eq!(spec_re.len(), n * d);
+    debug_assert_eq!(out_add.len(), u * d);
+
+    let (re, im) = scratch.planes(n, d);
+    re[..u * d].copy_from_slice(y);
+    re[u * d..].fill(0.0);
+    im.fill(0.0);
+
+    vecfft::forward(plan, re, im, d);
+    vecfft::cmul_inplace(re, im, spec_re, spec_im);
+    vecfft::inverse_unscaled(plan, re, im, d);
+
+    // keep rows [U, 2U), fold in the 1/n inverse scale during accumulation
+    let s = 1.0 / n as f32;
+    let tail = &re[u * d..n * d];
+    for (o, v) in out_add.iter_mut().zip(tail) {
+        *o += v * s;
+    }
+}
+
+/// O(U^2 d) reference tile (also the core of the `rust_direct` tau impl):
+/// `out_add[k][:] += sum_j y[j][:] * rho_seg[U+k-j][:]`.
+pub fn tile_conv_direct_into(y: &[f32], rho_seg: &[f32], out_add: &mut [f32], d: usize) {
+    let u = y.len() / d;
+    debug_assert_eq!(y.len(), u * d);
+    debug_assert_eq!(rho_seg.len(), 2 * u * d);
+    debug_assert_eq!(out_add.len(), u * d);
+    // loop order: j outer so both rho rows and out rows stream contiguously
+    for j in 0..u {
+        let yj = &y[j * d..(j + 1) * d];
+        // out[k] += yj * rho[U + k - j], k = 0..U  => rho rows U-j .. 2U-j
+        let rho_base = (u - j) * d;
+        for k in 0..u {
+            let r = &rho_seg[rho_base + k * d..rho_base + (k + 1) * d];
+            let o = &mut out_add[k * d..(k + 1) * d];
+            for t in 0..d {
+                o[t] += yj[t] * r[t];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn naive_tile(y: &[f32], rho: &[f32], u: usize, d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; u * d];
+        for k in 0..u {
+            for j in 0..u {
+                let lag = u + k - j;
+                for t in 0..d {
+                    out[k * d + t] += y[j * d + t] * rho[lag * d + t];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn direct_matches_naive() {
+        for (u, d) in [(1usize, 1usize), (2, 3), (8, 4), (16, 64)] {
+            let y = rand_vec(u * d, 1);
+            let rho = rand_vec(2 * u * d, 2);
+            let mut out = vec![0.0f32; u * d];
+            tile_conv_direct_into(&y, &rho, &mut out, d);
+            let want = naive_tile(&y, &rho, u, d);
+            for (a, b) in out.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "u={u} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn fft_matches_direct() {
+        for (u, d) in [(1usize, 1usize), (2, 2), (4, 3), (32, 16), (256, 8)] {
+            let plan = Plan::new(2 * u);
+            let y = rand_vec(u * d, 3);
+            let rho = rand_vec(2 * u * d, 4);
+            let (sre, sim) = spectrum_planes(&plan, &rho, d);
+            let mut scratch = TileScratch::default();
+            let mut got = vec![0.0f32; u * d];
+            tile_conv_fft_into(&plan, &y, &sre, &sim, &mut got, &mut scratch, d);
+            let want = naive_tile(&y, &rho, u, d);
+            let tol = 1e-3 * (u as f32).sqrt();
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < tol, "u={u} d={d}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fft_accumulates_rather_than_overwrites() {
+        let (u, d) = (4usize, 2usize);
+        let plan = Plan::new(2 * u);
+        let y = rand_vec(u * d, 5);
+        let rho = rand_vec(2 * u * d, 6);
+        let (sre, sim) = spectrum_planes(&plan, &rho, d);
+        let mut scratch = TileScratch::default();
+        let mut out = vec![10.0f32; u * d];
+        tile_conv_fft_into(&plan, &y, &sre, &sim, &mut out, &mut scratch, d);
+        let want = naive_tile(&y, &rho, u, d);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - 10.0 - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        // second call must not see residue from the first
+        let (u, d) = (8usize, 3usize);
+        let plan = Plan::new(2 * u);
+        let mut scratch = TileScratch::with_capacity(2 * u, d);
+        let rho = rand_vec(2 * u * d, 7);
+        let (sre, sim) = spectrum_planes(&plan, &rho, d);
+        let y1 = rand_vec(u * d, 8);
+        let y2 = rand_vec(u * d, 9);
+        let mut out_a = vec![0.0f32; u * d];
+        tile_conv_fft_into(&plan, &y1, &sre, &sim, &mut out_a, &mut scratch, d);
+        let mut out_b = vec![0.0f32; u * d];
+        tile_conv_fft_into(&plan, &y2, &sre, &sim, &mut out_b, &mut scratch, d);
+        let mut fresh = TileScratch::default();
+        let mut out_c = vec![0.0f32; u * d];
+        tile_conv_fft_into(&plan, &y2, &sre, &sim, &mut out_c, &mut fresh, d);
+        for (b, c) in out_b.iter().zip(&out_c) {
+            assert_eq!(b, c);
+        }
+    }
+
+    #[test]
+    fn spectrum_planes_zero_pads() {
+        let plan = Plan::new(8);
+        let d = 2;
+        let seg = rand_vec(3 * d, 10); // only 3 of 8 rows provided
+        let (re, _im) = spectrum_planes(&plan, &seg, d);
+        // DC bin equals the sum of the provided rows per lane
+        for lane in 0..d {
+            let want: f32 = (0..3).map(|t| seg[t * d + lane]).sum();
+            assert!((re[lane] - want).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! FFT plans: precomputed twiddle factors + bit-reversal permutation,
+//! shared by the scalar and vectorized kernels and cached per size.
+//!
+//! This is the paper's §5.4(4) "pre-initialized configurations": plans (and
+//! filter spectra, see `tau::rho_cache`) are built once per tile size at
+//! engine init, never on the token loop.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::complex::Cpx;
+
+/// Plan for a radix-2 FFT of (power-of-two) size `n`.
+#[derive(Debug)]
+pub struct Plan {
+    pub n: usize,
+    pub log2n: u32,
+    /// Row permutation: bitrev[i] = bit-reversed i (applied pre-butterfly).
+    pub bitrev: Vec<u32>,
+    /// Forward twiddles w^k = e^{-2*pi*i*k/n}, k in [0, n/2).
+    pub tw_re: Vec<f32>,
+    pub tw_im: Vec<f32>,
+}
+
+impl Plan {
+    pub fn new(n: usize) -> Plan {
+        assert!(n.is_power_of_two() && n >= 1, "fft size must be a power of two, got {n}");
+        let log2n = n.trailing_zeros();
+        let mut bitrev = vec![0u32; n];
+        for i in 0..n {
+            bitrev[i] = (i as u32).reverse_bits() >> (32 - log2n.max(1)) as u32;
+        }
+        if n == 1 {
+            bitrev[0] = 0;
+        }
+        let half = (n / 2).max(1);
+        let mut tw_re = Vec::with_capacity(half);
+        let mut tw_im = Vec::with_capacity(half);
+        for k in 0..half {
+            let w = Cpx::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64);
+            tw_re.push(w.re);
+            tw_im.push(w.im);
+        }
+        Plan { n, log2n, bitrev, tw_re, tw_im }
+    }
+
+    /// Apply the bit-reversal permutation to `n` rows of width `d`
+    /// (in-place swap of whole rows; `data.len() == n * d`).
+    pub fn permute_rows(&self, data: &mut [f32], d: usize) {
+        debug_assert_eq!(data.len(), self.n * d);
+        for i in 0..self.n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                let (lo, hi) = data.split_at_mut(j * d);
+                lo[i * d..i * d + d].swap_with_slice(&mut hi[..d]);
+            }
+        }
+    }
+}
+
+/// Process-wide plan cache. Plans are immutable once built.
+pub struct PlanCache {
+    plans: Mutex<HashMap<usize, Arc<Plan>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache { plans: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn get(&self, n: usize) -> Arc<Plan> {
+        let mut m = self.plans.lock().unwrap();
+        m.entry(n).or_insert_with(|| Arc::new(Plan::new(n))).clone()
+    }
+
+    /// Shared global cache (plans are pure functions of n).
+    pub fn global() -> &'static PlanCache {
+        static CACHE: OnceLock<PlanCache> = OnceLock::new();
+        CACHE.get_or_init(PlanCache::new)
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitrev_is_an_involution() {
+        for n in [1usize, 2, 4, 8, 64, 256] {
+            let p = Plan::new(n);
+            for i in 0..n {
+                let j = p.bitrev[i] as usize;
+                assert_eq!(p.bitrev[j] as usize, i, "n={n} i={i}");
+                assert!(j < n);
+            }
+        }
+    }
+
+    #[test]
+    fn twiddles_lie_on_unit_circle() {
+        let p = Plan::new(16);
+        for k in 0..8 {
+            let mag = (p.tw_re[k] * p.tw_re[k] + p.tw_im[k] * p.tw_im[k]).sqrt();
+            assert!((mag - 1.0).abs() < 1e-6);
+        }
+        assert_eq!(p.tw_re[0], 1.0);
+        assert_eq!(p.tw_im[0], 0.0);
+        // w^{n/4} = -i for n=16 -> k=4
+        assert!((p.tw_re[4]).abs() < 1e-6);
+        assert!((p.tw_im[4] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn permute_rows_known_order() {
+        let p = Plan::new(4); // bitrev of [0,1,2,3] = [0,2,1,3]
+        let mut data = vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0];
+        p.permute_rows(&mut data, 2);
+        assert_eq!(data, vec![0.0, 0.0, 2.0, 2.0, 1.0, 1.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_pow2_rejected() {
+        Plan::new(12);
+    }
+
+    #[test]
+    fn cache_returns_same_plan() {
+        let c = PlanCache::new();
+        let a = c.get(64);
+        let b = c.get(64);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

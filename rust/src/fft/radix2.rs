@@ -1,0 +1,163 @@
+//! Scalar radix-2 FFT (tests, filter-spectrum precompute — not the hot
+//! path; the token loop uses `vecfft`, which batches over the D axis).
+
+use super::complex::Cpx;
+use super::plan::Plan;
+
+/// In-place forward DFT: X[k] = sum_j x[j] e^{-2 pi i jk / n}.
+pub fn forward(plan: &Plan, data: &mut [Cpx]) {
+    assert_eq!(data.len(), plan.n);
+    let n = plan.n;
+    if n == 1 {
+        return;
+    }
+    // bit-reverse permutation
+    for i in 0..n {
+        let j = plan.bitrev[i] as usize;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    let mut len = 1;
+    while len < n {
+        let step = n / (2 * len);
+        for base in (0..n).step_by(2 * len) {
+            for j in 0..len {
+                let w = Cpx::new(plan.tw_re[j * step], plan.tw_im[j * step]);
+                let a = data[base + j];
+                let t = w * data[base + j + len];
+                data[base + j] = a + t;
+                data[base + j + len] = a - t;
+            }
+        }
+        len *= 2;
+    }
+}
+
+/// In-place inverse DFT *without* the 1/n scale (caller folds it in).
+pub fn inverse_unscaled(plan: &Plan, data: &mut [Cpx]) {
+    // conj -> forward -> conj equals the inverse transform (x n).
+    for c in data.iter_mut() {
+        *c = c.conj();
+    }
+    forward(plan, data);
+    for c in data.iter_mut() {
+        *c = c.conj();
+    }
+}
+
+/// Full inverse DFT with scaling.
+pub fn inverse(plan: &Plan, data: &mut [Cpx]) {
+    inverse_unscaled(plan, data);
+    let s = 1.0 / plan.n as f32;
+    for c in data.iter_mut() {
+        *c = c.scale(s);
+    }
+}
+
+/// O(n^2) reference DFT for tests.
+pub fn dft_naive(x: &[Cpx]) -> Vec<Cpx> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = Cpx::ZERO;
+            for (j, &v) in x.iter().enumerate() {
+                let w = Cpx::cis(-2.0 * std::f64::consts::PI * (j * k) as f64 / n as f64);
+                acc = acc + v * w;
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Spectrum of a real sequence (zero-padded/truncated to plan.n).
+pub fn spectrum_of_real(plan: &Plan, x: &[f32]) -> Vec<Cpx> {
+    let mut buf = vec![Cpx::ZERO; plan.n];
+    for (i, &v) in x.iter().take(plan.n).enumerate() {
+        buf[i] = Cpx::real(v);
+    }
+    forward(plan, &mut buf);
+    buf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_cpx(n: usize, seed: u64) -> Vec<Cpx> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| Cpx::new(rng.normal_f32(), rng.normal_f32())).collect()
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        for n in [1usize, 2, 4, 8, 32, 128] {
+            let plan = Plan::new(n);
+            let x = rand_cpx(n, n as u64);
+            let mut got = x.clone();
+            forward(&plan, &mut got);
+            let want = dft_naive(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.re - w.re).abs() < 1e-3 * (n as f32).sqrt(), "n={n}");
+                assert!((g.im - w.im).abs() < 1e-3 * (n as f32).sqrt(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        for n in [2usize, 16, 256, 1024] {
+            let plan = Plan::new(n);
+            let x = rand_cpx(n, 7);
+            let mut buf = x.clone();
+            forward(&plan, &mut buf);
+            inverse(&plan, &mut buf);
+            for (a, b) in buf.iter().zip(&x) {
+                assert!((a.re - b.re).abs() < 1e-4, "n={n}");
+                assert!((a.im - b.im).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn impulse_has_flat_spectrum() {
+        let plan = Plan::new(8);
+        let mut x = vec![Cpx::ZERO; 8];
+        x[0] = Cpx::ONE;
+        forward(&plan, &mut x);
+        for c in x {
+            assert!((c.re - 1.0).abs() < 1e-6 && c.im.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dc_input_concentrates_at_bin0() {
+        let plan = Plan::new(16);
+        let mut x = vec![Cpx::ONE; 16];
+        forward(&plan, &mut x);
+        assert!((x[0].re - 16.0).abs() < 1e-4);
+        for c in &x[1..] {
+            assert!(c.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn spectrum_of_real_pads() {
+        let plan = Plan::new(8);
+        let s = spectrum_of_real(&plan, &[1.0, 2.0]);
+        let want = dft_naive(&[
+            Cpx::real(1.0),
+            Cpx::real(2.0),
+            Cpx::ZERO,
+            Cpx::ZERO,
+            Cpx::ZERO,
+            Cpx::ZERO,
+            Cpx::ZERO,
+            Cpx::ZERO,
+        ]);
+        for (g, w) in s.iter().zip(&want) {
+            assert!((g.re - w.re).abs() < 1e-5 && (g.im - w.im).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Vectorized (structure-of-arrays) FFT: one radix-2 transform over the
+//! time axis applied to D channel lanes at once.
+//!
+//! This is the native hot path for the FFT tau implementation. Data layout
+//! is two planes `re`, `im`, each `[n][d]` row-major — every butterfly
+//! touches whole contiguous D-rows, which the compiler auto-vectorizes and
+//! which mirrors exactly how the Pallas kernel lays the tile out in VMEM
+//! (DESIGN.md §Hardware-Adaptation): `d` is the lane axis on both targets.
+
+use super::plan::Plan;
+
+/// Forward transform over the first axis of `[n][d]` planes.
+pub fn forward(plan: &Plan, re: &mut [f32], im: &mut [f32], d: usize) {
+    transform::<false>(plan, re, im, d);
+}
+
+/// Inverse transform *without* 1/n scaling (fold it into the consumer).
+pub fn inverse_unscaled(plan: &Plan, re: &mut [f32], im: &mut [f32], d: usize) {
+    transform::<true>(plan, re, im, d);
+}
+
+fn transform<const INV: bool>(plan: &Plan, re: &mut [f32], im: &mut [f32], d: usize) {
+    let n = plan.n;
+    debug_assert_eq!(re.len(), n * d);
+    debug_assert_eq!(im.len(), n * d);
+    if n == 1 {
+        return;
+    }
+    plan.permute_rows(re, d);
+    plan.permute_rows(im, d);
+
+    let mut len = 1;
+    while len < n {
+        let step = n / (2 * len);
+        for base in (0..n).step_by(2 * len) {
+            for j in 0..len {
+                let wre = plan.tw_re[j * step];
+                let wim = if INV { -plan.tw_im[j * step] } else { plan.tw_im[j * step] };
+                let (ai, bi) = (base + j, base + j + len);
+                // butterfly over the D lanes of rows ai and bi
+                let (re_a, re_b) = split_rows(re, ai, bi, d);
+                let (im_a, im_b) = split_rows(im, ai, bi, d);
+                if wim == 0.0 && wre == 1.0 {
+                    // twiddle-free butterfly (j == 0): saves 4 mults/lane
+                    for k in 0..d {
+                        let tre = re_b[k];
+                        let tim = im_b[k];
+                        re_b[k] = re_a[k] - tre;
+                        im_b[k] = im_a[k] - tim;
+                        re_a[k] += tre;
+                        im_a[k] += tim;
+                    }
+                } else {
+                    for k in 0..d {
+                        let tre = wre * re_b[k] - wim * im_b[k];
+                        let tim = wre * im_b[k] + wim * re_b[k];
+                        re_b[k] = re_a[k] - tre;
+                        im_b[k] = im_a[k] - tim;
+                        re_a[k] += tre;
+                        im_a[k] += tim;
+                    }
+                }
+            }
+        }
+        len *= 2;
+    }
+}
+
+/// Disjoint mutable views of rows `a < b`, each `d` long.
+#[inline]
+fn split_rows(data: &mut [f32], a: usize, b: usize, d: usize) -> (&mut [f32], &mut [f32]) {
+    debug_assert!(a < b);
+    let (lo, hi) = data.split_at_mut(b * d);
+    (&mut lo[a * d..a * d + d], &mut hi[..d])
+}
+
+/// Pointwise complex multiply-accumulate free product:
+/// (re, im) *= (bre, bim), all planes `[n][d]`.
+pub fn cmul_inplace(re: &mut [f32], im: &mut [f32], bre: &[f32], bim: &[f32]) {
+    debug_assert_eq!(re.len(), bre.len());
+    for k in 0..re.len() {
+        let ar = re[k];
+        let ai = im[k];
+        re[k] = ar * bre[k] - ai * bim[k];
+        im[k] = ar * bim[k] + ai * bre[k];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::complex::Cpx;
+    use crate::fft::radix2;
+    use crate::util::prng::Prng;
+
+    fn rand_planes(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Prng::new(seed);
+        let re = (0..n * d).map(|_| rng.normal_f32()).collect();
+        let im = (0..n * d).map(|_| rng.normal_f32()).collect();
+        (re, im)
+    }
+
+    #[test]
+    fn matches_scalar_fft_per_lane() {
+        for (n, d) in [(2usize, 1usize), (8, 3), (32, 5), (128, 64)] {
+            let plan = Plan::new(n);
+            let (mut re, mut im) = rand_planes(n, d, (n + d) as u64);
+            let orig_re = re.clone();
+            let orig_im = im.clone();
+            forward(&plan, &mut re, &mut im, d);
+            for lane in 0..d {
+                let mut scalar: Vec<Cpx> = (0..n)
+                    .map(|t| Cpx::new(orig_re[t * d + lane], orig_im[t * d + lane]))
+                    .collect();
+                radix2::forward(&plan, &mut scalar);
+                for t in 0..n {
+                    assert!(
+                        (re[t * d + lane] - scalar[t].re).abs() < 2e-3,
+                        "n={n} d={d} lane={lane} t={t}"
+                    );
+                    assert!((im[t * d + lane] - scalar[t].im).abs() < 2e-3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        for (n, d) in [(4usize, 2usize), (64, 16), (512, 8)] {
+            let plan = Plan::new(n);
+            let (mut re, mut im) = rand_planes(n, d, 99);
+            let orig_re = re.clone();
+            let orig_im = im.clone();
+            forward(&plan, &mut re, &mut im, d);
+            inverse_unscaled(&plan, &mut re, &mut im, d);
+            let s = 1.0 / n as f32;
+            for k in 0..n * d {
+                assert!((re[k] * s - orig_re[k]).abs() < 1e-4, "n={n}");
+                assert!((im[k] * s - orig_im[k]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn cmul_matches_complex_mul() {
+        let a = Cpx::new(1.5, -2.0);
+        let b = Cpx::new(0.5, 3.0);
+        let mut re = vec![a.re];
+        let mut im = vec![a.im];
+        cmul_inplace(&mut re, &mut im, &[b.re], &[b.im]);
+        let want = a * b;
+        assert!((re[0] - want.re).abs() < 1e-6);
+        assert!((im[0] - want.im).abs() < 1e-6);
+    }
+
+    #[test]
+    fn n_equals_one_is_identity() {
+        let plan = Plan::new(1);
+        let mut re = vec![3.0, 4.0];
+        let mut im = vec![-1.0, 2.0];
+        forward(&plan, &mut re, &mut im, 2);
+        assert_eq!(re, vec![3.0, 4.0]);
+        assert_eq!(im, vec![-1.0, 2.0]);
+    }
+}

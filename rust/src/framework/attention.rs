@@ -1,0 +1,99 @@
+//! Self-attention in contribution form (paper §4.1's P.1 example):
+//! `X = (R^D, R)`, `agg = +`, `cont(y,i,j) = (v_i e^{<k_i, q_j>}, e^{<k_i,q_j>})`,
+//! `read(v, w) = v / w`. It is contribution-based but **not**
+//! query-independent — `cont` needs `q_j`, a function of `y_j` — so the
+//! tiling cannot apply (P.2 fails); the lazy evaluator is exactly KV-cache
+//! transformer decoding.
+
+use super::mixer::ContributionMixer;
+use crate::util::tensor::Tensor;
+
+/// Single-head causal softmax attention with projection matrices `[D, D]`.
+pub struct AttentionMixer {
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    d: usize,
+}
+
+impl AttentionMixer {
+    pub fn new(wq: Tensor, wk: Tensor, wv: Tensor) -> AttentionMixer {
+        let d = wq.shape()[0];
+        assert_eq!(wq.shape(), &[d, d]);
+        assert_eq!(wk.shape(), &[d, d]);
+        assert_eq!(wv.shape(), &[d, d]);
+        AttentionMixer { wq, wk, wv, d }
+    }
+
+    fn proj(&self, w: &Tensor, x: &[f32]) -> Vec<f32> {
+        let d = self.d;
+        (0..d)
+            .map(|c| (0..d).map(|r| x[r] * w.data()[r * d + c]).sum())
+            .collect()
+    }
+
+    fn y_row<'a>(&self, y: &'a Tensor, pos: usize) -> &'a [f32] {
+        &y.data()[(pos - 1) * self.d..pos * self.d]
+    }
+}
+
+impl ContributionMixer for AttentionMixer {
+    /// (weighted value accumulator, weight mass) — read() is the softmax.
+    type X = (Vec<f32>, f32);
+
+    fn neutral(&self) -> Self::X {
+        (vec![0.0; self.d], 0.0)
+    }
+
+    fn agg(&self, acc: &mut Self::X, inc: &Self::X) {
+        for (a, b) in acc.0.iter_mut().zip(&inc.0) {
+            *a += b;
+        }
+        acc.1 += inc.1;
+    }
+
+    fn cont(&self, y: &Tensor, i: usize, j: usize) -> Self::X {
+        // q_j depends on y_j — this is the P.2 violation.
+        let q = self.proj(&self.wq, self.y_row(y, j));
+        let k = self.proj(&self.wk, self.y_row(y, i));
+        let v = self.proj(&self.wv, self.y_row(y, i));
+        let logit: f32 = q.iter().zip(&k).map(|(a, b)| a * b).sum::<f32>()
+            / (self.d as f32).sqrt();
+        let w = logit.exp();
+        (v.into_iter().map(|x| x * w).collect(), w)
+    }
+
+    fn read(&self, x: &Self::X) -> Vec<f32> {
+        x.0.iter().map(|v| v / x.1.max(1e-30)).collect()
+    }
+
+    fn query_independent(&self) -> bool {
+        false
+    }
+}
+
+/// Direct O(T²) causal softmax attention — oracle for the lazy evaluator.
+pub fn attention_reference(mixer: &AttentionMixer, y: &Tensor) -> Tensor {
+    let t = y.shape()[0];
+    let d = mixer.d;
+    let mut out = Tensor::zeros(&[t, d]);
+    for j in 1..=t {
+        let q = mixer.proj(&mixer.wq, mixer.y_row(y, j));
+        let mut weights = Vec::with_capacity(j);
+        for i in 1..=j {
+            let k = mixer.proj(&mixer.wk, mixer.y_row(y, i));
+            let logit: f32 =
+                q.iter().zip(&k).map(|(a, b)| a * b).sum::<f32>() / (d as f32).sqrt();
+            weights.push(logit.exp());
+        }
+        let z: f32 = weights.iter().sum();
+        let row = &mut out.data_mut()[(j - 1) * d..j * d];
+        for i in 1..=j {
+            let v = mixer.proj(&mixer.wv, mixer.y_row(y, i));
+            for (o, vv) in row.iter_mut().zip(&v) {
+                *o += weights[i - 1] / z * vv;
+            }
+        }
+    }
+    out
+}

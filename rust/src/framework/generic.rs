@@ -1,0 +1,131 @@
+//! Algorithm 4 — Generic Flash Inference — plus the lazy evaluator it is
+//! checked against (Theorem 2: identical outputs, O(L log² L) calls to A).
+
+use anyhow::{bail, Result};
+
+use super::mixer::ContributionMixer;
+use crate::tiling::{tile_side, Tile};
+use crate::util::tensor::Tensor;
+
+/// A stack of contribution mixers with element-wise blocks and a sampler.
+pub struct GenericModel<M: ContributionMixer> {
+    pub mixers: Vec<M>,
+    /// `block(layer, read(b_{l,i})) -> a_{l,i}`.
+    pub block: Box<dyn Fn(usize, &[f32]) -> Vec<f32>>,
+    /// `sampler(a_{M,i}) -> a_{0,i+1}`.
+    pub sampler: Box<dyn Fn(&[f32]) -> Vec<f32>>,
+    pub d: usize,
+}
+
+/// Result of a generic run: activations per level (`a_0..a_M`, each
+/// `[len, D]`) and the number of calls to `A` per layer.
+pub struct GenericOutput {
+    pub activations: Vec<Tensor>,
+    pub a_calls: usize,
+}
+
+impl<M: ContributionMixer> GenericModel<M> {
+    fn levels(&self) -> usize {
+        self.mixers.len()
+    }
+
+    /// Algorithm 4. Requires P.2 of every mixer.
+    pub fn generate_flash(&self, a01: &[f32], len: usize) -> Result<GenericOutput> {
+        if let Some(bad) = self.mixers.iter().position(|m| !m.query_independent()) {
+            bail!(
+                "mixer {bad} is not query-independent (P.2) — the tiling would \
+                 evaluate cont() before its query is available; use the lazy \
+                 engine (for attention this is exactly KV-cache decoding)"
+            );
+        }
+        if !len.is_power_of_two() {
+            bail!("len must be a power of two");
+        }
+        let m = self.levels();
+        let mut acts: Vec<Tensor> = (0..=m).map(|_| Tensor::zeros(&[len, self.d])).collect();
+        // b[l][t] incrementally aggregates cont(a_{l-1}, ., t+1)
+        let mut b: Vec<Vec<M::X>> = self
+            .mixers
+            .iter()
+            .map(|mx| vec![mx.neutral(); len])
+            .collect();
+        let mut a_calls = 0;
+
+        acts[0].row_mut(0).copy_from_slice(&a01[..self.d]);
+        for i in 1..=len {
+            for l in 1..=m {
+                let mx = &self.mixers[l - 1];
+                // red cell: cont(a_{l-1}, i, i)
+                let inc = mx.cont(&acts[l - 1], i, i);
+                mx.agg(&mut b[l - 1][i - 1], &inc);
+                let read = mx.read(&b[l - 1][i - 1]);
+                let a = (self.block)(l - 1, &read);
+                acts[l].row_mut(i - 1).copy_from_slice(&a);
+            }
+            if i < len {
+                // gray tile, parallel across layers (disjoint state)
+                let u = tile_side(i);
+                let tile = Tile::at(i);
+                for l in 1..=m {
+                    let mx = &self.mixers[l - 1];
+                    let contribs =
+                        mx.range_contrib(&acts[l - 1], tile.src_l, tile.src_r,
+                                         tile.dst_l, tile.dst_r);
+                    a_calls += 1;
+                    for (k, c) in contribs.iter().enumerate() {
+                        mx.agg(&mut b[l - 1][tile.dst_l - 1 + k], c);
+                    }
+                    debug_assert_eq!(contribs.len(), u);
+                }
+                // a_{0,i+1} = sampler(a_{M,i})
+                let next = (self.sampler)(acts[m].row(i - 1));
+                acts[0].row_mut(i).copy_from_slice(&next);
+            }
+        }
+        Ok(GenericOutput { activations: acts, a_calls })
+    }
+
+    /// Lazy evaluation — works for any P.1 mixer (including attention).
+    pub fn generate_lazy(&self, a01: &[f32], len: usize) -> Result<GenericOutput> {
+        let m = self.levels();
+        let mut acts: Vec<Tensor> = (0..=m).map(|_| Tensor::zeros(&[len, self.d])).collect();
+        acts[0].row_mut(0).copy_from_slice(&a01[..self.d]);
+        for i in 1..=len {
+            for l in 1..=m {
+                let mx = &self.mixers[l - 1];
+                let mut acc = mx.neutral();
+                for j in 1..=i {
+                    mx.agg(&mut acc, &mx.cont(&acts[l - 1], j, i));
+                }
+                let a = (self.block)(l - 1, &mx.read(&acc));
+                acts[l].row_mut(i - 1).copy_from_slice(&a);
+            }
+            if i < len {
+                let next = (self.sampler)(acts[m].row(i - 1));
+                acts[0].row_mut(i).copy_from_slice(&next);
+            }
+        }
+        Ok(GenericOutput { activations: acts, a_calls: 0 })
+    }
+}
+
+/// Row helpers for rank-2 tensors (position-major activations).
+/// (`row` is used by the drivers above; the dead-code lint misfires on
+/// trait methods in some compilation units, hence the allow.)
+#[allow(dead_code)]
+pub(crate) trait Rows {
+    fn row(&self, r: usize) -> &[f32];
+    fn row_mut(&mut self, r: usize) -> &mut [f32];
+}
+
+impl Rows for Tensor {
+    fn row(&self, r: usize) -> &[f32] {
+        let d = self.shape()[1];
+        &self.data()[r * d..(r + 1) * d]
+    }
+
+    fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let d = self.shape()[1];
+        &mut self.data_mut()[r * d..(r + 1) * d]
+    }
+}

@@ -1,0 +1,65 @@
+//! The LCSM instance of the framework (paper §4.1): `X = R^D`, `agg = +`,
+//! `read = id`, `cont(y, i, j) = y_i ⊙ rho_{j-i}`, and `A` = Lemma 1's
+//! range convolution.
+
+use super::mixer::ContributionMixer;
+use crate::util::tensor::Tensor;
+
+/// Depthwise long-convolution mixer, filter `[L, D]`.
+pub struct LcsmMixer {
+    pub rho: Tensor,
+    d: usize,
+}
+
+impl LcsmMixer {
+    pub fn new(rho: Tensor) -> LcsmMixer {
+        let d = rho.shape()[1];
+        LcsmMixer { rho, d }
+    }
+
+    fn rho_row(&self, lag: usize) -> &[f32] {
+        &self.rho.data()[lag * self.d..(lag + 1) * self.d]
+    }
+
+    fn y_row<'a>(&self, y: &'a Tensor, pos: usize) -> &'a [f32] {
+        &y.data()[(pos - 1) * self.d..pos * self.d]
+    }
+}
+
+impl ContributionMixer for LcsmMixer {
+    type X = Vec<f32>;
+
+    fn neutral(&self) -> Vec<f32> {
+        vec![0.0; self.d]
+    }
+
+    fn agg(&self, acc: &mut Vec<f32>, inc: &Vec<f32>) {
+        for (a, b) in acc.iter_mut().zip(inc) {
+            *a += b;
+        }
+    }
+
+    fn cont(&self, y: &Tensor, i: usize, j: usize) -> Vec<f32> {
+        let yi = self.y_row(y, i);
+        let r = self.rho_row(j - i);
+        yi.iter().zip(r).map(|(a, b)| a * b).collect()
+    }
+
+    fn read(&self, x: &Vec<f32>) -> Vec<f32> {
+        x.clone()
+    }
+
+    /// Lemma 1: one range convolution for the whole tile (here the direct
+    /// kernel; the production engine uses the FFT variant — the framework
+    /// only requires *some* efficient A).
+    fn range_contrib(&self, y: &Tensor, l: usize, r: usize, lp: usize, rp: usize) -> Vec<Vec<f32>> {
+        let u = r - l + 1;
+        debug_assert_eq!(rp - lp + 1, u);
+        debug_assert_eq!(lp, r + 1);
+        let yblk = &y.data()[(l - 1) * self.d..r * self.d];
+        let rho_seg = &self.rho.data()[..2 * u * self.d];
+        let mut out = vec![0.0f32; u * self.d];
+        crate::fft::tile_conv_direct_into(yblk, rho_seg, &mut out, self.d);
+        out.chunks(self.d).map(|c| c.to_vec()).collect()
+    }
+}

@@ -1,0 +1,59 @@
+//! P.1 / P.2 (paper §4.1): the contribution-based mixer abstraction.
+//!
+//! A mixer is *contribution-based* (P.1) when
+//!
+//! ```text
+//! mixer(y)_j = read( agg( cont(y,1,j), cont(y,2,j), ..., cont(y,j,j) ) )
+//! ```
+//!
+//! for an associative `agg` over an intermediate state space `X`, and
+//! *query-independent* (P.2) when `cont(y,i,j)` does not read `y_{i+1..}`.
+//! Under P.1 + P.2 the fractal tiling applies black-box (Theorem 2); P.1
+//! alone still admits the lazy evaluation (self-attention is the canonical
+//! P.1-but-not-P.2 example — its KV decoding *is* the lazy algorithm).
+
+use crate::util::tensor::Tensor;
+
+/// A position-mixing layer in contribution form. Positions are 1-indexed
+/// (row `t-1` of `y` holds position `t`), matching `tiling::Tile`.
+pub trait ContributionMixer {
+    /// Intermediate state X.
+    type X: Clone;
+
+    /// Identity element of `agg`.
+    fn neutral(&self) -> Self::X;
+
+    /// In-place associative aggregation: `acc = agg(acc, inc)`. Calls are
+    /// made in ascending input order (associativity is assumed, not
+    /// commutativity — the tiling preserves order, see Theorem 2's proof).
+    fn agg(&self, acc: &mut Self::X, inc: &Self::X);
+
+    /// Contribution of input position `i` to output position `j` (i <= j).
+    fn cont(&self, y: &Tensor, i: usize, j: usize) -> Self::X;
+
+    /// Map the aggregated state back to an embedding.
+    fn read(&self, x: &Self::X) -> Vec<f32>;
+
+    /// P.2: `cont(y, i, j)` reads only `y_{1..i}`. Mixers violating this
+    /// (attention: `cont` needs the query at `j`) cannot use the tiling.
+    fn query_independent(&self) -> bool {
+        true
+    }
+
+    /// The black-box algorithm `A` (paper §4.2): aggregated contributions
+    /// of `y[l..=r]` to every output position in `[lp..=rp]`, `r < lp`.
+    /// Default is the brute-force O((r-l+1)(rp-lp+1)) evaluation; efficient
+    /// mixers override it (LCSM: Lemma 1's FFT; decaying sum: rank-1).
+    fn range_contrib(&self, y: &Tensor, l: usize, r: usize, lp: usize, rp: usize) -> Vec<Self::X> {
+        debug_assert!(l <= r && r < lp && lp <= rp);
+        (lp..=rp)
+            .map(|p| {
+                let mut acc = self.neutral();
+                for i in l..=r {
+                    self.agg(&mut acc, &self.cont(y, i, p));
+                }
+                acc
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,24 @@
+//! Section 4: the Flash Inference *framework* — the paper's "and Beyond".
+//!
+//! Any mixer that is contribution-based (P.1) with an associative
+//! aggregator and query-independent contributions (P.2) admits the fractal
+//! tiling black-box (Theorem 2 / Algorithm 4). This module provides the
+//! abstraction, the generic driver, and three instances:
+//!
+//! * [`lcsm::LcsmMixer`]      — the paper's main subject (Lemma-1 A);
+//! * [`wsum::DecaySumMixer`]  — a non-convolutional P.1+P.2 mixer with an
+//!   O((L1+L2)D) rank-1 A, showing the framework is broader than FFTs;
+//! * [`attention::AttentionMixer`] — P.1 but NOT P.2: the driver rejects
+//!   it for tiling, and its lazy evaluation is precisely KV-cache decoding.
+
+pub mod attention;
+pub mod generic;
+pub mod lcsm;
+pub mod mixer;
+pub mod wsum;
+
+pub use attention::AttentionMixer;
+pub use generic::{GenericModel, GenericOutput};
+pub use lcsm::LcsmMixer;
+pub use mixer::ContributionMixer;
+pub use wsum::DecaySumMixer;

@@ -1,0 +1,64 @@
+//! "…and Beyond": a non-convolutional mixer satisfying P.1 + P.2 — the
+//! exponentially-decaying causal sum, `mixer(y)_j = Σ_{i<=j} γ^{j-i} y_i`
+//! (a linear-attention / LTI-SSM-flavored primitive). Its efficient `A`
+//! is *rank-1*: one pass builds `S_r = Σ γ^{r-i} y_i` over the source
+//! range, every output is a scalar rescale — `O((L1+L2)·D)`, even better
+//! than the FFT's `O((L1+L2) log(L1+L2) D)`. The framework only needs
+//! *associativity*, not convolution structure (paper §4.2).
+
+use super::mixer::ContributionMixer;
+use crate::util::tensor::Tensor;
+
+pub struct DecaySumMixer {
+    pub gamma: f32,
+    d: usize,
+}
+
+impl DecaySumMixer {
+    pub fn new(gamma: f32, d: usize) -> DecaySumMixer {
+        assert!((0.0..=1.0).contains(&gamma));
+        DecaySumMixer { gamma, d }
+    }
+}
+
+impl ContributionMixer for DecaySumMixer {
+    type X = Vec<f32>;
+
+    fn neutral(&self) -> Vec<f32> {
+        vec![0.0; self.d]
+    }
+
+    fn agg(&self, acc: &mut Vec<f32>, inc: &Vec<f32>) {
+        for (a, b) in acc.iter_mut().zip(inc) {
+            *a += b;
+        }
+    }
+
+    fn cont(&self, y: &Tensor, i: usize, j: usize) -> Vec<f32> {
+        let w = self.gamma.powi((j - i) as i32);
+        let yi = &y.data()[(i - 1) * self.d..i * self.d];
+        yi.iter().map(|v| v * w).collect()
+    }
+
+    fn read(&self, x: &Vec<f32>) -> Vec<f32> {
+        x.clone()
+    }
+
+    /// Rank-1 A: S_r = Σ_{i=l..r} γ^{r-i} y_i once, then out_p = γ^{p-r} S_r.
+    fn range_contrib(&self, y: &Tensor, l: usize, r: usize, lp: usize, rp: usize) -> Vec<Vec<f32>> {
+        let mut s = vec![0.0f32; self.d];
+        for i in l..=r {
+            let w = self.gamma.powi((r - i) as i32);
+            let yi = &y.data()[(i - 1) * self.d..i * self.d];
+            for (acc, v) in s.iter_mut().zip(yi) {
+                *acc += v * w;
+            }
+        }
+        (lp..=rp)
+            .map(|p| {
+                let w = self.gamma.powi((p - r) as i32);
+                s.iter().map(|v| v * w).collect()
+            })
+            .collect()
+    }
+}

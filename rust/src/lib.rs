@@ -1,0 +1,57 @@
+//! # Flash Inference
+//!
+//! Production reproduction of *"Flash Inference: Near Linear Time Inference
+//! for Long Convolution Sequence Models and Beyond"* (ICLR 2025).
+//!
+//! Long-convolution sequence models (LCSMs, e.g. Hyena) train in
+//! `O(L log L)` via FFT but decode naively in `Ω(L²)`: the convolution
+//! input is revealed one position at a time. The paper adapts van der
+//! Hoeven's *relaxed polynomial interpolation* — a fractal tiling of the
+//! (input × output) contribution triangle into power-of-two square tiles —
+//! to obtain **exact** `O(L log² L)` autoregressive inference, with the
+//! tile primitive `τ` computable by FFT (Lemma 1) and almost all mixer work
+//! parallelizable across layers (Algorithm 3).
+//!
+//! This crate is the **L3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas tile kernels (build-time Python, `python/compile/kernels/`),
+//! * **L2** — the JAX model (`python/compile/model.py`), lowered once to
+//!   HLO-text artifacts by `python/compile/aot.py`,
+//! * **L3** — this crate: loads the artifacts via the PJRT CPU client
+//!   ([`runtime`]), owns the token loop and the fractal tile schedule
+//!   ([`tiling`], [`engine`]), dispatches `τ` across four implementations
+//!   with a calibrated hybrid ([`tau`]), and serves requests ([`server`]).
+//!
+//! Python never runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use flash_inference::engine::{Engine, EngineOpts, Method};
+//! use flash_inference::runtime::Runtime;
+//!
+//! let rt = Runtime::load("artifacts/synthetic").unwrap();
+//! let mut eng = Engine::new(&rt, EngineOpts { method: Method::Flash, ..Default::default() }).unwrap();
+//! let out = eng.generate(256).unwrap();
+//! println!("generated {} positions", out.steps);
+//! ```
+//!
+//! See `examples/quickstart.rs` for the end-to-end driver and
+//! `rust/benches/` for the reproductions of every figure in the paper.
+
+pub mod cli;
+pub mod config;
+pub mod engine;
+pub mod fft;
+pub mod framework;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod tau;
+pub mod tiling;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

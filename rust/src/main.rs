@@ -1,0 +1,18 @@
+//! `flashinfer` — the Flash Inference coordinator binary.
+//!
+//! Python runs only at build time (`make artifacts`); this binary is
+//! self-contained afterwards: it loads HLO-text artifacts via the PJRT CPU
+//! client and serves/generates/benchmarks from rust alone.
+
+use flash_inference::cli::commands;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match commands::run(argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Log-bucketed latency histogram + exact-percentile recorder.
+
+/// Records raw samples (ns) and serves percentiles/summaries.
+/// For the request-level server metrics a bounded reservoir keeps memory
+/// constant; per-token traces (Fig 2c) use `samples()` directly.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+    /// 0 = unbounded (bench traces); otherwise reservoir size.
+    cap: usize,
+    seen: u64,
+    sum_ns: f64,
+    max_ns: f64,
+}
+
+impl LatencyRecorder {
+    pub fn unbounded() -> LatencyRecorder {
+        LatencyRecorder { samples: Vec::new(), cap: 0, seen: 0, sum_ns: 0.0, max_ns: 0.0 }
+    }
+
+    pub fn reservoir(cap: usize) -> LatencyRecorder {
+        LatencyRecorder { samples: Vec::with_capacity(cap), cap, seen: 0, sum_ns: 0.0, max_ns: 0.0 }
+    }
+
+    pub fn record_ns(&mut self, ns: f64) {
+        self.seen += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+        if self.cap == 0 || self.samples.len() < self.cap {
+            self.samples.push(ns);
+        } else {
+            // reservoir sampling with deterministic stride (metrics only)
+            let idx = (self.seen as usize * 2654435761) % self.cap;
+            self.samples[idx] = ns;
+        }
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as f64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.sum_ns / self.seen as f64
+        }
+    }
+
+    pub fn total_ns(&self) -> f64 {
+        self.sum_ns
+    }
+
+    pub fn max_ns(&self) -> f64 {
+        self.max_ns
+    }
+
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_max_percentiles() {
+        let mut r = LatencyRecorder::unbounded();
+        for v in [10.0, 20.0, 30.0, 40.0, 100.0] {
+            r.record_ns(v);
+        }
+        assert_eq!(r.count(), 5);
+        assert_eq!(r.mean_ns(), 40.0);
+        assert_eq!(r.max_ns(), 100.0);
+        assert_eq!(r.percentile_ns(0.0), 10.0);
+        assert_eq!(r.percentile_ns(50.0), 30.0);
+        assert_eq!(r.percentile_ns(100.0), 100.0);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded() {
+        let mut r = LatencyRecorder::reservoir(16);
+        for i in 0..10_000 {
+            r.record_ns(i as f64);
+        }
+        assert_eq!(r.count(), 10_000);
+        assert_eq!(r.samples().len(), 16);
+        assert_eq!(r.max_ns(), 9999.0);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let r = LatencyRecorder::unbounded();
+        assert_eq!(r.mean_ns(), 0.0);
+        assert_eq!(r.percentile_ns(99.0), 0.0);
+    }
+}

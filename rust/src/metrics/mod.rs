@@ -1,0 +1,139 @@
+//! Metrics: per-token breakdown timers (the mixer / non-mixer split every
+//! figure in §5 is built on) and request-level counters for the server.
+
+pub mod histogram;
+
+pub use histogram::LatencyRecorder;
+
+use std::time::Duration;
+
+/// Per-generation-session timing breakdown.
+///
+/// * `mixer` — gray-tile τ work (+ lazy/eager pending accumulation in the
+///   baselines): what Fig 2b/3b isolate;
+/// * `step` — red cells + blocks + head (the PJRT `step` call and its
+///   staging);
+/// * `sample` — token sampling + re-embedding.
+#[derive(Debug, Default, Clone)]
+pub struct Breakdown {
+    pub mixer_ns: f64,
+    pub step_ns: f64,
+    pub sample_ns: f64,
+}
+
+impl Breakdown {
+    pub fn total_ns(&self) -> f64 {
+        self.mixer_ns + self.step_ns + self.sample_ns
+    }
+
+    pub fn non_mixer_ns(&self) -> f64 {
+        self.step_ns + self.sample_ns
+    }
+
+    pub fn add(&mut self, other: &Breakdown) {
+        self.mixer_ns += other.mixer_ns;
+        self.step_ns += other.step_ns;
+        self.sample_ns += other.sample_ns;
+    }
+}
+
+/// Full per-session metrics: one breakdown entry per generated position
+/// (Fig 2c = `per_token`), plus cumulative sums.
+#[derive(Debug, Default, Clone)]
+pub struct SessionMetrics {
+    pub per_token: Vec<Breakdown>,
+    pub totals: Breakdown,
+    pub wall: Duration,
+}
+
+impl SessionMetrics {
+    pub fn with_capacity(n: usize) -> SessionMetrics {
+        SessionMetrics { per_token: Vec::with_capacity(n), ..Default::default() }
+    }
+
+    pub fn push(&mut self, b: Breakdown) {
+        self.totals.add(&b);
+        self.per_token.push(b);
+    }
+
+    /// Cumulative mixer time series (Fig 2b / 3b y-axis).
+    pub fn cumulative_mixer_ns(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.per_token
+            .iter()
+            .map(|b| {
+                acc += b.mixer_ns;
+                acc
+            })
+            .collect()
+    }
+
+    /// Total per-token latency series (Fig 2c y-axis).
+    pub fn token_latencies_ns(&self) -> Vec<f64> {
+        self.per_token.iter().map(Breakdown::total_ns).collect()
+    }
+}
+
+/// Monotonic counters for the server (`GET /metrics`).
+#[derive(Debug, Default)]
+pub struct ServerCounters {
+    pub requests_total: u64,
+    pub requests_failed: u64,
+    pub tokens_generated: u64,
+    pub batches_run: u64,
+    pub queue_latency: LatencyRecorder,
+    pub request_latency: LatencyRecorder,
+}
+
+impl ServerCounters {
+    pub fn new() -> ServerCounters {
+        ServerCounters {
+            queue_latency: LatencyRecorder::reservoir(4096),
+            request_latency: LatencyRecorder::reservoir(4096),
+            ..Default::default()
+        }
+    }
+
+    /// Prometheus-style text exposition.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut metric = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+        };
+        metric("fi_requests_total", "requests accepted", self.requests_total as f64);
+        metric("fi_requests_failed", "requests failed", self.requests_failed as f64);
+        metric("fi_tokens_generated", "tokens generated", self.tokens_generated as f64);
+        metric("fi_batches_run", "generation batches run", self.batches_run as f64);
+        metric("fi_queue_latency_p50_ms", "queue wait p50", self.queue_latency.percentile_ns(50.0) / 1e6);
+        metric("fi_queue_latency_p99_ms", "queue wait p99", self.queue_latency.percentile_ns(99.0) / 1e6);
+        metric("fi_request_latency_p50_ms", "request latency p50", self.request_latency.percentile_ns(50.0) / 1e6);
+        metric("fi_request_latency_p99_ms", "request latency p99", self.request_latency.percentile_ns(99.0) / 1e6);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_sums() {
+        let mut m = SessionMetrics::with_capacity(2);
+        m.push(Breakdown { mixer_ns: 10.0, step_ns: 5.0, sample_ns: 1.0 });
+        m.push(Breakdown { mixer_ns: 20.0, step_ns: 5.0, sample_ns: 1.0 });
+        assert_eq!(m.totals.total_ns(), 42.0);
+        assert_eq!(m.totals.non_mixer_ns(), 12.0);
+        assert_eq!(m.cumulative_mixer_ns(), vec![10.0, 30.0]);
+        assert_eq!(m.token_latencies_ns(), vec![16.0, 26.0]);
+    }
+
+    #[test]
+    fn counters_render_prometheus_text() {
+        let mut c = ServerCounters::new();
+        c.requests_total = 3;
+        c.request_latency.record_ns(1e6);
+        let text = c.render();
+        assert!(text.contains("fi_requests_total 3"));
+        assert!(text.contains("# TYPE fi_request_latency_p50_ms gauge"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Model ABI: dimensions (from the manifest) and weights (tensorbin).
+
+pub mod spec;
+pub mod weights;
+
+pub use spec::{ModelDims, Variant};
+pub use weights::Weights;

@@ -1,0 +1,146 @@
+//! Model dimensions/ABI as read from the artifact manifest.
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Which model family the artifacts implement (paper §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// §5 synthetic: MLP blocks, sampler = last activation (+ noise).
+    Synthetic,
+    /// §5.1 Hyena: order-3 operators, gated mixers, LM head.
+    Hyena,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Result<Variant> {
+        match s {
+            "synthetic" => Ok(Variant::Synthetic),
+            "hyena" => Ok(Variant::Hyena),
+            other => bail!("unknown model variant '{other}'"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Variant::Synthetic => "synthetic",
+            Variant::Hyena => "hyena",
+        }
+    }
+}
+
+/// Static dimensions of one artifact build (shapes are baked into HLO).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub variant: Variant,
+    /// Mixer layers.
+    pub m: usize,
+    /// Embedding dim.
+    pub d: usize,
+    /// Block MLP hidden dim.
+    pub h: usize,
+    /// Max sequence length (power of two); tau artifacts exist for
+    /// U in {1, 2, .., L/2}.
+    pub l: usize,
+    /// Batch lanes stepped in lockstep.
+    pub b: usize,
+    /// Vocab (hyena LM head).
+    pub v: usize,
+    /// Fused tile group axis: b * m.
+    pub g: usize,
+}
+
+impl ModelDims {
+    pub fn from_json(j: &Json) -> Result<ModelDims> {
+        let dims = ModelDims {
+            variant: Variant::parse(j.req_str("variant")?)?,
+            m: j.req_usize("M")?,
+            d: j.req_usize("D")?,
+            h: j.req_usize("H")?,
+            l: j.req_usize("L")?,
+            b: j.req_usize("B")?,
+            v: j.req_usize("V")?,
+            g: j.req_usize("G")?,
+        };
+        dims.validate()?;
+        Ok(dims)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.l.is_power_of_two() {
+            bail!("L={} must be a power of two", self.l);
+        }
+        if self.g != self.b * self.m {
+            bail!("G={} != B*M={}", self.g, self.b * self.m);
+        }
+        if self.variant == Variant::Hyena && self.m % 2 != 0 {
+            bail!("hyena needs even M, got {}", self.m);
+        }
+        Ok(())
+    }
+
+    /// Hyena operators (M/2).
+    pub fn ops(&self) -> usize {
+        self.m / 2
+    }
+
+    /// Output width of the step artifact: D (synthetic) or V (hyena logits).
+    pub fn out_width(&self) -> usize {
+        match self.variant {
+            Variant::Synthetic => self.d,
+            Variant::Hyena => self.v,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_json() -> Json {
+        Json::parse(
+            r#"{"variant": "synthetic", "M": 6, "D": 64, "H": 128,
+                "L": 4096, "B": 1, "V": 256, "G": 6}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_valid_config() {
+        let dims = ModelDims::from_json(&base_json()).unwrap();
+        assert_eq!(dims.m, 6);
+        assert_eq!(dims.out_width(), 64);
+        assert_eq!(dims.variant, Variant::Synthetic);
+    }
+
+    #[test]
+    fn rejects_non_pow2_l() {
+        let mut j = base_json();
+        j.set("L", Json::Num(100.0));
+        assert!(ModelDims::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_g() {
+        let mut j = base_json();
+        j.set("G", Json::Num(7.0));
+        assert!(ModelDims::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn hyena_out_width_is_vocab() {
+        let mut j = base_json();
+        j.set("variant", Json::Str("hyena".into()));
+        let dims = ModelDims::from_json(&j).unwrap();
+        assert_eq!(dims.out_width(), 256);
+        assert_eq!(dims.ops(), 3);
+    }
+
+    #[test]
+    fn variant_roundtrip() {
+        for v in [Variant::Synthetic, Variant::Hyena] {
+            assert_eq!(Variant::parse(v.as_str()).unwrap(), v);
+        }
+        assert!(Variant::parse("gpt").is_err());
+    }
+}

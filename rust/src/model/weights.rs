@@ -1,0 +1,161 @@
+//! tensorbin v1 reader — the weight half of the aot.py ↔ rust ABI.
+//! Format documented in python/compile/tensorbin.py.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"FTBIN1\x00\x00";
+
+/// Named weight tensors loaded from model.bin.
+#[derive(Debug)]
+pub struct Weights {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open weights {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic).context("read magic")?;
+        if &magic != MAGIC {
+            bail!("{}: bad tensorbin magic {:?}", path.display(), magic);
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb).context("read header len")?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        let mut header = vec![0u8; hlen];
+        f.read_exact(&mut header).context("read header")?;
+        let header: Json = Json::parse(std::str::from_utf8(&header)?)
+            .map_err(|e| anyhow::anyhow!("tensorbin header: {e}"))?;
+        let mut data = Vec::new();
+        f.read_to_end(&mut data).context("read data")?;
+
+        let mut tensors = HashMap::new();
+        for e in header.req_arr("tensors")? {
+            let name = e.req_str("name")?.to_string();
+            let dtype = e.req_str("dtype")?;
+            if dtype != "f32" {
+                bail!("tensor '{name}': unsupported dtype {dtype}");
+            }
+            let shape: Vec<usize> = e
+                .req_arr("shape")?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape")))
+                .collect::<Result<_>>()?;
+            let offset = e.req_usize("offset")?;
+            let nbytes = e.req_usize("nbytes")?;
+            if offset + nbytes > data.len() {
+                bail!("tensor '{name}' overruns data section");
+            }
+            if nbytes % 4 != 0 {
+                bail!("tensor '{name}' nbytes not a multiple of 4");
+            }
+            let floats: Vec<f32> = data[offset..offset + nbytes]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name.clone(), Tensor::from_vec(&shape, floats)
+                .with_context(|| format!("tensor '{name}'"))?);
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight tensor '{name}'"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Mirror of the python writer, for round-trip tests.
+    pub fn write_tensorbin(path: &Path, tensors: &[(&str, &[usize], &[f32])]) {
+        let mut entries = Vec::new();
+        let mut blobs: Vec<u8> = Vec::new();
+        let mut sorted: Vec<_> = tensors.to_vec();
+        sorted.sort_by_key(|(n, _, _)| n.to_string());
+        for (name, shape, data) in sorted {
+            let offset = blobs.len();
+            for v in data {
+                blobs.extend_from_slice(&v.to_le_bytes());
+            }
+            let shape_json = shape.iter().map(|&s| s.to_string()).collect::<Vec<_>>().join(",");
+            entries.push(format!(
+                r#"{{"name":"{name}","shape":[{shape_json}],"dtype":"f32","offset":{offset},"nbytes":{}}}"#,
+                data.len() * 4
+            ));
+        }
+        let header = format!(r#"{{"tensors":[{}]}}"#, entries.join(","));
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(header.len() as u64).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        f.write_all(&blobs).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("fi_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        write_tensorbin(
+            &path,
+            &[
+                ("a", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                ("b.c", &[1], &[-0.5]),
+            ],
+        );
+        let w = Weights::load(&path).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.get("a").unwrap().shape(), &[2, 3]);
+        assert_eq!(w.get("a").unwrap().data()[4], 5.0);
+        assert_eq!(w.get("b.c").unwrap().data(), &[-0.5]);
+        assert!(w.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("fi_weights_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC________").unwrap();
+        assert!(Weights::load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_overrun_offsets() {
+        let dir = std::env::temp_dir().join("fi_weights_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("overrun.bin");
+        let header = r#"{"tensors":[{"name":"x","shape":[8],"dtype":"f32","offset":0,"nbytes":32}]}"#;
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(header.len() as u64).to_le_bytes()).unwrap();
+        f.write_all(header.as_bytes()).unwrap();
+        f.write_all(&[0u8; 4]).unwrap(); // only 4 bytes of data, not 32
+        assert!(Weights::load(&path).is_err());
+    }
+}

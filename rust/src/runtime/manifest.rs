@@ -1,0 +1,184 @@
+//! Artifact manifest: the aot.py → rust contract (names, shapes, files).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelDims;
+use crate::util::json::Json;
+
+/// One tensor in an artifact's signature.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Runtime value, fresh every call (`$` prefix).
+    pub fn is_runtime(&self) -> bool {
+        self.name.starts_with('$')
+    }
+
+    /// Derived once at engine init (`@` prefix).
+    pub fn is_derived(&self) -> bool {
+        self.name.starts_with('@')
+    }
+
+    /// Weight from model.bin (no prefix).
+    pub fn is_weight(&self) -> bool {
+        !self.is_runtime() && !self.is_derived()
+    }
+}
+
+/// One HLO artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: Option<String>,
+    /// Tile side for tau artifacts; prompt length for prefill.
+    pub param: Option<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Parsed manifest.json for one build directory.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub weights_file: PathBuf,
+    pub golden: Option<GoldenSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+/// Reference rollout emitted by aot.py (exactness oracle).
+#[derive(Debug, Clone)]
+pub struct GoldenSpec {
+    pub file: PathBuf,
+    pub steps: usize,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.req_str("name")?.to_string(),
+        shape: j
+            .req_arr("shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape entry")))
+            .collect::<Result<_>>()?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+
+        let dims = ModelDims::from_json(
+            j.get("config").ok_or_else(|| anyhow::anyhow!("manifest missing 'config'"))?,
+        )?;
+        let weights_file = dir.join(j.req_str("weights_file")?);
+
+        let golden = match j.get("golden") {
+            Some(Json::Null) | None => None,
+            Some(g) => Some(GoldenSpec {
+                file: dir.join(g.req_str("file")?),
+                steps: g.req_usize("steps")?,
+            }),
+        };
+
+        let mut artifacts = Vec::new();
+        for a in j.req_arr("artifacts")? {
+            artifacts.push(ArtifactSpec {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                kind: a.get("kind").and_then(Json::as_str).map(String::from),
+                param: a
+                    .get("u")
+                    .or_else(|| a.get("p"))
+                    .and_then(Json::as_usize),
+                inputs: a.req_arr("inputs")?.iter().map(parse_io).collect::<Result<_>>()?,
+                outputs: a.req_arr("outputs")?.iter().map(parse_io).collect::<Result<_>>()?,
+            });
+        }
+        let man = Manifest { dir: dir.to_path_buf(), dims, weights_file, golden, artifacts };
+        man.validate()?;
+        Ok(man)
+    }
+
+    fn validate(&self) -> Result<()> {
+        self.find("step")?;
+        self.find("filter_gen")?;
+        // every tau size up to L/2 must exist in both families
+        let mut u = 1;
+        while u <= self.dims.l / 2 {
+            self.find(&format!("tau_fft_{u}"))?;
+            self.find(&format!("tau_direct_{u}"))?;
+            u *= 2;
+        }
+        for a in &self.artifacts {
+            if !self.dir.join(&a.file).exists() {
+                bail!("artifact file missing: {}", a.file);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no artifact '{name}'"))
+    }
+
+    /// Prefill artifact with the largest prompt length <= `p`, if any.
+    pub fn best_prefill(&self, p: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind.as_deref() == Some("prefill"))
+            .filter(|a| a.param.unwrap_or(0) <= p)
+            .max_by_key(|a| a.param.unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_spec_prefixes() {
+        let r = IoSpec { name: "$y".into(), shape: vec![2, 3] };
+        let d = IoSpec { name: "@rho0".into(), shape: vec![4] };
+        let w = IoSpec { name: "blk.w1".into(), shape: vec![1] };
+        assert!(r.is_runtime() && !r.is_weight());
+        assert!(d.is_derived() && !d.is_weight());
+        assert!(w.is_weight());
+        assert_eq!(r.elems(), 6);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // integration-grade check, but cheap: only runs when artifacts exist
+        let dir = Path::new("artifacts/synthetic");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.dims.l >= 2);
+        let step = m.find("step").unwrap();
+        assert_eq!(step.inputs[0].name, "$pending_col");
+        assert!(m.find("nope").is_err());
+        let tau = m.find("tau_fft_1").unwrap();
+        assert_eq!(tau.param, Some(1));
+        assert_eq!(tau.kind.as_deref(), Some("tau_fft"));
+    }
+}

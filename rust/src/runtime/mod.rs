@@ -1,0 +1,218 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute from the
+//! rust request path. Wraps the `xla` crate (xla_extension 0.5.1, CPU).
+//!
+//! Buffer discipline (the PJRT analogue of the paper's §5.4(4)
+//! "pre-initialized configurations"):
+//! * weights upload once per process → persistent `PjRtBuffer`s;
+//! * `@`-inputs (rho0, filter spectra per tile size) upload once at engine
+//!   init → persistent buffers owned by the engine;
+//! * `$`-inputs are the only per-call host→device copies.
+//!
+//! Executables are compiled lazily on first use and cached; a generation
+//! run compiles `step` + the tau sizes its schedule touches, once.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, GoldenSpec, IoSpec, Manifest};
+
+use crate::model::{ModelDims, Weights};
+
+/// A compiled artifact plus its ABI spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute, leaving the outputs on device (no host transfer). The
+    /// result is the PJRT output tuple buffer.
+    pub fn call_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        self.exe
+            .execute_b(args)
+            .with_context(|| format!("execute artifact '{}'", self.spec.name))
+    }
+
+    /// Execute with device buffers in manifest input order; returns the
+    /// output literals in manifest output order.
+    pub fn call(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact '{}' wants {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                args.len()
+            );
+        }
+        let outs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("execute artifact '{}'", self.spec.name))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch outputs of '{}'", self.spec.name))?;
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let parts = tuple.to_tuple().context("decompose output tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact '{}' returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+/// The loaded model: manifest + weights + PJRT client + executable cache.
+///
+/// NOTE: PJRT handles are not `Send`; a `Runtime` lives on the thread that
+/// created it (the engine thread). The server hands requests over channels.
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub dims: ModelDims,
+    pub weights: Weights,
+    client: xla::PjRtClient,
+    exes: Mutex<HashMap<String, Arc<Executable>>>,
+    weight_bufs: Mutex<HashMap<String, Arc<xla::PjRtBuffer>>>,
+}
+
+impl Runtime {
+    /// Load a build directory produced by `make artifacts`
+    /// (e.g. `artifacts/synthetic`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let weights = Weights::load(&manifest.weights_file)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            dir: dir.to_path_buf(),
+            dims: manifest.dims,
+            manifest,
+            weights,
+            client,
+            exes: Mutex::new(HashMap::new()),
+            weight_bufs: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.find(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile '{name}'"))?;
+        let e = Arc::new(Executable { spec, exe });
+        self.exes.lock().unwrap().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Host → device upload of an f32 tensor.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload buffer")
+    }
+
+    /// Persistent device buffer of a named weight (uploaded on first use).
+    pub fn weight_buffer(&self, name: &str) -> Result<Arc<xla::PjRtBuffer>> {
+        if let Some(b) = self.weight_bufs.lock().unwrap().get(name) {
+            return Ok(b.clone());
+        }
+        let t = self.weights.get(name)?;
+        let buf = Arc::new(self.upload(t.data(), t.shape())?);
+        self.weight_bufs.lock().unwrap().insert(name.to_string(), buf.clone());
+        Ok(buf)
+    }
+
+    /// Read an f32 literal back to host, checking the element count.
+    pub fn literal_to_vec(lit: &xla::Literal, want_elems: usize) -> Result<Vec<f32>> {
+        let v: Vec<f32> = lit.to_vec().context("literal to host vec")?;
+        if v.len() != want_elems {
+            bail!("literal has {} elems, want {}", v.len(), want_elems);
+        }
+        Ok(v)
+    }
+}
+
+/// An artifact bound to its argument sources: weights resolved to
+/// persistent buffers, `@`-inputs resolved against an engine-provided set,
+/// `$`-inputs supplied per call (in manifest order).
+pub struct BoundArtifact {
+    pub exe: Arc<Executable>,
+    slots: Vec<Slot>,
+    runtime_arity: usize,
+}
+
+enum Slot {
+    Weight(Arc<xla::PjRtBuffer>),
+    Derived(Arc<xla::PjRtBuffer>),
+    Runtime(usize),
+}
+
+impl BoundArtifact {
+    /// Resolve weight and derived inputs. `derived` maps `@name` → buffer.
+    pub fn bind(
+        rt: &Runtime,
+        name: &str,
+        derived: &HashMap<String, Arc<xla::PjRtBuffer>>,
+    ) -> Result<BoundArtifact> {
+        let exe = rt.executable(name)?;
+        let mut slots = Vec::with_capacity(exe.spec.inputs.len());
+        let mut runtime_arity = 0;
+        for input in &exe.spec.inputs {
+            if input.is_runtime() {
+                slots.push(Slot::Runtime(runtime_arity));
+                runtime_arity += 1;
+            } else if input.is_derived() {
+                let buf = derived.get(&input.name).ok_or_else(|| {
+                    anyhow::anyhow!("artifact '{name}': derived input '{}' not provided", input.name)
+                })?;
+                slots.push(Slot::Derived(buf.clone()));
+            } else {
+                slots.push(Slot::Weight(rt.weight_buffer(&input.name)?));
+            }
+        }
+        Ok(BoundArtifact { exe, slots, runtime_arity })
+    }
+
+    pub fn runtime_arity(&self) -> usize {
+        self.runtime_arity
+    }
+
+    /// Execute with the `$`-inputs (in manifest order).
+    pub fn call(&self, runtime_args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        if runtime_args.len() != self.runtime_arity {
+            bail!(
+                "artifact '{}' wants {} runtime args, got {}",
+                self.exe.spec.name,
+                self.runtime_arity,
+                runtime_args.len()
+            );
+        }
+        let args: Vec<&xla::PjRtBuffer> = self
+            .slots
+            .iter()
+            .map(|s| match s {
+                Slot::Weight(b) | Slot::Derived(b) => b.as_ref(),
+                Slot::Runtime(i) => runtime_args[*i],
+            })
+            .collect();
+        self.exe.call(&args)
+    }
+}

@@ -1,0 +1,269 @@
+//! HTTP API + engine worker thread.
+//!
+//! Routes:
+//! * `GET  /health`      — liveness + model summary
+//! * `GET  /metrics`     — Prometheus-style counters
+//! * `GET  /v1/info`     — model dims, engine opts, artifact dir
+//! * `POST /v1/generate` — `{"max_tokens": N}` → per-lane generation result
+//!
+//! PJRT handles are not `Send`, so the `Runtime`/`Engine` live on one
+//! dedicated worker thread; connection threads talk to it over an mpsc
+//! queue (the batcher). This is the same topology as a vLLM-style router
+//! front-end over a single-device engine.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{batch_len, collect_batch, GenRequest, LaneResult};
+use super::http::{read_request, write_response, Request, Response};
+use crate::config::ServerConfig;
+use crate::engine::{Engine, EngineOpts};
+use crate::metrics::ServerCounters;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+/// A running server (listener + engine worker).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+    engine_thread: Option<thread::JoinHandle<()>>,
+}
+
+struct Shared {
+    cfg: ServerConfig,
+    counters: Mutex<ServerCounters>,
+    queue: Mutex<Sender<GenRequest>>,
+    info: Json,
+}
+
+impl Server {
+    /// Bind and start serving. `port = 0` picks an ephemeral port.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(cfg.bind_addr())
+            .with_context(|| format!("bind {}", cfg.bind_addr()))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let (req_tx, req_rx) = channel::<GenRequest>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // ---- engine worker (owns the non-Send PJRT state) ----
+        let (ready_tx, ready_rx) = channel::<Result<Json, String>>();
+        let ecfg = cfg.clone();
+        let engine_thread = thread::Builder::new()
+            .name("fi-engine".into())
+            .spawn(move || {
+                let rt = match Runtime::load(&ecfg.artifacts) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("load runtime: {e:#}")));
+                        return;
+                    }
+                };
+                let mut engine = match Engine::new(&rt, ecfg.engine) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("init engine: {e:#}")));
+                        return;
+                    }
+                };
+                let dims = rt.dims;
+                let info = info_json(&ecfg, &ecfg.engine, &rt);
+                let _ = ready_tx.send(Ok(info));
+                let window = Duration::from_millis(ecfg.batch_window_ms);
+                while let Some(batch) = collect_batch(&req_rx, dims.b, window) {
+                    let len = batch_len(&batch, dims.l);
+                    let t0 = Instant::now();
+                    let result = engine.generate(len);
+                    let gen_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    match result {
+                        Ok(out) => {
+                            for (lane, req) in batch.into_iter().enumerate() {
+                                let tokens = out.tokens.as_ref().map(|all| {
+                                    let lane_toks = &all[lane.min(all.len() - 1)];
+                                    lane_toks[..req.max_tokens.min(lane_toks.len())].to_vec()
+                                });
+                                let _ = req.reply.send(Ok(LaneResult {
+                                    tokens,
+                                    steps: out.steps,
+                                    queue_ms: req.enqueued.elapsed().as_secs_f64() * 1e3
+                                        - gen_ms,
+                                    gen_ms,
+                                    batch_size: lane + 1,
+                                }));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = format!("generate: {e:#}");
+                            for req in batch {
+                                let _ = req.reply.send(Err(msg.clone()));
+                            }
+                        }
+                    }
+                }
+            })
+            .context("spawn engine thread")?;
+
+        let info = match ready_rx.recv() {
+            Ok(Ok(info)) => info,
+            Ok(Err(e)) => anyhow::bail!("engine failed to start: {e}"),
+            Err(_) => anyhow::bail!("engine thread died during startup"),
+        };
+
+        let shared = Arc::new(Shared {
+            cfg,
+            counters: Mutex::new(ServerCounters::new()),
+            queue: Mutex::new(req_tx),
+            info,
+        });
+
+        // ---- accept loop ----
+        let sd = shutdown.clone();
+        let sh = shared.clone();
+        let accept_thread = thread::Builder::new()
+            .name("fi-accept".into())
+            .spawn(move || {
+                while !sd.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let sh = sh.clone();
+                            let _ = thread::Builder::new()
+                                .name("fi-conn".into())
+                                .spawn(move || handle_connection(stream, sh));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawn accept thread")?;
+
+        Ok(Server {
+            addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            engine_thread: Some(engine_thread),
+        })
+    }
+
+    /// Stop accepting; the engine drains once the queue sender drops.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // engine thread exits when all GenRequest senders are gone; the
+        // Shared (and its queue Sender) died with the accept/conn threads.
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn info_json(cfg: &ServerConfig, eng: &EngineOpts, rt: &Runtime) -> Json {
+    let d = rt.dims;
+    Json::from_pairs(vec![
+        ("variant", Json::Str(d.variant.as_str().into())),
+        ("M", Json::Num(d.m as f64)),
+        ("D", Json::Num(d.d as f64)),
+        ("L", Json::Num(d.l as f64)),
+        ("B", Json::Num(d.b as f64)),
+        ("V", Json::Num(d.v as f64)),
+        ("method", Json::Str(eng.method.as_str().into())),
+        ("tau", Json::Str(eng.tau.as_str().into())),
+        ("artifacts", Json::Str(cfg.artifacts.display().to_string())),
+    ])
+}
+
+fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let resp = match read_request(&mut stream) {
+        Ok(req) => route(&req, &shared),
+        Err(e) => Response::bad_request(&format!("{e:#}")),
+    };
+    let _ = write_response(&mut stream, &resp);
+}
+
+fn route(req: &Request, shared: &Shared) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => Response::json(200, "{\"status\":\"ok\"}".into()),
+        ("GET", "/metrics") => {
+            Response::text(200, shared.counters.lock().unwrap().render())
+        }
+        ("GET", "/v1/info") => Response::json(200, shared.info.to_string()),
+        ("POST", "/v1/generate") => generate(req, shared),
+        ("POST" | "GET", _) => Response::not_found(),
+        _ => Response::json(405, "{\"error\":\"method not allowed\"}".into()),
+    }
+}
+
+fn generate(req: &Request, shared: &Shared) -> Response {
+    shared.counters.lock().unwrap().requests_total += 1;
+    let reject = |msg: String| {
+        shared.counters.lock().unwrap().requests_failed += 1;
+        Response::bad_request(&msg)
+    };
+    let body = match req.body_str() {
+        Ok(s) if !s.trim().is_empty() => s,
+        _ => "{}",
+    };
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return reject(format!("invalid JSON: {e}")),
+    };
+    let max_tokens = j
+        .get("max_tokens")
+        .and_then(Json::as_usize)
+        .unwrap_or(shared.cfg.default_max_tokens);
+    if max_tokens == 0 || max_tokens > shared.cfg.max_max_tokens {
+        return reject(format!(
+            "max_tokens must be in [1, {}]",
+            shared.cfg.max_max_tokens
+        ));
+    }
+    let (tx, rx) = channel();
+    let request = GenRequest { max_tokens, enqueued: Instant::now(), reply: tx };
+    if shared.queue.lock().unwrap().send(request).is_err() {
+        return Response::json(503, "{\"error\":\"engine unavailable\"}".into());
+    }
+    match rx.recv_timeout(Duration::from_secs(600)) {
+        Ok(Ok(lane)) => {
+            let mut c = shared.counters.lock().unwrap();
+            c.tokens_generated += max_tokens as u64;
+            c.batches_run += 1;
+            c.queue_latency.record_ns(lane.queue_ms.max(0.0) * 1e6);
+            c.request_latency.record_ns(lane.gen_ms * 1e6);
+            drop(c);
+            let mut pairs = vec![
+                ("steps", Json::Num(lane.steps as f64)),
+                ("max_tokens", Json::Num(max_tokens as f64)),
+                ("gen_ms", Json::Num(lane.gen_ms)),
+                ("batch_size", Json::Num(lane.batch_size as f64)),
+            ];
+            if let Some(toks) = lane.tokens {
+                pairs.push((
+                    "tokens",
+                    Json::Arr(toks.into_iter().map(|t| Json::Num(t as f64)).collect()),
+                ));
+            }
+            Response::json(200, Json::from_pairs(pairs).to_string())
+        }
+        Ok(Err(e)) => {
+            shared.counters.lock().unwrap().requests_failed += 1;
+            Response::json(500, Json::from_pairs(vec![("error", Json::Str(e))]).to_string())
+        }
+        Err(_) => {
+            shared.counters.lock().unwrap().requests_failed += 1;
+            Response::json(408, "{\"error\":\"generation timed out\"}".into())
+        }
+    }
+}

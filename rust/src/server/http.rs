@@ -1,0 +1,207 @@
+//! Minimal HTTP/1.1 substrate on `std::net` (hyper/axum unavailable
+//! offline). Enough protocol for a serving API: request line, headers,
+//! Content-Length bodies, keep-alive off (Connection: close per response).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not UTF-8")
+    }
+}
+
+/// Response under construction.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub reason: &'static str,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            reason: reason_for(status),
+            content_type: "application/json",
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: String) -> Response {
+        Response {
+            status,
+            reason: reason_for(status),
+            content_type: "text/plain; charset=utf-8",
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn not_found() -> Response {
+        Response::json(404, "{\"error\":\"not found\"}".into())
+    }
+
+    pub fn bad_request(msg: &str) -> Response {
+        let j = crate::util::json::Json::from_pairs(vec![(
+            "error",
+            crate::util::json::Json::Str(msg.to_string()),
+        )]);
+        Response::json(400, j.to_string())
+    }
+}
+
+fn reason_for(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Maximum accepted body (1 MiB — requests here are tiny JSON).
+const MAX_BODY: usize = 1 << 20;
+
+/// Read one request from the stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_uppercase();
+    let path = parts.next().unwrap_or_default().to_string();
+    let version = parts.next().unwrap_or_default();
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1") {
+        bail!("malformed request line: {line:?}");
+    }
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("read header")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse())
+        .transpose()
+        .context("bad Content-Length")?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        bail!("body too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body).context("read body")?;
+    }
+    Ok(Request { method, path, headers, body })
+}
+
+/// Serialize and send a response, closing the connection after.
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        resp.reason,
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+    use std::thread;
+
+    fn roundtrip(raw: &str) -> Result<Request> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_string();
+        let h = thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(raw.as_bytes()).unwrap();
+            c.flush().unwrap();
+            // keep the socket open until the server has read everything
+            thread::sleep(std::time::Duration::from_millis(50));
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let req = read_request(&mut s);
+        h.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = roundtrip(
+            "POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 18\r\n\r\n{\"max_tokens\": 32}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.body_str().unwrap(), "{\"max_tokens\": 32}");
+        assert_eq!(req.headers.get("host").map(String::as_str), Some("x"));
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = roundtrip("GET /health HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/health");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(roundtrip("NONSENSE\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let mut buf = String::new();
+            c.read_to_string(&mut buf).unwrap();
+            buf
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        write_response(&mut s, &Response::json(200, "{\"ok\":true}".into())).unwrap();
+        drop(s);
+        let got = h.join().unwrap();
+        assert!(got.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(got.contains("Content-Length: 11"));
+        assert!(got.ends_with("{\"ok\":true}"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Serving layer: minimal HTTP front-end, static batcher, and the
+//! engine worker thread (DESIGN.md §6).
+
+pub mod api;
+pub mod batcher;
+pub mod http;
+
+pub use api::Server;
+pub use batcher::{GenRequest, LaneResult};

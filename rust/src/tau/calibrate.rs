@@ -1,0 +1,166 @@
+//! τ calibration (§5.3): micro-bench every implementation at every tile
+//! size and persist the per-U winner. `flashinfer calibrate` runs this and
+//! writes `<artifacts>/hybrid.json`; Fig 3a is this table's raw data.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{make_impl, RhoCache, TauKind};
+use crate::tiling::Tile;
+use crate::util::benchkit;
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use crate::util::tensor::Tensor;
+
+/// Per-tile-size implementation choice (keyed by log2 U).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CalibrationTable {
+    by_log2u: Vec<TauKind>,
+}
+
+impl CalibrationTable {
+    pub fn new(by_log2u: Vec<TauKind>) -> CalibrationTable {
+        assert!(!by_log2u.is_empty());
+        CalibrationTable { by_log2u }
+    }
+
+    /// Built-in fallback when no calibration has been run: native direct
+    /// for small tiles (overhead-bound), native FFT for large
+    /// (FLOP-bound) — the asymptotics of DESIGN.md §3's mapping.
+    pub fn heuristic(l: usize) -> CalibrationTable {
+        let levels = (l / 2).max(1).trailing_zeros() as usize + 1;
+        let by = (0..levels)
+            .map(|q| if (1usize << q) <= 32 { TauKind::RustDirect } else { TauKind::RustFft })
+            .collect();
+        CalibrationTable::new(by)
+    }
+
+    pub fn choice(&self, u: usize) -> TauKind {
+        let q = u.trailing_zeros() as usize;
+        self.by_log2u[q.min(self.by_log2u.len() - 1)]
+    }
+
+    pub fn levels(&self) -> usize {
+        self.by_log2u.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr = self
+            .by_log2u
+            .iter()
+            .enumerate()
+            .map(|(q, k)| {
+                Json::from_pairs(vec![
+                    ("u", Json::Num((1u64 << q) as f64)),
+                    ("impl", Json::Str(k.as_str().into())),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![("table", Json::Arr(arr))])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<CalibrationTable> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let mut by = Vec::new();
+        for entry in j.req_arr("table")? {
+            let u = entry.req_usize("u")?;
+            let kind = TauKind::parse(entry.req_str("impl")?)?;
+            let q = u.trailing_zeros() as usize;
+            if by.len() <= q {
+                by.resize(q + 1, TauKind::RustDirect);
+            }
+            by[q] = kind;
+        }
+        Ok(CalibrationTable::new(by))
+    }
+}
+
+/// One measured row of the calibration sweep (Fig 3a data).
+#[derive(Debug, Clone)]
+pub struct CalRow {
+    pub u: usize,
+    /// (impl, median ns per tile) in `TauKind::ALL_FIXED` order.
+    pub medians_ns: Vec<(TauKind, f64)>,
+    pub winner: TauKind,
+}
+
+/// Micro-bench all τ impls for every U in [1, max_u] on synthetic data.
+pub fn calibrate(
+    cache: &RhoCache<'_>,
+    max_u: usize,
+    warmup: usize,
+    runs: usize,
+) -> Result<(CalibrationTable, Vec<CalRow>)> {
+    let dims = cache.runtime().dims;
+    let (g, d) = (dims.g, dims.d);
+    let mut rng = Prng::new(0xCA11B);
+    let mut rows = Vec::new();
+    let mut winners = Vec::new();
+
+    let mut u = 1usize;
+    while u <= max_u {
+        // a real schedule position with this tile side: i = u
+        let tile = Tile::at(u);
+        let l_needed = tile.dst_r;
+        let mut streams = Tensor::zeros(&[g, l_needed, d]);
+        rng.fill_normal(streams.data_mut(), 1.0);
+        let mut pending = Tensor::zeros(&[g, l_needed, d]);
+
+        let mut medians = Vec::new();
+        for kind in TauKind::ALL_FIXED {
+            let mut imp = make_impl(kind, cache, 0)?;
+            let stats = benchkit::bench(warmup, runs, || {
+                imp.apply(&streams, &mut pending, tile).expect("tau apply");
+            });
+            medians.push((kind, stats.median_ns));
+        }
+        let winner = medians
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+        winners.push(winner);
+        rows.push(CalRow { u, medians_ns: medians, winner });
+        u *= 2;
+    }
+    Ok((CalibrationTable::new(winners), rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heuristic_table_shape() {
+        let t = CalibrationTable::heuristic(4096);
+        assert_eq!(t.levels(), 12); // U in 1..2048
+        assert_eq!(t.choice(1), TauKind::RustDirect);
+        assert_eq!(t.choice(2048), TauKind::RustFft);
+        // out-of-range U clamps to the last level
+        assert_eq!(t.choice(1 << 20), TauKind::RustFft);
+    }
+
+    #[test]
+    fn table_json_roundtrip() {
+        let t = CalibrationTable::new(vec![
+            TauKind::RustDirect,
+            TauKind::PjrtDirect,
+            TauKind::RustFft,
+            TauKind::PjrtFft,
+        ]);
+        let dir = std::env::temp_dir().join("fi_cal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hybrid.json");
+        t.save(&path).unwrap();
+        let back = CalibrationTable::load(&path).unwrap();
+        assert_eq!(back, t);
+    }
+}

@@ -1,0 +1,72 @@
+//! Hybrid τ (§5.3): dynamically choose the best implementation for each
+//! tile size U from a calibration table (the "isolated empirically-measured
+//! efficiency of each implementation"). This is the paper's best method —
+//! it traces the per-U Pareto frontier of Fig 3a.
+
+use anyhow::Result;
+
+use super::{
+    CalibrationTable, PjrtDirect, PjrtFft, RhoCache, RustDirect, RustFft, TauImpl, TauKind,
+};
+use crate::tiling::Tile;
+use crate::util::tensor::Tensor;
+
+pub struct Hybrid<'c, 'rt> {
+    table: CalibrationTable,
+    rust_direct: RustDirect<'c, 'rt>,
+    rust_fft: RustFft<'c, 'rt>,
+    pjrt_direct: PjrtDirect<'c, 'rt>,
+    pjrt_fft: PjrtFft<'c, 'rt>,
+}
+
+impl<'c, 'rt> Hybrid<'c, 'rt> {
+    pub fn new(cache: &'c RhoCache<'rt>, table: CalibrationTable, threads: usize) -> Self {
+        Hybrid {
+            table,
+            rust_direct: RustDirect::new(cache, threads),
+            rust_fft: RustFft::new(cache, threads),
+            pjrt_direct: PjrtDirect::new(cache),
+            pjrt_fft: PjrtFft::new(cache),
+        }
+    }
+
+    /// Load `hybrid.json` from the artifact dir if present (written by
+    /// `flashinfer calibrate`), else use the built-in heuristic.
+    pub fn from_default(cache: &'c RhoCache<'rt>, threads: usize) -> Result<Hybrid<'c, 'rt>> {
+        let path = cache.runtime().dir.join("hybrid.json");
+        let table = if path.exists() {
+            CalibrationTable::load(&path)?
+        } else {
+            CalibrationTable::heuristic(cache.runtime().dims.l)
+        };
+        Ok(Hybrid::new(cache, table, threads))
+    }
+
+    pub fn choice(&self, u: usize) -> TauKind {
+        self.table.choice(u)
+    }
+
+    pub fn table(&self) -> &CalibrationTable {
+        &self.table
+    }
+}
+
+impl TauImpl for Hybrid<'_, '_> {
+    fn kind(&self) -> TauKind {
+        TauKind::Hybrid
+    }
+
+    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+        match self.table.choice(tile.u) {
+            TauKind::RustDirect => self.rust_direct.apply(streams, pending, tile),
+            TauKind::RustFft => self.rust_fft.apply(streams, pending, tile),
+            TauKind::PjrtDirect => self.pjrt_direct.apply(streams, pending, tile),
+            TauKind::PjrtFft => self.pjrt_fft.apply(streams, pending, tile),
+            TauKind::Hybrid => unreachable!("calibration tables hold fixed kinds"),
+        }
+    }
+
+    fn tile_flops(&self, u: usize, g: usize, d: usize) -> u64 {
+        self.table.choice(u).tile_flops(u, g, d)
+    }
+}

@@ -1,0 +1,176 @@
+//! τ — the range-to-range contribution primitive (Lemma 1) and its four
+//! implementations (paper §5.2), plus the calibrated Hybrid (§5.3).
+//!
+//! | paper (GPU)      | here                | cost      | wins at |
+//! |------------------|---------------------|-----------|---------|
+//! | Conv1D           | `PjrtDirect` (Pallas direct-tile artifact) | O(U²D)      | framework-dispatched quadratic point |
+//! | FlashConv1D      | `RustDirect` (native, allocation-free)     | O(U²D)      | small U (no dispatch overhead) |
+//! | FFT (torch)      | `PjrtFft` (jnp.fft artifact)               | O(U log U D)| framework-dispatched quasilinear point |
+//! | FlashFFT         | `RustFft` (native vec-FFT, cached ρ̂)       | O(U log U D)| large U |
+//!
+//! All four accumulate the tile `pending[g, i+1..i+U] += τ(streams[g,
+//! i-U+1..i], ρ_m)` for every group `g = m·B + b` — one call covers all
+//! layers (Algorithm 3's across-layer parallelism, realized as batching;
+//! the native impls additionally fan groups across a thread pool).
+
+pub mod calibrate;
+pub mod hybrid;
+pub mod pjrt_direct;
+pub mod pjrt_fft;
+pub mod rho_cache;
+pub mod rust_direct;
+pub mod rust_fft;
+
+use anyhow::Result;
+
+use crate::tiling::{flops, Tile};
+use crate::util::tensor::Tensor;
+
+pub use calibrate::{calibrate, CalibrationTable};
+pub use hybrid::Hybrid;
+pub use pjrt_direct::PjrtDirect;
+pub use pjrt_fft::PjrtFft;
+pub use rho_cache::RhoCache;
+pub use rust_direct::RustDirect;
+pub use rust_fft::RustFft;
+
+/// Which τ implementation to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TauKind {
+    RustDirect,
+    RustFft,
+    PjrtDirect,
+    PjrtFft,
+    /// Per-tile-size dynamic choice (paper's best method).
+    Hybrid,
+}
+
+impl TauKind {
+    pub const ALL_FIXED: [TauKind; 4] =
+        [TauKind::RustDirect, TauKind::RustFft, TauKind::PjrtDirect, TauKind::PjrtFft];
+
+    pub fn parse(s: &str) -> Result<TauKind> {
+        Ok(match s {
+            "rust-direct" => TauKind::RustDirect,
+            "rust-fft" => TauKind::RustFft,
+            "pjrt-direct" => TauKind::PjrtDirect,
+            "pjrt-fft" => TauKind::PjrtFft,
+            "hybrid" => TauKind::Hybrid,
+            other => anyhow::bail!(
+                "unknown tau impl '{other}' (rust-direct|rust-fft|pjrt-direct|pjrt-fft|hybrid)"
+            ),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TauKind::RustDirect => "rust-direct",
+            TauKind::RustFft => "rust-fft",
+            TauKind::PjrtDirect => "pjrt-direct",
+            TauKind::PjrtFft => "pjrt-fft",
+            TauKind::Hybrid => "hybrid",
+        }
+    }
+
+    /// FLOPs one tile of side `u` costs under this implementation
+    /// (per Proposition 1 / §5.4(1) accounting; Hybrid is charged the FFT
+    /// closed form — its dispatch table resolves at runtime).
+    pub fn tile_flops(self, u: usize, g: usize, d: usize) -> u64 {
+        match self {
+            TauKind::RustDirect | TauKind::PjrtDirect => {
+                flops::tile_direct_flops(u, d) * g as u64
+            }
+            TauKind::RustFft | TauKind::PjrtFft | TauKind::Hybrid => {
+                flops::tile_fft_flops(u, d) * g as u64
+            }
+        }
+    }
+}
+
+/// One τ implementation: accumulate a gray tile into `pending`.
+///
+/// `streams` and `pending` are `[G, L, D]`; `tile` carries 1-indexed
+/// absolute ranges (row `t` of a group = position `t+1`).
+pub trait TauImpl {
+    fn kind(&self) -> TauKind;
+
+    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()>;
+
+    /// FLOPs this impl spends on a side-`u` tile (for the FlopCounter).
+    fn tile_flops(&self, u: usize, g: usize, d: usize) -> u64 {
+        self.kind().tile_flops(u, g, d)
+    }
+}
+
+/// Construct a τ implementation over a shared rho cache.
+pub fn make_impl<'rt, 'c>(
+    kind: TauKind,
+    cache: &'c RhoCache<'rt>,
+    threads: usize,
+) -> Result<Box<dyn TauImpl + 'c>> {
+    Ok(match kind {
+        TauKind::RustDirect => Box::new(RustDirect::new(cache, threads)),
+        TauKind::RustFft => Box::new(RustFft::new(cache, threads)),
+        TauKind::PjrtDirect => Box::new(PjrtDirect::new(cache)),
+        TauKind::PjrtFft => Box::new(PjrtFft::new(cache)),
+        TauKind::Hybrid => Box::new(Hybrid::from_default(cache, threads)?),
+    })
+}
+
+/// Stage the tile's input block `streams[g, src_l-1 .. src_r]` for all
+/// groups into a `[G, U, D]` scratch (PJRT impls need one contiguous
+/// buffer; per-group rows are already contiguous).
+pub fn stage_y(streams: &Tensor, tile: Tile, buf: &mut Vec<f32>) {
+    let (g, d) = (streams.shape()[0], streams.shape()[2]);
+    let u = tile.u;
+    buf.resize(g * u * d, 0.0);
+    for gi in 0..g {
+        let src = streams.block(gi, tile.src_l - 1, tile.src_r);
+        buf[gi * u * d..(gi + 1) * u * d].copy_from_slice(src);
+    }
+}
+
+/// Accumulate a `[G, U, D]` tau output into `pending[g, dst_l-1 .. dst_r]`.
+pub fn scatter_add(pending: &mut Tensor, tile: Tile, vals: &[f32]) {
+    let (g, d) = (pending.shape()[0], pending.shape()[2]);
+    let u = tile.u;
+    debug_assert_eq!(vals.len(), g * u * d);
+    for gi in 0..g {
+        let dst = pending.block_mut(gi, tile.dst_l - 1, tile.dst_r);
+        crate::util::tensor::ops::add_assign(dst, &vals[gi * u * d..(gi + 1) * u * d]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in TauKind::ALL_FIXED.iter().chain([TauKind::Hybrid].iter()) {
+            assert_eq!(TauKind::parse(k.as_str()).unwrap(), *k);
+        }
+        assert!(TauKind::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn stage_and_scatter_are_inverse_shaped() {
+        let (g, l, d) = (2usize, 8usize, 3usize);
+        let mut streams = Tensor::zeros(&[g, l, d]);
+        for (i, v) in streams.data_mut().iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let tile = Tile::at(4); // u=4: src [1,4], dst [5,8]
+        let mut buf = Vec::new();
+        stage_y(&streams, tile, &mut buf);
+        assert_eq!(buf.len(), g * 4 * d);
+        assert_eq!(&buf[..d], streams.at2(0, 0));
+
+        let mut pending = Tensor::zeros(&[g, l, d]);
+        scatter_add(&mut pending, tile, &buf);
+        assert_eq!(pending.at2(0, 4), streams.at2(0, 0));
+        assert_eq!(pending.at2(1, 7), streams.at2(1, 3));
+        // untouched rows stay zero
+        assert!(pending.at2(0, 0).iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,42 @@
+//! PJRT direct τ — the Pallas direct-tile kernel compiled AOT and executed
+//! through the PJRT CPU client (the paper's Conv1D point: quadratic FLOPs
+//! *and* framework dispatch overhead; on the Pareto frontier only where
+//! quadratic beats FFT but the framework call is amortized).
+
+use anyhow::Result;
+
+use super::{scatter_add, stage_y, RhoCache, TauImpl, TauKind};
+use crate::runtime::Runtime;
+use crate::tiling::Tile;
+use crate::util::tensor::Tensor;
+
+pub struct PjrtDirect<'c, 'rt> {
+    cache: &'c RhoCache<'rt>,
+    stage: Vec<f32>,
+}
+
+impl<'c, 'rt> PjrtDirect<'c, 'rt> {
+    pub fn new(cache: &'c RhoCache<'rt>) -> Self {
+        PjrtDirect { cache, stage: Vec::new() }
+    }
+}
+
+impl TauImpl for PjrtDirect<'_, '_> {
+    fn kind(&self) -> TauKind {
+        TauKind::PjrtDirect
+    }
+
+    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+        let rt = self.cache.runtime();
+        let dims = rt.dims;
+        let u = tile.u;
+        let bundle = self.cache.pjrt(u)?;
+
+        stage_y(streams, tile, &mut self.stage);
+        let yb = rt.upload(&self.stage, &[dims.g, u, dims.d])?;
+        let outs = bundle.direct.call(&[&yb])?;
+        let vals = Runtime::literal_to_vec(&outs[0], dims.g * u * dims.d)?;
+        scatter_add(pending, tile, &vals);
+        Ok(())
+    }
+}

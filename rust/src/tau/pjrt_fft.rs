@@ -1,0 +1,42 @@
+//! PJRT FFT τ — the jnp.fft tile artifact (rfft → Pallas split-real
+//! spectral multiply → irfft) with the filter DFT pre-uploaded as a
+//! persistent device buffer. The paper's framework-FFT point (torch FFT /
+//! FlashFFT when fused): quasilinear FLOPs plus dispatch overhead.
+
+use anyhow::Result;
+
+use super::{scatter_add, stage_y, RhoCache, TauImpl, TauKind};
+use crate::runtime::Runtime;
+use crate::tiling::Tile;
+use crate::util::tensor::Tensor;
+
+pub struct PjrtFft<'c, 'rt> {
+    cache: &'c RhoCache<'rt>,
+    stage: Vec<f32>,
+}
+
+impl<'c, 'rt> PjrtFft<'c, 'rt> {
+    pub fn new(cache: &'c RhoCache<'rt>) -> Self {
+        PjrtFft { cache, stage: Vec::new() }
+    }
+}
+
+impl TauImpl for PjrtFft<'_, '_> {
+    fn kind(&self) -> TauKind {
+        TauKind::PjrtFft
+    }
+
+    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+        let rt = self.cache.runtime();
+        let dims = rt.dims;
+        let u = tile.u;
+        let bundle = self.cache.pjrt(u)?;
+
+        stage_y(streams, tile, &mut self.stage);
+        let yb = rt.upload(&self.stage, &[dims.g, u, dims.d])?;
+        let outs = bundle.fft.call(&[&yb])?;
+        let vals = Runtime::literal_to_vec(&outs[0], dims.g * u * dims.d)?;
+        scatter_add(pending, tile, &vals);
+        Ok(())
+    }
+}

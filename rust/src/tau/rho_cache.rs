@@ -1,0 +1,193 @@
+//! Filter state derived once at engine init (paper §5.4(4)):
+//!
+//! * `rho` itself, produced by the `filter_gen` artifact (the Hyena
+//!   implicit filter lives in L2; rust only sees the materialized tensor);
+//! * `rho0` (the red-cell taps) as a persistent PJRT buffer for `step`;
+//! * per tile size U: the filter-prefix DFTs for the native FFT path and
+//!   the `@`-bound PJRT tau executables with their persistent filter
+//!   buffers ("the DFT for the convolutional kernel is pre-computed ahead
+//!   of time for log2(L)-1 tile sizes").
+//!
+//! Group axis convention everywhere: `g = m * B + b` (mixer-major), the
+//! same order `step`'s `[M, B, D]` tensors flatten to.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::fft::{self, Plan, PlanCache};
+use crate::runtime::{BoundArtifact, Runtime};
+use crate::util::tensor::Tensor;
+
+/// Native filter-prefix spectrum planes for one tile size U:
+/// `[M, 2U, D]` re/im, per-mixer plane at `m * 2U * D`.
+pub struct Spectra {
+    pub u: usize,
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+    plane: usize,
+}
+
+impl Spectra {
+    pub fn planes(&self, m: usize) -> (&[f32], &[f32]) {
+        let off = m * self.plane;
+        (&self.re[off..off + self.plane], &self.im[off..off + self.plane])
+    }
+}
+
+/// PJRT executables + persistent filter buffers for one tile size U.
+pub struct PjrtTau {
+    pub fft: BoundArtifact,
+    pub direct: BoundArtifact,
+}
+
+/// All rho-derived state for one loaded model.
+pub struct RhoCache<'rt> {
+    rt: &'rt Runtime,
+    /// Materialized filter, `[M, L, D]`.
+    pub rho: Tensor,
+    /// `rho[:, 0, :]` as `[M, D]` (host copy + persistent device buffer).
+    pub rho0: Vec<f32>,
+    pub rho0_buf: Arc<xla::PjRtBuffer>,
+    plans: PlanCache,
+    spectra: RefCell<HashMap<usize, Arc<Spectra>>>,
+    pjrt: RefCell<HashMap<usize, Arc<PjrtTau>>>,
+    rho_dev: RefCell<Option<Arc<xla::PjRtBuffer>>>,
+}
+
+impl<'rt> RhoCache<'rt> {
+    /// Run `filter_gen` and set up the derived state.
+    pub fn new(rt: &'rt Runtime) -> Result<RhoCache<'rt>> {
+        let dims = rt.dims;
+        let exe = rt.executable("filter_gen").context("compile filter_gen")?;
+        let bufs: Vec<_> = exe
+            .spec
+            .inputs
+            .iter()
+            .map(|i| rt.weight_buffer(&i.name))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|b| b.as_ref()).collect();
+        let outs = exe.call(&refs).context("run filter_gen")?;
+        let rho_v = Runtime::literal_to_vec(&outs[0], dims.m * dims.l * dims.d)?;
+        let rho = Tensor::from_vec(&[dims.m, dims.l, dims.d], rho_v)?;
+
+        let mut rho0 = vec![0.0f32; dims.m * dims.d];
+        for m in 0..dims.m {
+            rho0[m * dims.d..(m + 1) * dims.d].copy_from_slice(rho.at2(m, 0));
+        }
+        let rho0_buf = Arc::new(rt.upload(&rho0, &[dims.m, dims.d])?);
+
+        Ok(RhoCache {
+            rt,
+            rho,
+            rho0,
+            rho0_buf,
+            plans: PlanCache::new(),
+            spectra: RefCell::new(HashMap::new()),
+            pjrt: RefCell::new(HashMap::new()),
+            rho_dev: RefCell::new(None),
+        })
+    }
+
+    pub fn runtime(&self) -> &'rt Runtime {
+        self.rt
+    }
+
+    /// Persistent device buffer of the full rho tensor (prefill input).
+    pub fn rho_buf(&self) -> Result<Arc<xla::PjRtBuffer>> {
+        if let Some(b) = self.rho_dev.borrow().as_ref() {
+            return Ok(b.clone());
+        }
+        let dims = self.rt.dims;
+        let buf = Arc::new(self.rt.upload(self.rho.data(), &[dims.m, dims.l, dims.d])?);
+        *self.rho_dev.borrow_mut() = Some(buf.clone());
+        Ok(buf)
+    }
+
+    /// FFT plan of order 2U.
+    pub fn plan(&self, u: usize) -> Arc<Plan> {
+        self.plans.get(2 * u)
+    }
+
+    /// Filter-prefix segment `rho[m, 0..2U, :]` (contiguous view).
+    pub fn seg(&self, m: usize, u: usize) -> &[f32] {
+        self.rho.block(m, 0, 2 * u)
+    }
+
+    /// Native spectrum planes for tile size U (built on first use).
+    pub fn spectra(&self, u: usize) -> Arc<Spectra> {
+        if let Some(s) = self.spectra.borrow().get(&u) {
+            return s.clone();
+        }
+        let dims = self.rt.dims;
+        let plan = self.plan(u);
+        let n = 2 * u;
+        let plane = n * dims.d;
+        let mut re = vec![0.0f32; dims.m * plane];
+        let mut im = vec![0.0f32; dims.m * plane];
+        for m in 0..dims.m {
+            let (r, i) = fft::spectrum_planes(&plan, self.seg(m, u), dims.d);
+            re[m * plane..(m + 1) * plane].copy_from_slice(&r);
+            im[m * plane..(m + 1) * plane].copy_from_slice(&i);
+        }
+        let s = Arc::new(Spectra { u, re, im, plane });
+        self.spectra.borrow_mut().insert(u, s.clone());
+        s
+    }
+
+    /// Bound PJRT tau executables for tile size U (built on first use).
+    ///
+    /// The `@rho_re/@rho_im` buffers hold rfft bins `[0, U]` of the filter
+    /// prefix, repeated across the batch lanes of the `G = M·B` axis; the
+    /// `@rho_seg` buffer holds the raw prefix for the Pallas direct kernel.
+    pub fn pjrt(&self, u: usize) -> Result<Arc<PjrtTau>> {
+        if let Some(p) = self.pjrt.borrow().get(&u) {
+            return Ok(p.clone());
+        }
+        let dims = self.rt.dims;
+        let (g, d, b) = (dims.g, dims.d, dims.b);
+        let spectra = self.spectra(u);
+        let bins = u + 1;
+
+        let mut re = vec![0.0f32; g * bins * d];
+        let mut im = vec![0.0f32; g * bins * d];
+        let mut seg = vec![0.0f32; g * 2 * u * d];
+        for m in 0..dims.m {
+            let (sre, sim) = spectra.planes(m);
+            for bi in 0..b {
+                let gi = m * b + bi;
+                re[gi * bins * d..(gi + 1) * bins * d].copy_from_slice(&sre[..bins * d]);
+                im[gi * bins * d..(gi + 1) * bins * d].copy_from_slice(&sim[..bins * d]);
+                seg[gi * 2 * u * d..(gi + 1) * 2 * u * d].copy_from_slice(self.seg(m, u));
+            }
+        }
+        let mut derived = HashMap::new();
+        derived.insert("@rho_re".to_string(), Arc::new(self.rt.upload(&re, &[g, bins, d])?));
+        derived.insert("@rho_im".to_string(), Arc::new(self.rt.upload(&im, &[g, bins, d])?));
+        let fft = BoundArtifact::bind(self.rt, &format!("tau_fft_{u}"), &derived)?;
+
+        let mut derived = HashMap::new();
+        derived.insert("@rho_seg".to_string(), Arc::new(self.rt.upload(&seg, &[g, 2 * u, d])?));
+        let direct = BoundArtifact::bind(self.rt, &format!("tau_direct_{u}"), &derived)?;
+
+        let p = Arc::new(PjrtTau { fft, direct });
+        self.pjrt.borrow_mut().insert(u, p.clone());
+        Ok(p)
+    }
+
+    /// Eagerly build every per-U structure (bench warmup; engine init cost
+    /// measured separately from the token loop).
+    pub fn prewarm(&self, max_u: usize, with_pjrt: bool) -> Result<()> {
+        let mut u = 1;
+        while u <= max_u {
+            self.spectra(u);
+            if with_pjrt {
+                self.pjrt(u)?;
+            }
+            u *= 2;
+        }
+        Ok(())
+    }
+}

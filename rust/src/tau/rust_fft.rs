@@ -1,0 +1,80 @@
+//! Native FFT τ — the FlashFFTConv analogue: Appendix-C engineered
+//! (order-2U cyclic FFT, precomputed filter spectra ⇒ 2 DFTs per tile),
+//! quasilinear FLOPs. The large-U winner on the Pareto frontier (Fig 3a).
+
+use anyhow::Result;
+
+use super::{RhoCache, TauImpl, TauKind};
+use crate::fft::{tile_conv_fft_into, TileScratch};
+use crate::tiling::Tile;
+use crate::util::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
+
+pub struct RustFft<'c, 'rt> {
+    cache: &'c RhoCache<'rt>,
+    pool: ThreadPool,
+    scratch: TileScratch,
+}
+
+impl<'c, 'rt> RustFft<'c, 'rt> {
+    pub fn new(cache: &'c RhoCache<'rt>, threads: usize) -> Self {
+        let dims = cache.runtime().dims;
+        RustFft {
+            cache,
+            pool: ThreadPool::new(threads),
+            scratch: TileScratch::with_capacity(dims.l, dims.d),
+        }
+    }
+}
+
+impl TauImpl for RustFft<'_, '_> {
+    fn kind(&self) -> TauKind {
+        TauKind::RustFft
+    }
+
+    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+        let dims = self.cache.runtime().dims;
+        let (g, d, b) = (dims.g, dims.d, dims.b);
+        let u = tile.u;
+        let plan = self.cache.plan(u);
+        let spectra = self.cache.spectra(u);
+
+        if self.pool.size() == 0 {
+            for gi in 0..g {
+                let m = gi / b;
+                let (sre, sim) = spectra.planes(m);
+                let y = streams.block(gi, tile.src_l - 1, tile.src_r);
+                let out = pending.block_mut(gi, tile.dst_l - 1, tile.dst_r);
+                tile_conv_fft_into(&plan, y, sre, sim, out, &mut self.scratch, d);
+            }
+            return Ok(());
+        }
+
+        // parallel across groups; per-task scratch (allocation amortized by
+        // tile size — the pool only helps when tiles are large anyway).
+        let pend_ptr = PendingPtr(pending.data_mut().as_mut_ptr());
+        let pend_ptr = &pend_ptr; // borrow whole wrapper (edition-2021 disjoint capture)
+        let l = streams.shape()[1];
+        let plan_ref = plan.as_ref();
+        let spectra_ref = spectra.as_ref();
+        self.pool.scoped_for(g, |gi| {
+            let m = gi / b;
+            let (sre, sim) = spectra_ref.planes(m);
+            let y = streams.block(gi, tile.src_l - 1, tile.src_r);
+            // SAFETY: dst blocks are disjoint across gi.
+            let out = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (pend_ptr.0).add((gi * l + tile.dst_l - 1) * d),
+                    u * d,
+                )
+            };
+            let mut scratch = TileScratch::with_capacity(2 * u, d);
+            tile_conv_fft_into(plan_ref, y, sre, sim, out, &mut scratch, d);
+        });
+        Ok(())
+    }
+}
+
+struct PendingPtr(*mut f32);
+unsafe impl Send for PendingPtr {}
+unsafe impl Sync for PendingPtr {}

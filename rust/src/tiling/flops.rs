@@ -1,0 +1,151 @@
+//! FLOP accounting: closed-form costs (Propositions 1 & 2) and a runtime
+//! counter the engines feed, so benches can print *measured* = *predicted*
+//! and the §5.4(1) justification ("O(L log^2 L) vs Ω(L^2) FLOPs") is a
+//! checked artifact rather than a claim.
+//!
+//! Conventions (per scalar op = 1 FLOP):
+//! * complex radix-2 FFT of order n: (n/2)·log2(n) butterflies × 10 FLOPs;
+//! * complex pointwise multiply: 6 FLOPs;
+//! * multiply-accumulate: 2 FLOPs.
+
+use super::schedule;
+
+/// FLOPs of one direct tile of side `u` over `d` lanes (one group).
+pub fn tile_direct_flops(u: usize, d: usize) -> u64 {
+    // u^2 MACs per lane
+    2 * (u as u64) * (u as u64) * d as u64
+}
+
+/// FLOPs of one FFT tile of side `u` over `d` lanes, with the filter
+/// spectrum precomputed (2 DFTs of order 2u + pointwise product + scaled
+/// accumulation of the kept half).
+pub fn tile_fft_flops(u: usize, d: usize) -> u64 {
+    let n = 2 * u as u64;
+    let log = n.trailing_zeros() as u64;
+    let fft = 5 * n * log; // (n/2) log2 n butterflies x 10 flops
+    let per_lane = 2 * fft + 6 * n + 2 * (u as u64);
+    per_lane * d as u64
+}
+
+/// Mixer-side FLOPs to generate `len` positions with the flash tiling,
+/// per Proposition 2, for `g` groups (= B·M) of `d` lanes, counting red
+/// cells (2 FLOPs per position-lane) plus all gray tiles.
+pub fn flash_total_flops(len: usize, g: usize, d: usize, fft: bool) -> u64 {
+    let tiles: u64 = schedule::schedule(len)
+        .map(|t| if fft { tile_fft_flops(t.u, d) } else { tile_direct_flops(t.u, d) })
+        .sum();
+    let red = 2 * (len as u64) * d as u64;
+    (tiles + red) * g as u64
+}
+
+/// Lazy baseline mixer FLOPs: position i costs i MACs per lane.
+pub fn lazy_total_flops(len: usize, g: usize, d: usize) -> u64 {
+    let macs: u64 = (1..=len as u64).sum::<u64>(); // includes the diagonal
+    2 * macs * g as u64 * d as u64
+}
+
+/// Eager baseline mixer FLOPs: position i pushes to len-i positions, plus
+/// its own diagonal.
+pub fn eager_total_flops(len: usize, g: usize, d: usize) -> u64 {
+    let macs: u64 = (1..=len as u64).map(|i| (len as u64 - i) + 1).sum();
+    2 * macs * g as u64 * d as u64
+}
+
+/// Runtime FLOP counter fed by the engines/tau impls.
+#[derive(Debug, Default, Clone)]
+pub struct FlopCounter {
+    pub mixer_flops: u64,
+    pub tau_calls: u64,
+    pub tau_call_hist: std::collections::BTreeMap<usize, u64>,
+    /// Activation values read/written by tau calls (data-movement, §3.3).
+    pub tau_io_values: u64,
+}
+
+impl FlopCounter {
+    pub fn new() -> FlopCounter {
+        FlopCounter::default()
+    }
+
+    pub fn record_tau(&mut self, u: usize, flops: u64, io_values: u64) {
+        self.mixer_flops += flops;
+        self.tau_calls += 1;
+        *self.tau_call_hist.entry(u).or_insert(0) += 1;
+        self.tau_io_values += io_values;
+    }
+
+    pub fn record_red(&mut self, flops: u64) {
+        self.mixer_flops += flops;
+    }
+
+    pub fn merge(&mut self, other: &FlopCounter) {
+        self.mixer_flops += other.mixer_flops;
+        self.tau_calls += other.tau_calls;
+        self.tau_io_values += other.tau_io_values;
+        for (&u, &c) in &other.tau_call_hist {
+            *self.tau_call_hist.entry(u).or_insert(0) += c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direct_tile_cost_is_quadratic() {
+        assert_eq!(tile_direct_flops(1, 1), 2);
+        assert_eq!(tile_direct_flops(4, 2), 64);
+        assert_eq!(tile_direct_flops(8, 1), 128);
+    }
+
+    #[test]
+    fn fft_tile_cost_is_quasilinear() {
+        // ratio fft/direct should fall below 1 for large U
+        let small = tile_fft_flops(2, 1) as f64 / tile_direct_flops(2, 1) as f64;
+        let large = tile_fft_flops(2048, 1) as f64 / tile_direct_flops(2048, 1) as f64;
+        assert!(small > 1.0, "small={small}");
+        assert!(large < 0.2, "large={large}");
+    }
+
+    #[test]
+    fn lazy_equals_eager_total() {
+        // both cover the same triangle (plus diagonal) — equal total MACs
+        for len in [4usize, 64, 1024] {
+            assert_eq!(lazy_total_flops(len, 3, 8), eager_total_flops(len, 3, 8));
+        }
+    }
+
+    #[test]
+    fn quadratic_vs_quasilinear_growth() {
+        let (g, d) = (6, 64);
+        let f1 = flash_fft_series(1 << 10, g, d);
+        let f2 = flash_fft_series(1 << 12, g, d);
+        let l1 = lazy_total_flops(1 << 10, g, d);
+        let l2 = lazy_total_flops(1 << 12, g, d);
+        // lazy grows ~16x for 4x length; flash ~4x·(log ratio)
+        assert!(l2 / l1 >= 15);
+        assert!(f2 / f1 <= 6);
+    }
+
+    fn flash_fft_series(len: usize, g: usize, d: usize) -> u64 {
+        let tiles: u64 = schedule::schedule(len).map(|t| tile_fft_flops(t.u, d)).sum();
+        (tiles + 2 * (len as u64) * d as u64) * g as u64
+    }
+
+    #[test]
+    fn counter_accumulates_and_merges() {
+        let mut a = FlopCounter::new();
+        a.record_tau(4, 100, 8);
+        a.record_tau(4, 100, 8);
+        a.record_tau(8, 300, 16);
+        let mut b = FlopCounter::new();
+        b.record_tau(8, 300, 16);
+        b.record_red(10);
+        a.merge(&b);
+        assert_eq!(a.mixer_flops, 810);
+        assert_eq!(a.tau_calls, 4);
+        assert_eq!(a.tau_call_hist[&4], 2);
+        assert_eq!(a.tau_call_hist[&8], 2);
+        assert_eq!(a.tau_io_values, 48);
+    }
+}

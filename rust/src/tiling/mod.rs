@@ -1,0 +1,8 @@
+//! The paper's core contribution: the fractal tiling of the contribution
+//! triangle (Algorithm 1) and its FLOP accounting (Propositions 1 & 2).
+
+pub mod flops;
+pub mod schedule;
+
+pub use flops::FlopCounter;
+pub use schedule::{schedule, tau_call_histogram, tile_side, verify_invariants, Tile};

@@ -1,0 +1,191 @@
+//! The fractal tile schedule (Algorithm 1 / Figure 1, right panel).
+//!
+//! At iteration `i` (1-indexed), after the red cell finalizes `z_i`, the
+//! gray tile with side `U = ` largest power of two dividing `i` accounts
+//! for the contribution of inputs `y[i-U+1 .. i]` to outputs
+//! `z[i+1 .. i+U]`. Over `L = 2^P` positions this covers every (input,
+//! output) pair with input < output exactly once, using `2^{P-1-q}` tiles
+//! of side `2^q` (Proposition 1) — `O(L log^2 L)` total FLOPs when each
+//! tile runs through the FFT primitive of Lemma 1.
+
+/// Largest power of two dividing `i` — the side of the i-th gray tile.
+#[inline]
+pub fn tile_side(i: usize) -> usize {
+    debug_assert!(i >= 1);
+    1 << i.trailing_zeros()
+}
+
+/// One gray tile. Ranges are 1-indexed and inclusive, as in the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    /// Iteration at whose end this tile is processed.
+    pub i: usize,
+    /// Side length U (power of two, divides `i`).
+    pub u: usize,
+    /// Input range [src_l, src_r] = [i-U+1, i] of y.
+    pub src_l: usize,
+    pub src_r: usize,
+    /// Output range [dst_l, dst_r] = [i+1, i+U] of z.
+    pub dst_l: usize,
+    pub dst_r: usize,
+}
+
+impl Tile {
+    pub fn at(i: usize) -> Tile {
+        let u = tile_side(i);
+        Tile { i, u, src_l: i - u + 1, src_r: i, dst_l: i + 1, dst_r: i + u }
+    }
+}
+
+/// The full schedule for generating `len` positions: one tile per
+/// iteration `i in [1, len-1]` (iteration `len` has no future to fill).
+pub fn schedule(len: usize) -> impl Iterator<Item = Tile> {
+    debug_assert!(len.is_power_of_two(), "generation length must be a power of two");
+    (1..len).map(Tile::at)
+}
+
+/// Histogram of tau calls by tile side: `(U, count)` pairs, ascending U.
+/// Proposition 1: for L = 2^P there are 2^{P-1-q} tiles of side 2^q.
+pub fn tau_call_histogram(len: usize) -> Vec<(usize, usize)> {
+    let mut hist = std::collections::BTreeMap::new();
+    for t in schedule(len) {
+        *hist.entry(t.u).or_insert(0usize) += 1;
+    }
+    hist.into_iter().collect()
+}
+
+/// Check every schedule invariant by brute force (test/validation aid):
+///
+/// 1. availability: a tile processed at iteration i reads only y[.. i]
+///    and writes only z[i+1 ..];
+/// 2. coverage: every contribution pair (j -> t), j < t <= len, is covered
+///    by exactly one tile; the diagonal (t -> t) belongs to red cells;
+/// 3. order: the tile covering (j -> t) is processed before iteration t
+///    finalizes z_t;
+/// 4. bounds: tiles never write past position `len`.
+pub fn verify_invariants(len: usize) -> Result<(), String> {
+    let mut covered = vec![vec![0u8; len + 1]; len + 1]; // [src][dst]
+    for t in schedule(len) {
+        if t.src_l < 1 || t.dst_r > len {
+            return Err(format!("tile {t:?} out of bounds"));
+        }
+        if t.src_r != t.i {
+            return Err(format!("tile {t:?} reads future inputs"));
+        }
+        if t.dst_l != t.i + 1 {
+            return Err(format!("tile {t:?} writes already-returned outputs"));
+        }
+        if t.u != tile_side(t.i) || t.i % t.u != 0 {
+            return Err(format!("tile {t:?} has wrong side"));
+        }
+        for j in t.src_l..=t.src_r {
+            for z in t.dst_l..=t.dst_r {
+                covered[j][z] += 1;
+                // order: tile runs at end of iteration t.i; z_z finalized at
+                // iteration z; need t.i < z.
+                if t.i >= z {
+                    return Err(format!("tile {t:?} late for z_{z}"));
+                }
+            }
+        }
+    }
+    for j in 1..=len {
+        for z in 1..=len {
+            let want = u8::from(j < z);
+            if covered[j][z] != want {
+                return Err(format!(
+                    "pair ({j} -> {z}) covered {} times, want {want}",
+                    covered[j][z]
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, ensure};
+
+    #[test]
+    fn tile_side_values() {
+        let want = [1, 2, 1, 4, 1, 2, 1, 8, 1, 2, 1, 4, 1, 2, 1, 16];
+        for (i, &w) in want.iter().enumerate() {
+            assert_eq!(tile_side(i + 1), w, "i={}", i + 1);
+        }
+    }
+
+    #[test]
+    fn invariants_hold_for_all_small_l() {
+        for p in 0..=9 {
+            verify_invariants(1 << p).unwrap_or_else(|e| panic!("L=2^{p}: {e}"));
+        }
+    }
+
+    #[test]
+    fn histogram_matches_proposition_1() {
+        for p in 1..=10u32 {
+            let l = 1usize << p;
+            let hist = tau_call_histogram(l);
+            assert_eq!(hist.len(), p as usize);
+            for (q, &(u, count)) in hist.iter().enumerate() {
+                assert_eq!(u, 1 << q);
+                assert_eq!(count, 1 << (p as usize - 1 - q), "L={l} q={q}");
+            }
+            // total tiles = L - 1
+            assert_eq!(hist.iter().map(|&(_, c)| c).sum::<usize>(), l - 1);
+        }
+    }
+
+    #[test]
+    fn total_tau_io_is_l_log_l() {
+        // §3.3: sum of tile sides = (L/2) log2 L — the data-movement claim.
+        for p in 1..=12u32 {
+            let l = 1usize << p;
+            let total: usize = schedule(l).map(|t| t.u).sum();
+            assert_eq!(total, (l / 2) * p as usize);
+        }
+    }
+
+    #[test]
+    fn tiles_partition_per_dst_column() {
+        // every output position t receives exactly t-1 off-diagonal
+        // contributions, split across tiles with power-of-two sides
+        let l = 64;
+        let mut per_dst = vec![0usize; l + 1];
+        for t in schedule(l) {
+            for z in t.dst_l..=t.dst_r {
+                per_dst[z] += t.src_r - t.src_l + 1;
+            }
+        }
+        for z in 1..=l {
+            assert_eq!(per_dst[z], z - 1, "z={z}");
+        }
+    }
+
+    #[test]
+    fn property_random_l_invariants() {
+        propcheck::check(
+            "schedule-invariants",
+            6,
+            |rng| 1usize << rng.range(1, 8),
+            |&l| {
+                verify_invariants(l).map_err(|e| e)?;
+                ensure(
+                    schedule(l).count() == l - 1,
+                    format!("tile count for L={l}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn large_tile_positions_are_rare() {
+        // Fig 2c justification: 93.75% of positions use U <= 8
+        let l = 4096;
+        let small = schedule(l).filter(|t| t.u <= 8).count();
+        let frac = small as f64 / (l - 1) as f64;
+        assert!(frac > 0.93, "frac={frac}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Workload/trace generation for the serving benchmarks: Poisson arrivals
+//! with configurable request-length distributions (the synthetic stand-in
+//! for production traces, per the substitution rule in DESIGN.md §9).
+
+pub mod workload;
+
+pub use workload::{RequestSpec, TraceConfig, WorkloadTrace};

@@ -1,0 +1,97 @@
+//! Synthetic request traces: Poisson arrivals + length distributions.
+
+use crate::util::prng::Prng;
+
+/// One request in a trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestSpec {
+    /// Arrival offset from trace start, seconds.
+    pub arrival_s: f64,
+    pub max_tokens: usize,
+}
+
+/// Trace shape parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Mean arrival rate (requests/second).
+    pub rate: f64,
+    pub num_requests: usize,
+    /// Token-count distribution: log-uniform over [min_tokens, max_tokens].
+    pub min_tokens: usize,
+    pub max_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { rate: 2.0, num_requests: 32, min_tokens: 16, max_tokens: 256, seed: 0 }
+    }
+}
+
+/// A generated trace (sorted by arrival time).
+#[derive(Debug, Clone)]
+pub struct WorkloadTrace {
+    pub requests: Vec<RequestSpec>,
+}
+
+impl WorkloadTrace {
+    pub fn generate(cfg: TraceConfig) -> WorkloadTrace {
+        assert!(cfg.min_tokens >= 1 && cfg.min_tokens <= cfg.max_tokens);
+        let mut rng = Prng::new(cfg.seed);
+        let mut t = 0.0;
+        let lo = (cfg.min_tokens as f64).ln();
+        let hi = (cfg.max_tokens as f64).ln();
+        let requests = (0..cfg.num_requests)
+            .map(|_| {
+                t += rng.exponential(cfg.rate);
+                let tokens = (lo + rng.uniform() * (hi - lo)).exp().round() as usize;
+                RequestSpec {
+                    arrival_s: t,
+                    max_tokens: tokens.clamp(cfg.min_tokens, cfg.max_tokens),
+                }
+            })
+            .collect();
+        WorkloadTrace { requests }
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival_s).unwrap_or(0.0)
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.max_tokens).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_sorted_arrivals_in_range() {
+        let cfg = TraceConfig { rate: 10.0, num_requests: 100, min_tokens: 8,
+                                max_tokens: 64, seed: 1 };
+        let tr = WorkloadTrace::generate(cfg);
+        assert_eq!(tr.requests.len(), 100);
+        let mut prev = 0.0;
+        for r in &tr.requests {
+            assert!(r.arrival_s >= prev);
+            prev = r.arrival_s;
+            assert!((8..=64).contains(&r.max_tokens));
+        }
+    }
+
+    #[test]
+    fn rate_controls_density() {
+        let fast = WorkloadTrace::generate(TraceConfig { rate: 100.0, ..Default::default() });
+        let slow = WorkloadTrace::generate(TraceConfig { rate: 1.0, ..Default::default() });
+        assert!(fast.duration_s() < slow.duration_s());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = WorkloadTrace::generate(TraceConfig::default());
+        let b = WorkloadTrace::generate(TraceConfig::default());
+        assert_eq!(a.requests, b.requests);
+    }
+}

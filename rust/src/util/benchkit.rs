@@ -1,0 +1,199 @@
+//! Bench harness substrate (criterion is unavailable offline).
+//!
+//! Warmup + repeated timed runs + robust statistics, plus aligned-table and
+//! CSV emission so every `rust/benches/*.rs` target prints the paper's
+//! rows/series and leaves machine-readable output next to it.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over repeated timed runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub runs: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            runs: n,
+            mean_ns: mean,
+            median_ns: ns[n / 2],
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+            stddev_ns: var.sqrt(),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+}
+
+/// Benchmark `f` with `warmup` unmeasured runs then `runs` measured runs
+/// (paper protocol: "averaging over 4 runs following 2 runs of warm-up").
+pub fn bench<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples = (0..runs.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_nanos() as f64
+        })
+        .collect();
+    Stats::from_samples(samples)
+}
+
+/// Time a single closure (per-token latency traces, breakdown timers).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Fixed-width table writer for terminal output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("  {}", cols.join("  "));
+        };
+        line(&self.headers);
+        println!(
+            "  {}",
+            widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  ")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// CSV besides the human table (written under `bench_csv/`).
+    pub fn write_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("bench_csv")?;
+        let path = std::path::Path::new("bench_csv").join(format!("{name}.csv"));
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+}
+
+/// Env-var knobs so `cargo bench` scale can be tuned without rebuilds
+/// (e.g. `FI_MAX_LEN=1024 cargo bench`).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_str(name: &str, default: &str) -> String {
+    std::env::var(name).unwrap_or_else(|_| default.to_string())
+}
+
+/// Skip helper: benches need `make artifacts` to have run.
+pub fn require_artifacts(dir: &str) -> Option<std::path::PathBuf> {
+    let p = std::path::PathBuf::from(dir);
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        println!("SKIP: artifacts not found at {dir} — run `make artifacts` first");
+        None
+    }
+}
+
+/// Format a nanosecond count human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.1}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_samples() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.runs, 3);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 3.0);
+        assert_eq!(s.median_ns, 2.0);
+        assert!((s.mean_ns - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_expected_count() {
+        let mut count = 0;
+        let s = bench(2, 4, || count += 1);
+        assert_eq!(count, 6);
+        assert_eq!(s.runs, 4);
+    }
+
+    #[test]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(vec!["1".into()])
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.5us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

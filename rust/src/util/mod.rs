@@ -1,0 +1,9 @@
+//! Infrastructure substrates built in-repo (the offline crate set has no
+//! serde/rand/rayon/proptest/criterion — see DESIGN.md §2.2).
+
+pub mod benchkit;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod tensor;
+pub mod threadpool;

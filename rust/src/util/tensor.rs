@@ -1,0 +1,204 @@
+//! Dense row-major f32 tensors — the host-side data substrate.
+//!
+//! Deliberately tiny: the hot path works on raw `&[f32]` slices carved out
+//! of [`Tensor`] storage; the struct only carries shape metadata and the
+//! indexing helpers the engines need ([G, T, D] activation layouts).
+
+use anyhow::{bail, Result};
+
+/// Owned row-major f32 tensor with runtime shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row stride of the trailing `k` axes.
+    pub fn stride_of(&self, axis: usize) -> usize {
+        self.shape[axis + 1..].iter().product()
+    }
+
+    /// Immutable row `[i, ..]` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let d = self.shape[1];
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    /// Slice `[g, t, ..]` of a rank-3 tensor.
+    pub fn at2(&self, g: usize, t: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 3);
+        let d = self.shape[2];
+        let off = (g * self.shape[1] + t) * d;
+        &self.data[off..off + d]
+    }
+
+    pub fn at2_mut(&mut self, g: usize, t: usize) -> &mut [f32] {
+        debug_assert_eq!(self.shape.len(), 3);
+        let d = self.shape[2];
+        let off = (g * self.shape[1] + t) * d;
+        &mut self.data[off..off + d]
+    }
+
+    /// Contiguous block `[g, t0..t1, :]` of a rank-3 tensor.
+    pub fn block(&self, g: usize, t0: usize, t1: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 3);
+        let d = self.shape[2];
+        let off = (g * self.shape[1] + t0) * d;
+        &self.data[off..off + (t1 - t0) * d]
+    }
+
+    pub fn block_mut(&mut self, g: usize, t0: usize, t1: usize) -> &mut [f32] {
+        debug_assert_eq!(self.shape.len(), 3);
+        let d = self.shape[2];
+        let off = (g * self.shape[1] + t0) * d;
+        &mut self.data[off..off + (t1 - t0) * d]
+    }
+
+    /// Max |a - b| over two equal-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 error ||a-b|| / (||b|| + eps).
+    pub fn rel_l2(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) * (a - b)) as f64;
+            den += (b * b) as f64;
+        }
+        (num.sqrt() / (den.sqrt() + 1e-12)) as f32
+    }
+}
+
+/// `axpy`-style helpers used by the native tau kernels and engines.
+pub mod ops {
+    /// out += a ⊙ b (elementwise), all length-n.
+    #[inline]
+    pub fn add_mul(out: &mut [f32], a: &[f32], b: &[f32]) {
+        debug_assert_eq!(out.len(), a.len());
+        debug_assert_eq!(out.len(), b.len());
+        for i in 0..out.len() {
+            out[i] += a[i] * b[i];
+        }
+    }
+
+    /// out += a (elementwise).
+    #[inline]
+    pub fn add_assign(out: &mut [f32], a: &[f32]) {
+        debug_assert_eq!(out.len(), a.len());
+        for i in 0..out.len() {
+            out[i] += a[i];
+        }
+    }
+
+    /// Euclidean norm.
+    pub fn l2(a: &[f32]) -> f32 {
+        a.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn rank3_indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 2]);
+        t.at2_mut(1, 2).copy_from_slice(&[5.0, 6.0]);
+        assert_eq!(t.at2(1, 2), &[5.0, 6.0]);
+        assert_eq!(t.data()[10..12], [5.0, 6.0]);
+        assert_eq!(t.block(1, 1, 3).len(), 4);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::from_vec(&[2, 6], (0..12).map(|i| i as f32).collect()).unwrap();
+        let t = t.reshape(&[3, 4]).unwrap();
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0, 7.0]);
+        assert!(t.clone().reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![1.0, 2.5, 3.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        assert!(a.rel_l2(&a) < 1e-12);
+    }
+
+    #[test]
+    fn ops_add_mul() {
+        let mut out = vec![1.0, 1.0];
+        ops::add_mul(&mut out, &[2.0, 3.0], &[10.0, 100.0]);
+        assert_eq!(out, vec![21.0, 301.0]);
+    }
+}

@@ -1,0 +1,120 @@
+//! Scoped fork-join parallelism substrate (rayon is unavailable offline).
+//!
+//! Serves Algorithm 3's across-layer parallelism for the *native* tau
+//! implementations: the gray-tile calls at different layers have disjoint
+//! inputs/outputs, so they are embarrassingly parallel. On this testbed
+//! (1 core) the pool degenerates gracefully to inline execution; the
+//! topology and correctness are tested regardless.
+//!
+//! Implementation: `std::thread::scope` with work-stealing via a shared
+//! atomic counter — spawning a handful of scoped threads per fork-join is
+//! cheap relative to a gray tile, and borrow checking stays fully safe.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread;
+
+/// Fork-join executor with a fixed degree of parallelism.
+pub struct ThreadPool {
+    size: usize,
+}
+
+impl ThreadPool {
+    /// `size == 0` requests inline execution (no threads spawned).
+    pub fn new(size: usize) -> ThreadPool {
+        ThreadPool { size }
+    }
+
+    /// Sized to the machine (cores - 1; 0 ⇒ inline on a 1-core box).
+    pub fn for_machine() -> ThreadPool {
+        let cores = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(cores.saturating_sub(1))
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `f(i)` for `i in 0..n` and wait for all. Parallel iff the pool
+    /// has workers and `n > 1`; otherwise inline, in order.
+    pub fn scoped_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        if self.size == 0 || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let threads = self.size.min(n);
+        let counter = AtomicUsize::new(0);
+        thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn inline_pool_runs_everything_in_order() {
+        let pool = ThreadPool::new(0);
+        let seen = Mutex::new(Vec::new());
+        pool.scoped_for(17, |i| seen.lock().unwrap().push(i));
+        assert_eq!(*seen.lock().unwrap(), (0..17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_pool_covers_all_indices_once() {
+        let pool = ThreadPool::new(4);
+        let n = 100;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.scoped_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn disjoint_slice_mutation() {
+        // The tau use-case: each index owns a disjoint output slice.
+        let pool = ThreadPool::new(3);
+        let n = 8;
+        let data: Vec<Mutex<u64>> = (0..n).map(|_| Mutex::new(0)).collect();
+        pool.scoped_for(n, |i| {
+            *data[i].lock().unwrap() = i as u64 * 2;
+        });
+        for (i, d) in data.iter().enumerate() {
+            assert_eq!(*d.lock().unwrap(), i as u64 * 2);
+        }
+    }
+
+    #[test]
+    fn zero_tasks_is_noop() {
+        ThreadPool::new(2).scoped_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn for_machine_constructs_and_runs() {
+        let p = ThreadPool::for_machine();
+        let hits = AtomicUsize::new(0);
+        p.scoped_for(5, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+}

@@ -1,0 +1,140 @@
+//! Theorem 2 in executable form: for P.1 + P.2 mixers the generic flash
+//! driver equals the lazy evaluator with the Prop-1 call count to A; for
+//! P.1-only mixers (attention) the driver refuses and lazy matches the
+//! direct softmax reference.
+
+use flash_inference::framework::{
+    attention, AttentionMixer, DecaySumMixer, GenericModel, LcsmMixer,
+};
+use flash_inference::util::prng::Prng;
+use flash_inference::util::tensor::Tensor;
+
+fn rand_tensor(rng: &mut Prng, shape: &[usize], scale: f32) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    for v in t.data_mut() {
+        *v = rng.normal_f32() * scale;
+    }
+    t
+}
+
+fn model<M: flash_inference::framework::ContributionMixer>(
+    mixers: Vec<M>,
+    d: usize,
+) -> GenericModel<M> {
+    GenericModel {
+        mixers,
+        // block: bounded elementwise nonlinearity (keeps rollouts finite)
+        block: Box::new(|_l, x| x.iter().map(|v| v.tanh()).collect()),
+        sampler: Box::new(|a| a.iter().map(|v| 0.9 * v + 0.05).collect()),
+        d,
+    }
+}
+
+fn decayed_filter(rng: &mut Prng, len: usize, d: usize) -> Tensor {
+    let mut rho = rand_tensor(rng, &[len, d], 1.0);
+    for t in 0..len {
+        let w = (-(6.0 * t as f32) / len as f32).exp() / (1.0 + t as f32).sqrt();
+        for v in rho.data_mut()[t * d..(t + 1) * d].iter_mut() {
+            *v *= w * 0.3;
+        }
+    }
+    rho
+}
+
+#[test]
+fn theorem2_lcsm_flash_equals_lazy_with_prop1_calls() {
+    let mut rng = Prng::new(1);
+    let (len, d, m) = (64usize, 8usize, 3usize);
+    let mixers: Vec<LcsmMixer> =
+        (0..m).map(|_| LcsmMixer::new(decayed_filter(&mut rng, len, d))).collect();
+    let gm = model(mixers, d);
+    let a01 = vec![0.3; d];
+
+    let flash = gm.generate_flash(&a01, len).unwrap();
+    let lazy = gm.generate_lazy(&a01, len).unwrap();
+    for (fa, la) in flash.activations.iter().zip(&lazy.activations) {
+        let err = fa.rel_l2(la);
+        assert!(err < 1e-4, "rel_l2 {err}");
+    }
+    // Theorem 2: L-1 calls to A per layer
+    assert_eq!(flash.a_calls, m * (len - 1));
+}
+
+#[test]
+fn theorem2_decaying_sum_mixer_beyond_convolutions() {
+    let (len, d, m) = (128usize, 4usize, 2usize);
+    let mixers: Vec<DecaySumMixer> =
+        (0..m).map(|i| DecaySumMixer::new(0.8 + 0.1 * i as f32, d)).collect();
+    let gm = model(mixers, d);
+    let a01 = vec![0.5; d];
+    let flash = gm.generate_flash(&a01, len).unwrap();
+    let lazy = gm.generate_lazy(&a01, len).unwrap();
+    for (fa, la) in flash.activations.iter().zip(&lazy.activations) {
+        assert!(fa.rel_l2(la) < 1e-4);
+    }
+}
+
+#[test]
+fn rank1_range_contrib_matches_bruteforce() {
+    use flash_inference::framework::ContributionMixer;
+    let mut rng = Prng::new(3);
+    let d = 4;
+    let mx = DecaySumMixer::new(0.9, d);
+    let y = rand_tensor(&mut rng, &[32, d], 1.0);
+    // tile at i = 8, U = 8
+    let fast = mx.range_contrib(&y, 1, 8, 9, 16);
+    for (k, p) in (9..=16).enumerate() {
+        let mut acc = mx.neutral();
+        for i in 1..=8 {
+            mx.agg(&mut acc, &mx.cont(&y, i, p));
+        }
+        for (a, b) in fast[k].iter().zip(&acc) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn attention_violates_p2_and_is_rejected_by_the_tiling() {
+    let mut rng = Prng::new(5);
+    let d = 6;
+    let mx = AttentionMixer::new(
+        rand_tensor(&mut rng, &[d, d], 0.4),
+        rand_tensor(&mut rng, &[d, d], 0.4),
+        rand_tensor(&mut rng, &[d, d], 0.4),
+    );
+    let gm = model(vec![mx], d);
+    let a01 = vec![0.2; d];
+    let err = match gm.generate_flash(&a01, 16) {
+        Err(e) => e,
+        Ok(_) => panic!("P.2 violation must be rejected"),
+    };
+    assert!(err.to_string().contains("query-independent"), "{err}");
+    // the lazy evaluator still works — and is KV-cache decoding
+    let lazy = gm.generate_lazy(&a01, 16).unwrap();
+    assert!(lazy.activations[1].data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn attention_lazy_matches_direct_softmax_reference() {
+    use flash_inference::framework::ContributionMixer;
+    let mut rng = Prng::new(9);
+    let d = 5;
+    let mx = AttentionMixer::new(
+        rand_tensor(&mut rng, &[d, d], 0.5),
+        rand_tensor(&mut rng, &[d, d], 0.5),
+        rand_tensor(&mut rng, &[d, d], 0.5),
+    );
+    let y = rand_tensor(&mut rng, &[12, d], 1.0);
+    let want = attention::attention_reference(&mx, &y);
+    for j in 1..=12usize {
+        let mut acc = mx.neutral();
+        for i in 1..=j {
+            mx.agg(&mut acc, &mx.cont(&y, i, j));
+        }
+        let got = mx.read(&acc);
+        for (a, b) in got.iter().zip(&want.data()[(j - 1) * d..j * d]) {
+            assert!((a - b).abs() < 1e-4, "j={j}: {a} vs {b}");
+        }
+    }
+}

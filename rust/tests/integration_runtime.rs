@@ -1,0 +1,159 @@
+//! Integration: PJRT runtime against the real artifacts built by
+//! `make artifacts`. Exercises the full aot.py → manifest → compile →
+//! execute contract and cross-checks artifact numerics against the native
+//! rust kernels.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use flash_inference::fft::{self, Plan};
+use flash_inference::model::Variant;
+use flash_inference::runtime::{BoundArtifact, Runtime};
+use flash_inference::util::prng::Prng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts/synthetic");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("load runtime"))
+}
+
+fn rand_vec(rng: &mut Prng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+#[test]
+fn loads_manifest_weights_and_dims() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.dims.variant, Variant::Synthetic);
+    assert!(rt.dims.l.is_power_of_two());
+    assert!(rt.weights.len() >= 8);
+    // step + filter_gen + 2 tau families over log2(L) sizes
+    let expected = 2 + 2 * (rt.dims.l / 2).trailing_zeros() as usize + 2;
+    assert!(rt.manifest.artifacts.len() >= expected - 1);
+}
+
+#[test]
+fn filter_gen_produces_normalized_rho() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.executable("filter_gen").expect("compile filter_gen");
+    let args: Vec<_> = exe
+        .spec
+        .inputs
+        .iter()
+        .map(|i| rt.weight_buffer(&i.name).unwrap())
+        .collect();
+    let arg_refs: Vec<&xla::PjRtBuffer> = args.iter().map(|a| a.as_ref()).collect();
+    let outs = exe.call(&arg_refs).expect("run filter_gen");
+    let rho = Runtime::literal_to_vec(&outs[0], rt.dims.m * rt.dims.l * rt.dims.d).unwrap();
+    assert!(rho.iter().all(|v| v.is_finite()));
+    // per (m, d): sum_t |rho| <= 1 (aot normalization)
+    let (m, l, d) = (rt.dims.m, rt.dims.l, rt.dims.d);
+    for mi in 0..m {
+        for di in (0..d).step_by(17) {
+            let s: f32 = (0..l).map(|t| rho[(mi * l + t) * d + di].abs()).sum();
+            assert!(s <= 1.0 + 1e-4, "m={mi} d={di} sum={s}");
+        }
+    }
+}
+
+#[test]
+fn tau_artifacts_match_native_kernels() {
+    let Some(rt) = runtime() else { return };
+    let (g, d) = (rt.dims.g, rt.dims.d);
+    let mut rng = Prng::new(42);
+    for u in [1usize, 4, 32] {
+        let y = rand_vec(&mut rng, g * u * d);
+        let rho_seg = rand_vec(&mut rng, g * 2 * u * d);
+
+        // native direct
+        let mut want = vec![0.0f32; g * u * d];
+        for gi in 0..g {
+            fft::tile_conv_direct_into(
+                &y[gi * u * d..(gi + 1) * u * d],
+                &rho_seg[gi * 2 * u * d..(gi + 1) * 2 * u * d],
+                &mut want[gi * u * d..(gi + 1) * u * d],
+                d,
+            );
+        }
+
+        // pjrt direct (pallas kernel artifact)
+        let exe = rt.executable(&format!("tau_direct_{u}")).unwrap();
+        let yb = rt.upload(&y, &[g, u, d]).unwrap();
+        let sb = rt.upload(&rho_seg, &[g, 2 * u, d]).unwrap();
+        let outs = exe.call(&[&yb, &sb]).unwrap();
+        let got = Runtime::literal_to_vec(&outs[0], g * u * d).unwrap();
+        let tol = 1e-3_f32 * (u as f32).sqrt();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < tol, "direct u={u}: {a} vs {b}");
+        }
+
+        // pjrt fft (needs the filter spectrum split re/im, rfft layout)
+        let plan = Plan::new(2 * u);
+        let mut re_all = vec![0.0f32; g * (u + 1) * d];
+        let mut im_all = vec![0.0f32; g * (u + 1) * d];
+        for gi in 0..g {
+            let (re, im) =
+                fft::spectrum_planes(&plan, &rho_seg[gi * 2 * u * d..(gi + 1) * 2 * u * d], d);
+            // keep rfft bins [0, u]
+            re_all[gi * (u + 1) * d..(gi + 1) * (u + 1) * d]
+                .copy_from_slice(&re[..(u + 1) * d]);
+            im_all[gi * (u + 1) * d..(gi + 1) * (u + 1) * d]
+                .copy_from_slice(&im[..(u + 1) * d]);
+        }
+        let exe = rt.executable(&format!("tau_fft_{u}")).unwrap();
+        let yb = rt.upload(&y, &[g, u, d]).unwrap();
+        let rb = rt.upload(&re_all, &[g, u + 1, d]).unwrap();
+        let ib = rt.upload(&im_all, &[g, u + 1, d]).unwrap();
+        let outs = exe.call(&[&yb, &rb, &ib]).unwrap();
+        let got = Runtime::literal_to_vec(&outs[0], g * u * d).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < tol, "fft u={u}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn step_artifact_runs_via_bound_artifact() {
+    let Some(rt) = runtime() else { return };
+    let (m, b, d) = (rt.dims.m, rt.dims.b, rt.dims.d);
+    let mut rng = Prng::new(7);
+
+    // derived input: rho0 — zeros are fine for an ABI smoke test
+    let rho0 = vec![0.0f32; m * d];
+    let mut derived = HashMap::new();
+    derived.insert(
+        "@rho0".to_string(),
+        Arc::new(rt.upload(&rho0, &[m, d]).unwrap()),
+    );
+    let bound = BoundArtifact::bind(&rt, "step", &derived).expect("bind step");
+    assert_eq!(bound.runtime_arity(), 2); // $pending_col, $a0
+
+    let pend = rand_vec(&mut rng, m * b * d);
+    let a0 = rand_vec(&mut rng, b * d);
+    let pb = rt.upload(&pend, &[m, b, d]).unwrap();
+    let ab = rt.upload(&a0, &[b, d]).unwrap();
+    let outs = bound.call(&[&pb, &ab]).expect("run step");
+    let streams = Runtime::literal_to_vec(&outs[0], m * b * d).unwrap();
+    let out = Runtime::literal_to_vec(&outs[1], b * rt.dims.out_width()).unwrap();
+    assert!(streams.iter().all(|v| v.is_finite()));
+    assert!(out.iter().all(|v| v.is_finite()));
+    // first stream row is the mixer-1 input = a0 itself (synthetic)
+    for (s, a) in streams[..b * d].iter().zip(&a0) {
+        assert!((s - a).abs() < 1e-6);
+    }
+
+    // wrong arity is rejected
+    assert!(bound.call(&[&pb]).is_err());
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.executable("tau_fft_1").unwrap();
+    let b = rt.executable("tau_fft_1").unwrap();
+    assert!(Arc::ptr_eq(&a, &b));
+}

@@ -1,0 +1,111 @@
+//! Integration: HTTP server round-trip over loopback — health, info,
+//! metrics, generation, error paths, and concurrent clients through the
+//! batcher.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+
+use flash_inference::config::ServerConfig;
+use flash_inference::server::Server;
+use flash_inference::util::json::Json;
+
+fn request(addr: std::net::SocketAddr, raw: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(raw.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let status: u16 = buf.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+fn post_generate(addr: std::net::SocketAddr, body: &str) -> (u16, String) {
+    request(
+        addr,
+        &format!(
+            "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        ),
+    )
+}
+
+fn start_server() -> Option<Server> {
+    if !Path::new("artifacts/synthetic/manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    let cfg = ServerConfig {
+        port: 0,
+        artifacts: "artifacts/synthetic".into(),
+        ..Default::default()
+    };
+    Some(Server::start(cfg).expect("start server"))
+}
+
+#[test]
+fn full_http_round_trip() {
+    let Some(server) = start_server() else { return };
+    let addr = server.addr;
+
+    // health
+    let (code, body) = request(addr, "GET /health HTTP/1.1\r\n\r\n");
+    assert_eq!(code, 200);
+    assert!(body.contains("\"ok\""));
+
+    // info reflects the manifest
+    let (code, body) = request(addr, "GET /v1/info HTTP/1.1\r\n\r\n");
+    assert_eq!(code, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req_str("variant").unwrap(), "synthetic");
+    assert_eq!(j.req_usize("L").unwrap(), 4096);
+
+    // generate
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 16}");
+    assert_eq!(code, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req_usize("steps").unwrap(), 16);
+    assert_eq!(j.req_usize("max_tokens").unwrap(), 16);
+    assert!(j.get("gen_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // non-pow2 request is padded up
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 20}");
+    assert_eq!(code, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req_usize("steps").unwrap(), 32);
+
+    // bad requests
+    let (code, _) = post_generate(addr, "{\"max_tokens\": 0}");
+    assert_eq!(code, 400);
+    let (code, _) = post_generate(addr, "{nonsense");
+    assert_eq!(code, 400);
+    let (code, _) = request(addr, "GET /nope HTTP/1.1\r\n\r\n");
+    assert_eq!(code, 404);
+
+    // metrics counted the traffic
+    let (code, body) = request(addr, "GET /metrics HTTP/1.1\r\n\r\n");
+    assert_eq!(code, 200);
+    assert!(body.contains("fi_requests_total 4"), "{body}");
+    assert!(body.contains("fi_tokens_generated 36"), "{body}");
+
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_are_all_served() {
+    let Some(server) = start_server() else { return };
+    let addr = server.addr;
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        handles.push(std::thread::spawn(move || post_generate(addr, "{\"max_tokens\": 8}")));
+    }
+    for h in handles {
+        let (code, body) = h.join().unwrap();
+        assert_eq!(code, 200, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert!(j.req_usize("steps").unwrap() >= 8);
+    }
+    server.stop();
+}

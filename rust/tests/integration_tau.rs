@@ -1,0 +1,137 @@
+//! Integration: the four τ implementations (and Hybrid) agree numerically
+//! on real artifacts, serial == parallel, and calibration round-trips.
+
+use std::path::Path;
+
+use flash_inference::tau::{self, make_impl, CalibrationTable, RhoCache, TauImpl, TauKind};
+use flash_inference::tiling::Tile;
+use flash_inference::runtime::Runtime;
+use flash_inference::util::prng::Prng;
+use flash_inference::util::tensor::Tensor;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts/synthetic");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("load runtime"))
+}
+
+fn random_state(rt: &Runtime, l: usize, seed: u64) -> (Tensor, Tensor) {
+    let dims = rt.dims;
+    let mut rng = Prng::new(seed);
+    let mut streams = Tensor::zeros(&[dims.g, l, dims.d]);
+    rng.fill_normal(streams.data_mut(), 1.0);
+    let pending = Tensor::zeros(&[dims.g, l, dims.d]);
+    (streams, pending)
+}
+
+#[test]
+fn all_impls_agree_on_every_tile_size() {
+    let Some(rt) = runtime() else { return };
+    let cache = RhoCache::new(&rt).expect("rho cache");
+    for u in [1usize, 2, 8, 64] {
+        let tile = Tile::at(u);
+        let l = tile.dst_r;
+        let (streams, base_pending) = random_state(&rt, l, u as u64);
+
+        let mut results = Vec::new();
+        for kind in TauKind::ALL_FIXED {
+            let mut imp = make_impl(kind, &cache, 0).unwrap();
+            let mut pending = base_pending.clone();
+            imp.apply(&streams, &mut pending, tile).unwrap();
+            results.push((kind, pending));
+        }
+        let (_, reference) = &results[0];
+        for (kind, pending) in &results[1..] {
+            let diff = pending.max_abs_diff(reference);
+            assert!(
+                diff < 2e-3 * (u as f32).sqrt(),
+                "impl {} differs from rust-direct at u={u}: {diff}",
+                kind.as_str()
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_matches_serial() {
+    let Some(rt) = runtime() else { return };
+    let cache = RhoCache::new(&rt).expect("rho cache");
+    for kind in [TauKind::RustDirect, TauKind::RustFft] {
+        let tile = Tile::at(16);
+        let (streams, base) = random_state(&rt, tile.dst_r, 3);
+        let mut serial = base.clone();
+        make_impl(kind, &cache, 0).unwrap().apply(&streams, &mut serial, tile).unwrap();
+        let mut parallel = base.clone();
+        make_impl(kind, &cache, 3).unwrap().apply(&streams, &mut parallel, tile).unwrap();
+        // identical summation order per group => bitwise equal
+        assert_eq!(serial.max_abs_diff(&parallel), 0.0, "{}", kind.as_str());
+    }
+}
+
+#[test]
+fn tau_accumulates_into_prior_pending() {
+    let Some(rt) = runtime() else { return };
+    let cache = RhoCache::new(&rt).expect("rho cache");
+    let tile = Tile::at(4);
+    let (streams, zero) = random_state(&rt, tile.dst_r, 9);
+    let mut from_zero = zero.clone();
+    let mut imp = make_impl(TauKind::RustFft, &cache, 0).unwrap();
+    imp.apply(&streams, &mut from_zero, tile).unwrap();
+
+    let mut primed = zero.clone();
+    primed.data_mut().iter_mut().for_each(|v| *v = 1.0);
+    imp.apply(&streams, &mut primed, tile).unwrap();
+    // primed = 1 + contribution everywhere in the dst block
+    let d = rt.dims.d;
+    for gi in 0..rt.dims.g {
+        for t in tile.dst_l - 1..tile.dst_r {
+            for k in 0..d {
+                let a = primed.at2(gi, t)[k];
+                let b = from_zero.at2(gi, t)[k];
+                assert!((a - 1.0 - b).abs() < 1e-5);
+            }
+        }
+    }
+}
+
+#[test]
+fn hybrid_dispatches_by_table() {
+    let Some(rt) = runtime() else { return };
+    let cache = RhoCache::new(&rt).expect("rho cache");
+    let table = CalibrationTable::heuristic(rt.dims.l);
+    let hybrid = tau::Hybrid::new(&cache, table, 0);
+    assert_eq!(hybrid.choice(1), TauKind::RustDirect);
+    assert_eq!(hybrid.choice(rt.dims.l / 2), TauKind::RustFft);
+    assert_eq!(hybrid.kind(), TauKind::Hybrid);
+}
+
+#[test]
+fn calibration_produces_complete_table() {
+    let Some(rt) = runtime() else { return };
+    let cache = RhoCache::new(&rt).expect("rho cache");
+    // tiny calibration (max_u = 8) to keep test time bounded
+    let (table, rows) = tau::calibrate(&cache, 8, 1, 2).expect("calibrate");
+    assert_eq!(rows.len(), 4); // u = 1, 2, 4, 8
+    assert_eq!(table.levels(), 4);
+    for row in &rows {
+        assert_eq!(row.medians_ns.len(), 4);
+        assert!(row.medians_ns.iter().all(|(_, ns)| *ns > 0.0));
+        assert!(TauKind::ALL_FIXED.contains(&row.winner));
+    }
+}
+
+#[test]
+fn flop_accounting_kinds() {
+    // direct's quadratic vs fft's quasilinear tile costs
+    let d = 64;
+    let g = 6;
+    assert!(TauKind::RustDirect.tile_flops(2048, g, d) > TauKind::RustFft.tile_flops(2048, g, d));
+    assert!(TauKind::RustDirect.tile_flops(2, g, d) < TauKind::RustFft.tile_flops(2, g, d));
+    assert_eq!(
+        TauKind::PjrtDirect.tile_flops(16, g, d),
+        TauKind::RustDirect.tile_flops(16, g, d)
+    );
+}

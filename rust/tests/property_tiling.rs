@@ -1,0 +1,205 @@
+//! Property tests (no artifacts needed — pure native paths): the fractal
+//! tiling, driven over random shapes/filters, computes exactly the full
+//! causal convolution; plus fuzz coverage of the JSON substrate.
+
+use flash_inference::fft::{self, Plan};
+use flash_inference::tiling::{schedule, verify_invariants};
+use flash_inference::util::json::Json;
+use flash_inference::util::prng::Prng;
+use flash_inference::util::propcheck::{self, ensure, gen};
+
+/// Full causal conv z_t = sum_{j<=t} y_j * rho_{t-j} via the tile schedule
+/// (red cells + gray tiles), using the requested tile kernel.
+fn tiled_causal_conv(y: &[f32], rho: &[f32], len: usize, d: usize, use_fft: bool) -> Vec<f32> {
+    let mut z = vec![0.0f32; len * d];
+    let mut scratch = fft::TileScratch::default();
+    // red cells: z_i += y_i * rho_0
+    for i in 0..len {
+        for k in 0..d {
+            z[i * d + k] += y[i * d + k] * rho[k];
+        }
+    }
+    for tile in schedule::schedule(len) {
+        let u = tile.u;
+        let yblk = &y[(tile.src_l - 1) * d..tile.src_r * d];
+        let out = &mut z[(tile.dst_l - 1) * d..tile.dst_r * d];
+        if use_fft {
+            let plan = Plan::new(2 * u);
+            let (sre, sim) = fft::spectrum_planes(&plan, &rho[..2 * u * d], d);
+            fft::tile_conv_fft_into(&plan, yblk, &sre, &sim, out, &mut scratch, d);
+        } else {
+            fft::tile_conv_direct_into(yblk, &rho[..2 * u * d], out, d);
+        }
+    }
+    z
+}
+
+fn naive_causal_conv(y: &[f32], rho: &[f32], len: usize, d: usize) -> Vec<f32> {
+    let mut z = vec![0.0f32; len * d];
+    for t in 0..len {
+        for j in 0..=t {
+            for k in 0..d {
+                z[t * d + k] += y[j * d + k] * rho[(t - j) * d + k];
+            }
+        }
+    }
+    z
+}
+
+#[test]
+fn property_tiled_conv_equals_naive_direct() {
+    propcheck::check(
+        "tiled-direct == naive causal conv",
+        12,
+        |rng: &mut Prng| {
+            let len = gen::pow2(rng, 1, 7);
+            let d = rng.range(1, 9);
+            let y = gen::vec_f32(rng, len * d);
+            let rho = gen::vec_f32(rng, len * d);
+            (len, d, y, rho)
+        },
+        |(len, d, y, rho)| {
+            let want = naive_causal_conv(y, rho, *len, *d);
+            let got = tiled_causal_conv(y, rho, *len, *d, false);
+            for (a, b) in got.iter().zip(&want) {
+                propcheck::ensure_close(*a, *b, 1e-4, "direct")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_tiled_conv_equals_naive_fft() {
+    propcheck::check(
+        "tiled-fft == naive causal conv",
+        10,
+        |rng: &mut Prng| {
+            let len = gen::pow2(rng, 1, 8);
+            let d = rng.range(1, 6);
+            let y = gen::vec_f32(rng, len * d);
+            let rho = gen::vec_f32(rng, len * d);
+            (len, d, y, rho)
+        },
+        |(len, d, y, rho)| {
+            let want = naive_causal_conv(y, rho, *len, *d);
+            let got = tiled_causal_conv(y, rho, *len, *d, true);
+            for (a, b) in got.iter().zip(&want) {
+                propcheck::ensure_close(*a, *b, 5e-4 * (*len as f32).sqrt(), "fft")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_schedule_invariants_random_lengths() {
+    propcheck::check(
+        "schedule invariants",
+        8,
+        |rng: &mut Prng| gen::pow2(rng, 1, 10),
+        |&len| verify_invariants(len).map_err(|e| e),
+    );
+}
+
+#[test]
+fn property_vecfft_linearity() {
+    // FFT(a x + b y) == a FFT(x) + b FFT(y) on the vectorized transform
+    propcheck::check(
+        "vecfft linearity",
+        10,
+        |rng: &mut Prng| {
+            let n = gen::pow2(rng, 1, 9);
+            let d = rng.range(1, 5);
+            let x = gen::vec_f32(rng, n * d);
+            let y = gen::vec_f32(rng, n * d);
+            (n, d, x, y, rng.normal_f32(), rng.normal_f32())
+        },
+        |(n, d, x, y, a, b)| {
+            let plan = Plan::new(*n);
+            let run = |v: &[f32]| {
+                let mut re = v.to_vec();
+                let mut im = vec![0.0; v.len()];
+                fft::vecfft::forward(&plan, &mut re, &mut im, *d);
+                (re, im)
+            };
+            let combo: Vec<f32> =
+                x.iter().zip(y).map(|(xv, yv)| a * xv + b * yv).collect();
+            let (cre, cim) = run(&combo);
+            let (xre, xim) = run(x);
+            let (yre, yim) = run(y);
+            let tol = 1e-3 * (*n as f32).sqrt();
+            for i in 0..x.len() {
+                propcheck::ensure_close(cre[i], a * xre[i] + b * yre[i], tol, "re")?;
+                propcheck::ensure_close(cim[i], a * xim[i] + b * yim[i], tol, "im")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_json_roundtrip_fuzz() {
+    fn random_json(rng: &mut Prng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 1e3).round()),
+            3 => {
+                let n = rng.below(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    propcheck::check(
+        "json parse(serialize(v)) == v",
+        60,
+        |rng: &mut Prng| random_json(rng, 3),
+        |v| {
+            let compact = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+            ensure(&compact == v, format!("compact mismatch: {v}"))?;
+            let pretty = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+            ensure(&pretty == v, "pretty mismatch")
+        },
+    );
+}
+
+#[test]
+fn property_prng_below_uniformity() {
+    propcheck::check(
+        "prng below() covers all buckets roughly uniformly",
+        4,
+        |rng: &mut Prng| rng.range(2, 16),
+        |&n| {
+            let mut rng = Prng::new(n as u64 * 7919);
+            let mut counts = vec![0usize; n];
+            let draws = 4000 * n;
+            for _ in 0..draws {
+                counts[rng.below(n)] += 1;
+            }
+            let expect = draws / n;
+            for (i, &c) in counts.iter().enumerate() {
+                ensure(
+                    c > expect / 2 && c < expect * 2,
+                    format!("bucket {i}: {c} vs {expect}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
