@@ -101,6 +101,30 @@ fn main() -> anyhow::Result<()> {
         lat.max_ns() / 1e6
     );
 
+    // one streaming request: tokens leave the engine per position over
+    // chunked NDJSON instead of arriving once the whole rollout is done
+    println!("\n=== streaming request (\"stream\": true) ===");
+    let body = "{\"max_tokens\": 32, \"stream\": true}";
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .as_bytes(),
+    )?;
+    let t0 = Instant::now();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw)?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let payload = flash_inference::server::http::decode_chunked(
+        raw.split("\r\n\r\n").nth(1).unwrap_or(""),
+    );
+    let events = payload.lines().filter(|l| l.contains("\"pos\"")).count();
+    let done = payload.lines().rfind(|l| l.contains("\"done\"")).unwrap_or("");
+    println!("received {events} incremental events in {ms:.1}ms; summary: {done}");
+
     // scrape the server's own metrics
     let mut s = TcpStream::connect(addr)?;
     s.write_all(b"GET /metrics HTTP/1.1\r\n\r\n")?;

@@ -1,0 +1,78 @@
+//! First-token-latency probe built on `Session::step()`: how quickly a
+//! serving lane observes position 1 under each scheduling method, versus
+//! the amortized per-token cost of the full rollout. The buffered
+//! `generate()` path hides this number entirely — a lane only sees tokens
+//! after the whole session — which is exactly what the Session state
+//! machine + streaming mode fix. Flash's first step does no mixer work at
+//! all (the first gray tile lands after position 1), so its first-token
+//! latency is the non-mixer floor regardless of L.
+//!
+//!     FI_LEN=1024 FI_RUNS=5 cargo bench --bench first_token
+
+use std::time::Instant;
+
+use flash_inference::engine::{Engine, EngineOpts, Method};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+use flash_inference::util::benchkit::{self, Table};
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = benchkit::require_artifacts(&benchkit::env_str(
+        "FI_ARTIFACTS_SYN",
+        "artifacts/synthetic",
+    )) else {
+        return Ok(());
+    };
+    let rt = Runtime::load(&dir)?;
+    let len = benchkit::env_usize("FI_LEN", 1024).next_power_of_two().min(rt.dims.l);
+    let runs = benchkit::env_usize("FI_RUNS", 5);
+
+    let mut table = Table::new(&[
+        "method",
+        "first token",
+        "full session",
+        "amortized/token",
+        "first/amortized",
+    ]);
+    for method in [Method::Flash, Method::Lazy, Method::Eager] {
+        let mut eng = Engine::new(
+            &rt,
+            EngineOpts { method, tau: TauKind::Hybrid, ..Default::default() },
+        )?;
+        eng.prewarm(len)?;
+        eng.generate(len)?; // warmup: one-time rho/PJRT derivation out of the timings
+
+        let (mut first, mut total) = (f64::MAX, f64::MAX);
+        for _ in 0..runs {
+            let t0 = Instant::now();
+            let mut session = eng.session(len)?;
+            session.step()?;
+            let f = t0.elapsed().as_nanos() as f64;
+            while !session.is_done() {
+                session.step()?;
+            }
+            let t = t0.elapsed().as_nanos() as f64;
+            let out = session.finish();
+            assert_eq!(out.steps, len);
+            first = first.min(f);
+            total = total.min(t);
+        }
+        let amortized = total / len as f64;
+        table.row(vec![
+            method.as_str().to_string(),
+            benchkit::fmt_ns(first),
+            benchkit::fmt_ns(total),
+            benchkit::fmt_ns(amortized),
+            format!("{:.2}x", first / amortized),
+        ]);
+    }
+
+    println!("\n=== first-token latency via Session::step (len={len}, best of {runs}) ===\n");
+    table.print();
+    println!(
+        "\nfirst token ~= one step-artifact call for every method; the methods \
+         separate in amortized cost (flash O(log^2 L) vs lazy/eager O(L)), \
+         which is why streaming + early per-token delivery matters for serving."
+    );
+    Ok(())
+}

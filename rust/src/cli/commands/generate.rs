@@ -11,6 +11,7 @@ use crate::util::benchkit::fmt_ns;
 pub fn run(argv: &[String]) -> Result<i32> {
     let schema = super::engine_schema(Schema::new())
         .value("len", "positions to generate (power of two, default 256)")
+        .switch("stream", "emit each position as it is generated (Session::step loop)")
         .switch("per-token", "print the per-token latency trace")
         .switch("flops", "print the FLOP/tau-call accounting");
     if super::maybe_help("flashinfer generate", &schema, argv) {
@@ -34,7 +35,29 @@ pub fn run(argv: &[String]) -> Result<i32> {
     engine.prewarm(len)?;
     println!("prewarm: {}", fmt_ns(t0.elapsed().as_nanos() as f64));
 
-    let out = engine.generate(len)?;
+    let out = if a.has("stream") {
+        // drive the session manually: tokens leave the loop per position,
+        // exactly what a streaming serving lane sees
+        let mut session = engine.session(len)?;
+        let t0 = std::time::Instant::now();
+        let mut first_ns: Option<f64> = None;
+        while !session.is_done() {
+            let step = session.step()?;
+            if first_ns.is_none() {
+                first_ns = Some(t0.elapsed().as_nanos() as f64);
+            }
+            match &step.tokens {
+                Some(toks) => println!("pos {:>6}  token {}", step.pos, toks[0]),
+                None => println!("pos {:>6}  out-checksum {:+.5}", step.pos, step.checksum),
+            }
+        }
+        if let Some(ns) = first_ns {
+            println!("first-token latency: {}", fmt_ns(ns));
+        }
+        session.finish()
+    } else {
+        engine.generate(len)?
+    };
     let m = &out.metrics;
     println!(
         "generated {} positions in {} (mixer {}, step {}, sample {})",

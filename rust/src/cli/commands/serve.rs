@@ -32,6 +32,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     );
     println!("  GET  /health | GET /metrics | GET /v1/info");
     println!("  POST /v1/generate  {{\"max_tokens\": 128}}");
+    println!("  POST /v1/generate  {{\"max_tokens\": 128, \"stream\": true}}  (chunked NDJSON, one event per position)");
 
     // serve until killed
     loop {

@@ -14,25 +14,31 @@
 //! pending column; the eager engine replaces (3) with an O(len-i) push to
 //! all future columns. All three share `step`, the sampler, the store and
 //! the metrics, so Fig 2a/2b/2c compare only what the paper compares.
+//!
+//! The loop itself lives in [`session`]: a resumable [`Session`] state
+//! machine advanced one position per [`Session::step`] call. `generate`
+//! and friends are thin drivers over it; streaming callers (the HTTP
+//! server's per-lane channels, the `--stream` CLI, first-token probes)
+//! drive `step()` directly. See `rust/DESIGN.md`.
 
 pub mod datadep;
 pub mod eager;
 pub mod lazy;
 pub mod sampler;
+pub mod session;
 pub mod store;
-
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 pub use sampler::{Sampler, SamplerCfg};
+pub use session::{Session, SessionInit, StepOutput};
 pub use store::Store;
 
-use crate::metrics::{Breakdown, SessionMetrics};
+use crate::metrics::SessionMetrics;
 use crate::model::Variant;
 use crate::runtime::{BoundArtifact, Runtime};
-use crate::tau::{make_impl, RhoCache, TauKind};
-use crate::tiling::{FlopCounter, Tile};
+use crate::tau::{RhoCache, TauKind};
+use crate::tiling::FlopCounter;
 use crate::util::tensor::Tensor;
 
 /// Inference scheduling method.
@@ -145,8 +151,13 @@ impl<'rt> Engine<'rt> {
         self.rt
     }
 
+    pub(crate) fn step_artifact(&self) -> &BoundArtifact {
+        &self.step
+    }
+
     /// Pre-compile/pre-derive everything a `len`-token session needs so the
-    /// measured loop contains no one-time costs (benches call this).
+    /// measured loop contains no one-time costs (benches and the server's
+    /// engine worker call this before taking traffic).
     pub fn prewarm(&mut self, len: usize) -> Result<()> {
         let with_pjrt = matches!(
             self.opts.tau,
@@ -158,7 +169,7 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
-    fn make_sampler(&self) -> Result<Sampler> {
+    pub(crate) fn make_sampler(&self) -> Result<Sampler> {
         let dims = self.rt.dims;
         Ok(match dims.variant {
             Variant::Synthetic => Sampler::synthetic(self.opts.sample_sigma, self.opts.seed),
@@ -188,17 +199,17 @@ impl<'rt> Engine<'rt> {
         }
     }
 
-    /// Autoregressively generate `len` positions (power of two, ≤ L).
-    pub fn generate(&mut self, len: usize) -> Result<GenOutput> {
+    /// Start a resumable session with the default (sampled) rollout start.
+    /// Drive it with [`Session::step`]; `generate` is exactly this plus a
+    /// drain loop.
+    pub fn session(&self, len: usize) -> Result<Session<'_, 'rt>> {
         let init = SessionInit { a0: self.initial_a0()?, ..Default::default() };
-        self.run_session(len, init)
+        Session::new(self, len, init)
     }
 
-    /// Teacher-forced generation: the first `forced.len()/(B·D)` inputs are
-    /// taken from `forced` (`[T0, B, D]`) instead of the sampler. Used for
-    /// prompt processing validation (paper §2.3.1's setting with P > 0) and
-    /// for driving the model with real input sequences.
-    pub fn generate_teacher_forced(&mut self, len: usize, forced: &[f32]) -> Result<GenOutput> {
+    /// Start a resumable teacher-forced session (see
+    /// [`Engine::generate_teacher_forced`] for the forcing convention).
+    pub fn session_teacher_forced(&self, len: usize, forced: &[f32]) -> Result<Session<'_, 'rt>> {
         let dims = self.rt.dims;
         let stride = dims.b * dims.d;
         if forced.is_empty() || forced.len() % stride != 0 {
@@ -209,7 +220,20 @@ impl<'rt> Engine<'rt> {
             forced: Some(forced.to_vec()),
             ..Default::default()
         };
-        self.run_session(len, init)
+        Session::new(self, len, init)
+    }
+
+    /// Autoregressively generate `len` positions (power of two, ≤ L).
+    pub fn generate(&mut self, len: usize) -> Result<GenOutput> {
+        drain(self.session(len)?)
+    }
+
+    /// Teacher-forced generation: the first `forced.len()/(B·D)` inputs are
+    /// taken from `forced` (`[T0, B, D]`) instead of the sampler. Used for
+    /// prompt processing validation (paper §2.3.1's setting with P > 0) and
+    /// for driving the model with real input sequences.
+    pub fn generate_teacher_forced(&mut self, len: usize, forced: &[f32]) -> Result<GenOutput> {
+        drain(self.session_teacher_forced(len, forced)?)
     }
 
     /// Prompt prefill (Massaroli et al. Lemma 2.1 / paper §2.3.1): run the
@@ -272,198 +296,17 @@ impl<'rt> Engine<'rt> {
             first_tokens,
             ..Default::default()
         };
-        self.run_session(gen_len, init)
-    }
-
-    fn run_session(&mut self, len: usize, init: SessionInit) -> Result<GenOutput> {
-        let dims = self.rt.dims;
-        if !len.is_power_of_two() || len > dims.l {
-            bail!("generation length {len} must be a power of two <= L={}", dims.l);
-        }
-        let (g, d, b) = (dims.g, dims.d, dims.b);
-        let wall0 = Instant::now();
-
-        // Appendix D: with the tiled method, after iteration len/2 nothing
-        // before position len/2 is ever read again, so the second half can
-        // reuse the first half's rows — the store holds M x (L/2) x D.
-        let half = self.opts.half_store && self.opts.method == Method::Flash && len >= 4;
-        if self.opts.half_store && self.opts.method != Method::Flash {
-            bail!("half_store (Appendix D) applies to the tiled method only");
-        }
-        let rows = if half { len / 2 } else { len };
-        let row_of = |pos1: usize| (pos1 - 1) % rows; // 1-indexed -> store row
-
-        let mut store = Store::new(g, rows, d);
-        if let Some((fut, fut_span)) = &init.pending_seed {
-            // seed pending with the prompt's future contributions
-            let span = (*fut_span).min(rows);
-            for gi in 0..g {
-                for t in 0..span {
-                    store
-                        .pending
-                        .at2_mut(gi, t)
-                        .copy_from_slice(&fut[(gi * fut_span + t) * d..(gi * fut_span + t) * d + d]);
-                }
-            }
-        }
-        let mut sampler = self.make_sampler()?;
-        let mut a0 = init.a0;
-        let mut scstate: Option<Vec<f32>> = match (&init.scstate_override, dims.variant) {
-            (Some(sc), _) => Some(sc.clone()),
-            (None, Variant::Hyena) => Some(vec![0.0; dims.ops() * 2 * b * 3 * d]),
-            (None, Variant::Synthetic) => None,
-        };
-        let sc_dims = [dims.ops(), 2, b, 3 * d];
-        let forced_steps = init.forced.as_ref().map(|f| f.len() / (b * d)).unwrap_or(0);
-
-        let mut tau = if self.opts.method == Method::Flash {
-            Some(make_impl(self.opts.tau, &self.cache, self.opts.threads)?)
-        } else {
-            None
-        };
-
-        let mut metrics = SessionMetrics::with_capacity(len);
-        let mut flops = FlopCounter::new();
-        let mut tokens: Option<Vec<Vec<u32>>> = match dims.variant {
-            Variant::Hyena => Some(vec![Vec::with_capacity(len); b]),
-            Variant::Synthetic => None,
-        };
-        if let (Some(first), Some(all)) = (&init.first_tokens, tokens.as_mut()) {
-            for (bi, t) in first.iter().enumerate() {
-                all[bi].push(*t);
-            }
-        }
-        let mut pend_col = Vec::with_capacity(g * d);
-        let mut last_out = Vec::new();
-        let mut outs_checksum = Vec::with_capacity(len);
-
-        for i in 1..=len {
-            let mut bd = Breakdown::default();
-
-            // ---- pending column (lazy recomputes; others read the store)
-            let t0 = Instant::now();
-            match self.opts.method {
-                Method::Lazy => {
-                    lazy::lazy_pending_col(&store.streams, &self.cache.rho, b, i,
-                                           &mut pend_col, &mut flops);
-                }
-                _ => store.gather_pending_col(row_of(i), &mut pend_col),
-            }
-            if half {
-                // the consumed column's row will be reused by a future tile
-                for gi in 0..g {
-                    store.pending.at2_mut(gi, row_of(i)).fill(0.0);
-                }
-            }
-            if self.opts.method == Method::Lazy {
-                bd.mixer_ns += t0.elapsed().as_nanos() as f64;
-            }
-
-            // ---- step: red cells + blocks + head (PJRT)
-            let t0 = Instant::now();
-            let pb = self.rt.upload(&pend_col, &[dims.m, b, d])?;
-            let ab = self.rt.upload(&a0, &[b, d])?;
-            let outs = match &scstate {
-                None => self.step.call(&[&pb, &ab])?,
-                Some(sc) => {
-                    let scb = self.rt.upload(sc, &sc_dims)?;
-                    self.step.call(&[&pb, &ab, &scb])?
-                }
-            };
-            let streams_col = Runtime::literal_to_vec(&outs[0], g * d)?;
-            store.set_streams_col(row_of(i), &streams_col);
-            last_out = Runtime::literal_to_vec(&outs[1], b * dims.out_width())?;
-            outs_checksum.push(last_out.iter().sum());
-            if let Some(sc) = scstate.as_mut() {
-                *sc = Runtime::literal_to_vec(&outs[2], sc.len())?;
-            }
-            flops.record_red(2 * g as u64 * d as u64); // red cells proper
-            bd.step_ns = t0.elapsed().as_nanos() as f64;
-
-            // ---- next input: teacher-forced or sampled
-            let t0 = Instant::now();
-            if i < forced_steps {
-                let stride = b * d;
-                a0.copy_from_slice(&init.forced.as_ref().unwrap()[i * stride..(i + 1) * stride]);
-            } else if let Some(toks) = sampler.next_a0(&last_out, b, &mut a0)? {
-                if let Some(all) = tokens.as_mut() {
-                    for (bi, t) in toks.into_iter().enumerate() {
-                        all[bi].push(t);
-                    }
-                }
-            }
-            bd.sample_ns = t0.elapsed().as_nanos() as f64;
-
-            // ---- gray work
-            if i < len {
-                let t0 = Instant::now();
-                match self.opts.method {
-                    Method::Flash => {
-                        let tile = Tile::at(i);
-                        // Appendix D: translate tile ranges into the wrapped
-                        // store (ranges never straddle the halfway boundary —
-                        // each lies in a U-aligned block, and rows | U).
-                        let tile = if half {
-                            let rs = row_of(tile.src_l);
-                            let rd = row_of(tile.dst_l);
-                            Tile {
-                                i: tile.i,
-                                u: tile.u,
-                                src_l: rs + 1,
-                                src_r: rs + tile.u,
-                                dst_l: rd + 1,
-                                dst_r: rd + tile.u,
-                            }
-                        } else {
-                            tile
-                        };
-                        let imp = tau.as_mut().unwrap();
-                        imp.apply(&store.streams, &mut store.pending, tile)?;
-                        flops.record_tau(
-                            tile.u,
-                            imp.tile_flops(tile.u, g, d),
-                            (2 * tile.u * g * d) as u64,
-                        );
-                        bd.mixer_ns += t0.elapsed().as_nanos() as f64;
-                    }
-                    Method::Eager => {
-                        eager::eager_push(&store.streams, &mut store.pending,
-                                          &self.cache.rho, b, i, len, &mut flops);
-                        bd.mixer_ns += t0.elapsed().as_nanos() as f64;
-                    }
-                    Method::Lazy => {}
-                }
-            }
-
-            metrics.push(bd);
-        }
-        metrics.wall = wall0.elapsed();
-
-        Ok(GenOutput {
-            steps: len,
-            tokens,
-            last_out,
-            outs_checksum,
-            resident_values: store.resident_values(),
-            metrics,
-            flops,
-            streams: if self.opts.record_streams { Some(store.streams) } else { None },
-        })
+        drain(Session::new(self, gen_len, init)?)
     }
 }
 
-/// Internal session initialization (prompt seeding, forcing, overrides).
-#[derive(Default)]
-struct SessionInit {
-    a0: Vec<f32>,
-    /// Teacher-forced inputs `[T0, B, D]` (row 0 duplicates `a0`).
-    forced: Option<Vec<f32>>,
-    /// Short-conv state carried over from a prefill.
-    scstate_override: Option<Vec<f32>>,
-    /// `(fut, span)` — prompt contributions to the next `span` positions.
-    pending_seed: Option<(Vec<f32>, usize)>,
-    /// Tokens sampled from the prefill's last logits.
-    first_tokens: Option<Vec<u32>>,
+/// The thin-driver contract: step a session to completion and collect its
+/// output. Every `generate*` entry point is exactly this over its init.
+fn drain(mut session: Session<'_, '_>) -> Result<GenOutput> {
+    while !session.is_done() {
+        session.step()?;
+    }
+    Ok(session.finish())
 }
 
 #[cfg(test)]

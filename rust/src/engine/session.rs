@@ -1,0 +1,347 @@
+//! The resumable session state machine — the engine's serving substrate.
+//!
+//! Everything `run_session` used to keep in loop locals (activation store,
+//! sampler, short-conv state, τ implementation, metrics, FLOP counter,
+//! token buffers, pending-column scratch) lives in a first-class
+//! [`Session`] that advances exactly one position per [`Session::step`]
+//! call:
+//!
+//! 1. pending-column gather (lazy recomputes it, Appendix D wraps it),
+//! 2. the PJRT `step` artifact (red cells + blocks + head),
+//! 3. sampling / teacher forcing into the next `a0`,
+//! 4. the gray tile `Tile::at(i)` (or the eager push).
+//!
+//! `Engine::generate*` are thin drivers (`while !done { step() }` then
+//! [`Session::finish`]), so the flash/lazy/eager methods, `half_store`,
+//! and prompt prefill all flow through the same machine and stay
+//! checksum-identical to the one-shot path. Callers that need tokens *as
+//! they are produced* — streaming HTTP lanes, the `--stream` CLI,
+//! first-token-latency probes — drive `step()` themselves: the paper's
+//! amortized O(log² L) per-token cost only pays off for serving if tokens
+//! can leave the engine per position instead of per rollout.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::{Breakdown, SessionMetrics};
+use crate::model::Variant;
+use crate::runtime::Runtime;
+use crate::tau::{make_impl, TauImpl};
+use crate::tiling::{FlopCounter, Tile};
+
+use super::{eager, lazy, Engine, GenOutput, Method, Sampler, Store};
+
+/// Session initialization (prompt seeding, forcing, overrides).
+#[derive(Default)]
+pub struct SessionInit {
+    /// Input at position 1 (`[B, D]`).
+    pub a0: Vec<f32>,
+    /// Teacher-forced inputs `[T0, B, D]` (row 0 duplicates `a0`).
+    pub forced: Option<Vec<f32>>,
+    /// Short-conv state carried over from a prefill.
+    pub scstate_override: Option<Vec<f32>>,
+    /// `(fut, span)` — prompt contributions to the next `span` positions.
+    pub pending_seed: Option<(Vec<f32>, usize)>,
+    /// Tokens sampled from the prefill's last logits.
+    pub first_tokens: Option<Vec<u32>>,
+}
+
+/// What one [`Session::step`] call produced.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// 1-indexed position just computed.
+    pub pos: usize,
+    /// Token ids appended at this position (one per lane, LM variant).
+    pub tokens: Option<Vec<u32>>,
+    /// Checksum (sum) of this position's `out` — the cheap per-position
+    /// observable the synthetic variant streams in place of tokens.
+    pub checksum: f32,
+    /// True once the session has computed all requested positions.
+    pub done: bool,
+}
+
+/// One in-flight generation session over a borrowed [`Engine`].
+pub struct Session<'e, 'rt> {
+    engine: &'e Engine<'rt>,
+    len: usize,
+    /// Positions completed so far (`step` computes position `pos + 1`).
+    pos: usize,
+    /// Appendix D wrapped-store mode (rows = len/2).
+    half: bool,
+    rows: usize,
+    store: Store,
+    sampler: Sampler,
+    a0: Vec<f32>,
+    scstate: Option<Vec<f32>>,
+    sc_dims: [usize; 4],
+    forced: Option<Vec<f32>>,
+    forced_steps: usize,
+    tau: Option<Box<dyn TauImpl + 'e>>,
+    metrics: SessionMetrics,
+    flops: FlopCounter,
+    tokens: Option<Vec<Vec<u32>>>,
+    pend_col: Vec<f32>,
+    last_out: Vec<f32>,
+    outs_checksum: Vec<f32>,
+    wall0: Instant,
+}
+
+impl<'e, 'rt> Session<'e, 'rt> {
+    /// Set up a `len`-position session (power of two, ≤ L).
+    pub fn new(engine: &'e Engine<'rt>, len: usize, init: SessionInit) -> Result<Session<'e, 'rt>> {
+        let wall0 = Instant::now();
+        let rt = engine.runtime();
+        let dims = rt.dims;
+        let opts = engine.opts();
+        if !len.is_power_of_two() || len > dims.l {
+            bail!("generation length {len} must be a power of two <= L={}", dims.l);
+        }
+        let (g, d, b) = (dims.g, dims.d, dims.b);
+        if init.a0.len() != b * d {
+            bail!("a0 must be a [B, D] tensor ({} values, got {})", b * d, init.a0.len());
+        }
+
+        // Appendix D: with the tiled method, after iteration len/2 nothing
+        // before position len/2 is ever read again, so the second half can
+        // reuse the first half's rows — the store holds M x (L/2) x D.
+        let half = opts.half_store && opts.method == Method::Flash && len >= 4;
+        if opts.half_store && opts.method != Method::Flash {
+            bail!("half_store (Appendix D) applies to the tiled method only");
+        }
+        let rows = if half { len / 2 } else { len };
+
+        let mut store = Store::new(g, rows, d);
+        if let Some((fut, fut_span)) = &init.pending_seed {
+            // seed pending with the prompt's future contributions
+            let span = (*fut_span).min(rows);
+            for gi in 0..g {
+                for t in 0..span {
+                    store
+                        .pending
+                        .at2_mut(gi, t)
+                        .copy_from_slice(&fut[(gi * fut_span + t) * d..(gi * fut_span + t) * d + d]);
+                }
+            }
+        }
+        let sampler = engine.make_sampler()?;
+        let scstate: Option<Vec<f32>> = match (&init.scstate_override, dims.variant) {
+            (Some(sc), _) => Some(sc.clone()),
+            (None, Variant::Hyena) => Some(vec![0.0; dims.ops() * 2 * b * 3 * d]),
+            (None, Variant::Synthetic) => None,
+        };
+        let forced_steps = init.forced.as_ref().map(|f| f.len() / (b * d)).unwrap_or(0);
+
+        let tau = if opts.method == Method::Flash {
+            Some(make_impl(opts.tau, &engine.cache, opts.threads)?)
+        } else {
+            None
+        };
+
+        let mut tokens: Option<Vec<Vec<u32>>> = match dims.variant {
+            Variant::Hyena => Some(vec![Vec::with_capacity(len); b]),
+            Variant::Synthetic => None,
+        };
+        if let (Some(first), Some(all)) = (&init.first_tokens, tokens.as_mut()) {
+            for (bi, t) in first.iter().enumerate() {
+                all[bi].push(*t);
+            }
+        }
+
+        Ok(Session {
+            engine,
+            len,
+            pos: 0,
+            half,
+            rows,
+            store,
+            sampler,
+            a0: init.a0,
+            scstate,
+            sc_dims: [dims.ops(), 2, b, 3 * d],
+            forced: init.forced,
+            forced_steps,
+            tau,
+            metrics: SessionMetrics::with_capacity(len),
+            flops: FlopCounter::new(),
+            tokens,
+            pend_col: Vec::with_capacity(g * d),
+            last_out: Vec::new(),
+            outs_checksum: Vec::with_capacity(len),
+            wall0,
+        })
+    }
+
+    /// Positions completed so far.
+    pub fn steps_done(&self) -> usize {
+        self.pos
+    }
+
+    /// Positions this session will generate in total.
+    pub fn steps_total(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.pos >= self.len
+    }
+
+    /// The step artifact's `out` at the most recent position (`[B, W]`).
+    pub fn last_out(&self) -> &[f32] {
+        &self.last_out
+    }
+
+    /// Advance one position: pending-column gather → `step` artifact →
+    /// sample → gray tile. Errors once the session is complete.
+    pub fn step(&mut self) -> Result<StepOutput> {
+        if self.pos >= self.len {
+            bail!("session complete: all {} positions generated", self.len);
+        }
+        let engine = self.engine;
+        let rt = engine.runtime();
+        let dims = rt.dims;
+        let opts = engine.opts();
+        let (g, d, b) = (dims.g, dims.d, dims.b);
+        let i = self.pos + 1;
+        let rows = self.rows;
+        let row_of = |pos1: usize| (pos1 - 1) % rows; // 1-indexed -> store row
+        let mut bd = Breakdown::default();
+
+        // ---- pending column (lazy recomputes; others read the store)
+        let t0 = Instant::now();
+        match opts.method {
+            Method::Lazy => {
+                lazy::lazy_pending_col(
+                    &self.store.streams,
+                    &engine.cache.rho,
+                    b,
+                    i,
+                    &mut self.pend_col,
+                    &mut self.flops,
+                );
+            }
+            _ => self.store.gather_pending_col(row_of(i), &mut self.pend_col),
+        }
+        if self.half {
+            // the consumed column's row will be reused by a future tile
+            for gi in 0..g {
+                self.store.pending.at2_mut(gi, row_of(i)).fill(0.0);
+            }
+        }
+        if opts.method == Method::Lazy {
+            bd.mixer_ns += t0.elapsed().as_nanos() as f64;
+        }
+
+        // ---- step: red cells + blocks + head (PJRT)
+        let t0 = Instant::now();
+        let pb = rt.upload(&self.pend_col, &[dims.m, b, d])?;
+        let ab = rt.upload(&self.a0, &[b, d])?;
+        let outs = match &self.scstate {
+            None => engine.step_artifact().call(&[&pb, &ab])?,
+            Some(sc) => {
+                let scb = rt.upload(sc, &self.sc_dims)?;
+                engine.step_artifact().call(&[&pb, &ab, &scb])?
+            }
+        };
+        let streams_col = Runtime::literal_to_vec(&outs[0], g * d)?;
+        self.store.set_streams_col(row_of(i), &streams_col);
+        self.last_out = Runtime::literal_to_vec(&outs[1], b * dims.out_width())?;
+        let checksum: f32 = self.last_out.iter().sum();
+        self.outs_checksum.push(checksum);
+        if let Some(sc) = self.scstate.as_mut() {
+            *sc = Runtime::literal_to_vec(&outs[2], sc.len())?;
+        }
+        self.flops.record_red(2 * g as u64 * d as u64); // red cells proper
+        bd.step_ns = t0.elapsed().as_nanos() as f64;
+
+        // ---- next input: teacher-forced or sampled
+        let t0 = Instant::now();
+        let mut step_tokens: Option<Vec<u32>> = None;
+        if i < self.forced_steps {
+            let stride = b * d;
+            self.a0
+                .copy_from_slice(&self.forced.as_ref().unwrap()[i * stride..(i + 1) * stride]);
+        } else if let Some(toks) = self.sampler.next_a0(&self.last_out, b, &mut self.a0)? {
+            if let Some(all) = self.tokens.as_mut() {
+                for (bi, t) in toks.iter().enumerate() {
+                    all[bi].push(*t);
+                }
+            }
+            step_tokens = Some(toks);
+        }
+        bd.sample_ns = t0.elapsed().as_nanos() as f64;
+
+        // ---- gray work
+        if i < self.len {
+            let t0 = Instant::now();
+            match opts.method {
+                Method::Flash => {
+                    let tile = Tile::at(i);
+                    // Appendix D: translate tile ranges into the wrapped
+                    // store (ranges never straddle the halfway boundary —
+                    // each lies in a U-aligned block, and rows | U).
+                    let tile = if self.half {
+                        let rs = row_of(tile.src_l);
+                        let rd = row_of(tile.dst_l);
+                        Tile {
+                            i: tile.i,
+                            u: tile.u,
+                            src_l: rs + 1,
+                            src_r: rs + tile.u,
+                            dst_l: rd + 1,
+                            dst_r: rd + tile.u,
+                        }
+                    } else {
+                        tile
+                    };
+                    let imp = self.tau.as_mut().unwrap();
+                    imp.apply(&self.store.streams, &mut self.store.pending, tile)?;
+                    self.flops.record_tau(
+                        tile.u,
+                        imp.tile_flops(tile.u, g, d),
+                        (2 * tile.u * g * d) as u64,
+                    );
+                    bd.mixer_ns += t0.elapsed().as_nanos() as f64;
+                }
+                Method::Eager => {
+                    eager::eager_push(
+                        &self.store.streams,
+                        &mut self.store.pending,
+                        &engine.cache.rho,
+                        b,
+                        i,
+                        self.len,
+                        &mut self.flops,
+                    );
+                    bd.mixer_ns += t0.elapsed().as_nanos() as f64;
+                }
+                Method::Lazy => {}
+            }
+        }
+
+        self.metrics.push(bd);
+        self.pos = i;
+        Ok(StepOutput { pos: i, tokens: step_tokens, checksum, done: self.pos == self.len })
+    }
+
+    /// Consume the session into its [`GenOutput`]. Finishing early (before
+    /// `is_done`) is allowed — `steps` reports the positions actually
+    /// generated — so serving lanes can abandon a session cleanly.
+    pub fn finish(mut self) -> GenOutput {
+        self.metrics.wall = self.wall0.elapsed();
+        GenOutput {
+            steps: self.pos,
+            tokens: self.tokens,
+            last_out: self.last_out,
+            outs_checksum: self.outs_checksum,
+            resident_values: self.store.resident_values(),
+            metrics: self.metrics,
+            flops: self.flops,
+            streams: if self.engine.opts().record_streams {
+                Some(self.store.streams)
+            } else {
+                None
+            },
+        }
+    }
+}

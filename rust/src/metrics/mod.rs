@@ -81,6 +81,11 @@ pub struct ServerCounters {
     pub requests_failed: u64,
     pub tokens_generated: u64,
     pub batches_run: u64,
+    /// Requests served in streaming (chunked NDJSON) mode.
+    pub stream_requests: u64,
+    /// Per-position events actually delivered to streaming lanes (early
+    /// stop means this can be less than steps x lanes).
+    pub stream_events: u64,
     pub queue_latency: LatencyRecorder,
     pub request_latency: LatencyRecorder,
 }
@@ -104,6 +109,8 @@ impl ServerCounters {
         metric("fi_requests_failed", "requests failed", self.requests_failed as f64);
         metric("fi_tokens_generated", "tokens generated", self.tokens_generated as f64);
         metric("fi_batches_run", "generation batches run", self.batches_run as f64);
+        metric("fi_stream_requests", "streaming requests served", self.stream_requests as f64);
+        metric("fi_stream_events", "per-position events streamed", self.stream_events as f64);
         metric("fi_queue_latency_p50_ms", "queue wait p50", self.queue_latency.percentile_ns(50.0) / 1e6);
         metric("fi_queue_latency_p99_ms", "queue wait p99", self.queue_latency.percentile_ns(99.0) / 1e6);
         metric("fi_request_latency_p50_ms", "request latency p50", self.request_latency.percentile_ns(50.0) / 1e6);
@@ -131,9 +138,13 @@ mod tests {
     fn counters_render_prometheus_text() {
         let mut c = ServerCounters::new();
         c.requests_total = 3;
+        c.stream_requests = 1;
+        c.stream_events = 5;
         c.request_latency.record_ns(1e6);
         let text = c.render();
         assert!(text.contains("fi_requests_total 3"));
+        assert!(text.contains("fi_stream_requests 1"));
+        assert!(text.contains("fi_stream_events 5"));
         assert!(text.contains("# TYPE fi_request_latency_p50_ms gauge"));
     }
 }

@@ -4,26 +4,33 @@
 //! * `GET  /health`      — liveness + model summary
 //! * `GET  /metrics`     — Prometheus-style counters
 //! * `GET  /v1/info`     — model dims, engine opts, artifact dir
-//! * `POST /v1/generate` — `{"max_tokens": N}` → per-lane generation result
+//! * `POST /v1/generate` — `{"max_tokens": N}` → per-lane generation
+//!   result; `{"max_tokens": N, "stream": true}` → chunked NDJSON with one
+//!   event per position as the engine's `Session` advances, ending in a
+//!   `{"done":true,...}` summary line (see DESIGN.md for the wire format).
 //!
 //! PJRT handles are not `Send`, so the `Runtime`/`Engine` live on one
 //! dedicated worker thread; connection threads talk to it over an mpsc
-//! queue (the batcher). This is the same topology as a vLLM-style router
-//! front-end over a single-device engine.
+//! queue (the batcher) and, for streaming lanes, receive per-position
+//! events back over a dedicated channel. This is the same topology as a
+//! vLLM-style router front-end over a single-device engine.
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::{batch_len, collect_batch, GenRequest, LaneResult};
-use super::http::{read_request, write_response, Request, Response};
+use super::batcher::{batch_len, collect_batch, GenRequest, LaneResult, StreamEvent};
+use super::http::{
+    finish_chunks, read_request, write_chunk, write_chunked_head, write_response, Request,
+    Response,
+};
 use crate::config::ServerConfig;
-use crate::engine::{Engine, EngineOpts};
+use crate::engine::{Engine, EngineOpts, GenOutput};
 use crate::metrics::ServerCounters;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
@@ -75,13 +82,26 @@ impl Server {
                     }
                 };
                 let dims = rt.dims;
+                // Cold-start: derive every per-U rho structure (spectra +
+                // PJRT tau executables) for the largest session a request
+                // can trigger, so the first request's measured gen_ms
+                // contains no one-time derivation cost.
+                let prewarm_len = ecfg.max_max_tokens.next_power_of_two().min(dims.l);
+                if let Err(e) = engine.prewarm(prewarm_len) {
+                    let _ = ready_tx.send(Err(format!("prewarm engine: {e:#}")));
+                    return;
+                }
                 let info = info_json(&ecfg, &ecfg.engine, &rt);
                 let _ = ready_tx.send(Ok(info));
                 let window = Duration::from_millis(ecfg.batch_window_ms);
-                while let Some(batch) = collect_batch(&req_rx, dims.b, window) {
+                while let Some(mut batch) = collect_batch(&req_rx, dims.b, window) {
                     let len = batch_len(&batch, dims.l);
                     let t0 = Instant::now();
-                    let result = engine.generate(len);
+                    let result = if batch.iter().any(|r| r.stream.is_some()) {
+                        stream_batch(&engine, &mut batch, len)
+                    } else {
+                        engine.generate(len)
+                    };
                     let gen_ms = t0.elapsed().as_secs_f64() * 1e3;
                     match result {
                         Ok(out) => {
@@ -184,12 +204,56 @@ fn info_json(cfg: &ServerConfig, eng: &EngineOpts, rt: &Runtime) -> Json {
     ])
 }
 
+/// Drive one batch through the `Session` state machine, emitting a
+/// [`StreamEvent`] per position to every streaming lane that has not yet
+/// hit its `max_tokens`. Per-lane early stop: once a lane is satisfied its
+/// event channel is dropped — the client's event stream closes at the
+/// lane's own boundary — while the batch runs out its padded power-of-two
+/// schedule for the other lanes. The lockstep constraint documented in
+/// DESIGN.md only forces the *computation* to stay synchronized, not the
+/// delivery; the summary line still arrives once the batch completes,
+/// since it carries batch-level stats (steps, gen_ms).
+fn stream_batch(engine: &Engine, batch: &mut [GenRequest], len: usize) -> Result<GenOutput> {
+    let mut session = engine.session(len)?;
+    while !session.is_done() {
+        let step = session.step()?;
+        for (lane, req) in batch.iter_mut().enumerate() {
+            if let Some(tx) = &req.stream {
+                if step.pos <= req.max_tokens {
+                    let token =
+                        step.tokens.as_ref().map(|toks| toks[lane.min(toks.len() - 1)]);
+                    // a send error just means the client hung up; keep the
+                    // batch running for the other lanes
+                    let _ =
+                        tx.send(StreamEvent { pos: step.pos, token, checksum: step.checksum });
+                }
+            } else {
+                continue;
+            }
+            if step.pos >= req.max_tokens {
+                req.stream = None; // early stop: close this lane's event stream
+            }
+        }
+    }
+    Ok(session.finish())
+}
+
 fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
-    let resp = match read_request(&mut stream) {
-        Ok(req) => route(&req, &shared),
-        Err(e) => Response::bad_request(&format!("{e:#}")),
+    let req = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err(e) => {
+            let _ = write_response(&mut stream, &Response::bad_request(&format!("{e:#}")));
+            return;
+        }
     };
+    if req.method == "POST" && req.path == "/v1/generate" {
+        // generation writes its own response: one buffered JSON document,
+        // or a chunked NDJSON stream
+        generate(&req, &shared, &mut stream);
+        return;
+    }
+    let resp = route(&req, &shared);
     let _ = write_response(&mut stream, &resp);
 }
 
@@ -200,13 +264,12 @@ fn route(req: &Request, shared: &Shared) -> Response {
             Response::text(200, shared.counters.lock().unwrap().render())
         }
         ("GET", "/v1/info") => Response::json(200, shared.info.to_string()),
-        ("POST", "/v1/generate") => generate(req, shared),
         ("POST" | "GET", _) => Response::not_found(),
         _ => Response::json(405, "{\"error\":\"method not allowed\"}".into()),
     }
 }
 
-fn generate(req: &Request, shared: &Shared) -> Response {
+fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
     shared.counters.lock().unwrap().requests_total += 1;
     let reject = |msg: String| {
         shared.counters.lock().unwrap().requests_failed += 1;
@@ -218,23 +281,50 @@ fn generate(req: &Request, shared: &Shared) -> Response {
     };
     let j = match Json::parse(body) {
         Ok(j) => j,
-        Err(e) => return reject(format!("invalid JSON: {e}")),
+        Err(e) => {
+            let _ = write_response(stream, &reject(format!("invalid JSON: {e}")));
+            return;
+        }
     };
     let max_tokens = j
         .get("max_tokens")
         .and_then(Json::as_usize)
         .unwrap_or(shared.cfg.default_max_tokens);
     if max_tokens == 0 || max_tokens > shared.cfg.max_max_tokens {
-        return reject(format!(
-            "max_tokens must be in [1, {}]",
-            shared.cfg.max_max_tokens
-        ));
+        let msg = format!("max_tokens must be in [1, {}]", shared.cfg.max_max_tokens);
+        let _ = write_response(stream, &reject(msg));
+        return;
     }
+    let want_stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
+
     let (tx, rx) = channel();
-    let request = GenRequest { max_tokens, enqueued: Instant::now(), reply: tx };
+    let (event_tx, event_rx) = if want_stream {
+        let (etx, erx) = channel();
+        (Some(etx), Some(erx))
+    } else {
+        (None, None)
+    };
+    let request =
+        GenRequest { max_tokens, enqueued: Instant::now(), reply: tx, stream: event_tx };
     if shared.queue.lock().unwrap().send(request).is_err() {
-        return Response::json(503, "{\"error\":\"engine unavailable\"}".into());
+        let _ =
+            write_response(stream, &Response::json(503, "{\"error\":\"engine unavailable\"}".into()));
+        return;
     }
+    match event_rx {
+        Some(events) => stream_reply(shared, stream, events, rx, max_tokens),
+        None => {
+            let resp = buffered_reply(shared, rx, max_tokens);
+            let _ = write_response(stream, &resp);
+        }
+    }
+}
+
+fn buffered_reply(
+    shared: &Shared,
+    rx: Receiver<std::result::Result<LaneResult, String>>,
+    max_tokens: usize,
+) -> Response {
     match rx.recv_timeout(Duration::from_secs(600)) {
         Ok(Ok(lane)) => {
             let mut c = shared.counters.lock().unwrap();
@@ -264,6 +354,102 @@ fn generate(req: &Request, shared: &Shared) -> Response {
         Err(_) => {
             shared.counters.lock().unwrap().requests_failed += 1;
             Response::json(408, "{\"error\":\"generation timed out\"}".into())
+        }
+    }
+}
+
+/// Streaming reply: chunked NDJSON — one `{"pos":..,"token"|"checksum":..}`
+/// line per position, flushed as the engine produces it, then one
+/// `{"done":true,...}` summary line.
+fn stream_reply(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    events: Receiver<StreamEvent>,
+    reply: Receiver<std::result::Result<LaneResult, String>>,
+    max_tokens: usize,
+) {
+    shared.counters.lock().unwrap().stream_requests += 1;
+    if write_chunked_head(stream, 200, "application/x-ndjson").is_err() {
+        return;
+    }
+    let mut emitted = 0u64;
+    let mut timed_out = false;
+    loop {
+        // same 600s guard as the buffered path: a wedged engine must not
+        // hold this connection (and the server's shutdown join) forever
+        match events.recv_timeout(Duration::from_secs(600)) {
+            Ok(ev) => {
+                let mut pairs = vec![("pos", Json::Num(ev.pos as f64))];
+                match ev.token {
+                    Some(t) => pairs.push(("token", Json::Num(t as f64))),
+                    None => pairs.push(("checksum", Json::Num(ev.checksum as f64))),
+                }
+                let line = format!("{}\n", Json::from_pairs(pairs));
+                if write_chunk(stream, line.as_bytes()).is_err() {
+                    // client hung up; sends are non-blocking on an mpsc
+                    // channel, so just dropping our receiver is enough
+                    break;
+                }
+                emitted += 1;
+            }
+            // lane's sender dropped: early stop reached or batch complete
+            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                timed_out = true;
+                break;
+            }
+        }
+    }
+    let tail = if timed_out {
+        shared.counters.lock().unwrap().requests_failed += 1;
+        Json::from_pairs(vec![
+            ("done", Json::Bool(true)),
+            ("error", Json::Str("generation timed out".into())),
+        ])
+    } else {
+        stream_tail(shared, reply, max_tokens, emitted)
+    };
+    let _ = write_chunk(stream, format!("{tail}\n").as_bytes());
+    let _ = finish_chunks(stream);
+}
+
+/// Build the final summary line once the lane's event stream has closed:
+/// the batch has completed (or errored), so the LaneResult is (or is
+/// about to be) on the reply channel.
+fn stream_tail(
+    shared: &Shared,
+    reply: Receiver<std::result::Result<LaneResult, String>>,
+    max_tokens: usize,
+    emitted: u64,
+) -> Json {
+    match reply.recv_timeout(Duration::from_secs(600)) {
+        Ok(Ok(lane)) => {
+            let mut c = shared.counters.lock().unwrap();
+            c.tokens_generated += max_tokens as u64;
+            c.stream_events += emitted;
+            c.batches_run += 1;
+            c.queue_latency.record_ns(lane.queue_ms.max(0.0) * 1e6);
+            c.request_latency.record_ns(lane.gen_ms * 1e6);
+            drop(c);
+            Json::from_pairs(vec![
+                ("done", Json::Bool(true)),
+                ("steps", Json::Num(lane.steps as f64)),
+                ("tokens_emitted", Json::Num(emitted as f64)),
+                ("max_tokens", Json::Num(max_tokens as f64)),
+                ("gen_ms", Json::Num(lane.gen_ms)),
+                ("batch_size", Json::Num(lane.batch_size as f64)),
+            ])
+        }
+        Ok(Err(e)) => {
+            shared.counters.lock().unwrap().requests_failed += 1;
+            Json::from_pairs(vec![("done", Json::Bool(true)), ("error", Json::Str(e))])
+        }
+        Err(_) => {
+            shared.counters.lock().unwrap().requests_failed += 1;
+            Json::from_pairs(vec![
+                ("done", Json::Bool(true)),
+                ("error", Json::Str("generation timed out".into())),
+            ])
         }
     }
 }

@@ -1,6 +1,7 @@
 //! Minimal HTTP/1.1 substrate on `std::net` (hyper/axum unavailable
 //! offline). Enough protocol for a serving API: request line, headers,
-//! Content-Length bodies, keep-alive off (Connection: close per response).
+//! Content-Length bodies, chunked transfer encoding for streaming
+//! responses, keep-alive off (Connection: close per response).
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -123,6 +124,68 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     Ok(Request { method, path, headers, body })
 }
 
+/// Start a chunked (streaming) response. The caller emits payload pieces
+/// with [`write_chunk`] as they become available and terminates the body
+/// with [`finish_chunks`]; each flush reaches the client immediately, so
+/// tokens are observable long before the response completes.
+pub fn write_chunked_head(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        status,
+        reason_for(status),
+        content_type
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Send one chunk (size line, payload, CRLF) and flush it to the wire.
+/// Empty payloads are skipped — a zero-length chunk would terminate the
+/// body (that is [`finish_chunks`]'s job).
+pub fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    stream.write_all(format!("{:x}\r\n", data.len()).as_bytes())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Terminate a chunked body (the zero-size chunk).
+pub fn finish_chunks(stream: &mut TcpStream) -> Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Decode a chunked transfer-encoded body back into its payload (client
+/// side of [`write_chunk`]; used by tests and the example clients).
+/// Operates on bytes so a chunk size that cuts into a multi-byte UTF-8
+/// sequence degrades to lossy replacement instead of panicking.
+pub fn decode_chunked(body: &str) -> String {
+    let mut out = String::new();
+    let mut rest = body.as_bytes();
+    loop {
+        let Some(nl) = rest.windows(2).position(|w| w == b"\r\n") else { break };
+        let Ok(size_line) = std::str::from_utf8(&rest[..nl]) else { break };
+        let Ok(size) = usize::from_str_radix(size_line.trim(), 16) else { break };
+        let tail = &rest[nl + 2..];
+        if size == 0 || tail.len() < size {
+            break;
+        }
+        out.push_str(&String::from_utf8_lossy(&tail[..size]));
+        rest = tail.get(size + 2..).unwrap_or(&[]);
+    }
+    out
+}
+
 /// Serialize and send a response, closing the connection after.
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
     let head = format!(
@@ -184,6 +247,32 @@ mod tests {
     #[test]
     fn rejects_garbage() {
         assert!(roundtrip("NONSENSE\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn chunked_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let mut buf = String::new();
+            c.read_to_string(&mut buf).unwrap();
+            buf
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        write_chunked_head(&mut s, 200, "application/x-ndjson").unwrap();
+        write_chunk(&mut s, b"{\"pos\":1}\n").unwrap();
+        write_chunk(&mut s, b"").unwrap(); // no-op, must not terminate
+        write_chunk(&mut s, b"{\"pos\":2}\n").unwrap();
+        finish_chunks(&mut s).unwrap();
+        drop(s);
+        let got = h.join().unwrap();
+        assert!(got.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(got.contains("Transfer-Encoding: chunked"));
+        let body = got.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(decode_chunked(body), "{\"pos\":1}\n{\"pos\":2}\n");
+        // two separate payload chunks on the wire = incremental delivery
+        assert_eq!(body.matches("a\r\n").count(), 2);
     }
 
     #[test]

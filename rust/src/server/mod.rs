@@ -1,9 +1,10 @@
-//! Serving layer: minimal HTTP front-end, static batcher, and the
-//! engine worker thread (DESIGN.md §6).
+//! Serving layer: minimal HTTP front-end, static lockstep batcher, and
+//! the engine worker thread, with per-token streaming lanes driven off
+//! the engine's `Session` state machine (see `rust/DESIGN.md`).
 
 pub mod api;
 pub mod batcher;
 pub mod http;
 
 pub use api::Server;
-pub use batcher::{GenRequest, LaneResult};
+pub use batcher::{GenRequest, LaneResult, StreamEvent};

@@ -1,23 +1,32 @@
 //! Integration: HTTP server round-trip over loopback — health, info,
-//! metrics, generation, error paths, and concurrent clients through the
-//! batcher.
+//! metrics, generation, streaming generation (incremental chunked
+//! delivery + per-lane early stop), error paths, and concurrent clients
+//! through the batcher.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::path::Path;
 
 use flash_inference::config::ServerConfig;
+use flash_inference::server::http::decode_chunked;
 use flash_inference::server::Server;
 use flash_inference::util::json::Json;
 
-fn request(addr: std::net::SocketAddr, raw: &str) -> (u16, String) {
+/// Send a raw request; return (status, header block, raw body).
+fn request_raw(addr: std::net::SocketAddr, raw: &str) -> (u16, String, String) {
     let mut s = TcpStream::connect(addr).expect("connect");
     s.write_all(raw.as_bytes()).unwrap();
     s.flush().unwrap();
     let mut buf = String::new();
     s.read_to_string(&mut buf).unwrap();
     let status: u16 = buf.split_whitespace().nth(1).unwrap().parse().unwrap();
-    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    let headers = buf.split("\r\n\r\n").next().unwrap_or("").to_string();
+    let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, headers, body)
+}
+
+fn request(addr: std::net::SocketAddr, raw: &str) -> (u16, String) {
+    let (status, _, body) = request_raw(addr, raw);
     (status, body)
 }
 
@@ -89,6 +98,65 @@ fn full_http_round_trip() {
     assert_eq!(code, 200);
     assert!(body.contains("fi_requests_total 4"), "{body}");
     assert!(body.contains("fi_tokens_generated 36"), "{body}");
+
+    server.stop();
+}
+
+#[test]
+fn streaming_generation_delivers_incremental_events() {
+    let Some(server) = start_server() else { return };
+    let addr = server.addr;
+
+    // max_tokens=5 pads to an 8-position batch schedule: the lane must
+    // receive exactly 5 per-position events (early stop) even though the
+    // batch runs 8 positions, plus one final {"done":true,...} summary.
+    let body = "{\"max_tokens\": 5, \"stream\": true}";
+    let (code, headers, raw) = request_raw(
+        addr,
+        &format!(
+            "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        ),
+    );
+    assert_eq!(code, 200, "{raw}");
+    assert!(headers.contains("Transfer-Encoding: chunked"), "{headers}");
+    assert!(headers.contains("application/x-ndjson"), "{headers}");
+
+    let payload = decode_chunked(&raw);
+    let lines: Vec<&str> = payload.lines().collect();
+    assert_eq!(lines.len(), 6, "5 events + summary, got: {payload}");
+    for (idx, line) in lines[..5].iter().enumerate() {
+        let j = Json::parse(line).expect("event line is JSON");
+        assert_eq!(j.req_usize("pos").unwrap(), idx + 1);
+        // synthetic variant streams the per-position out checksum
+        assert!(j.get("checksum").or_else(|| j.get("token")).is_some(), "{line}");
+    }
+    let tail = Json::parse(lines[5]).expect("summary line is JSON");
+    assert_eq!(tail.get("done").and_then(Json::as_bool), Some(true));
+    assert_eq!(tail.req_usize("steps").unwrap(), 8, "batch padded to pow2");
+    assert_eq!(tail.req_usize("tokens_emitted").unwrap(), 5, "early stop at max_tokens");
+    assert!(tail.get("gen_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // each event left the server as its own chunk: incremental delivery,
+    // not one buffered flush at the end (6 payload chunks + terminator)
+    let size_lines = raw
+        .split("\r\n")
+        .filter(|l| usize::from_str_radix(l.trim(), 16).map(|n| n > 0).unwrap_or(false))
+        .count();
+    assert!(size_lines >= 6, "expected >=6 chunk frames, got {size_lines}: {raw}");
+
+    // counters saw the streaming traffic
+    let (code, metrics) = request(addr, "GET /metrics HTTP/1.1\r\n\r\n");
+    assert_eq!(code, 200);
+    assert!(metrics.contains("fi_stream_requests 1"), "{metrics}");
+    assert!(metrics.contains("fi_stream_events 5"), "{metrics}");
+    assert!(metrics.contains("fi_tokens_generated 5"), "{metrics}");
+
+    // a buffered request on the same server still works after a stream
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 4}");
+    assert_eq!(code, 200, "{body}");
+    assert_eq!(Json::parse(&body).unwrap().req_usize("steps").unwrap(), 4);
 
     server.stop();
 }

@@ -1,0 +1,163 @@
+//! Integration: the `Session` state machine IS the engine loop — driving
+//! `step()` to completion is bit-identical (same `outs_checksum`, tokens,
+//! FLOP counts, residency) to the one-shot `generate()` path for every
+//! scheduling method, including the Appendix D half-store and the
+//! teacher-forced path. This is the refactor's safety net: streaming can
+//! never serve different numbers than the batch calculator.
+
+use std::path::Path;
+
+use flash_inference::engine::{Engine, EngineOpts, GenOutput, Method};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+use flash_inference::util::prng::Prng;
+
+fn runtime(variant: &str) -> Option<Runtime> {
+    let dir = Path::new("artifacts").join(variant);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("load runtime"))
+}
+
+fn opts(method: Method) -> EngineOpts {
+    EngineOpts { method, tau: TauKind::RustFft, ..Default::default() }
+}
+
+/// Drive a default session step by step, checking the per-step contract.
+fn drive(engine: &Engine, len: usize) -> GenOutput {
+    let mut session = engine.session(len).expect("session");
+    assert_eq!(session.steps_done(), 0);
+    assert_eq!(session.steps_total(), len);
+    let mut positions = Vec::new();
+    while !session.is_done() {
+        let step = session.step().expect("step");
+        positions.push(step.pos);
+        assert_eq!(step.done, session.is_done());
+        assert_eq!(session.steps_done(), step.pos);
+    }
+    assert_eq!(positions, (1..=len).collect::<Vec<_>>());
+    session.finish()
+}
+
+fn assert_identical(a: &GenOutput, b: &GenOutput, what: &str) {
+    // bit-identical per-position checksums, not approximate equality: the
+    // session runs the exact same FLOPs in the exact same order
+    assert_eq!(a.outs_checksum, b.outs_checksum, "{what}: outs_checksum");
+    assert_eq!(a.steps, b.steps, "{what}: steps");
+    assert_eq!(a.tokens, b.tokens, "{what}: tokens");
+    assert_eq!(a.last_out, b.last_out, "{what}: last_out");
+    assert_eq!(a.resident_values, b.resident_values, "{what}: residency");
+    assert_eq!(a.flops.mixer_flops, b.flops.mixer_flops, "{what}: flops");
+    assert_eq!(a.flops.tau_calls, b.flops.tau_calls, "{what}: tau calls");
+}
+
+#[test]
+fn session_steps_match_one_shot_generate_all_methods() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 32;
+    for method in [Method::Flash, Method::Lazy, Method::Eager] {
+        let mut eng = Engine::new(&rt, opts(method)).unwrap();
+        let oneshot = eng.generate(len).unwrap();
+        let stepped = drive(&eng, len);
+        assert_identical(&oneshot, &stepped, method.as_str());
+    }
+}
+
+#[test]
+fn session_matches_generate_with_half_store() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 64;
+    let mut eng = Engine::new(
+        &rt,
+        EngineOpts { half_store: true, ..opts(Method::Flash) },
+    )
+    .unwrap();
+    let oneshot = eng.generate(len).unwrap();
+    let stepped = drive(&eng, len);
+    assert_identical(&oneshot, &stepped, "half_store");
+
+    // and the halved store really is halved on the stepped path too
+    let mut full = Engine::new(&rt, opts(Method::Flash)).unwrap();
+    let full_out = full.generate(len).unwrap();
+    assert_eq!(stepped.resident_values * 2, full_out.resident_values);
+    assert_eq!(stepped.outs_checksum, full_out.outs_checksum);
+}
+
+#[test]
+fn session_matches_generate_teacher_forced() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let dims = rt.dims;
+    let len = 32;
+    let mut rng = Prng::new(11);
+    let forced: Vec<f32> = (0..8 * dims.b * dims.d).map(|_| rng.normal_f32()).collect();
+
+    let mut eng = Engine::new(&rt, opts(Method::Flash)).unwrap();
+    let oneshot = eng.generate_teacher_forced(len, &forced).unwrap();
+    let mut session = eng.session_teacher_forced(len, &forced).unwrap();
+    while !session.is_done() {
+        session.step().unwrap();
+    }
+    let stepped = session.finish();
+    assert_identical(&oneshot, &stepped, "teacher_forced");
+}
+
+#[test]
+fn session_streams_hyena_tokens_per_step() {
+    let Some(rt) = runtime("hyena") else { return };
+    let len = 16;
+    let mut eng = Engine::new(&rt, opts(Method::Flash)).unwrap();
+    let oneshot = eng.generate(len).unwrap();
+
+    // collect the per-step incremental tokens the streaming layers consume
+    let mut session = eng.session(len).unwrap();
+    let mut lanes: Vec<Vec<u32>> = vec![Vec::new(); rt.dims.b];
+    while !session.is_done() {
+        let step = session.step().unwrap();
+        let toks = step.tokens.expect("hyena emits a token per step");
+        assert_eq!(toks.len(), rt.dims.b);
+        for (bi, t) in toks.into_iter().enumerate() {
+            lanes[bi].push(t);
+        }
+    }
+    let stepped = session.finish();
+    assert_identical(&oneshot, &stepped, "hyena");
+    // the incremental stream concatenates to exactly the buffered result
+    assert_eq!(Some(lanes), stepped.tokens);
+}
+
+#[test]
+fn session_can_finish_early() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 16;
+    let eng = Engine::new(&rt, opts(Method::Flash)).unwrap();
+    let mut session = eng.session(len).unwrap();
+    for _ in 0..len / 2 {
+        session.step().unwrap();
+    }
+    assert!(!session.is_done());
+    let out = session.finish();
+    assert_eq!(out.steps, len / 2);
+    assert_eq!(out.outs_checksum.len(), len / 2);
+    assert_eq!(out.metrics.per_token.len(), len / 2);
+}
+
+#[test]
+fn step_after_completion_errors() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let eng = Engine::new(&rt, opts(Method::Flash)).unwrap();
+    let mut session = eng.session(4).unwrap();
+    while !session.is_done() {
+        session.step().unwrap();
+    }
+    assert!(session.step().is_err());
+}
+
+#[test]
+fn session_rejects_bad_lengths() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let eng = Engine::new(&rt, EngineOpts::default()).unwrap();
+    assert!(eng.session(100).is_err()); // not a power of two
+    assert!(eng.session(rt.dims.l * 2).is_err()); // beyond L
+}
