@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== Ablation (a): precomputed filter DFT (2 vs 3 DFTs per tile) ===\n");
     let mut ta = Table::new(&["U", "cached_rho_dft", "recompute_rho_dft", "speedup"]);
     for u in [64usize, 512, 2048] {
-        let plan = cache.plan(u);
+        let plan = cache.plan(u); // rfft plan, real order 2U
         let y: Vec<f32> = (0..u * d).map(|_| rng.normal_f32()).collect();
         let seg = cache.seg(0, u).to_vec();
         let spectra = cache.spectra(u);
@@ -45,11 +45,11 @@ fn main() -> anyhow::Result<()> {
         let mut out = vec![0.0f32; u * d];
 
         let cached = benchkit::bench(warmup, runs, || {
-            fft::tile_conv_fft_into(&plan, &y, sre, sim, &mut out, &mut scratch, d);
+            fft::tile_conv_rfft_into(&plan, &y, sre, sim, &mut out, &mut scratch, d);
         });
         let recompute = benchkit::bench(warmup, runs, || {
-            let (re, im) = fft::spectrum_planes(&plan, &seg, d); // the 3rd DFT
-            fft::tile_conv_fft_into(&plan, &y, &re, &im, &mut out, &mut scratch, d);
+            let (re, im) = fft::spectrum_halfplanes(&plan, &seg, d); // the 3rd DFT
+            fft::tile_conv_rfft_into(&plan, &y, &re, &im, &mut out, &mut scratch, d);
         });
         ta.row(vec![
             u.to_string(),
@@ -62,10 +62,10 @@ fn main() -> anyhow::Result<()> {
     println!("paper: caching the filter DFT saves a further ~1.5x on the tile.");
 
     // ---- (b) 2U cyclic vs 4U padded FFT -----------------------------------
-    println!("\n=== Ablation (b): order-2U cyclic FFT vs canonical 4U padded FFT ===\n");
-    let mut tb = Table::new(&["U", "cyclic_2U", "padded_4U", "speedup", "max_diff"]);
+    println!("\n=== Ablation (b): order-2U cyclic rfft vs canonical 4U padded FFT ===\n");
+    let mut tb = Table::new(&["U", "cyclic_2U_rfft", "padded_4U", "speedup", "max_diff"]);
     for u in [64usize, 512, 2048] {
-        let plan2 = cache.plan(u); // order 2U
+        let plan2 = cache.plan(u); // rfft plan, real order 2U
         let plan4 = Plan::new(4 * u);
         let y: Vec<f32> = (0..u * d).map(|_| rng.normal_f32()).collect();
         let seg = cache.seg(0, u);
@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
         let mut out2 = vec![0.0f32; u * d];
         let cyclic = benchkit::bench(warmup, runs, || {
             out2.fill(0.0);
-            fft::tile_conv_fft_into(&plan2, &y, sre, sim, &mut out2, &mut scratch, d);
+            fft::tile_conv_rfft_into(&plan2, &y, sre, sim, &mut out2, &mut scratch, d);
         });
 
         // canonical: zero-pad input to 4U, full linear conv, slice [U, 2U)

@@ -1,0 +1,123 @@
+//! τ tile-kernel microbench: `rust-direct` vs `rust-fft` (complex and
+//! rfft half-spectrum pipelines) across tile sizes, emitting
+//! `BENCH_tau_tile.json` — the machine-readable perf-trajectory baseline.
+//!
+//! Pure native kernels on synthetic data: needs no artifacts, so it runs
+//! anywhere (including the CI bench-smoke job at a tiny config). The
+//! measured direct↔FFT crossover printed at the end is the empirical
+//! counterpart of `tau::calibrate::predicted_crossover`; the engine's own
+//! table is still produced by `flashinfer calibrate` (it includes the PJRT
+//! impls and real dims).
+//!
+//! Knobs: FI_TAU_TILE_MIN_U, FI_TAU_TILE_MAX_U, FI_D, FI_WARMUP, FI_RUNS,
+//! FI_BENCH_OUT.
+
+use flash_inference::fft::{self, Plan, RfftPlan, TileScratch};
+use flash_inference::tiling::flops;
+use flash_inference::util::benchkit::{self, fmt_ns, Table};
+use flash_inference::util::json::Json;
+use flash_inference::util::prng::Prng;
+
+fn main() -> anyhow::Result<()> {
+    let min_u = benchkit::env_usize("FI_TAU_TILE_MIN_U", 16);
+    let max_u = benchkit::env_usize("FI_TAU_TILE_MAX_U", 4096);
+    let d = benchkit::env_usize("FI_D", 64);
+    let warmup = benchkit::env_usize("FI_WARMUP", 2);
+    let runs = benchkit::env_usize("FI_RUNS", 4);
+    let out_path = benchkit::env_str("FI_BENCH_OUT", "BENCH_tau_tile.json");
+    assert!(min_u.is_power_of_two() && max_u.is_power_of_two() && min_u <= max_u);
+
+    println!("\n=== tau tile kernels: direct vs fft(complex) vs fft(rfft) ===");
+    println!("D={d} | per-tile medians over {runs} runs, {warmup} warmup\n");
+
+    let mut rng = Prng::new(0x7A117);
+    let mut table = Table::new(&[
+        "U",
+        "rust_direct",
+        "fft_complex",
+        "fft_rfft",
+        "rfft_vs_complex",
+        "rfft_vs_direct",
+    ]);
+    let mut rows = Vec::new();
+    let mut crossover: Option<usize> = None;
+
+    let mut u = min_u;
+    while u <= max_u {
+        let y: Vec<f32> = (0..u * d).map(|_| rng.normal_f32()).collect();
+        let rho: Vec<f32> = (0..2 * u * d).map(|_| rng.normal_f32()).collect();
+        let mut out = vec![0.0f32; u * d];
+        let mut scratch = TileScratch::with_capacity(2 * u, d);
+
+        let direct = benchkit::bench(warmup, runs, || {
+            out.fill(0.0);
+            fft::tile_conv_direct_into(&y, &rho, &mut out, d);
+        });
+
+        let plan_c = Plan::new(2 * u);
+        let (fre, fim) = fft::spectrum_planes(&plan_c, &rho, d);
+        let complex = benchkit::bench(warmup, runs, || {
+            out.fill(0.0);
+            fft::tile_conv_fft_into(&plan_c, &y, &fre, &fim, &mut out, &mut scratch, d);
+        });
+
+        let plan_r = RfftPlan::new(2 * u);
+        let (hre, him) = fft::spectrum_halfplanes(&plan_r, &rho, d);
+        let rfft = benchkit::bench(warmup, runs, || {
+            out.fill(0.0);
+            fft::tile_conv_rfft_into(&plan_r, &y, &hre, &him, &mut out, &mut scratch, d);
+        });
+
+        if crossover.is_none() && rfft.median_ns < direct.median_ns {
+            crossover = Some(u);
+        }
+        table.row(vec![
+            u.to_string(),
+            fmt_ns(direct.median_ns),
+            fmt_ns(complex.median_ns),
+            fmt_ns(rfft.median_ns),
+            format!("{:.2}x", complex.median_ns / rfft.median_ns),
+            format!("{:.2}x", direct.median_ns / rfft.median_ns),
+        ]);
+        rows.push(Json::from_pairs(vec![
+            ("u", Json::Num(u as f64)),
+            ("direct_ns", Json::Num(direct.median_ns)),
+            ("fft_complex_ns", Json::Num(complex.median_ns)),
+            ("fft_rfft_ns", Json::Num(rfft.median_ns)),
+            ("direct_flops", Json::Num(flops::tile_direct_flops(u, d) as f64)),
+            ("fft_complex_flops", Json::Num(flops::tile_fft_flops(u, d) as f64)),
+            ("fft_rfft_flops", Json::Num(flops::tile_rfft_flops(u, d) as f64)),
+        ]));
+        u *= 2;
+    }
+    table.print();
+
+    let predicted = flash_inference::tau::calibrate::predicted_crossover();
+    match crossover {
+        Some(c) => println!(
+            "\nmeasured direct->fft crossover: U = {c} (model predicts {predicted}); \
+             run `flashinfer calibrate` to persist the full hybrid table."
+        ),
+        None => println!(
+            "\nno crossover in [{min_u}, {max_u}] — direct won throughout \
+             (model predicts {predicted}); widen FI_TAU_TILE_MAX_U."
+        ),
+    }
+
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("tau_tile".into())),
+        ("d", Json::Num(d as f64)),
+        ("warmup", Json::Num(warmup as f64)),
+        ("runs", Json::Num(runs as f64)),
+        ("rows", Json::Arr(rows)),
+        (
+            "measured_crossover_u",
+            crossover.map_or(Json::Null, |c| Json::Num(c as f64)),
+        ),
+        ("predicted_crossover_u", Json::Num(predicted as f64)),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty())?;
+    println!("wrote {out_path}");
+    table.write_csv("tau_tile")?;
+    Ok(())
+}

@@ -367,16 +367,19 @@ mod tests {
     }
 
     #[test]
-    fn datadep_tiling_costs_about_twice_the_static_tiling() {
+    fn datadep_tiling_costs_a_few_times_the_static_tiling() {
         // Appendix B: parallelogram tiles need 2 convs (with one fresh DFT
-        // each) per iteration vs 1 conv with a cached filter DFT — ≈2x.
+        // each) per iteration vs 1 conv with a cached filter DFT — ≈2x on
+        // conv count. The static closed form additionally charges the rfft
+        // half-spectrum model (this path still runs full complex DFTs on
+        // its data-dependent filters), adding ≈1.4-1.6x ⇒ ≈3-4x combined.
         let (d, len) = (8usize, 1024usize);
         let eng = DataDepEngine::new(DataDepCfg { m: 1, d, len, seed: 2 });
         let dyn_flops = eng.generate_alg5(len).flops.mixer_flops as f64;
         let static_flops =
             crate::tiling::flops::flash_total_flops(len, 1, d, true) as f64;
         let ratio = dyn_flops / static_flops;
-        assert!((1.4..3.2).contains(&ratio), "ratio={ratio}");
+        assert!((2.2..4.6).contains(&ratio), "ratio={ratio}");
     }
 
     #[test]

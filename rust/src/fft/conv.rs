@@ -5,21 +5,38 @@
 //! suffices (the wrap-around lands outside the kept slice), and that the
 //! filter-prefix spectrum can be precomputed per (layer, U) — dropping the
 //! per-tile cost from 3 DFTs to 2.
+//!
+//! Two pipelines implement the same tile: [`tile_conv_fft_into`] on full
+//! complex spectra (the original kernel, kept as the comparison baseline)
+//! and [`tile_conv_rfft_into`] on real-input half-spectra (the hot path:
+//! packed transforms of order U, U+1 cached filter bins — see `fft::rfft`).
 
 use super::plan::Plan;
+use super::rfft::{self, RfftPlan};
 use super::vecfft;
 
 /// Reusable scratch planes for tile convolutions (sized to the largest
 /// tile at engine init; no allocation on the token loop).
+///
+/// The complex path uses the `re`/`im` pair at the full transform order n;
+/// the rfft path reuses the same pair at order n/2 for the packed
+/// transform and adds a half-spectrum pair of n/2 + 1 bins.
 #[derive(Debug, Default)]
 pub struct TileScratch {
     re: Vec<f32>,
     im: Vec<f32>,
+    half_re: Vec<f32>,
+    half_im: Vec<f32>,
 }
 
 impl TileScratch {
     pub fn with_capacity(max_n: usize, d: usize) -> TileScratch {
-        TileScratch { re: vec![0.0; max_n * d], im: vec![0.0; max_n * d] }
+        TileScratch {
+            re: vec![0.0; max_n * d],
+            im: vec![0.0; max_n * d],
+            half_re: vec![0.0; (max_n / 2 + 1) * d],
+            half_im: vec![0.0; (max_n / 2 + 1) * d],
+        }
     }
 
     fn planes(&mut self, n: usize, d: usize) -> (&mut [f32], &mut [f32]) {
@@ -29,6 +46,32 @@ impl TileScratch {
             self.im.resize(len, 0.0);
         }
         (&mut self.re[..len], &mut self.im[..len])
+    }
+
+    /// Packed (`[n/2][d]`) + half-spectrum (`[n/2+1][d]`) planes for the
+    /// rfft pipeline at transform order `n`.
+    #[allow(clippy::type_complexity)]
+    fn rfft_planes(
+        &mut self,
+        n: usize,
+        d: usize,
+    ) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+        let zlen = (n / 2) * d;
+        let xlen = (n / 2 + 1) * d;
+        if self.re.len() < zlen {
+            self.re.resize(zlen, 0.0);
+            self.im.resize(zlen, 0.0);
+        }
+        if self.half_re.len() < xlen {
+            self.half_re.resize(xlen, 0.0);
+            self.half_im.resize(xlen, 0.0);
+        }
+        (
+            &mut self.re[..zlen],
+            &mut self.im[..zlen],
+            &mut self.half_re[..xlen],
+            &mut self.half_im[..xlen],
+        )
     }
 }
 
@@ -89,6 +132,60 @@ pub fn tile_conv_fft_into(
     let tail = &re[u * d..n * d];
     for (o, v) in out_add.iter_mut().zip(tail) {
         *o += v * s;
+    }
+}
+
+/// Rfft tile: same contract as [`tile_conv_fft_into`] but on the real-input
+/// half-spectrum pipeline — the native τ hot path.
+///
+/// * `plan`    — rfft plan of real order 2U.
+/// * `y`       — `[U][d]` contiguous tile input (real; zero-padded to 2U).
+/// * `spec_*`  — `[(U+1)][d]` filter-prefix *half*-spectrum planes
+///   (bins [0, U] of the order-2U DFT; see [`rfft::spectrum_halfplanes`]).
+/// * `out_add` — `[U][d]`; the middle-U slice of the order-2U cyclic
+///   convolution is accumulated into it, 1/n folded into the accumulation.
+///
+/// Both packed transforms run at order U instead of 2U and the pointwise
+/// product touches U+1 bins instead of 2U — roughly half the FLOPs and
+/// scratch traffic of the complex path, with identical results up to
+/// rounding (proven against `tile_conv_direct_into` in the tests below).
+pub fn tile_conv_rfft_into(
+    plan: &RfftPlan,
+    y: &[f32],
+    spec_re: &[f32],
+    spec_im: &[f32],
+    out_add: &mut [f32],
+    scratch: &mut TileScratch,
+    d: usize,
+) {
+    let n = plan.n;
+    let u = n / 2;
+    debug_assert_eq!(y.len(), u * d);
+    debug_assert_eq!(spec_re.len(), (u + 1) * d);
+    debug_assert_eq!(spec_im.len(), (u + 1) * d);
+    debug_assert_eq!(out_add.len(), u * d);
+
+    let (zre, zim, xre, xim) = scratch.rfft_planes(n, d);
+    rfft::rfft_into(plan, y, xre, xim, zre, zim, d);
+    rfft::cmul_halfspec_inplace(xre, xim, spec_re, spec_im);
+    rfft::irfft_packed_unscaled(plan, xre, xim, zre, zim, d);
+
+    // keep rows [U, 2U) of the (n-scaled) cyclic convolution; the packed
+    // layout interleaves them as zre[k] = n·x[2k], zim[k] = n·x[2k+1].
+    let s = 1.0 / n as f32;
+    if u == 1 {
+        // the single kept row (t = 1) is odd: it lives in the im plane
+        for t in 0..d {
+            out_add[t] += zim[t] * s;
+        }
+    } else {
+        for k in u / 2..u {
+            let r0 = (2 * k - u) * d; // even kept row ← re plane
+            for t in 0..d {
+                out_add[r0 + t] += zre[k * d + t] * s;
+                out_add[r0 + d + t] += zim[k * d + t] * s;
+            }
+        }
     }
 }
 
@@ -202,6 +299,95 @@ mod tests {
         let mut fresh = TileScratch::default();
         let mut out_c = vec![0.0f32; u * d];
         tile_conv_fft_into(&plan, &y2, &sre, &sim, &mut out_c, &mut fresh, d);
+        for (b, c) in out_b.iter().zip(&out_c) {
+            assert_eq!(b, c);
+        }
+    }
+
+    #[test]
+    fn rfft_matches_direct() {
+        // acceptance: within 1e-3·√U of the direct reference at mixed D
+        for (u, d) in [(1usize, 1usize), (2, 2), (4, 3), (32, 16), (256, 8), (64, 1), (16, 64)] {
+            let plan = RfftPlan::new(2 * u);
+            let y = rand_vec(u * d, 30 + u as u64);
+            let rho = rand_vec(2 * u * d, 31 + u as u64);
+            let (sre, sim) = rfft::spectrum_halfplanes(&plan, &rho, d);
+            let mut scratch = TileScratch::default();
+            let mut got = vec![0.0f32; u * d];
+            tile_conv_rfft_into(&plan, &y, &sre, &sim, &mut got, &mut scratch, d);
+            let want = naive_tile(&y, &rho, u, d);
+            let tol = 1e-3 * (u as f32).sqrt();
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < tol, "u={u} d={d}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_matches_complex_fft_kernel() {
+        // the two FFT pipelines are the same math; agree to FP rounding
+        for (u, d) in [(4usize, 5usize), (64, 8), (256, 4)] {
+            let y = rand_vec(u * d, 40);
+            let rho = rand_vec(2 * u * d, 41);
+            let mut scratch = TileScratch::default();
+
+            let plan_c = Plan::new(2 * u);
+            let (fre, fim) = spectrum_planes(&plan_c, &rho, d);
+            let mut out_c = vec![0.0f32; u * d];
+            tile_conv_fft_into(&plan_c, &y, &fre, &fim, &mut out_c, &mut scratch, d);
+
+            let plan_r = RfftPlan::new(2 * u);
+            let (hre, him) = rfft::spectrum_halfplanes(&plan_r, &rho, d);
+            let mut out_r = vec![0.0f32; u * d];
+            tile_conv_rfft_into(&plan_r, &y, &hre, &him, &mut out_r, &mut scratch, d);
+
+            let tol = 1e-3 * (u as f32).sqrt();
+            for (a, b) in out_r.iter().zip(&out_c) {
+                assert!((a - b).abs() < tol, "u={u} d={d}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_accumulates_rather_than_overwrites() {
+        let (u, d) = (8usize, 3usize);
+        let plan = RfftPlan::new(2 * u);
+        let y = rand_vec(u * d, 50);
+        let rho = rand_vec(2 * u * d, 51);
+        let (sre, sim) = rfft::spectrum_halfplanes(&plan, &rho, d);
+        let mut scratch = TileScratch::default();
+        let mut out = vec![-3.0f32; u * d];
+        tile_conv_rfft_into(&plan, &y, &sre, &sim, &mut out, &mut scratch, d);
+        let want = naive_tile(&y, &rho, u, d);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a + 3.0 - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rfft_scratch_reuse_is_clean() {
+        // second call (and a call after the complex path used the same
+        // scratch) must not see residue
+        let (u, d) = (16usize, 2usize);
+        let plan = RfftPlan::new(2 * u);
+        let plan_c = Plan::new(2 * u);
+        let rho = rand_vec(2 * u * d, 60);
+        let (sre, sim) = rfft::spectrum_halfplanes(&plan, &rho, d);
+        let (fre, fim) = spectrum_planes(&plan_c, &rho, d);
+        let y1 = rand_vec(u * d, 61);
+        let y2 = rand_vec(u * d, 62);
+
+        let mut scratch = TileScratch::with_capacity(2 * u, d);
+        let mut out_a = vec![0.0f32; u * d];
+        tile_conv_rfft_into(&plan, &y1, &sre, &sim, &mut out_a, &mut scratch, d);
+        let mut out_x = vec![0.0f32; u * d];
+        tile_conv_fft_into(&plan_c, &y1, &fre, &fim, &mut out_x, &mut scratch, d);
+        let mut out_b = vec![0.0f32; u * d];
+        tile_conv_rfft_into(&plan, &y2, &sre, &sim, &mut out_b, &mut scratch, d);
+
+        let mut fresh = TileScratch::default();
+        let mut out_c = vec![0.0f32; u * d];
+        tile_conv_rfft_into(&plan, &y2, &sre, &sim, &mut out_c, &mut fresh, d);
         for (b, c) in out_b.iter().zip(&out_c) {
             assert_eq!(b, c);
         }

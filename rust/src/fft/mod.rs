@@ -1,13 +1,18 @@
 //! Native FFT substrate: plans, scalar + vectorized radix-2 transforms,
-//! and the Lemma-1 tile convolution used by the `rust_fft` tau
-//! implementation (the FlashFFTConv analogue on this testbed).
+//! the real-input (rfft) half-spectrum pipeline, and the Lemma-1 tile
+//! convolution used by the `rust_fft` tau implementation (the FlashFFTConv
+//! analogue on this testbed).
 
 pub mod complex;
 pub mod conv;
 pub mod plan;
 pub mod radix2;
+pub mod rfft;
 pub mod vecfft;
 
 pub use complex::Cpx;
-pub use conv::{spectrum_planes, tile_conv_direct_into, tile_conv_fft_into, TileScratch};
+pub use conv::{
+    spectrum_planes, tile_conv_direct_into, tile_conv_fft_into, tile_conv_rfft_into, TileScratch,
+};
 pub use plan::{Plan, PlanCache};
+pub use rfft::{spectrum_halfplanes, RfftPlan, RfftPlanCache};

@@ -1,0 +1,377 @@
+//! Real-input FFT (rfft / irfft) over SoA `[n][d]` planes — the
+//! half-spectrum pipeline for the native τ hot path.
+//!
+//! Tile inputs and the filter prefix are purely real, so their order-n DFTs
+//! are conjugate-symmetric: bins `[0, n/2]` determine the rest. We exploit
+//! this with the standard pack-two-halves trick: fold the n real samples
+//! into an order-n/2 *complex* sequence `z[k] = x[2k] + i·x[2k+1]`, run one
+//! complex transform of half the order, and recover the `n/2 + 1` retained
+//! bins with an O(n) twiddle pass. Relative to the full complex path this
+//! halves transform FLOPs, scratch traffic, and cached-spectrum memory —
+//! the same engineering FlashFFTConv applies to its real convolutions.
+//!
+//! Conventions match `vecfft`: `d` is the contiguous lane axis, the inverse
+//! is unscaled (the 1/n folds into the consumer's accumulation), and all
+//! kernels are allocation-free given caller scratch.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::complex::Cpx;
+use super::plan::{Plan, PlanCache};
+use super::vecfft;
+
+/// Plan for a real FFT of (even, power-of-two) order `n`: the order-n/2
+/// complex plan for the packed transform plus the split twiddles
+/// `e^{-2πik/n}`, k ∈ [0, n/2], for the pack/unpack passes.
+#[derive(Debug)]
+pub struct RfftPlan {
+    /// Real transform order (the tile's 2U).
+    pub n: usize,
+    /// Packed complex transform order n/2.
+    pub m: usize,
+    /// Complex plan of order `m` shared with any other user of that size.
+    pub half: Arc<Plan>,
+    tw_re: Vec<f32>,
+    tw_im: Vec<f32>,
+}
+
+impl RfftPlan {
+    pub fn new(n: usize) -> RfftPlan {
+        assert!(
+            n >= 2 && n.is_power_of_two(),
+            "rfft order must be an even power of two, got {n}"
+        );
+        RfftPlan::with_half(n, Arc::new(Plan::new(n / 2)))
+    }
+
+    fn with_half(n: usize, half: Arc<Plan>) -> RfftPlan {
+        let m = n / 2;
+        debug_assert_eq!(half.n, m);
+        let mut tw_re = Vec::with_capacity(m + 1);
+        let mut tw_im = Vec::with_capacity(m + 1);
+        for k in 0..=m {
+            let w = Cpx::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64);
+            tw_re.push(w.re);
+            tw_im.push(w.im);
+        }
+        RfftPlan { n, m, half, tw_re, tw_im }
+    }
+
+    /// Number of retained half-spectrum bins, n/2 + 1.
+    pub fn bins(&self) -> usize {
+        self.m + 1
+    }
+}
+
+/// Forward rfft of real rows `x` (`[rows][d]`, rows ≤ n; logically
+/// zero-padded to n rows) into half-spectrum planes `out_re`/`out_im`
+/// (`[(n/2+1)][d]`). `zre`/`zim` are `[n/2][d]` scratch for the packed
+/// transform; every output and scratch cell is overwritten.
+pub fn rfft_into(
+    plan: &RfftPlan,
+    x: &[f32],
+    out_re: &mut [f32],
+    out_im: &mut [f32],
+    zre: &mut [f32],
+    zim: &mut [f32],
+    d: usize,
+) {
+    let m = plan.m;
+    debug_assert!(x.len() <= plan.n * d && x.len() % d == 0);
+    debug_assert_eq!(out_re.len(), (m + 1) * d);
+    debug_assert_eq!(out_im.len(), (m + 1) * d);
+    debug_assert_eq!(zre.len(), m * d);
+    debug_assert_eq!(zim.len(), m * d);
+
+    // pack: z[k] = x[2k] + i·x[2k+1], zero rows past the provided input
+    let rows = x.len() / d;
+    for k in 0..m {
+        let (even, odd) = (2 * k, 2 * k + 1);
+        let zr = &mut zre[k * d..(k + 1) * d];
+        if even < rows {
+            zr.copy_from_slice(&x[even * d..(even + 1) * d]);
+        } else {
+            zr.fill(0.0);
+        }
+        let zi = &mut zim[k * d..(k + 1) * d];
+        if odd < rows {
+            zi.copy_from_slice(&x[odd * d..(odd + 1) * d]);
+        } else {
+            zi.fill(0.0);
+        }
+    }
+
+    vecfft::forward(&plan.half, zre, zim, d);
+
+    // unpack: split Z into the even/odd-sample spectra and recombine.
+    // X[k] = E[k] + w^k·O[k] with E[k] = (Z[k] + conj(Z[m-k]))/2,
+    // O[k] = -i·(Z[k] - conj(Z[m-k]))/2, Z[m] ≡ Z[0].
+    // Endpoints are real: X[0] = Re Z₀ + Im Z₀, X[m] = Re Z₀ - Im Z₀.
+    for t in 0..d {
+        let (a, b) = (zre[t], zim[t]);
+        out_re[t] = a + b;
+        out_im[t] = 0.0;
+        out_re[m * d + t] = a - b;
+        out_im[m * d + t] = 0.0;
+    }
+    for k in 1..m {
+        let j = m - k;
+        let (wr, wi) = (plan.tw_re[k], plan.tw_im[k]);
+        for t in 0..d {
+            let ar = zre[k * d + t];
+            let ai = zim[k * d + t];
+            let br = zre[j * d + t];
+            let bi = zim[j * d + t];
+            let her = 0.5 * (ar + br); // Re E[k]
+            let hei = 0.5 * (ai - bi); // Im E[k]
+            let hor = 0.5 * (ai + bi); // Re O[k]
+            let hoi = 0.5 * (br - ar); // Im O[k]
+            out_re[k * d + t] = her + wr * hor - wi * hoi;
+            out_im[k * d + t] = hei + wr * hoi + wi * hor;
+        }
+    }
+}
+
+/// Inverse rfft of half-spectrum planes (`[(n/2+1)][d]`) to the *packed*
+/// time domain, unscaled: on return `zre[k] = n·x[2k]`, `zim[k] =
+/// n·x[2k+1]`. Consumers that only need a row range (the tile kernel keeps
+/// rows [U, 2U)) read the packed planes directly and skip a deinterleave
+/// pass; fold the 1/n into the read.
+pub fn irfft_packed_unscaled(
+    plan: &RfftPlan,
+    spec_re: &[f32],
+    spec_im: &[f32],
+    zre: &mut [f32],
+    zim: &mut [f32],
+    d: usize,
+) {
+    let m = plan.m;
+    debug_assert_eq!(spec_re.len(), (m + 1) * d);
+    debug_assert_eq!(spec_im.len(), (m + 1) * d);
+    debug_assert_eq!(zre.len(), m * d);
+    debug_assert_eq!(zim.len(), m * d);
+
+    // repack: 2·Z[k] = (X[k] + conj(X[m-k])) + i·conj(w^k)·(X[k] - conj(X[m-k]));
+    // the factor 2 delivers n·x from the order-m unscaled inverse (m = n/2).
+    for k in 0..m {
+        let j = m - k; // X has m+1 bins, so no wrap-around
+        let (wr, wi) = (plan.tw_re[k], plan.tw_im[k]);
+        for t in 0..d {
+            let ar = spec_re[k * d + t];
+            let ai = spec_im[k * d + t];
+            let br = spec_re[j * d + t];
+            let bi = spec_im[j * d + t];
+            let s_re = ar + br; // X[k] + conj(X[j])
+            let s_im = ai - bi;
+            let dd_re = ar - br; // X[k] - conj(X[j])
+            let dd_im = ai + bi;
+            let t_re = wr * dd_re + wi * dd_im; // conj(w^k)·D
+            let t_im = wr * dd_im - wi * dd_re;
+            zre[k * d + t] = s_re - t_im;
+            zim[k * d + t] = s_im + t_re;
+        }
+    }
+
+    vecfft::inverse_unscaled(&plan.half, zre, zim, d);
+}
+
+/// Full inverse rfft: deinterleave the packed result into `out` (`[n][d]`,
+/// unscaled by n — fold 1/n into the consumer, as `vecfft`).
+pub fn irfft_unscaled_into(
+    plan: &RfftPlan,
+    spec_re: &[f32],
+    spec_im: &[f32],
+    out: &mut [f32],
+    zre: &mut [f32],
+    zim: &mut [f32],
+    d: usize,
+) {
+    debug_assert_eq!(out.len(), plan.n * d);
+    irfft_packed_unscaled(plan, spec_re, spec_im, zre, zim, d);
+    for k in 0..plan.m {
+        out[2 * k * d..(2 * k + 1) * d].copy_from_slice(&zre[k * d..(k + 1) * d]);
+        out[(2 * k + 1) * d..(2 * k + 2) * d].copy_from_slice(&zim[k * d..(k + 1) * d]);
+    }
+}
+
+/// Pointwise half-spectrum product. Both operands are spectra of real
+/// signals, hence conjugate-symmetric: multiplying bins [0, n/2] *is* the
+/// full order-n pointwise product (the mirrored half is the conjugate of
+/// this one by construction).
+pub fn cmul_halfspec_inplace(re: &mut [f32], im: &mut [f32], bre: &[f32], bim: &[f32]) {
+    vecfft::cmul_inplace(re, im, bre, bim);
+}
+
+/// Half-spectrum planes of a real filter segment — the rfft analogue of
+/// [`super::conv::spectrum_planes`]: `seg` is `[rows][d]` (rows ≤ n,
+/// zero-padded), the result is `([(n/2+1)][d], [(n/2+1)][d])` re/im — the
+/// exact `[0, n/2]`-bin layout the PJRT `@rho_re/@rho_im` buffers consume.
+pub fn spectrum_halfplanes(plan: &RfftPlan, seg: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
+    let bins = plan.bins();
+    let mut re = vec![0.0f32; bins * d];
+    let mut im = vec![0.0f32; bins * d];
+    let mut zre = vec![0.0f32; plan.m * d];
+    let mut zim = vec![0.0f32; plan.m * d];
+    rfft_into(plan, seg, &mut re, &mut im, &mut zre, &mut zim, d);
+    (re, im)
+}
+
+/// Process-wide rfft plan cache; the packed complex plans are shared
+/// through an inner [`PlanCache`].
+pub struct RfftPlanCache {
+    plans: Mutex<HashMap<usize, Arc<RfftPlan>>>,
+    half: PlanCache,
+}
+
+impl RfftPlanCache {
+    pub fn new() -> RfftPlanCache {
+        RfftPlanCache { plans: Mutex::new(HashMap::new()), half: PlanCache::new() }
+    }
+
+    pub fn get(&self, n: usize) -> Arc<RfftPlan> {
+        if let Some(p) = self.plans.lock().unwrap().get(&n) {
+            return p.clone();
+        }
+        // build outside the map lock: Plan::new(n/2) is the expensive part
+        assert!(n >= 2 && n.is_power_of_two(), "rfft order must be an even power of two, got {n}");
+        let plan = Arc::new(RfftPlan::with_half(n, self.half.get(n / 2)));
+        self.plans.lock().unwrap().entry(n).or_insert(plan).clone()
+    }
+
+    /// Shared global cache (plans are pure functions of n).
+    pub fn global() -> &'static RfftPlanCache {
+        static CACHE: OnceLock<RfftPlanCache> = OnceLock::new();
+        CACHE.get_or_init(RfftPlanCache::new)
+    }
+}
+
+impl Default for RfftPlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::conv::spectrum_planes;
+    use crate::util::prng::Prng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn rfft_of(x: &[f32], n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+        let plan = RfftPlan::new(n);
+        let mut re = vec![0.0f32; plan.bins() * d];
+        let mut im = vec![0.0f32; plan.bins() * d];
+        let mut zre = vec![0.0f32; plan.m * d];
+        let mut zim = vec![0.0f32; plan.m * d];
+        rfft_into(&plan, x, &mut re, &mut im, &mut zre, &mut zim, d);
+        (re, im)
+    }
+
+    #[test]
+    fn forward_matches_full_complex_fft_half() {
+        for (n, d) in [(2usize, 1usize), (4, 3), (8, 2), (64, 5), (512, 8)] {
+            let x = rand_vec(n * d, (n + d) as u64);
+            let (re, im) = rfft_of(&x, n, d);
+            // reference: full complex DFT of the same real input
+            let full = Plan::new(n);
+            let (fre, fim) = spectrum_planes(&full, &x, d);
+            for k in 0..=n / 2 {
+                for t in 0..d {
+                    let tol = 1e-3 * (n as f32).sqrt();
+                    assert!(
+                        (re[k * d + t] - fre[k * d + t]).abs() < tol,
+                        "n={n} d={d} bin={k}: {} vs {}",
+                        re[k * d + t],
+                        fre[k * d + t]
+                    );
+                    assert!((im[k * d + t] - fim[k * d + t]).abs() < tol);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_zero_pads_short_input() {
+        let (n, d) = (16usize, 3usize);
+        let rows = 5;
+        let x = rand_vec(rows * d, 11);
+        let mut padded = x.clone();
+        padded.resize(n * d, 0.0);
+        let (re_a, im_a) = rfft_of(&x, n, d);
+        let (re_b, im_b) = rfft_of(&padded, n, d);
+        assert_eq!(re_a, re_b);
+        assert_eq!(im_a, im_b);
+    }
+
+    #[test]
+    fn dc_and_nyquist_bins_are_real() {
+        let (n, d) = (32usize, 4usize);
+        let x = rand_vec(n * d, 21);
+        let (_re, im) = rfft_of(&x, n, d);
+        for t in 0..d {
+            assert_eq!(im[t], 0.0);
+            assert_eq!(im[(n / 2) * d + t], 0.0);
+        }
+    }
+
+    #[test]
+    fn roundtrip_recovers_input() {
+        for (n, d) in [(2usize, 2usize), (8, 1), (64, 16), (512, 8)] {
+            let plan = RfftPlan::new(n);
+            let x = rand_vec(n * d, 99 + n as u64);
+            let mut re = vec![0.0f32; plan.bins() * d];
+            let mut im = vec![0.0f32; plan.bins() * d];
+            let mut zre = vec![0.0f32; plan.m * d];
+            let mut zim = vec![0.0f32; plan.m * d];
+            rfft_into(&plan, &x, &mut re, &mut im, &mut zre, &mut zim, d);
+            let mut out = vec![0.0f32; n * d];
+            irfft_unscaled_into(&plan, &re, &im, &mut out, &mut zre, &mut zim, d);
+            let s = 1.0 / n as f32;
+            for k in 0..n * d {
+                assert!((out[k] * s - x[k]).abs() < 1e-4, "n={n} d={d} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn halfplanes_match_full_spectrum_prefix() {
+        let (n, d) = (64usize, 6usize);
+        let seg = rand_vec(40 * d, 7); // shorter than n: zero-padded
+        let rplan = RfftPlan::new(n);
+        let (hre, him) = spectrum_halfplanes(&rplan, &seg, d);
+        let full = Plan::new(n);
+        let (fre, fim) = spectrum_planes(&full, &seg, d);
+        assert_eq!(hre.len(), (n / 2 + 1) * d);
+        for k in 0..(n / 2 + 1) * d {
+            assert!((hre[k] - fre[k]).abs() < 1e-3);
+            assert!((him[k] - fim[k]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn order_two_closed_form() {
+        // n = 2: X = [x0 + x1, x0 - x1]
+        let x = vec![3.0f32, -1.5];
+        let (re, im) = rfft_of(&x, 2, 1);
+        assert!((re[0] - 1.5).abs() < 1e-6);
+        assert!((re[1] - 4.5).abs() < 1e-6);
+        assert_eq!(im, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn cache_returns_same_plan_and_shares_half() {
+        let c = RfftPlanCache::new();
+        let a = c.get(64);
+        let b = c.get(64);
+        assert!(Arc::ptr_eq(&a, &b));
+        let other = c.get(128);
+        assert_eq!(other.m, 64);
+        assert_eq!(a.m, 32);
+    }
+}

@@ -7,7 +7,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::{make_impl, RhoCache, TauKind};
-use crate::tiling::Tile;
+use crate::tiling::{flops, Tile};
 use crate::util::benchkit;
 use crate::util::json::Json;
 use crate::util::prng::Prng;
@@ -26,12 +26,16 @@ impl CalibrationTable {
     }
 
     /// Built-in fallback when no calibration has been run: native direct
-    /// for small tiles (overhead-bound), native FFT for large
-    /// (FLOP-bound) — the asymptotics of DESIGN.md §3's mapping.
+    /// below the model-predicted direct↔FFT crossover (overhead-bound),
+    /// native FFT at and above it (FLOP-bound) — the asymptotics of
+    /// DESIGN.md §3's mapping, with the switch point re-derived from the
+    /// tile cost models so it tracks kernel changes (e.g. the rfft
+    /// half-spectrum pipeline) instead of a hard-coded constant.
     pub fn heuristic(l: usize) -> CalibrationTable {
         let levels = (l / 2).max(1).trailing_zeros() as usize + 1;
+        let cross = predicted_crossover();
         let by = (0..levels)
-            .map(|q| if (1usize << q) <= 32 { TauKind::RustDirect } else { TauKind::RustFft })
+            .map(|q| if (1usize << q) < cross { TauKind::RustDirect } else { TauKind::RustFft })
             .collect();
         CalibrationTable::new(by)
     }
@@ -81,6 +85,21 @@ impl CalibrationTable {
         }
         Ok(CalibrationTable::new(by))
     }
+}
+
+/// Smallest power-of-two U at which the rfft tile cost model undercuts the
+/// direct model (D cancels, per group) — the analytic Hybrid crossover.
+/// Real machines re-derive it empirically via [`calibrate`]; this is the
+/// prior used when no `hybrid.json` exists.
+pub fn predicted_crossover() -> usize {
+    let mut u = 1usize;
+    while u < (1 << 24) {
+        if flops::tile_rfft_flops(u, 1) < flops::tile_direct_flops(u, 1) {
+            return u;
+        }
+        u *= 2;
+    }
+    u
 }
 
 /// One measured row of the calibration sweep (Fig 3a data).
@@ -146,6 +165,16 @@ mod tests {
         assert_eq!(t.choice(2048), TauKind::RustFft);
         // out-of-range U clamps to the last level
         assert_eq!(t.choice(1 << 20), TauKind::RustFft);
+    }
+
+    #[test]
+    fn heuristic_switches_at_model_crossover() {
+        let cross = predicted_crossover();
+        // sanity band: the rfft model pays off well inside the real range
+        assert!((4..=512).contains(&cross), "crossover={cross}");
+        let t = CalibrationTable::heuristic(4096);
+        assert_eq!(t.choice(cross), TauKind::RustFft);
+        assert_eq!(t.choice(cross / 2), TauKind::RustDirect);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! | Conv1D           | `PjrtDirect` (Pallas direct-tile artifact) | O(U²D)      | framework-dispatched quadratic point |
 //! | FlashConv1D      | `RustDirect` (native, allocation-free)     | O(U²D)      | small U (no dispatch overhead) |
 //! | FFT (torch)      | `PjrtFft` (jnp.fft artifact)               | O(U log U D)| framework-dispatched quasilinear point |
-//! | FlashFFT         | `RustFft` (native vec-FFT, cached ρ̂)       | O(U log U D)| large U |
+//! | FlashFFT         | `RustFft` (native vec-rfft, cached half-spectrum ρ̂) | O(U log U D)| large U |
 //!
 //! All four accumulate the tile `pending[g, i+1..i+U] += τ(streams[g,
 //! i-U+1..i], ρ_m)` for every group `g = m·B + b` — one call covers all
@@ -74,14 +74,16 @@ impl TauKind {
 
     /// FLOPs one tile of side `u` costs under this implementation
     /// (per Proposition 1 / §5.4(1) accounting; Hybrid is charged the FFT
-    /// closed form — its dispatch table resolves at runtime).
+    /// closed form — its dispatch table resolves at runtime). Both FFT
+    /// kinds run real-input half-spectrum pipelines (`fft::rfft` natively,
+    /// jnp.rfft in the artifact), so they are charged the rfft model.
     pub fn tile_flops(self, u: usize, g: usize, d: usize) -> u64 {
         match self {
             TauKind::RustDirect | TauKind::PjrtDirect => {
                 flops::tile_direct_flops(u, d) * g as u64
             }
             TauKind::RustFft | TauKind::PjrtFft | TauKind::Hybrid => {
-                flops::tile_fft_flops(u, d) * g as u64
+                flops::tile_rfft_flops(u, d) * g as u64
             }
         }
     }
@@ -123,10 +125,12 @@ pub fn make_impl<'rt, 'c>(
 pub fn stage_y(streams: &Tensor, tile: Tile, buf: &mut Vec<f32>) {
     let (g, d) = (streams.shape()[0], streams.shape()[2]);
     let u = tile.u;
-    buf.resize(g * u * d, 0.0);
+    // every row is copied in, so grown capacity must not be zero-filled
+    // first (resize would); clear keeps the allocation, extend appends raw
+    buf.clear();
+    buf.reserve(g * u * d);
     for gi in 0..g {
-        let src = streams.block(gi, tile.src_l - 1, tile.src_r);
-        buf[gi * u * d..(gi + 1) * u * d].copy_from_slice(src);
+        buf.extend_from_slice(streams.block(gi, tile.src_l - 1, tile.src_r));
     }
 }
 

@@ -17,12 +17,18 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::fft::{self, Plan, PlanCache};
+use crate::fft::{self, RfftPlan, RfftPlanCache};
 use crate::runtime::{BoundArtifact, Runtime};
 use crate::util::tensor::Tensor;
 
-/// Native filter-prefix spectrum planes for one tile size U:
-/// `[M, 2U, D]` re/im, per-mixer plane at `m * 2U * D`.
+/// Native filter-prefix *half*-spectrum planes for one tile size U:
+/// `[M, U+1, D]` re/im (rfft bins [0, U] of the order-2U prefix DFT),
+/// per-mixer plane at `m * (U+1) * D`.
+///
+/// Real filters have conjugate-symmetric spectra, so the half layout holds
+/// the full information at half the cached memory of the former `[M, 2U,
+/// D]` planes — and is bin-for-bin the layout the PJRT `@rho_re/@rho_im`
+/// buffers consume, so [`RhoCache::pjrt`] copies planes without slicing.
 pub struct Spectra {
     pub u: usize,
     pub re: Vec<f32>,
@@ -31,6 +37,11 @@ pub struct Spectra {
 }
 
 impl Spectra {
+    /// Half-spectrum bin count, U + 1.
+    pub fn bins(&self) -> usize {
+        self.u + 1
+    }
+
     pub fn planes(&self, m: usize) -> (&[f32], &[f32]) {
         let off = m * self.plane;
         (&self.re[off..off + self.plane], &self.im[off..off + self.plane])
@@ -51,7 +62,7 @@ pub struct RhoCache<'rt> {
     /// `rho[:, 0, :]` as `[M, D]` (host copy + persistent device buffer).
     pub rho0: Vec<f32>,
     pub rho0_buf: Arc<xla::PjRtBuffer>,
-    plans: PlanCache,
+    plans: RfftPlanCache,
     spectra: RefCell<HashMap<usize, Arc<Spectra>>>,
     pjrt: RefCell<HashMap<usize, Arc<PjrtTau>>>,
     rho_dev: RefCell<Option<Arc<xla::PjRtBuffer>>>,
@@ -84,7 +95,7 @@ impl<'rt> RhoCache<'rt> {
             rho,
             rho0,
             rho0_buf,
-            plans: PlanCache::new(),
+            plans: RfftPlanCache::new(),
             spectra: RefCell::new(HashMap::new()),
             pjrt: RefCell::new(HashMap::new()),
             rho_dev: RefCell::new(None),
@@ -106,8 +117,8 @@ impl<'rt> RhoCache<'rt> {
         Ok(buf)
     }
 
-    /// FFT plan of order 2U.
-    pub fn plan(&self, u: usize) -> Arc<Plan> {
+    /// Rfft plan of real order 2U (packed complex transforms of order U).
+    pub fn plan(&self, u: usize) -> Arc<RfftPlan> {
         self.plans.get(2 * u)
     }
 
@@ -116,19 +127,18 @@ impl<'rt> RhoCache<'rt> {
         self.rho.block(m, 0, 2 * u)
     }
 
-    /// Native spectrum planes for tile size U (built on first use).
+    /// Native half-spectrum planes for tile size U (built on first use).
     pub fn spectra(&self, u: usize) -> Arc<Spectra> {
         if let Some(s) = self.spectra.borrow().get(&u) {
             return s.clone();
         }
         let dims = self.rt.dims;
         let plan = self.plan(u);
-        let n = 2 * u;
-        let plane = n * dims.d;
+        let plane = plan.bins() * dims.d;
         let mut re = vec![0.0f32; dims.m * plane];
         let mut im = vec![0.0f32; dims.m * plane];
         for m in 0..dims.m {
-            let (r, i) = fft::spectrum_planes(&plan, self.seg(m, u), dims.d);
+            let (r, i) = fft::spectrum_halfplanes(&plan, self.seg(m, u), dims.d);
             re[m * plane..(m + 1) * plane].copy_from_slice(&r);
             im[m * plane..(m + 1) * plane].copy_from_slice(&i);
         }
@@ -140,8 +150,9 @@ impl<'rt> RhoCache<'rt> {
     /// Bound PJRT tau executables for tile size U (built on first use).
     ///
     /// The `@rho_re/@rho_im` buffers hold rfft bins `[0, U]` of the filter
-    /// prefix, repeated across the batch lanes of the `G = M·B` axis; the
-    /// `@rho_seg` buffer holds the raw prefix for the Pallas direct kernel.
+    /// prefix, repeated across the batch lanes of the `G = M·B` axis —
+    /// whole [`Spectra`] planes, which share that layout; the `@rho_seg`
+    /// buffer holds the raw prefix for the Pallas direct kernel.
     pub fn pjrt(&self, u: usize) -> Result<Arc<PjrtTau>> {
         if let Some(p) = self.pjrt.borrow().get(&u) {
             return Ok(p.clone());
@@ -149,7 +160,7 @@ impl<'rt> RhoCache<'rt> {
         let dims = self.rt.dims;
         let (g, d, b) = (dims.g, dims.d, dims.b);
         let spectra = self.spectra(u);
-        let bins = u + 1;
+        let bins = spectra.bins();
 
         let mut re = vec![0.0f32; g * bins * d];
         let mut im = vec![0.0f32; g * bins * d];
@@ -158,8 +169,8 @@ impl<'rt> RhoCache<'rt> {
             let (sre, sim) = spectra.planes(m);
             for bi in 0..b {
                 let gi = m * b + bi;
-                re[gi * bins * d..(gi + 1) * bins * d].copy_from_slice(&sre[..bins * d]);
-                im[gi * bins * d..(gi + 1) * bins * d].copy_from_slice(&sim[..bins * d]);
+                re[gi * bins * d..(gi + 1) * bins * d].copy_from_slice(sre);
+                im[gi * bins * d..(gi + 1) * bins * d].copy_from_slice(sim);
                 seg[gi * 2 * u * d..(gi + 1) * 2 * u * d].copy_from_slice(self.seg(m, u));
             }
         }

@@ -1,14 +1,26 @@
 //! Native FFT τ — the FlashFFTConv analogue: Appendix-C engineered
-//! (order-2U cyclic FFT, precomputed filter spectra ⇒ 2 DFTs per tile),
-//! quasilinear FLOPs. The large-U winner on the Pareto frontier (Fig 3a).
+//! (order-2U cyclic convolution via the real-input half-spectrum rfft
+//! pipeline, precomputed filter half-spectra ⇒ 2 packed transforms of
+//! order U per tile), quasilinear FLOPs. The large-U winner on the Pareto
+//! frontier (Fig 3a).
+
+use std::cell::RefCell;
 
 use anyhow::Result;
 
 use super::{RhoCache, TauImpl, TauKind};
-use crate::fft::{tile_conv_fft_into, TileScratch};
+use crate::fft::{tile_conv_rfft_into, TileScratch};
 use crate::tiling::Tile;
 use crate::util::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
+
+thread_local! {
+    /// Per-worker tile scratch for the parallel path. Pool workers are
+    /// persistent (util::threadpool), so after the first tile each worker
+    /// reuses its own planes and the token loop stays allocation-free, as
+    /// documented in `fft/conv.rs`.
+    static WORKER_SCRATCH: RefCell<TileScratch> = RefCell::new(TileScratch::default());
+}
 
 pub struct RustFft<'c, 'rt> {
     cache: &'c RhoCache<'rt>,
@@ -45,13 +57,13 @@ impl TauImpl for RustFft<'_, '_> {
                 let (sre, sim) = spectra.planes(m);
                 let y = streams.block(gi, tile.src_l - 1, tile.src_r);
                 let out = pending.block_mut(gi, tile.dst_l - 1, tile.dst_r);
-                tile_conv_fft_into(&plan, y, sre, sim, out, &mut self.scratch, d);
+                tile_conv_rfft_into(&plan, y, sre, sim, out, &mut self.scratch, d);
             }
             return Ok(());
         }
 
-        // parallel across groups; per-task scratch (allocation amortized by
-        // tile size — the pool only helps when tiles are large anyway).
+        // parallel across groups; each persistent worker brings its own
+        // thread-local scratch (no allocation per task).
         let pend_ptr = PendingPtr(pending.data_mut().as_mut_ptr());
         let pend_ptr = &pend_ptr; // borrow whole wrapper (edition-2021 disjoint capture)
         let l = streams.shape()[1];
@@ -68,8 +80,9 @@ impl TauImpl for RustFft<'_, '_> {
                     u * d,
                 )
             };
-            let mut scratch = TileScratch::with_capacity(2 * u, d);
-            tile_conv_fft_into(plan_ref, y, sre, sim, out, &mut scratch, d);
+            WORKER_SCRATCH.with(|scratch| {
+                tile_conv_rfft_into(plan_ref, y, sre, sim, out, &mut scratch.borrow_mut(), d);
+            });
         });
         Ok(())
     }

@@ -16,9 +16,11 @@ pub fn tile_direct_flops(u: usize, d: usize) -> u64 {
     2 * (u as u64) * (u as u64) * d as u64
 }
 
-/// FLOPs of one FFT tile of side `u` over `d` lanes, with the filter
-/// spectrum precomputed (2 DFTs of order 2u + pointwise product + scaled
-/// accumulation of the kept half).
+/// FLOPs of one *complex*-pipeline FFT tile of side `u` over `d` lanes,
+/// with the filter spectrum precomputed (2 DFTs of order 2u + pointwise
+/// product + scaled accumulation of the kept half). Kept as the model of
+/// the pre-rfft kernel (`tile_conv_fft_into`), which survives as the
+/// comparison baseline.
 pub fn tile_fft_flops(u: usize, d: usize) -> u64 {
     let n = 2 * u as u64;
     let log = n.trailing_zeros() as u64;
@@ -27,12 +29,29 @@ pub fn tile_fft_flops(u: usize, d: usize) -> u64 {
     per_lane * d as u64
 }
 
+/// FLOPs of one *rfft* (half-spectrum) tile of side `u` over `d` lanes —
+/// the model of `tile_conv_rfft_into`, the native hot path: real inputs
+/// pack into complex transforms of order u (not 2u), the pointwise product
+/// touches u+1 bins (not 2u), plus O(u) pack/unpack twiddle passes
+/// (~16 FLOPs per bin each way) and the scaled accumulation of the kept
+/// half. Roughly half of [`tile_fft_flops`] once the transforms dominate.
+pub fn tile_rfft_flops(u: usize, d: usize) -> u64 {
+    let m = u as u64; // packed complex transform order
+    let log = m.trailing_zeros() as u64;
+    let fft = 5 * m * log; // (m/2) log2 m butterflies x 10 flops
+    let twiddle = 2 * 16 * (m + 1); // forward unpack + inverse repack
+    let per_lane = 2 * fft + twiddle + 6 * (m + 1) + 2 * m;
+    per_lane * d as u64
+}
+
 /// Mixer-side FLOPs to generate `len` positions with the flash tiling,
 /// per Proposition 2, for `g` groups (= B·M) of `d` lanes, counting red
-/// cells (2 FLOPs per position-lane) plus all gray tiles.
+/// cells (2 FLOPs per position-lane) plus all gray tiles. The `fft` branch
+/// charges the rfft half-spectrum model — what the native FFT τ actually
+/// runs — so `prop_flops` can assert measured == predicted exactly.
 pub fn flash_total_flops(len: usize, g: usize, d: usize, fft: bool) -> u64 {
     let tiles: u64 = schedule::schedule(len)
-        .map(|t| if fft { tile_fft_flops(t.u, d) } else { tile_direct_flops(t.u, d) })
+        .map(|t| if fft { tile_rfft_flops(t.u, d) } else { tile_direct_flops(t.u, d) })
         .sum();
     let red = 2 * (len as u64) * d as u64;
     (tiles + red) * g as u64
@@ -105,6 +124,35 @@ mod tests {
         let large = tile_fft_flops(2048, 1) as f64 / tile_direct_flops(2048, 1) as f64;
         assert!(small > 1.0, "small={small}");
         assert!(large < 0.2, "large={large}");
+    }
+
+    #[test]
+    fn rfft_tile_cost_undercuts_complex_fft() {
+        // the half-spectrum pipeline approaches half the complex cost as
+        // the transforms dominate, and is never charged more at real sizes
+        for u in [64usize, 256, 2048, 1 << 16] {
+            let r = tile_rfft_flops(u, 1) as f64 / tile_fft_flops(u, 1) as f64;
+            assert!(r < 1.0, "u={u}: ratio={r}");
+        }
+        let asymptotic = tile_rfft_flops(1 << 20, 1) as f64 / tile_fft_flops(1 << 20, 1) as f64;
+        assert!(asymptotic < 0.6, "asymptotic ratio {asymptotic}");
+    }
+
+    #[test]
+    fn rfft_tile_cost_is_quasilinear() {
+        let small = tile_rfft_flops(2, 1) as f64 / tile_direct_flops(2, 1) as f64;
+        let large = tile_rfft_flops(2048, 1) as f64 / tile_direct_flops(2048, 1) as f64;
+        assert!(small > 1.0, "small={small}");
+        assert!(large < 0.1, "large={large}");
+    }
+
+    #[test]
+    fn flash_total_uses_rfft_model() {
+        // closed form == sum over the schedule of the rfft tile model
+        let (len, g, d) = (64usize, 3usize, 8usize);
+        let tiles: u64 = schedule::schedule(len).map(|t| tile_rfft_flops(t.u, d)).sum();
+        let want = (tiles + 2 * len as u64 * d as u64) * g as u64;
+        assert_eq!(flash_total_flops(len, g, d, true), want);
     }
 
     #[test]

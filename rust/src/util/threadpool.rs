@@ -6,22 +6,101 @@
 //! (1 core) the pool degenerates gracefully to inline execution; the
 //! topology and correctness are tested regardless.
 //!
-//! Implementation: `std::thread::scope` with work-stealing via a shared
-//! atomic counter — spawning a handful of scoped threads per fork-join is
-//! cheap relative to a gray tile, and borrow checking stays fully safe.
+//! Implementation: a *persistent* pool — `size` workers are spawned once
+//! (lazily, on the first parallel `scoped_for`) and parked on a condvar;
+//! each `scoped_for` call publishes one lifetime-erased job (work-stealing
+//! over a shared atomic counter) and blocks until every worker has checked
+//! in, so borrowed closures remain sound without per-call thread spawns.
+//! Gray tiles arrive every token, so the former spawn-per-call design paid
+//! an OS thread create/join per tile; the parked pool reduces that to a
+//! wake. Nested `scoped_for` on the same pool degrades to inline.
 
+use std::cell::Cell;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::thread;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::{self, JoinHandle};
 
-/// Fork-join executor with a fixed degree of parallelism.
+thread_local! {
+    /// Address of the [`Shared`] whose job the current thread is running
+    /// (0 outside pool workers). Lets a nested `scoped_for` on the *same*
+    /// pool degrade to inline execution instead of deadlocking on the
+    /// one-job-at-a-time submit lock.
+    static ACTIVE_POOL: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Fork-join executor with a fixed degree of parallelism and persistent
+/// workers.
 pub struct ThreadPool {
     size: usize,
+    /// Workers + coordination state, spawned lazily on the first parallel
+    /// `scoped_for` — constructing a pool (e.g. the two native impls inside
+    /// every `Hybrid`) stays free until it is actually exercised.
+    inner: OnceLock<Inner>,
+}
+
+struct Inner {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Serializes `scoped_for` calls: one job in flight at a time.
+    submit: Mutex<()>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The caller parks here until `active` drains to zero.
+    done: Condvar,
+}
+
+#[derive(Default)]
+struct State {
+    job: Option<Job>,
+    epoch: u64,
+    shutdown: bool,
+    /// Workers that have not yet finished the current job.
+    active: usize,
+    /// A worker closure panicked during the current job.
+    panicked: bool,
+}
+
+/// Lifetime-erased job description published to the workers.
+///
+/// SAFETY contract: the `'static` on `f` and `counter` is a lie — both
+/// borrow the `scoped_for` caller's stack. It is sound because
+/// `scoped_for` does not return until every worker has decremented
+/// `active` for this epoch (and workers never touch a job again after
+/// that), so no dereference outlives the frame.
+#[derive(Clone, Copy)]
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    counter: &'static AtomicUsize,
+    n: usize,
+    epoch: u64,
+}
+
+impl Inner {
+    fn spawn(size: usize) -> Inner {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (0..size)
+            .map(|_| {
+                let shared = shared.clone();
+                thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Inner { shared, workers, submit: Mutex::new(()) }
+    }
 }
 
 impl ThreadPool {
     /// `size == 0` requests inline execution (no threads spawned).
     pub fn new(size: usize) -> ThreadPool {
-        ThreadPool { size }
+        ThreadPool { size, inner: OnceLock::new() }
     }
 
     /// Sized to the machine (cores - 1; 0 ⇒ inline on a 1-core box).
@@ -35,7 +114,10 @@ impl ThreadPool {
     }
 
     /// Run `f(i)` for `i in 0..n` and wait for all. Parallel iff the pool
-    /// has workers and `n > 1`; otherwise inline, in order.
+    /// has workers and `n > 1`; otherwise inline, in order. One job runs at
+    /// a time: concurrent callers serialize, and a *nested* call from
+    /// inside a worker closure of this same pool runs inline (the workers
+    /// are all busy with the outer job anyway).
     pub fn scoped_for<F>(&self, n: usize, f: F)
     where
         F: Fn(usize) + Send + Sync,
@@ -49,25 +131,104 @@ impl ThreadPool {
             }
             return;
         }
-        let threads = self.size.min(n);
-        let counter = AtomicUsize::new(0);
-        thread::scope(|s| {
-            for _ in 0..threads {
-                s.spawn(|| loop {
-                    let i = counter.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    f(i);
-                });
+        let inner = self.inner.get_or_init(|| Inner::spawn(self.size));
+        if ACTIVE_POOL.with(Cell::get) == Arc::as_ptr(&inner.shared) as usize {
+            for i in 0..n {
+                f(i);
             }
-        });
+            return;
+        }
+
+        // poison-tolerant: a propagated worker panic unwinds through a
+        // prior caller while it held this guard; the pool itself is left
+        // consistent (the job was fully drained), so keep serving.
+        let _guard = inner.submit.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let counter = AtomicUsize::new(0);
+        // SAFETY: lifetime erasure per the `Job` contract — we block below
+        // until every worker has finished with these references.
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f_ref) };
+        let c_static: &'static AtomicUsize =
+            unsafe { std::mem::transmute::<&AtomicUsize, &'static AtomicUsize>(&counter) };
+
+        let mut st = inner.shared.state.lock().unwrap();
+        st.epoch += 1;
+        st.active = inner.workers.len();
+        st.panicked = false;
+        st.job = Some(Job { f: f_static, counter: c_static, n, epoch: st.epoch });
+        inner.shared.work.notify_all();
+        while st.active > 0 {
+            st = inner.shared.done.wait(st).unwrap();
+        }
+        st.job = None; // drop the erased borrows before the frame unwinds
+        let panicked = st.panicked;
+        drop(st);
+        if panicked {
+            panic!("worker closure panicked in ThreadPool::scoped_for");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            // workers exist only if a parallel scoped_for ran
+            {
+                let mut st = inner.shared.state.lock().unwrap();
+                st.shutdown = true;
+                inner.shared.work.notify_all();
+            }
+            for w in inner.workers {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                match st.job {
+                    Some(job) if job.epoch > last_epoch => break job,
+                    _ => st = shared.work.wait(st).unwrap(),
+                }
+            }
+        };
+        last_epoch = job.epoch;
+
+        ACTIVE_POOL.with(|c| c.set(shared as *const Shared as usize));
+        let mut hit_panic = false;
+        loop {
+            let i = job.counter.fetch_add(1, Ordering::Relaxed);
+            if i >= job.n {
+                break;
+            }
+            if panic::catch_unwind(AssertUnwindSafe(|| (job.f)(i))).is_err() {
+                hit_panic = true;
+                break; // stop stealing; surface on the caller below
+            }
+        }
+        ACTIVE_POOL.with(|c| c.set(0));
+
+        let mut st = shared.state.lock().unwrap();
+        st.panicked |= hit_panic;
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_one();
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
     use std::sync::Mutex;
 
     #[test]
@@ -109,6 +270,16 @@ mod tests {
     }
 
     #[test]
+    fn single_task_runs_inline() {
+        let pool = ThreadPool::new(2);
+        let caller = thread::current().id();
+        pool.scoped_for(1, |i| {
+            assert_eq!(i, 0);
+            assert_eq!(thread::current().id(), caller);
+        });
+    }
+
+    #[test]
     fn for_machine_constructs_and_runs() {
         let p = ThreadPool::for_machine();
         let hits = AtomicUsize::new(0);
@@ -116,5 +287,91 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn workers_are_reused_across_calls() {
+        // persistent pool: every index runs on one of the `size` parked
+        // workers, never on fresh threads and never on the caller — so two
+        // consecutive calls can only ever touch the same `size` thread ids
+        // (the old spawn-per-call design produced new ids each call).
+        let pool = ThreadPool::new(2);
+        let caller = thread::current().id();
+        let ids = Mutex::new(HashSet::new());
+        for _ in 0..2 {
+            pool.scoped_for(64, |_| {
+                ids.lock().unwrap().insert(thread::current().id());
+            });
+        }
+        let ids = ids.into_inner().unwrap();
+        assert!(!ids.is_empty());
+        assert!(ids.len() <= 2, "expected worker reuse, saw {} distinct threads", ids.len());
+        assert!(!ids.contains(&caller));
+    }
+
+    #[test]
+    fn many_consecutive_jobs_complete() {
+        // exercise the epoch/wakeup protocol across many quick jobs
+        let pool = ThreadPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.scoped_for(7, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 50 * 7);
+    }
+
+    #[test]
+    fn nested_scoped_for_runs_inline_not_deadlocking() {
+        // a nested call on the same pool from inside a worker closure must
+        // degrade to inline execution (all workers are busy with the outer
+        // job), not block on the submit lock
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.scoped_for(4, |_| {
+            pool.scoped_for(3, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn construction_spawns_no_threads_until_used() {
+        // pools are built eagerly all over (e.g. two per Hybrid) — they
+        // must stay free until a parallel scoped_for actually runs
+        let pool = ThreadPool::new(4);
+        assert!(pool.inner.get().is_none());
+        pool.scoped_for(1, |_| {}); // n == 1 stays inline
+        assert!(pool.inner.get().is_none());
+        pool.scoped_for(2, |_| {});
+        assert!(pool.inner.get().is_some());
+    }
+
+    #[test]
+    fn drop_joins_idle_workers() {
+        let pool = ThreadPool::new(2);
+        pool.scoped_for(4, |_| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(2);
+        let r = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_for(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // pool remains usable after a panicked job
+        let hits = AtomicUsize::new(0);
+        pool.scoped_for(4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
     }
 }

@@ -3,6 +3,7 @@
 
 use std::path::Path;
 
+use flash_inference::fft;
 use flash_inference::tau::{self, make_impl, CalibrationTable, RhoCache, TauImpl, TauKind};
 use flash_inference::tiling::Tile;
 use flash_inference::runtime::Runtime;
@@ -120,6 +121,38 @@ fn calibration_produces_complete_table() {
         assert_eq!(row.medians_ns.len(), 4);
         assert!(row.medians_ns.iter().all(|(_, ns)| *ns > 0.0));
         assert!(TauKind::ALL_FIXED.contains(&row.winner));
+    }
+}
+
+#[test]
+fn spectra_are_half_spectrum_planes() {
+    // the rho cache stores [M, U+1, D] half-spectrum planes: half the
+    // memory of the former [M, 2U, D] full planes, and bin-for-bin the
+    // content the PJRT @rho_re/@rho_im buffers are built from (bins [0, U]
+    // of the full order-2U filter-prefix DFT).
+    let Some(rt) = runtime() else { return };
+    let cache = RhoCache::new(&rt).expect("rho cache");
+    let d = rt.dims.d;
+    for u in [1usize, 4, 32] {
+        let spectra = cache.spectra(u);
+        let bins = u + 1;
+        assert_eq!(spectra.bins(), bins);
+        assert_eq!(spectra.re.len(), rt.dims.m * bins * d);
+        assert_eq!(spectra.im.len(), rt.dims.m * bins * d);
+
+        let full_plan = fft::Plan::new(2 * u);
+        let tol = 1e-3 * (u as f32).sqrt();
+        for m in 0..rt.dims.m {
+            let (full_re, full_im) = fft::spectrum_planes(&full_plan, cache.seg(m, u), d);
+            let (hre, him) = spectra.planes(m);
+            assert_eq!(hre.len(), bins * d);
+            for k in 0..bins * d {
+                assert!(
+                    (hre[k] - full_re[k]).abs() < tol && (him[k] - full_im[k]).abs() < tol,
+                    "u={u} m={m} k={k}"
+                );
+            }
+        }
     }
 }
 
