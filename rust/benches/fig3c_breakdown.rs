@@ -4,7 +4,14 @@
 //! dispatch overhead (GPU kernel launch there, PJRT execute here) becomes
 //! the visible cost — the non-mixer share grows.
 //!
-//! Knobs: FI_ARTIFACTS_SYN, FI_MAX_LEN.
+//! Extended for the deadline-fenced executor: the sync rows pin every
+//! gray tile to the critical path (the paper's original accounting); the
+//! async rows run the same tau on the executor worker and report how much
+//! of it the fence re-exposed (`fence_ms`) vs hid behind the red path
+//! (`hidden_ms`). `total_ms` is always critical-path time, so
+//! sync-vs-async rows are directly comparable.
+//!
+//! Knobs: FI_ARTIFACTS_SYN, FI_MAX_LEN, FI_SPLIT_MIN_U.
 
 use flash_inference::engine::{Engine, EngineOpts, Method};
 use flash_inference::runtime::Runtime;
@@ -20,35 +27,66 @@ fn main() -> anyhow::Result<()> {
     };
     let rt = Runtime::load(&dir)?;
     let len = benchkit::env_usize("FI_MAX_LEN", rt.dims.l.min(2048));
+    let split_u = benchkit::env_usize("FI_SPLIT_MIN_U", 64);
 
     println!("\n=== Fig 3c: e2e cumulative breakdown, mixer vs non-mixer (L={len}) ===\n");
 
-    let settings: Vec<(&str, Method, TauKind)> = vec![
-        ("lazy", Method::Lazy, TauKind::RustDirect),
-        ("eager", Method::Eager, TauKind::RustDirect),
-        ("pjrt-direct", Method::Flash, TauKind::PjrtDirect),
-        ("pjrt-fft", Method::Flash, TauKind::PjrtFft),
-        ("rust-direct", Method::Flash, TauKind::RustDirect),
-        ("rust-fft", Method::Flash, TauKind::RustFft),
-        ("hybrid", Method::Flash, TauKind::Hybrid),
+    struct Setting {
+        name: &'static str,
+        method: Method,
+        tau: TauKind,
+        async_mixer: bool,
+        split_min_u: usize,
+    }
+    let row = |name, method, tau, async_mixer, split_min_u| Setting {
+        name,
+        method,
+        tau,
+        async_mixer,
+        split_min_u,
+    };
+    let settings = vec![
+        row("lazy", Method::Lazy, TauKind::RustDirect, false, 0),
+        row("eager", Method::Eager, TauKind::RustDirect, false, 0),
+        row("pjrt-direct", Method::Flash, TauKind::PjrtDirect, false, 0),
+        row("pjrt-fft", Method::Flash, TauKind::PjrtFft, false, 0),
+        row("rust-direct", Method::Flash, TauKind::RustDirect, false, 0),
+        row("rust-fft", Method::Flash, TauKind::RustFft, false, 0),
+        row("hybrid", Method::Flash, TauKind::Hybrid, false, 0),
+        // deadline-fenced executor: same tau FLOPs, off the critical path
+        row("rust-direct+async", Method::Flash, TauKind::RustDirect, true, 0),
+        row("rust-fft+async", Method::Flash, TauKind::RustFft, true, 0),
+        row("rust-fft+async+split", Method::Flash, TauKind::RustFft, true, split_u),
     ];
 
     let mut table = Table::new(&[
-        "method", "total_ms", "mixer_ms", "step_ms", "sample_ms", "mixer_%", "non_mixer_%",
+        "method", "total_ms", "mixer_ms", "fence_ms", "hidden_ms", "step_ms", "sample_ms",
+        "mixer_%", "non_mixer_%",
     ]);
-    for (name, method, tau) in settings {
-        let mut eng = Engine::new(&rt, EngineOpts { method, tau, ..Default::default() })?;
+    for s in settings {
+        let mut eng = Engine::new(
+            &rt,
+            EngineOpts {
+                method: s.method,
+                tau: s.tau,
+                async_mixer: s.async_mixer,
+                split_min_u: s.split_min_u,
+                ..Default::default()
+            },
+        )?;
         eng.prewarm(len)?;
         eng.generate(len)?; // warmup
         let out = eng.generate(len)?;
         let t = &out.metrics.totals;
         table.row(vec![
-            name.to_string(),
+            s.name.to_string(),
             format!("{:.1}", t.total_ns() / 1e6),
             format!("{:.1}", t.mixer_ns / 1e6),
+            format!("{:.2}", t.fence_ns / 1e6),
+            format!("{:.2}", t.hidden_mixer_ns() / 1e6),
             format!("{:.1}", t.step_ns / 1e6),
             format!("{:.2}", t.sample_ns / 1e6),
-            format!("{:.1}", 100.0 * t.mixer_ns / t.total_ns()),
+            format!("{:.1}", 100.0 * (t.mixer_ns + t.fence_ns) / t.total_ns()),
             format!("{:.1}", 100.0 * t.non_mixer_ns() / t.total_ns()),
         ]);
     }
@@ -56,7 +94,9 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nnote: tiling methods expose the per-step dispatch overhead (paper §5.3's \
          CPU-dispatch observation) — the non-mixer share dominates once mixer \
-         work is quasilinear."
+         work is quasilinear. The async rows then take most of the remaining \
+         mixer time off the critical path: `hidden_ms` is tau compute that ran \
+         under the red step, `fence_ms` the residue the deadline could not hide."
     );
     table.write_csv("fig3c_breakdown")?;
     Ok(())

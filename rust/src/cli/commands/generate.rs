@@ -68,10 +68,20 @@ pub fn run(argv: &[String]) -> Result<i32> {
         fmt_ns(m.totals.sample_ns),
     );
     println!(
-        "throughput: {:.1} tok/s | mixer share {:.1}%",
+        "throughput: {:.1} tok/s | critical-path mixer share {:.1}%",
         out.steps as f64 / m.wall.as_secs_f64(),
         100.0 * m.totals.mixer_ns / m.totals.total_ns()
     );
+    if m.totals.tau_worker_ns > 0.0 {
+        // async executor ran: show how much tau left the critical path
+        println!(
+            "async mixer: {} on worker, fence-wait {} exposed, {} hidden ({:.1}% of tau compute)",
+            fmt_ns(m.totals.tau_worker_ns),
+            fmt_ns(m.totals.fence_ns),
+            fmt_ns(m.totals.hidden_mixer_ns()),
+            100.0 * m.totals.hidden_mixer_ns() / m.totals.mixer_total_ns().max(1.0),
+        );
+    }
     if let Some(tokens) = &out.tokens {
         let prefix: Vec<String> =
             tokens[0].iter().take(16).map(|t| t.to_string()).collect();

@@ -35,7 +35,14 @@ impl Default for ServerConfig {
             batch_window_ms: 5,
             default_max_tokens: 256,
             max_max_tokens: 4096,
-            engine: EngineOpts::default(),
+            engine: EngineOpts {
+                // serving opt-in: bound the per-position checksum ring so
+                // long-lived streaming sessions cannot grow without limit
+                // (library/test default stays unbounded); sized to the
+                // largest request the server admits
+                checksum_history: 4096,
+                ..EngineOpts::default()
+            },
         }
     }
 }
@@ -92,6 +99,15 @@ impl ServerConfig {
             if let Some(v) = e.get("seed").and_then(Json::as_i64) {
                 self.engine.seed = v as u64;
             }
+            if let Some(v) = e.get("async_mixer").and_then(Json::as_bool) {
+                self.engine.async_mixer = v;
+            }
+            if let Some(v) = e.get("split_min_u").and_then(Json::as_usize) {
+                self.engine.split_min_u = v;
+            }
+            if let Some(v) = e.get("checksum_history").and_then(Json::as_usize) {
+                self.engine.checksum_history = v;
+            }
         }
         Ok(())
     }
@@ -118,6 +134,12 @@ impl ServerConfig {
         self.engine.temperature = a.get_f32("temperature", self.engine.temperature)?;
         self.engine.top_k = a.get_usize("top-k", self.engine.top_k)?;
         self.engine.seed = a.get_u64("seed", self.engine.seed)?;
+        if a.has("sync-mixer") {
+            self.engine.async_mixer = false;
+        }
+        self.engine.split_min_u = a.get_usize("split-min-u", self.engine.split_min_u)?;
+        self.engine.checksum_history =
+            a.get_usize("checksum-history", self.engine.checksum_history)?;
         Ok(())
     }
 
@@ -166,6 +188,39 @@ mod tests {
         // json-set value survives when no flag overrides it
         assert!((cfg.engine.temperature - 0.5).abs() < 1e-6);
         assert_eq!(cfg.bind_addr(), "127.0.0.1:7071");
+    }
+
+    #[test]
+    fn async_mixer_keys_layer_correctly() {
+        let mut cfg = ServerConfig::default();
+        // serving default: async on, bounded checksum ring
+        assert!(cfg.engine.async_mixer);
+        assert_eq!(cfg.engine.checksum_history, 4096);
+        let j = Json::parse(
+            r#"{"engine": {"async_mixer": false, "split_min_u": 64,
+                "checksum_history": 128}}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert!(!cfg.engine.async_mixer);
+        assert_eq!(cfg.engine.split_min_u, 64);
+        assert_eq!(cfg.engine.checksum_history, 128);
+
+        let schema = Schema::new()
+            .switch("sync-mixer", "")
+            .value("split-min-u", "")
+            .value("checksum-history", "");
+        let a = schema
+            .parse(&["--split-min-u".to_string(), "32".to_string()])
+            .unwrap();
+        let mut cfg2 = ServerConfig::default();
+        cfg2.apply_args(&a).unwrap();
+        assert!(cfg2.engine.async_mixer, "no --sync-mixer flag given");
+        assert_eq!(cfg2.engine.split_min_u, 32);
+
+        let a = schema.parse(&["--sync-mixer".to_string()]).unwrap();
+        cfg2.apply_args(&a).unwrap();
+        assert!(!cfg2.engine.async_mixer);
     }
 
     #[test]

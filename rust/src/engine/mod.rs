@@ -32,7 +32,7 @@ use anyhow::{bail, Context, Result};
 
 pub use sampler::{Sampler, SamplerCfg};
 pub use session::{Session, SessionInit, StepOutput};
-pub use store::Store;
+pub use store::{RowReadiness, Store};
 
 use crate::metrics::SessionMetrics;
 use crate::model::Variant;
@@ -90,6 +90,23 @@ pub struct EngineOpts {
     /// Appendix D: store only M x (L/2) x D activations by reusing the
     /// first half's rows for the second half (Flash method only).
     pub half_store: bool,
+    /// Run gray tiles on the deadline-fenced async executor (native τ
+    /// kinds only; PJRT-backed kinds — including Hybrid — stay
+    /// synchronous because PJRT handles cannot leave the engine thread).
+    /// On by default; force off to pin every tile to the critical path.
+    pub async_mixer: bool,
+    /// Async split-tile threshold: tiles with U >= this are split into an
+    /// urgent first column (computed at submission by a direct kernel)
+    /// plus a relaxed remainder with a one-step-later deadline. 0 (the
+    /// default) disables splitting, keeping async output bit-identical
+    /// to sync output.
+    pub split_min_u: usize,
+    /// Per-position checksums retained in `GenOutput::outs_checksum` (a
+    /// ring of the last K values). `usize::MAX` (the default) keeps the
+    /// full history; serving bounds it so month-long streaming sessions
+    /// cannot grow without limit. The running total survives regardless
+    /// as `GenOutput::checksum_total`.
+    pub checksum_history: usize,
 }
 
 impl Default for EngineOpts {
@@ -104,6 +121,9 @@ impl Default for EngineOpts {
             seed: 0,
             record_streams: false,
             half_store: false,
+            async_mixer: true,
+            split_min_u: 0,
+            checksum_history: usize::MAX,
         }
     }
 }
@@ -116,8 +136,12 @@ pub struct GenOutput {
     pub tokens: Option<Vec<Vec<u32>>>,
     /// The step artifact's `out` at the last position (`[B, W]`).
     pub last_out: Vec<f32>,
-    /// Per-position checksum of `out` (cheap whole-trajectory equality).
+    /// Per-position checksum of `out` (cheap whole-trajectory equality) —
+    /// the last `EngineOpts::checksum_history` positions.
     pub outs_checksum: Vec<f32>,
+    /// Running sum of every per-position checksum, bounded retention or
+    /// not (f64 so long sessions don't lose low bits to cancellation).
+    pub checksum_total: f64,
     /// f32 values resident in the activation store (Appendix D accounting).
     pub resident_values: usize,
     pub metrics: SessionMetrics,
@@ -327,5 +351,10 @@ mod tests {
         assert_eq!(o.method, Method::Flash);
         assert_eq!(o.tau, TauKind::Hybrid);
         assert_eq!(o.sample_sigma, 0.0);
+        // async execution is the default for the native flash path, but
+        // with splitting off (bit-identical numerics) and full history
+        assert!(o.async_mixer);
+        assert_eq!(o.split_min_u, 0);
+        assert_eq!(o.checksum_history, usize::MAX);
     }
 }

@@ -6,10 +6,21 @@
 //! [`Session`] that advances exactly one position per [`Session::step`]
 //! call:
 //!
-//! 1. pending-column gather (lazy recomputes it, Appendix D wraps it),
-//! 2. the PJRT `step` artifact (red cells + blocks + head),
-//! 3. sampling / teacher forcing into the next `a0`,
-//! 4. the gray tile `Tile::at(i)` (or the eager push).
+//! 1. host→device upload of the *fence-independent* inputs (`a0`, the
+//!    short-conv state) — async τ tiles keep running underneath;
+//! 2. fence: wait for any in-flight gray tile writing pending column `i`
+//!    (no-op for synchronous τ), then gather the column (lazy recomputes
+//!    it, Appendix D wraps it);
+//! 3. the PJRT `step` artifact (red cells + blocks + head);
+//! 4. *submit* the gray tile `Tile::at(i)` the moment the streams column
+//!    is stored (or run the eager push) — under the async executor the
+//!    tile overlaps everything below plus the next call's phase 1;
+//! 5. sampling / teacher forcing into the next `a0`, token bookkeeping,
+//!    metrics.
+//!
+//! The fence sits immediately before `gather_pending_col(i+1)` — the
+//! first point where `z[i+1]` is truly needed — so the τ deadline is as
+//! late as the availability invariant allows (DESIGN.md §Pipelining).
 //!
 //! `Engine::generate*` are thin drivers (`while !done { step() }` then
 //! [`Session::finish`]), so the flash/lazy/eager methods, `half_store`,
@@ -20,6 +31,7 @@
 //! amortized O(log² L) per-token cost only pays off for serving if tokens
 //! can leave the engine per position instead of per rollout.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -27,7 +39,7 @@ use anyhow::{bail, Result};
 use crate::metrics::{Breakdown, SessionMetrics};
 use crate::model::Variant;
 use crate::runtime::Runtime;
-use crate::tau::{make_impl, TauImpl};
+use crate::tau::{make_session_impl, TauExecCfg, TauImpl};
 use crate::tiling::{FlopCounter, Tile};
 
 use super::{eager, lazy, Engine, GenOutput, Method, Sampler, Store};
@@ -61,6 +73,16 @@ pub struct StepOutput {
     pub done: bool,
 }
 
+/// Persistent per-step staging scratch (no per-token reallocation on the
+/// paths we control; the PJRT binding's `$`-input buffers and literal
+/// fetches still allocate inside `xla-rs` — this struct is the single
+/// place a zero-copy fetch would land).
+#[derive(Default)]
+struct StepStage {
+    /// `[G, D]` streams-column fetch target.
+    streams_col: Vec<f32>,
+}
+
 /// One in-flight generation session over a borrowed [`Engine`].
 pub struct Session<'e, 'rt> {
     engine: &'e Engine<'rt>,
@@ -70,6 +92,10 @@ pub struct Session<'e, 'rt> {
     /// Appendix D wrapped-store mode (rows = len/2).
     half: bool,
     rows: usize,
+    /// τ executor. Declared before `store`: struct fields drop in
+    /// declaration order, so the executor (whose async tiles hold raw
+    /// pointers into the store) drains its queue before the store frees.
+    tau: Option<Box<dyn TauImpl + 'e>>,
     store: Store,
     sampler: Sampler,
     a0: Vec<f32>,
@@ -77,13 +103,17 @@ pub struct Session<'e, 'rt> {
     sc_dims: [usize; 4],
     forced: Option<Vec<f32>>,
     forced_steps: usize,
-    tau: Option<Box<dyn TauImpl + 'e>>,
     metrics: SessionMetrics,
     flops: FlopCounter,
     tokens: Option<Vec<Vec<u32>>>,
     pend_col: Vec<f32>,
+    stage: StepStage,
     last_out: Vec<f32>,
-    outs_checksum: Vec<f32>,
+    /// Ring of the last `checksum_history` per-position checksums.
+    outs_checksum: VecDeque<f32>,
+    checksum_history: usize,
+    /// Running sum over *all* positions (survives ring eviction).
+    checksum_total: f64,
     wall0: Instant,
 }
 
@@ -133,7 +163,13 @@ impl<'e, 'rt> Session<'e, 'rt> {
         let forced_steps = init.forced.as_ref().map(|f| f.len() / (b * d)).unwrap_or(0);
 
         let tau = if opts.method == Method::Flash {
-            Some(make_impl(opts.tau, &engine.cache, opts.threads)?)
+            let exec = TauExecCfg {
+                async_mixer: opts.async_mixer,
+                split_min_u: opts.split_min_u,
+            };
+            let mut imp = make_session_impl(opts.tau, &engine.cache, opts.threads, exec)?;
+            imp.attach_readiness(store.readiness());
+            Some(imp)
         } else {
             None
         };
@@ -154,6 +190,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
             pos: 0,
             half,
             rows,
+            tau,
             store,
             sampler,
             a0: init.a0,
@@ -161,13 +198,15 @@ impl<'e, 'rt> Session<'e, 'rt> {
             sc_dims: [dims.ops(), 2, b, 3 * d],
             forced: init.forced,
             forced_steps,
-            tau,
             metrics: SessionMetrics::with_capacity(len),
             flops: FlopCounter::new(),
             tokens,
             pend_col: Vec::with_capacity(g * d),
+            stage: StepStage::default(),
             last_out: Vec::new(),
-            outs_checksum: Vec::with_capacity(len),
+            outs_checksum: VecDeque::with_capacity(len.min(opts.checksum_history)),
+            checksum_history: opts.checksum_history,
+            checksum_total: 0.0,
             wall0,
         })
     }
@@ -191,8 +230,9 @@ impl<'e, 'rt> Session<'e, 'rt> {
         &self.last_out
     }
 
-    /// Advance one position: pending-column gather → `step` artifact →
-    /// sample → gray tile. Errors once the session is complete.
+    /// Advance one position: upload → fence → pending-column gather →
+    /// `step` artifact → submit gray tile → sample. Errors once the
+    /// session is complete.
     pub fn step(&mut self) -> Result<StepOutput> {
         if self.pos >= self.len {
             bail!("session complete: all {} positions generated", self.len);
@@ -206,6 +246,26 @@ impl<'e, 'rt> Session<'e, 'rt> {
         let rows = self.rows;
         let row_of = |pos1: usize| (pos1 - 1) % rows; // 1-indexed -> store row
         let mut bd = Breakdown::default();
+
+        // ---- fence-independent uploads first: `a0` (and the short-conv
+        // state) were finalized by the previous step's sampler, so their
+        // host→device copies run while async gray tiles are still flying
+        let t0 = Instant::now();
+        let ab = rt.upload(&self.a0, &[b, d])?;
+        let scb = self
+            .scstate
+            .as_ref()
+            .map(|sc| rt.upload(sc, &self.sc_dims))
+            .transpose()?;
+        let upload_ns = t0.elapsed().as_nanos() as f64;
+
+        // ---- fence: the deadline for every tile writing pending col i.
+        // Sits immediately before the gather — the first true consumer of
+        // z[i] — so tau(i-1) had the whole upload above to hide behind.
+        if let Some(tau) = self.tau.as_mut() {
+            let fs = tau.fence(row_of(i) + 1)?;
+            bd.fence_ns = fs.wait_ns as f64;
+        }
 
         // ---- pending column (lazy recomputes; others read the store)
         let t0 = Instant::now();
@@ -235,43 +295,30 @@ impl<'e, 'rt> Session<'e, 'rt> {
         // ---- step: red cells + blocks + head (PJRT)
         let t0 = Instant::now();
         let pb = rt.upload(&self.pend_col, &[dims.m, b, d])?;
-        let ab = rt.upload(&self.a0, &[b, d])?;
-        let outs = match &self.scstate {
+        let outs = match &scb {
             None => engine.step_artifact().call(&[&pb, &ab])?,
-            Some(sc) => {
-                let scb = rt.upload(sc, &self.sc_dims)?;
-                engine.step_artifact().call(&[&pb, &ab, &scb])?
-            }
+            Some(scb) => engine.step_artifact().call(&[&pb, &ab, scb])?,
         };
-        let streams_col = Runtime::literal_to_vec(&outs[0], g * d)?;
-        self.store.set_streams_col(row_of(i), &streams_col);
+        self.stage.streams_col = Runtime::literal_to_vec(&outs[0], g * d)?;
+        self.store.set_streams_col(row_of(i), &self.stage.streams_col);
         self.last_out = Runtime::literal_to_vec(&outs[1], b * dims.out_width())?;
         let checksum: f32 = self.last_out.iter().sum();
-        self.outs_checksum.push(checksum);
+        self.checksum_total += checksum as f64;
+        if self.outs_checksum.len() == self.checksum_history {
+            self.outs_checksum.pop_front();
+        }
+        if self.checksum_history > 0 {
+            self.outs_checksum.push_back(checksum);
+        }
         if let Some(sc) = self.scstate.as_mut() {
             *sc = Runtime::literal_to_vec(&outs[2], sc.len())?;
         }
         self.flops.record_red(2 * g as u64 * d as u64); // red cells proper
-        bd.step_ns = t0.elapsed().as_nanos() as f64;
+        bd.step_ns = upload_ns + t0.elapsed().as_nanos() as f64;
 
-        // ---- next input: teacher-forced or sampled
-        let t0 = Instant::now();
-        let mut step_tokens: Option<Vec<u32>> = None;
-        if i < self.forced_steps {
-            let stride = b * d;
-            self.a0
-                .copy_from_slice(&self.forced.as_ref().unwrap()[i * stride..(i + 1) * stride]);
-        } else if let Some(toks) = self.sampler.next_a0(&self.last_out, b, &mut self.a0)? {
-            if let Some(all) = self.tokens.as_mut() {
-                for (bi, t) in toks.iter().enumerate() {
-                    all[bi].push(*t);
-                }
-            }
-            step_tokens = Some(toks);
-        }
-        bd.sample_ns = t0.elapsed().as_nanos() as f64;
-
-        // ---- gray work
+        // ---- gray work, launched the moment the streams column exists:
+        // under the async executor the tile overlaps the sampling below,
+        // the caller's token handling, and the next step's uploads
         if i < self.len {
             let t0 = Instant::now();
             match opts.method {
@@ -295,7 +342,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
                         tile
                     };
                     let imp = self.tau.as_mut().unwrap();
-                    imp.apply(&self.store.streams, &mut self.store.pending, tile)?;
+                    imp.submit(&self.store.streams, &mut self.store.pending, tile)?;
                     self.flops.record_tau(
                         tile.u,
                         imp.tile_flops(tile.u, g, d),
@@ -319,6 +366,30 @@ impl<'e, 'rt> Session<'e, 'rt> {
             }
         }
 
+        // ---- next input: teacher-forced or sampled (overlapped work)
+        let t0 = Instant::now();
+        let mut step_tokens: Option<Vec<u32>> = None;
+        if i < self.forced_steps {
+            let stride = b * d;
+            self.a0
+                .copy_from_slice(&self.forced.as_ref().unwrap()[i * stride..(i + 1) * stride]);
+        } else if let Some(toks) = self.sampler.next_a0(&self.last_out, b, &mut self.a0)? {
+            if let Some(all) = self.tokens.as_mut() {
+                for (bi, t) in toks.iter().enumerate() {
+                    all[bi].push(*t);
+                }
+            }
+            step_tokens = Some(toks);
+        }
+        bd.sample_ns = t0.elapsed().as_nanos() as f64;
+
+        // worker-side tau ns drained here lands on the step that observed
+        // the completion (one position after submission at the latest —
+        // totals are exact, per-token attribution shifts by ≤ 1 token)
+        if let Some(tau) = self.tau.as_mut() {
+            bd.tau_worker_ns = tau.take_worker_ns() as f64;
+        }
+
         self.metrics.push(bd);
         self.pos = i;
         Ok(StepOutput { pos: i, tokens: step_tokens, checksum, done: self.pos == self.len })
@@ -328,12 +399,22 @@ impl<'e, 'rt> Session<'e, 'rt> {
     /// `is_done`) is allowed — `steps` reports the positions actually
     /// generated — so serving lanes can abandon a session cleanly.
     pub fn finish(mut self) -> GenOutput {
+        // drain in-flight async tiles before reading the store (their jobs
+        // hold raw pointers into it); residual worker time folds into the
+        // session totals so hidden-time accounting stays complete
+        if let Some(tau) = self.tau.as_mut() {
+            if let Ok(fs) = tau.fence_all() {
+                self.metrics.totals.fence_ns += fs.wait_ns as f64;
+            }
+            self.metrics.totals.tau_worker_ns += tau.take_worker_ns() as f64;
+        }
         self.metrics.wall = self.wall0.elapsed();
         GenOutput {
             steps: self.pos,
             tokens: self.tokens,
             last_out: self.last_out,
-            outs_checksum: self.outs_checksum,
+            outs_checksum: self.outs_checksum.into_iter().collect(),
+            checksum_total: self.checksum_total,
             resident_values: self.store.resident_values(),
             metrics: self.metrics,
             flops: self.flops,

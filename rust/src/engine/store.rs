@@ -11,12 +11,77 @@
 //! into the streams column, so `b` never exists beyond one column. Peak
 //! memory accounting (`peak_scratch_values`) backs the Appendix D/E claims.
 
+use std::ops::Range;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
 use crate::util::tensor::Tensor;
+
+/// Row-level readiness tracking for the pending tensor under concurrent
+/// writers (the async tau executor's deadline-fenced tiles).
+///
+/// Each store row carries a count of in-flight writers: the session (or
+/// executor) `begin`s the destination rows when it submits a tile and the
+/// job `end`s them when its accumulation lands. Consuming a pending
+/// column is only legal on a *quiet* row — [`Store::gather_pending_col`]
+/// asserts it — which turns a missed fence (the failure mode the
+/// Appendix D half-store wrap makes easiest to hit, since rows are
+/// recycled between the two halves) into a deterministic panic instead of
+/// silently corrupted activations.
+///
+/// `Arc`-shared and atomic so detached jobs can check rows out/in without
+/// borrowing the store.
+#[derive(Debug)]
+pub struct RowReadiness {
+    writers: Vec<AtomicU32>,
+}
+
+impl RowReadiness {
+    pub fn new(rows: usize) -> RowReadiness {
+        RowReadiness { writers: (0..rows).map(|_| AtomicU32::new(0)).collect() }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.writers.len()
+    }
+
+    /// Mark `rows` (0-indexed, half-open) as having one more in-flight
+    /// writer. Called at submission time, before the job can run.
+    pub fn begin_write(&self, rows: Range<usize>) {
+        for r in rows {
+            self.writers[r].fetch_add(1, Ordering::Release);
+        }
+    }
+
+    /// Retire one in-flight writer from `rows`. Called by the job after
+    /// its accumulation landed.
+    pub fn end_write(&self, rows: Range<usize>) {
+        for r in rows {
+            let prev = self.writers[r].fetch_sub(1, Ordering::Release);
+            debug_assert!(prev > 0, "end_write on quiet row {r}");
+        }
+    }
+
+    /// No in-flight writer covers `row`.
+    pub fn is_quiet(&self, row: usize) -> bool {
+        self.writers[row].load(Ordering::Acquire) == 0
+    }
+
+    /// Panic if `row` still has in-flight writers — the caller is about
+    /// to consume a column whose fence did not drain.
+    pub fn assert_quiet(&self, row: usize) {
+        let n = self.writers[row].load(Ordering::Acquire);
+        assert!(n == 0, "store row {row} consumed with {n} in-flight writer(s) — missing fence");
+    }
+}
 
 /// Per-session activation state.
 pub struct Store {
     pub streams: Tensor,
     pub pending: Tensor,
+    /// In-flight-writer tracking for `pending` rows (shared with any
+    /// asynchronous tau executor working on this store).
+    readiness: Arc<RowReadiness>,
     g: usize,
     t: usize,
     d: usize,
@@ -27,6 +92,7 @@ impl Store {
         Store {
             streams: Tensor::zeros(&[g, t, d]),
             pending: Tensor::zeros(&[g, t, d]),
+            readiness: Arc::new(RowReadiness::new(t)),
             g,
             t,
             d,
@@ -37,9 +103,16 @@ impl Store {
         (self.g, self.t, self.d)
     }
 
+    /// Shared handle to this store's row-readiness tracker.
+    pub fn readiness(&self) -> Arc<RowReadiness> {
+        self.readiness.clone()
+    }
+
     /// Gather `pending[:, col, :]` into `buf` (`[G, D]`; with `g = m·B+b`
     /// this is exactly the `[M, B, D]` layout the step artifact expects).
+    /// The column's row must be quiet (every tile writing it fenced).
     pub fn gather_pending_col(&self, col: usize, buf: &mut Vec<f32>) {
+        self.readiness.assert_quiet(col);
         buf.resize(self.g * self.d, 0.0);
         for gi in 0..self.g {
             buf[gi * self.d..(gi + 1) * self.d].copy_from_slice(self.pending.at2(gi, col));
@@ -87,5 +160,49 @@ mod tests {
     fn resident_accounting() {
         let s = Store::new(6, 8, 4);
         assert_eq!(s.resident_values(), 2 * 6 * 8 * 4);
+    }
+
+    #[test]
+    fn readiness_tracks_overlapping_writers() {
+        let r = RowReadiness::new(8);
+        assert!(r.is_quiet(3));
+        r.begin_write(2..6);
+        r.begin_write(4..8); // overlap on rows 4, 5
+        assert!(!r.is_quiet(2));
+        assert!(!r.is_quiet(5));
+        r.end_write(2..6);
+        assert!(r.is_quiet(2));
+        assert!(!r.is_quiet(5), "row 5 still has the second writer");
+        r.end_write(4..8);
+        for row in 0..8 {
+            assert!(r.is_quiet(row));
+        }
+    }
+
+    #[test]
+    fn gather_on_unfenced_row_panics() {
+        let s = Store::new(2, 4, 2);
+        let r = s.readiness();
+        r.begin_write(1..3);
+        let mut buf = Vec::new();
+        s.gather_pending_col(0, &mut buf); // quiet row: fine
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut b = Vec::new();
+            s.gather_pending_col(2, &mut b);
+        }));
+        assert!(res.is_err(), "consuming an in-flight row must panic");
+        r.end_write(1..3);
+        s.gather_pending_col(2, &mut buf);
+    }
+
+    #[test]
+    fn readiness_is_shared_across_clones() {
+        let s = Store::new(1, 4, 1);
+        let a = s.readiness();
+        let b = s.readiness();
+        a.begin_write(0..1);
+        assert!(!b.is_quiet(0));
+        b.end_write(0..1);
+        assert!(a.is_quiet(0));
     }
 }

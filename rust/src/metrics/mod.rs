@@ -9,29 +9,55 @@ use std::time::Duration;
 
 /// Per-generation-session timing breakdown.
 ///
-/// * `mixer` — gray-tile τ work (+ lazy/eager pending accumulation in the
-///   baselines): what Fig 2b/3b isolate;
+/// * `mixer` — gray-tile τ work *on the critical path*: the synchronous τ
+///   call (or lazy/eager pending accumulation), plus — under the async
+///   executor — the submission cost and the urgent split-tile column;
+/// * `fence` — critical-path stall waiting for asynchronously submitted τ
+///   tiles to land (the *exposed* part of the async mixer cost);
+/// * `tau_worker` — async τ compute spent on the executor worker, off the
+///   critical path (the overlap candidate; `hidden_mixer_ns` is the part
+///   that actually hid behind red-path work);
 /// * `step` — red cells + blocks + head (the PJRT `step` call and its
 ///   staging);
 /// * `sample` — token sampling + re-embedding.
+///
+/// `total_ns` is the critical-path time (`tau_worker` excluded); the
+/// sync path has `fence == tau_worker == 0`, so its totals are unchanged.
 #[derive(Debug, Default, Clone)]
 pub struct Breakdown {
     pub mixer_ns: f64,
+    pub fence_ns: f64,
+    pub tau_worker_ns: f64,
     pub step_ns: f64,
     pub sample_ns: f64,
 }
 
 impl Breakdown {
+    /// Critical-path time of the position (off-path worker time excluded).
     pub fn total_ns(&self) -> f64 {
-        self.mixer_ns + self.step_ns + self.sample_ns
+        self.mixer_ns + self.fence_ns + self.step_ns + self.sample_ns
     }
 
     pub fn non_mixer_ns(&self) -> f64 {
         self.step_ns + self.sample_ns
     }
 
+    /// All mixer compute, wherever it ran (critical path + worker) — the
+    /// quantity Fig 2b/3b plot, invariant to sync-vs-async execution.
+    pub fn mixer_total_ns(&self) -> f64 {
+        self.mixer_ns + self.fence_ns + self.tau_worker_ns
+    }
+
+    /// Worker-side τ time that the fence did *not* expose — mixer work
+    /// genuinely overlapped with (hidden behind) the red critical path.
+    pub fn hidden_mixer_ns(&self) -> f64 {
+        (self.tau_worker_ns - self.fence_ns).max(0.0)
+    }
+
     pub fn add(&mut self, other: &Breakdown) {
         self.mixer_ns += other.mixer_ns;
+        self.fence_ns += other.fence_ns;
+        self.tau_worker_ns += other.tau_worker_ns;
         self.step_ns += other.step_ns;
         self.sample_ns += other.sample_ns;
     }
@@ -56,13 +82,16 @@ impl SessionMetrics {
         self.per_token.push(b);
     }
 
-    /// Cumulative mixer time series (Fig 2b / 3b y-axis).
+    /// Cumulative mixer time series (Fig 2b / 3b y-axis). Uses
+    /// [`Breakdown::mixer_total_ns`] so the series measures mixer FLOPs
+    /// regardless of whether they ran on the critical path or were hidden
+    /// on the async executor worker.
     pub fn cumulative_mixer_ns(&self) -> Vec<f64> {
         let mut acc = 0.0;
         self.per_token
             .iter()
             .map(|b| {
-                acc += b.mixer_ns;
+                acc += b.mixer_total_ns();
                 acc
             })
             .collect()
@@ -126,12 +155,41 @@ mod tests {
     #[test]
     fn breakdown_sums() {
         let mut m = SessionMetrics::with_capacity(2);
-        m.push(Breakdown { mixer_ns: 10.0, step_ns: 5.0, sample_ns: 1.0 });
-        m.push(Breakdown { mixer_ns: 20.0, step_ns: 5.0, sample_ns: 1.0 });
+        m.push(Breakdown { mixer_ns: 10.0, step_ns: 5.0, sample_ns: 1.0, ..Default::default() });
+        m.push(Breakdown { mixer_ns: 20.0, step_ns: 5.0, sample_ns: 1.0, ..Default::default() });
         assert_eq!(m.totals.total_ns(), 42.0);
         assert_eq!(m.totals.non_mixer_ns(), 12.0);
         assert_eq!(m.cumulative_mixer_ns(), vec![10.0, 30.0]);
         assert_eq!(m.token_latencies_ns(), vec![16.0, 26.0]);
+    }
+
+    #[test]
+    fn async_breakdown_splits_exposed_and_hidden() {
+        // async step: 2ns submit+urgent on path, 3ns fence stall, 9ns of
+        // worker-side tau, 5ns red step, 1ns sampling
+        let b = Breakdown {
+            mixer_ns: 2.0,
+            fence_ns: 3.0,
+            tau_worker_ns: 9.0,
+            step_ns: 5.0,
+            sample_ns: 1.0,
+        };
+        // critical path excludes worker time but includes the fence stall
+        assert_eq!(b.total_ns(), 11.0);
+        // mixer compute is invariant to where it ran
+        assert_eq!(b.mixer_total_ns(), 14.0);
+        // 9ns ran on the worker, 3ns of it was re-exposed by the fence
+        assert_eq!(b.hidden_mixer_ns(), 6.0);
+
+        // a fully-exposed fence hides nothing
+        let worst = Breakdown { fence_ns: 9.0, tau_worker_ns: 4.0, ..Default::default() };
+        assert_eq!(worst.hidden_mixer_ns(), 0.0);
+
+        let mut totals = Breakdown::default();
+        totals.add(&b);
+        totals.add(&worst);
+        assert_eq!(totals.fence_ns, 12.0);
+        assert_eq!(totals.tau_worker_ns, 13.0);
     }
 
     #[test]

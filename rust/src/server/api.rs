@@ -200,6 +200,8 @@ fn info_json(cfg: &ServerConfig, eng: &EngineOpts, rt: &Runtime) -> Json {
         ("V", Json::Num(d.v as f64)),
         ("method", Json::Str(eng.method.as_str().into())),
         ("tau", Json::Str(eng.tau.as_str().into())),
+        ("async_mixer", Json::Bool(eng.async_mixer)),
+        ("split_min_u", Json::Num(eng.split_min_u as f64)),
         ("artifacts", Json::Str(cfg.artifacts.display().to_string())),
     ])
 }

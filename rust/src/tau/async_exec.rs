@@ -1,0 +1,504 @@
+//! Deadline-fenced asynchronous τ execution — the paper's across-layer
+//! parallelism claim ("the tiling allows for almost complete
+//! parallelization ... of the position-mixing part") applied to the *time*
+//! axis: a gray tile at iteration `i` produces `z[i+1..i+U]`, but only
+//! `z[i+1]` is consumed at the very next step — everything else has a
+//! deadline several red steps in the future. [`AsyncTau`] exploits that
+//! slack by running tiles on a dedicated pool worker while the engine
+//! thread continues with sampling, token bookkeeping, metrics, and the
+//! next step's host→device uploads, fencing only immediately before the
+//! pending column is gathered (FutureFill-style deadline scheduling;
+//! Laughing Hyena's observation that per-token critical path, not FLOPs,
+//! governs serving latency is exactly what this buys back).
+//!
+//! ## Execution model
+//!
+//! * One in-flight queue on a **single-worker** [`ThreadPool`]: execution
+//!   order == submission order, so two tiles with overlapping destination
+//!   ranges (e.g. a split remainder of tile `i` and tile `i+1`, which both
+//!   accumulate into `z[i+2]`) can never race each other — ordering, not
+//!   locking, serializes the `+=`s in exactly the sync path's order.
+//! * [`AsyncTau::fence`] joins every in-flight tile whose destination
+//!   covers the named column; tiles aimed entirely at later columns keep
+//!   running. Completed tiles are retired opportunistically so the queue
+//!   never grows beyond the few truly outstanding jobs.
+//! * **Split tiles**: for `U >= split_min_u` the urgent first column
+//!   `z[i+1]` is computed *synchronously at submission* by a direct
+//!   kernel (O(U·D) per group — cheap), and the relaxed remainder
+//!   `z[i+2..i+U]` is submitted with its natural deadline of step `i+2`.
+//!   The expensive order-2U FFT then overlaps the *entire* next red-step
+//!   PJRT call instead of stalling the very next fence. The remainder's
+//!   FFT computes the full cyclic convolution but accumulates only rows
+//!   `>= 1`, so contributions land exactly once; the urgent column's
+//!   value differs from the unsplit path only by direct-vs-FFT rounding
+//!   (see DESIGN.md §Pipelining for the accumulation-order caveat —
+//!   equivalence is bit-exact with splitting off, tolerance-bounded with
+//!   it on).
+//! * Wrap safety (Appendix D half store): a split remainder outlives the
+//!   next fence, so its source rows must not be recycled underneath it.
+//!   Splitting is therefore disabled when `2U > rows` — only the single
+//!   largest tile in a wrapped store, where source row `row(1)` would be
+//!   overwritten by the red step writing `row(rows+1)` — and the
+//!   [`RowReadiness`] tracker attached by the session turns any future
+//!   violation of this analysis into a deterministic panic.
+//!
+//! ## Why only native impls
+//!
+//! The job closures must be `Send + 'static`, so they capture `Arc`'d
+//! filter state (rfft plans, half-spectrum planes, filter-prefix
+//! snapshots) plus raw tensor pointers — never `&RhoCache` (PJRT handles
+//! are not `Send`, and the cache's lazy maps are not `Sync`). The
+//! PJRT-backed kinds — and `Hybrid`, which may dispatch to them — stay on
+//! the engine thread via the trait's synchronous defaults.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::{FenceStats, RhoCache, TauImpl, TauKind};
+use crate::engine::store::RowReadiness;
+use crate::fft::{tile_conv_rfft_into, RfftPlan, TileScratch};
+use crate::tau::rho_cache::Spectra;
+use crate::tiling::Tile;
+use crate::util::tensor::Tensor;
+use crate::util::threadpool::{JobHandle, ThreadPool};
+
+thread_local! {
+    /// Per-worker scratch: FFT planes plus a remainder accumulator. The
+    /// executor worker is persistent (util::threadpool), so after the
+    /// first tile the token loop stays allocation-free off-thread too.
+    static ASYNC_SCRATCH: RefCell<(TileScratch, Vec<f32>)> =
+        RefCell::new((TileScratch::default(), Vec::new()));
+}
+
+/// Raw-pointer wrappers for the detached jobs. SAFETY: sendable only
+/// under the deadline contract — the session fences before any
+/// conflicting access and [`AsyncTau`]'s `Drop` drains the queue, so no
+/// dereference outlives the store or races a live borrow (all concurrent
+/// accesses are to disjoint `[row][D]` regions; see module docs).
+#[derive(Clone, Copy)]
+struct ConstPtr(*const f32);
+unsafe impl Send for ConstPtr {}
+unsafe impl Sync for ConstPtr {}
+
+#[derive(Clone, Copy)]
+struct MutPtr(*mut f32);
+unsafe impl Send for MutPtr {}
+unsafe impl Sync for MutPtr {}
+
+/// Worker-side tile kernel: the `Send + Sync` snapshot of everything a
+/// detached tile needs from the rho cache.
+#[derive(Clone)]
+enum Kernel {
+    /// Native rfft pipeline (mirrors `RustFft::apply`'s inline loop).
+    Fft { plan: Arc<RfftPlan>, spectra: Arc<Spectra> },
+    /// Native direct tile (mirrors `RustDirect::apply`'s inline loop)
+    /// over a `[M, 2U, D]` filter-prefix snapshot.
+    Direct { seg: Arc<Vec<f32>> },
+}
+
+struct InFlight {
+    handle: JobHandle,
+    /// Destination range in submitted-tile row coordinates (1-indexed,
+    /// inclusive — `fence(col)` joins jobs with `dst_l <= col <= dst_r`).
+    dst_l: usize,
+    dst_r: usize,
+}
+
+/// Asynchronous executor wrapping a native synchronous τ implementation.
+pub struct AsyncTau<'c, 'rt> {
+    cache: &'c RhoCache<'rt>,
+    /// The wrapped impl: provides `kind`/`tile_flops` and the synchronous
+    /// `apply` fallback; its own worker pool is idle under async
+    /// execution (tiles run group-sequential on the executor worker).
+    inner: Box<dyn TauImpl + 'c>,
+    /// Single worker — FIFO execution is the write-ordering guarantee.
+    pool: ThreadPool,
+    inflight: VecDeque<InFlight>,
+    readiness: Option<Arc<RowReadiness>>,
+    split_min_u: usize,
+    /// Worker-side compute ns, drained by `take_worker_ns` (hidden-mixer
+    /// accounting).
+    worker_ns: Arc<AtomicU64>,
+    /// Per-U `[M, 2U, D]` filter-prefix snapshots for worker-side direct
+    /// kernels (the cache's own segments borrow `'c`, jobs need owned).
+    segs: HashMap<usize, Arc<Vec<f32>>>,
+}
+
+impl<'c, 'rt> AsyncTau<'c, 'rt> {
+    /// `split_min_u == 0` disables tile splitting (async whole-tile
+    /// execution only — bit-identical to the sync path).
+    pub fn new(
+        cache: &'c RhoCache<'rt>,
+        inner: Box<dyn TauImpl + 'c>,
+        split_min_u: usize,
+    ) -> AsyncTau<'c, 'rt> {
+        debug_assert!(
+            matches!(inner.kind(), TauKind::RustDirect | TauKind::RustFft),
+            "AsyncTau wraps native impls only (PJRT handles are not Send)"
+        );
+        AsyncTau {
+            cache,
+            inner,
+            pool: ThreadPool::new(1),
+            inflight: VecDeque::new(),
+            readiness: None,
+            split_min_u,
+            worker_ns: Arc::new(AtomicU64::new(0)),
+            segs: HashMap::new(),
+        }
+    }
+
+    /// Tiles currently submitted but not yet retired by a fence.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    fn seg_snapshot(&mut self, u: usize) -> Arc<Vec<f32>> {
+        if let Some(s) = self.segs.get(&u) {
+            return s.clone();
+        }
+        let dims = self.cache.runtime().dims;
+        let mut seg = Vec::with_capacity(dims.m * 2 * u * dims.d);
+        for m in 0..dims.m {
+            seg.extend_from_slice(self.cache.seg(m, u));
+        }
+        let s = Arc::new(seg);
+        self.segs.insert(u, s.clone());
+        s
+    }
+
+    fn kernel_for(&mut self, u: usize) -> Kernel {
+        match self.inner.kind() {
+            TauKind::RustFft => Kernel::Fft {
+                plan: self.cache.plan(u),
+                spectra: self.cache.spectra(u),
+            },
+            TauKind::RustDirect => Kernel::Direct { seg: self.seg_snapshot(u) },
+            _ => unreachable!("AsyncTau wraps native impls only"),
+        }
+    }
+
+    fn retire(job: InFlight) -> Result<()> {
+        job.handle
+            .join()
+            .map_err(|e| anyhow!("async tau tile [{}, {}]: {e}", job.dst_l, job.dst_r))
+    }
+
+    /// Join in-flight jobs selected by `pred`; retire any job observed
+    /// already complete along the way. A join error (panicked tile) is
+    /// reported *after* the sweep completes, so jobs that are still in
+    /// flight are never dropped from tracking — later fences and `Drop`
+    /// can still drain them.
+    fn fence_where(&mut self, pred: impl Fn(&InFlight) -> bool) -> Result<FenceStats> {
+        if self.inflight.is_empty() {
+            return Ok(FenceStats::default());
+        }
+        let t0 = Instant::now();
+        let mut waited = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut remaining = VecDeque::with_capacity(self.inflight.len());
+        while let Some(job) = self.inflight.pop_front() {
+            if pred(&job) {
+                if !job.handle.is_done() {
+                    waited += 1;
+                }
+                if let Err(e) = Self::retire(job) {
+                    first_err.get_or_insert(e);
+                }
+            } else if job.handle.is_done() {
+                if let Err(e) = Self::retire(job) {
+                    first_err.get_or_insert(e);
+                }
+            } else {
+                remaining.push_back(job);
+            }
+        }
+        self.inflight = remaining;
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(FenceStats {
+            wait_ns: if waited > 0 { t0.elapsed().as_nanos() as u64 } else { 0 },
+            jobs_waited: waited,
+        })
+    }
+
+    /// Urgent split-tile column: accumulate the tile's first output row
+    /// `z[dst_l]` for every group with a direct kernel (`k = 0` slice of
+    /// `fft::tile_conv_direct_into`), synchronously on the engine thread.
+    fn urgent_first_col(&self, streams: &Tensor, pending: &mut Tensor, tile: Tile) {
+        let dims = self.cache.runtime().dims;
+        let (g, d, b) = (dims.g, dims.d, dims.b);
+        let u = tile.u;
+        for gi in 0..g {
+            let rho = self.cache.seg(gi / b, u);
+            let y = streams.block(gi, tile.src_l - 1, tile.src_r);
+            let out = pending.at2_mut(gi, tile.dst_l - 1);
+            for j in 0..u {
+                let r = &rho[(u - j) * d..(u - j + 1) * d];
+                let yj = &y[j * d..(j + 1) * d];
+                for t in 0..d {
+                    out[t] += yj[t] * r[t];
+                }
+            }
+        }
+    }
+
+    /// Enqueue rows `k0..U` of `tile` onto the executor worker.
+    fn enqueue(
+        &mut self,
+        streams: &Tensor,
+        pending: &mut Tensor,
+        tile: Tile,
+        k0: usize,
+    ) {
+        let dims = self.cache.runtime().dims;
+        let (g, d, b) = (dims.g, dims.d, dims.b);
+        let l = streams.shape()[1];
+        let kernel = self.kernel_for(tile.u);
+        let dst_l = tile.dst_l + k0;
+        let dst_r = tile.dst_r;
+
+        if let Some(r) = &self.readiness {
+            r.begin_write(dst_l - 1..dst_r);
+        }
+        let readiness = self.readiness.clone();
+        let worker_ns = self.worker_ns.clone();
+        // SAFETY (lifetime erasure): the pointers outlive the job because
+        // every code path that drops or conflictingly touches the store
+        // fences first — `fence(col)` before each gather, `fence_all` in
+        // `apply`/`Session::finish`, and `Drop` below drains the queue
+        // unconditionally. Disjointness: the job writes only pending rows
+        // [dst_l-1+k0, dst_r) and reads only streams rows
+        // [src_l-1, src_r); the fence discipline (DESIGN.md §Pipelining)
+        // keeps all concurrent engine-thread accesses on other rows.
+        // Unsplit tiles (the default) are additionally clean under the
+        // Stacked Borrows model: the engine thread creates no store
+        // borrow between submission and the joining fence. Split
+        // remainders outlive the next step's gather/streams-store, whose
+        // safe reborrows of the same allocations technically invalidate
+        // these raw tags even though the rows are disjoint — the same
+        // model-gray disjoint-rows pattern as the scoped_for kernels; the
+        // model-clean fix (UnsafeCell-backed store) is a ROADMAP item.
+        let sp = ConstPtr(streams.data().as_ptr());
+        let pp = MutPtr(pending.data_mut().as_mut_ptr());
+        let handle = self.pool.submit(Box::new(move || {
+            let t0 = Instant::now();
+            run_tile(&kernel, sp, pp, l, g, b, d, tile, k0);
+            if let Some(r) = &readiness {
+                r.end_write(dst_l - 1..dst_r);
+            }
+            worker_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }));
+        self.inflight.push_back(InFlight { handle, dst_l, dst_r });
+    }
+}
+
+impl TauImpl for AsyncTau<'_, '_> {
+    fn kind(&self) -> TauKind {
+        self.inner.kind()
+    }
+
+    /// Synchronous fallback: drain in-flight work, then run the wrapped
+    /// impl directly (callers that mix `apply` and `submit` stay safe).
+    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+        self.fence_all()?;
+        self.inner.apply(streams, pending, tile)
+    }
+
+    fn tile_flops(&self, u: usize, g: usize, d: usize) -> u64 {
+        self.inner.tile_flops(u, g, d)
+    }
+
+    fn submit(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+        let rows = streams.shape()[1];
+        // Split when the tile is big enough to be worth it and the store
+        // cannot wrap its source rows while the remainder is in flight
+        // (2U <= rows; see module docs — only excludes the largest tile
+        // of an Appendix D half store).
+        let split = self.split_min_u > 0
+            && tile.u >= self.split_min_u
+            && tile.u >= 2
+            && 2 * tile.u <= rows;
+        if split {
+            // the urgent column is written on the engine thread; the FIFO
+            // deadline discipline guarantees no in-flight job still covers
+            // it (any such job covered col dst_l-1's gather fence, or had
+            // u = 1 and never split) — enforce that analysis
+            if let Some(r) = &self.readiness {
+                r.assert_quiet(tile.dst_l - 1);
+            }
+            self.urgent_first_col(streams, pending, tile);
+            self.enqueue(streams, pending, tile, 1);
+        } else {
+            self.enqueue(streams, pending, tile, 0);
+        }
+        Ok(())
+    }
+
+    fn fence(&mut self, col: usize) -> Result<FenceStats> {
+        self.fence_where(|j| j.dst_l <= col && col <= j.dst_r)
+    }
+
+    fn fence_all(&mut self) -> Result<FenceStats> {
+        self.fence_where(|_| true)
+    }
+
+    fn take_worker_ns(&mut self) -> u64 {
+        self.worker_ns.swap(0, Ordering::Relaxed)
+    }
+
+    fn attach_readiness(&mut self, readiness: Arc<RowReadiness>) {
+        self.readiness = Some(readiness);
+    }
+}
+
+impl Drop for AsyncTau<'_, '_> {
+    /// Drain the queue so no job outlives the borrowed store. Join
+    /// errors are swallowed: a panicked tile already surfaced (or will)
+    /// via the owning session's fence, and `Drop` must not double-panic.
+    fn drop(&mut self) {
+        while let Some(job) = self.inflight.pop_front() {
+            let _ = job.handle.join();
+        }
+    }
+}
+
+/// The detached tile body: accumulate rows `k0..U` of the tile for every
+/// group, group-sequential (identical per-group arithmetic order to the
+/// wrapped impl's inline loop, so unsplit async output is bit-identical
+/// to sync output).
+#[allow(clippy::too_many_arguments)]
+fn run_tile(
+    kernel: &Kernel,
+    streams: ConstPtr,
+    pending: MutPtr,
+    l: usize,
+    g: usize,
+    b: usize,
+    d: usize,
+    tile: Tile,
+    k0: usize,
+) {
+    let u = tile.u;
+    ASYNC_SCRATCH.with(|cell| {
+        let (scratch, acc) = &mut *cell.borrow_mut();
+        for gi in 0..g {
+            let m = gi / b;
+            // SAFETY: per the submission contract — disjoint rows, fenced
+            // lifetime (see `AsyncTau::enqueue`). The mutable slice starts
+            // at row k0, NOT at the tile's first row: for a split
+            // remainder the urgent row dst_l-1 belongs to the engine
+            // thread (it may gather or zero-fill it before this job's
+            // fence), so the job's &mut must never span it.
+            let y = unsafe {
+                std::slice::from_raw_parts(streams.0.add((gi * l + tile.src_l - 1) * d), u * d)
+            };
+            let out = unsafe {
+                std::slice::from_raw_parts_mut(
+                    pending.0.add((gi * l + tile.dst_l - 1 + k0) * d),
+                    (u - k0) * d,
+                )
+            };
+            match kernel {
+                Kernel::Fft { plan, spectra } => {
+                    let (sre, sim) = spectra.planes(m);
+                    if k0 == 0 {
+                        tile_conv_rfft_into(plan, y, sre, sim, out, scratch, d);
+                    } else {
+                        // remainder: full conv into the accumulator, land
+                        // only rows >= k0 (row 0 was the urgent column)
+                        acc.clear();
+                        acc.resize(u * d, 0.0);
+                        tile_conv_rfft_into(plan, y, sre, sim, acc, scratch, d);
+                        for (o, v) in out.iter_mut().zip(&acc[k0 * d..]) {
+                            *o += v;
+                        }
+                    }
+                }
+                Kernel::Direct { seg } => {
+                    let rho = &seg[m * 2 * u * d..(m + 1) * 2 * u * d];
+                    direct_rows(y, rho, out, d, k0);
+                }
+            }
+        }
+    });
+}
+
+/// Direct tile restricted to output rows `k0..U`. `out_add` holds exactly
+/// those rows (`[(U-k0)][d]`, starting at row k0 of the tile) — the
+/// `k0 == 0` case is exactly `fft::tile_conv_direct_into`.
+fn direct_rows(y: &[f32], rho_seg: &[f32], out_add: &mut [f32], d: usize, k0: usize) {
+    let u = y.len() / d;
+    debug_assert_eq!(rho_seg.len(), 2 * u * d);
+    debug_assert_eq!(out_add.len(), (u - k0) * d);
+    for j in 0..u {
+        let yj = &y[j * d..(j + 1) * d];
+        let rho_base = (u - j) * d;
+        for k in k0..u {
+            let r = &rho_seg[rho_base + k * d..rho_base + (k + 1) * d];
+            let o = &mut out_add[(k - k0) * d..(k - k0 + 1) * d];
+            for t in 0..d {
+                o[t] += yj[t] * r[t];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn direct_rows_full_matches_reference_kernel() {
+        for (u, d) in [(1usize, 1usize), (4, 3), (16, 8)] {
+            let y = rand_vec(u * d, 1);
+            let rho = rand_vec(2 * u * d, 2);
+            let mut want = vec![0.0f32; u * d];
+            crate::fft::tile_conv_direct_into(&y, &rho, &mut want, d);
+            let mut got = vec![0.0f32; u * d];
+            direct_rows(&y, &rho, &mut got, d, 0);
+            assert_eq!(got, want, "u={u} d={d}");
+        }
+    }
+
+    #[test]
+    fn direct_rows_split_covers_each_row_once() {
+        // urgent row 0 + remainder rows 1.. must equal the whole tile
+        let (u, d) = (8usize, 4usize);
+        let y = rand_vec(u * d, 3);
+        let rho = rand_vec(2 * u * d, 4);
+        let mut want = vec![0.0f32; u * d];
+        direct_rows(&y, &rho, &mut want, d, 0);
+
+        let mut got = vec![0.0f32; u * d];
+        // row 0 via the urgent-column loop shape
+        for j in 0..u {
+            let r = &rho[(u - j) * d..(u - j + 1) * d];
+            let yj = &y[j * d..(j + 1) * d];
+            for t in 0..d {
+                got[t] += yj[t] * r[t];
+            }
+        }
+        // remainder slice starts at row 1 (mirrors run_tile's offset view)
+        direct_rows(&y, &rho, &mut got[d..], d, 1);
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a, b);
+        }
+    }
+
+    // AsyncTau end-to-end behaviour (bit-identical unsplit output,
+    // tolerance-bounded split output, fence ordering under churn) is
+    // covered against real artifacts in tests/integration_async.rs.
+}

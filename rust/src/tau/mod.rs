@@ -13,6 +13,7 @@
 //! layers (Algorithm 3's across-layer parallelism, realized as batching;
 //! the native impls additionally fan groups across a thread pool).
 
+pub mod async_exec;
 pub mod calibrate;
 pub mod hybrid;
 pub mod pjrt_direct;
@@ -21,11 +22,15 @@ pub mod rho_cache;
 pub mod rust_direct;
 pub mod rust_fft;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use crate::engine::store::RowReadiness;
 use crate::tiling::{flops, Tile};
 use crate::util::tensor::Tensor;
 
+pub use async_exec::AsyncTau;
 pub use calibrate::{calibrate, CalibrationTable};
 pub use hybrid::Hybrid;
 pub use pjrt_direct::PjrtDirect;
@@ -89,10 +94,42 @@ impl TauKind {
     }
 }
 
+/// What one fence call observed (exposed-stall instrumentation).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FenceStats {
+    /// Wall time the caller was blocked waiting for in-flight tiles.
+    pub wait_ns: u64,
+    /// In-flight tiles the fence had to wait on (0 ⇒ fully hidden).
+    pub jobs_waited: usize,
+}
+
+impl FenceStats {
+    pub fn absorb(&mut self, other: FenceStats) {
+        self.wait_ns += other.wait_ns;
+        self.jobs_waited += other.jobs_waited;
+    }
+}
+
 /// One τ implementation: accumulate a gray tile into `pending`.
 ///
 /// `streams` and `pending` are `[G, L, D]`; `tile` carries 1-indexed
 /// absolute ranges (row `t` of a group = position `t+1`).
+///
+/// ## Submit/fence semantics (deadline-fenced execution)
+///
+/// [`TauImpl::submit`] hands a tile to the implementation with the
+/// *deadline contract*: the tile's outputs `pending[dst_l..=dst_r]` need
+/// not exist until a later [`TauImpl::fence`] names one of those columns —
+/// `z[i+1..i+U]` is first consumed at iteration `i+1` at the earliest
+/// (Algorithm 1's availability invariant), so the executor may run the
+/// tile concurrently with everything the caller does in between. The
+/// caller promises in return not to mutate the tile's source rows or read
+/// its destination rows until the corresponding fence has drained.
+///
+/// Synchronous implementations satisfy the contract trivially: the
+/// default `submit` is `apply` and the default `fence` is a no-op, so
+/// every pre-existing impl (and any future one) composes with the
+/// session's submit/fence call sites unchanged.
 pub trait TauImpl {
     fn kind(&self) -> TauKind;
 
@@ -102,6 +139,36 @@ pub trait TauImpl {
     fn tile_flops(&self, u: usize, g: usize, d: usize) -> u64 {
         self.kind().tile_flops(u, g, d)
     }
+
+    /// Submit a tile under the deadline contract above. Default:
+    /// synchronous `apply` (the tile is complete on return).
+    fn submit(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+        self.apply(streams, pending, tile)
+    }
+
+    /// Block until every submitted tile whose destination range covers
+    /// `col` (same 1-indexed row coordinates as the submitted tiles'
+    /// `dst_l..=dst_r`) has landed. Default: nothing is ever in flight.
+    fn fence(&mut self, _col: usize) -> Result<FenceStats> {
+        Ok(FenceStats::default())
+    }
+
+    /// Block until *every* submitted tile has landed (session teardown,
+    /// or before handing the store to a reader that scans all rows).
+    fn fence_all(&mut self) -> Result<FenceStats> {
+        Ok(FenceStats::default())
+    }
+
+    /// Worker-side τ compute nanoseconds accumulated since the last call
+    /// (hidden-vs-exposed mixer accounting). 0 for synchronous impls —
+    /// their compute is already on the caller's clock.
+    fn take_worker_ns(&mut self) -> u64 {
+        0
+    }
+
+    /// Attach the store's row-readiness tracker so detached jobs can mark
+    /// their destination rows in flight. No-op for synchronous impls.
+    fn attach_readiness(&mut self, _readiness: Arc<RowReadiness>) {}
 }
 
 /// Construct a τ implementation over a shared rho cache.
@@ -117,6 +184,33 @@ pub fn make_impl<'rt, 'c>(
         TauKind::PjrtFft => Box::new(PjrtFft::new(cache)),
         TauKind::Hybrid => Box::new(Hybrid::from_default(cache, threads)?),
     })
+}
+
+/// Execution policy for the session-facing constructor below.
+#[derive(Debug, Clone, Copy)]
+pub struct TauExecCfg {
+    /// Wrap native impls in the deadline-fenced [`AsyncTau`] executor.
+    pub async_mixer: bool,
+    /// Split tiles with `U >= split_min_u` into an urgent first column +
+    /// relaxed remainder (0 disables splitting; see `async_exec`).
+    pub split_min_u: usize,
+}
+
+/// Construct the τ implementation a `Session` drives, applying the async
+/// execution policy. The PJRT-backed kinds (including `Hybrid`, which may
+/// dispatch to them per tile size) stay synchronous regardless: PJRT
+/// handles are not `Send`, so their tiles cannot leave the engine thread.
+pub fn make_session_impl<'rt, 'c>(
+    kind: TauKind,
+    cache: &'c RhoCache<'rt>,
+    threads: usize,
+    exec: TauExecCfg,
+) -> Result<Box<dyn TauImpl + 'c>> {
+    let sync = make_impl(kind, cache, threads)?;
+    if exec.async_mixer && matches!(kind, TauKind::RustDirect | TauKind::RustFft) {
+        return Ok(Box::new(AsyncTau::new(cache, sync, exec.split_min_u)));
+    }
+    Ok(sync)
 }
 
 /// Stage the tile's input block `streams[g, src_l-1 .. src_r]` for all

@@ -7,15 +7,26 @@
 //! topology and correctness are tested regardless.
 //!
 //! Implementation: a *persistent* pool — `size` workers are spawned once
-//! (lazily, on the first parallel `scoped_for`) and parked on a condvar;
-//! each `scoped_for` call publishes one lifetime-erased job (work-stealing
-//! over a shared atomic counter) and blocks until every worker has checked
-//! in, so borrowed closures remain sound without per-call thread spawns.
-//! Gray tiles arrive every token, so the former spawn-per-call design paid
-//! an OS thread create/join per tile; the parked pool reduces that to a
-//! wake. Nested `scoped_for` on the same pool degrades to inline.
+//! (lazily, on the first parallel `scoped_for` or `submit`) and parked on
+//! a condvar; each `scoped_for` call publishes one lifetime-erased job
+//! (work-stealing over a shared atomic counter) and blocks until every
+//! worker has checked in, so borrowed closures remain sound without
+//! per-call thread spawns. Gray tiles arrive every token, so the former
+//! spawn-per-call design paid an OS thread create/join per tile; the
+//! parked pool reduces that to a wake. Nested `scoped_for` on the same
+//! pool degrades to inline.
+//!
+//! Two submission modes share the workers:
+//! * [`ThreadPool::scoped_for`] — fork-join over borrowed closures, the
+//!   caller blocks until done (the tau across-group fan-out);
+//! * [`ThreadPool::submit`] — fire one `'static` job and get a
+//!   [`JobHandle`] back; the caller continues and joins later (the async
+//!   tau executor's deadline-fenced tiles). A single-worker pool runs
+//!   submitted jobs strictly in submission order — the ordering guarantee
+//!   `tau::AsyncTau` builds its overlapping-tile-write safety on.
 
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -63,6 +74,97 @@ struct State {
     active: usize,
     /// A worker closure panicked during the current job.
     panicked: bool,
+    /// One-shot jobs queued by [`ThreadPool::submit`], run FIFO whenever
+    /// no scoped job is pending (scoped callers block a whole fork-join,
+    /// so they take priority over latency-relaxed submitted work).
+    queue: VecDeque<QueuedTask>,
+}
+
+/// Terminal / in-flight status of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TaskStatus {
+    Queued,
+    Running,
+    Done,
+    Panicked,
+    Cancelled,
+}
+
+impl TaskStatus {
+    fn is_terminal(self) -> bool {
+        matches!(self, TaskStatus::Done | TaskStatus::Panicked | TaskStatus::Cancelled)
+    }
+}
+
+/// Why [`JobHandle::join`] did not return success.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobError {
+    /// The job closure panicked on the worker.
+    Panicked,
+    /// The pool shut down before the job ran.
+    Cancelled,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Panicked => write!(f, "submitted job panicked on the worker"),
+            JobError::Cancelled => write!(f, "submitted job cancelled by pool shutdown"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+struct TaskShared {
+    status: Mutex<TaskStatus>,
+    cv: Condvar,
+}
+
+struct QueuedTask {
+    f: Box<dyn FnOnce() + Send + 'static>,
+    shared: Arc<TaskShared>,
+}
+
+/// Completion handle for a job submitted with [`ThreadPool::submit`].
+pub struct JobHandle {
+    shared: Arc<TaskShared>,
+}
+
+impl JobHandle {
+    fn completed() -> JobHandle {
+        JobHandle {
+            shared: Arc::new(TaskShared {
+                status: Mutex::new(TaskStatus::Done),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Non-blocking: has the job reached a terminal state?
+    pub fn is_done(&self) -> bool {
+        self.shared.status.lock().unwrap().is_terminal()
+    }
+
+    /// Block until the job finishes. A worker-side panic or a pool
+    /// shutdown surfaces as an error instead of poisoning the caller.
+    pub fn join(&self) -> Result<(), JobError> {
+        let mut st = self.shared.status.lock().unwrap();
+        while !st.is_terminal() {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+        match *st {
+            TaskStatus::Done => Ok(()),
+            TaskStatus::Panicked => Err(JobError::Panicked),
+            TaskStatus::Cancelled => Err(JobError::Cancelled),
+            TaskStatus::Queued | TaskStatus::Running => unreachable!(),
+        }
+    }
+}
+
+fn finish_task(shared: &TaskShared, status: TaskStatus) {
+    *shared.status.lock().unwrap() = status;
+    shared.cv.notify_all();
 }
 
 /// Lifetime-erased job description published to the workers.
@@ -167,6 +269,38 @@ impl ThreadPool {
             panic!("worker closure panicked in ThreadPool::scoped_for");
         }
     }
+
+    /// Queue `f` for asynchronous execution on a pool worker and return a
+    /// completion handle. FIFO per pool; on a **single-worker** pool that
+    /// makes execution order == submission order (the property the async
+    /// tau executor relies on for overlapping destination ranges).
+    ///
+    /// Degenerate cases run `f` inline and return an already-completed
+    /// handle: a `size == 0` pool (no workers to hand off to) and a call
+    /// from inside a worker closure of this same pool (handing off could
+    /// deadlock a joiner against itself).
+    pub fn submit(&self, f: Box<dyn FnOnce() + Send + 'static>) -> JobHandle {
+        if self.size == 0 {
+            f();
+            return JobHandle::completed();
+        }
+        let inner = self.inner.get_or_init(|| Inner::spawn(self.size));
+        if ACTIVE_POOL.with(Cell::get) == Arc::as_ptr(&inner.shared) as usize {
+            f();
+            return JobHandle::completed();
+        }
+        let shared = Arc::new(TaskShared {
+            status: Mutex::new(TaskStatus::Queued),
+            cv: Condvar::new(),
+        });
+        let handle = JobHandle { shared: shared.clone() };
+        {
+            let mut st = inner.shared.state.lock().unwrap();
+            st.queue.push_back(QueuedTask { f, shared });
+            inner.shared.work.notify_all();
+        }
+        handle
+    }
 }
 
 impl Drop for ThreadPool {
@@ -185,42 +319,70 @@ impl Drop for ThreadPool {
     }
 }
 
+enum Work {
+    Scoped(Job),
+    Task(QueuedTask),
+}
+
 fn worker_loop(shared: &Shared) {
     let mut last_epoch = 0u64;
     loop {
-        let job = {
+        let work = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 if st.shutdown {
+                    // cancel whatever is still queued so joiners unblock
+                    while let Some(t) = st.queue.pop_front() {
+                        finish_task(&t.shared, TaskStatus::Cancelled);
+                    }
                     return;
                 }
                 match st.job {
-                    Some(job) if job.epoch > last_epoch => break job,
-                    _ => st = shared.work.wait(st).unwrap(),
+                    Some(job) if job.epoch > last_epoch => break Work::Scoped(job),
+                    _ => {}
                 }
+                if let Some(t) = st.queue.pop_front() {
+                    break Work::Task(t);
+                }
+                st = shared.work.wait(st).unwrap();
             }
         };
-        last_epoch = job.epoch;
 
-        ACTIVE_POOL.with(|c| c.set(shared as *const Shared as usize));
-        let mut hit_panic = false;
-        loop {
-            let i = job.counter.fetch_add(1, Ordering::Relaxed);
-            if i >= job.n {
-                break;
-            }
-            if panic::catch_unwind(AssertUnwindSafe(|| (job.f)(i))).is_err() {
-                hit_panic = true;
-                break; // stop stealing; surface on the caller below
-            }
-        }
-        ACTIVE_POOL.with(|c| c.set(0));
+        match work {
+            Work::Scoped(job) => {
+                last_epoch = job.epoch;
 
-        let mut st = shared.state.lock().unwrap();
-        st.panicked |= hit_panic;
-        st.active -= 1;
-        if st.active == 0 {
-            shared.done.notify_one();
+                ACTIVE_POOL.with(|c| c.set(shared as *const Shared as usize));
+                let mut hit_panic = false;
+                loop {
+                    let i = job.counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= job.n {
+                        break;
+                    }
+                    if panic::catch_unwind(AssertUnwindSafe(|| (job.f)(i))).is_err() {
+                        hit_panic = true;
+                        break; // stop stealing; surface on the caller below
+                    }
+                }
+                ACTIVE_POOL.with(|c| c.set(0));
+
+                let mut st = shared.state.lock().unwrap();
+                st.panicked |= hit_panic;
+                st.active -= 1;
+                if st.active == 0 {
+                    shared.done.notify_one();
+                }
+            }
+            Work::Task(task) => {
+                *task.shared.status.lock().unwrap() = TaskStatus::Running;
+                ACTIVE_POOL.with(|c| c.set(shared as *const Shared as usize));
+                let ok = panic::catch_unwind(AssertUnwindSafe(task.f)).is_ok();
+                ACTIVE_POOL.with(|c| c.set(0));
+                finish_task(
+                    &task.shared,
+                    if ok { TaskStatus::Done } else { TaskStatus::Panicked },
+                );
+            }
         }
     }
 }
@@ -354,6 +516,131 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.scoped_for(4, |_| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn submit_runs_and_joins() {
+        let pool = ThreadPool::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<JobHandle> = (0..16)
+            .map(|_| {
+                let hits = hits.clone();
+                pool.submit(Box::new(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }))
+            })
+            .collect();
+        for h in &handles {
+            h.join().unwrap();
+            assert!(h.is_done());
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn submit_on_single_worker_pool_is_fifo() {
+        // the AsyncTau safety contract: one worker ⇒ execution order ==
+        // submission order, so jobs with overlapping writes never race
+        let pool = ThreadPool::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let handles: Vec<JobHandle> = (0..64)
+            .map(|i| {
+                let order = order.clone();
+                pool.submit(Box::new(move || order.lock().unwrap().push(i)))
+            })
+            .collect();
+        for h in &handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submit_inline_on_empty_pool() {
+        let pool = ThreadPool::new(0);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = {
+            let hits = hits.clone();
+            pool.submit(Box::new(move || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }))
+        };
+        // ran inline: already complete before join
+        assert!(h.is_done());
+        h.join().unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn submit_panic_surfaces_on_join_not_caller() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit(Box::new(|| panic!("task boom")));
+        assert_eq!(h.join(), Err(JobError::Panicked));
+        // pool still serves afterwards
+        let ok = pool.submit(Box::new(|| {}));
+        ok.join().unwrap();
+    }
+
+    #[test]
+    fn submit_from_worker_runs_inline() {
+        // a job submitting to its own pool must not deadlock a same-thread
+        // join against itself; it degrades to inline execution
+        let pool = Arc::new(ThreadPool::new(1));
+        let p2 = pool.clone();
+        let h = pool.submit(Box::new(move || {
+            let inner = p2.submit(Box::new(|| {}));
+            inner.join().unwrap();
+        }));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn drop_cancels_queued_jobs() {
+        let pool = ThreadPool::new(1);
+        // first job blocks the single worker long enough for more to queue
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = gate.clone();
+        let blocker = pool.submit(Box::new(move || {
+            let (m, cv) = &*g;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        }));
+        let queued: Vec<JobHandle> =
+            (0..4).map(|_| pool.submit(Box::new(|| {}))).collect();
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        blocker.join().unwrap();
+        drop(pool);
+        // after shutdown every handle is terminal: Done if the worker got
+        // to it, Cancelled otherwise — none left dangling
+        for h in &queued {
+            assert!(h.is_done());
+            assert!(matches!(h.join(), Ok(()) | Err(JobError::Cancelled)));
+        }
+    }
+
+    #[test]
+    fn submit_and_scoped_for_coexist() {
+        let pool = ThreadPool::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let h = {
+                let hits = hits.clone();
+                pool.submit(Box::new(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }))
+            };
+            pool.scoped_for(4, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            h.join().unwrap();
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 8 * 5);
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Integration: the deadline-fenced async τ executor is *semantically
+//! invisible*. With tile splitting off, an async session must be
+//! bit-identical to the forced-sync path — same checksums, tokens, FLOP
+//! accounting — for the plain Flash path, the Appendix D half store, and
+//! teacher forcing (the async jobs run the exact same per-group arithmetic
+//! in the exact same order, just on another thread). With splitting on,
+//! the urgent column's direct-vs-FFT rounding bounds the difference to
+//! kernel tolerance. A churn test shakes out fence/ordering bugs by
+//! running many short sessions with worker threads enabled.
+
+use std::path::Path;
+
+use flash_inference::engine::{Engine, EngineOpts, GenOutput, Method};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+use flash_inference::util::prng::Prng;
+
+fn runtime(variant: &str) -> Option<Runtime> {
+    let dir = Path::new("artifacts").join(variant);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("load runtime"))
+}
+
+fn opts(tau: TauKind, async_mixer: bool) -> EngineOpts {
+    EngineOpts {
+        method: Method::Flash,
+        tau,
+        async_mixer,
+        record_streams: true,
+        ..Default::default()
+    }
+}
+
+fn assert_bit_identical(a: &GenOutput, b: &GenOutput, what: &str) {
+    assert_eq!(a.outs_checksum, b.outs_checksum, "{what}: outs_checksum");
+    assert_eq!(a.checksum_total, b.checksum_total, "{what}: checksum_total");
+    assert_eq!(a.steps, b.steps, "{what}: steps");
+    assert_eq!(a.tokens, b.tokens, "{what}: tokens");
+    assert_eq!(a.last_out, b.last_out, "{what}: last_out");
+    assert_eq!(a.flops.mixer_flops, b.flops.mixer_flops, "{what}: flops");
+    assert_eq!(a.flops.tau_calls, b.flops.tau_calls, "{what}: tau calls");
+    let (sa, sb) = (a.streams.as_ref().unwrap(), b.streams.as_ref().unwrap());
+    assert_eq!(sa.max_abs_diff(sb), 0.0, "{what}: streams");
+}
+
+#[test]
+fn async_unsplit_is_bit_identical_to_sync() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 64;
+    for tau in [TauKind::RustFft, TauKind::RustDirect] {
+        let sync = Engine::new(&rt, opts(tau, false)).unwrap().generate(len).unwrap();
+        let asy = Engine::new(&rt, opts(tau, true)).unwrap().generate(len).unwrap();
+        assert_bit_identical(&sync, &asy, tau.as_str());
+        // the async run actually ran off-thread (hidden-time accounting
+        // sees worker-side compute); the sync run never does
+        assert!(asy.metrics.totals.tau_worker_ns > 0.0, "{}: no worker time", tau.as_str());
+        assert_eq!(sync.metrics.totals.tau_worker_ns, 0.0);
+        assert_eq!(sync.metrics.totals.fence_ns, 0.0);
+    }
+}
+
+#[test]
+fn async_matches_sync_with_half_store() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 64;
+    let half = |async_mixer| EngineOpts {
+        half_store: true,
+        ..opts(TauKind::RustFft, async_mixer)
+    };
+    let sync = Engine::new(&rt, half(false)).unwrap().generate(len).unwrap();
+    let asy = Engine::new(&rt, half(true)).unwrap().generate(len).unwrap();
+    assert_bit_identical(&sync, &asy, "half_store");
+    assert_eq!(sync.resident_values, asy.resident_values);
+}
+
+#[test]
+fn async_matches_sync_teacher_forced() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let dims = rt.dims;
+    let len = 32;
+    let mut rng = Prng::new(23);
+    let forced: Vec<f32> = (0..8 * dims.b * dims.d).map(|_| rng.normal_f32()).collect();
+    let sync = Engine::new(&rt, opts(TauKind::RustFft, false))
+        .unwrap()
+        .generate_teacher_forced(len, &forced)
+        .unwrap();
+    let asy = Engine::new(&rt, opts(TauKind::RustFft, true))
+        .unwrap()
+        .generate_teacher_forced(len, &forced)
+        .unwrap();
+    assert_bit_identical(&sync, &asy, "teacher_forced");
+}
+
+#[test]
+fn async_step_driven_matches_one_shot() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 32;
+    let mut eng = Engine::new(&rt, opts(TauKind::RustFft, true)).unwrap();
+    let oneshot = eng.generate(len).unwrap();
+    let mut session = eng.session(len).unwrap();
+    while !session.is_done() {
+        session.step().unwrap();
+    }
+    let stepped = session.finish();
+    assert_bit_identical(&oneshot, &stepped, "step-driven");
+}
+
+#[test]
+fn split_tiles_match_sync_within_tolerance() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 64;
+    let sync = Engine::new(&rt, opts(TauKind::RustFft, false)).unwrap().generate(len).unwrap();
+    // aggressive threshold: every tile with U >= 2 splits
+    let split = Engine::new(
+        &rt,
+        EngineOpts { split_min_u: 2, ..opts(TauKind::RustFft, true) },
+    )
+    .unwrap()
+    .generate(len)
+    .unwrap();
+    assert_eq!(sync.steps, split.steps);
+    assert_eq!(sync.tokens, split.tokens);
+    let (ss, sp) = (sync.streams.as_ref().unwrap(), split.streams.as_ref().unwrap());
+    let err = sp.rel_l2(ss);
+    assert!(err < 1e-4, "split-vs-sync streams err {err}");
+}
+
+#[test]
+fn split_tiles_respect_half_store_wrap() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 64;
+    let mk = |async_mixer, split| EngineOpts {
+        half_store: true,
+        split_min_u: split,
+        ..opts(TauKind::RustFft, async_mixer)
+    };
+    let sync = Engine::new(&rt, mk(false, 0)).unwrap().generate(len).unwrap();
+    let split = Engine::new(&rt, mk(true, 2)).unwrap().generate(len).unwrap();
+    assert_eq!(sync.steps, split.steps);
+    // wrapped store: the largest tile must not split (2U > rows) and the
+    // result stays within kernel tolerance of the sync rollout
+    let (ss, sp) = (sync.streams.as_ref().unwrap(), split.streams.as_ref().unwrap());
+    let err = sp.rel_l2(ss);
+    assert!(err < 1e-4, "half+split streams err {err}");
+    assert_eq!(sync.resident_values, split.resident_values);
+}
+
+#[test]
+fn stress_many_short_sessions_on_worker_pool() {
+    // fence/ordering churn: alternating session shapes over a 2-worker
+    // kernel pool plus the executor worker, compared against the sync
+    // reference every time — any dropped fence, stale job, or ordering
+    // violation shows up as a checksum mismatch (or a readiness panic)
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 16;
+    for round in 0..12u64 {
+        let half = round % 2 == 1;
+        let tau = if round % 4 < 2 { TauKind::RustFft } else { TauKind::RustDirect };
+        let mk = |async_mixer, split_min_u| EngineOpts {
+            threads: 2,
+            half_store: half,
+            split_min_u,
+            seed: round,
+            ..opts(tau, async_mixer)
+        };
+        let sync = Engine::new(&rt, mk(false, 0)).unwrap().generate(len).unwrap();
+        let asy = Engine::new(&rt, mk(true, 0)).unwrap().generate(len).unwrap();
+        assert_bit_identical(&sync, &asy, &format!("round {round} unsplit"));
+
+        let split = Engine::new(&rt, mk(true, 2)).unwrap().generate(len).unwrap();
+        let (ss, sp) = (sync.streams.as_ref().unwrap(), split.streams.as_ref().unwrap());
+        let err = sp.rel_l2(ss);
+        assert!(err < 1e-4, "round {round} split err {err}");
+    }
+}
+
+#[test]
+fn async_session_abandoned_mid_flight_drains_cleanly() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 32;
+    let eng = Engine::new(
+        &rt,
+        EngineOpts { split_min_u: 2, ..opts(TauKind::RustFft, true) },
+    )
+    .unwrap();
+
+    // finish() with a split remainder still in flight must fence first
+    let mut session = eng.session(len).unwrap();
+    for _ in 0..len / 2 {
+        session.step().unwrap();
+    }
+    let out = session.finish();
+    assert_eq!(out.steps, len / 2);
+    assert_eq!(out.outs_checksum.len(), len / 2);
+
+    // dropping without finish() must drain too (AsyncTau::drop), not
+    // leave a worker writing into a freed store
+    let mut session = eng.session(len).unwrap();
+    for _ in 0..3 {
+        session.step().unwrap();
+    }
+    drop(session);
+}
+
+#[test]
+fn checksum_ring_bounds_history_but_not_total() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 32;
+    let full = Engine::new(&rt, opts(TauKind::RustFft, true)).unwrap().generate(len).unwrap();
+    let bounded = Engine::new(
+        &rt,
+        EngineOpts { checksum_history: 8, ..opts(TauKind::RustFft, true) },
+    )
+    .unwrap()
+    .generate(len)
+    .unwrap();
+    assert_eq!(full.outs_checksum.len(), len);
+    assert_eq!(bounded.outs_checksum.len(), 8, "ring keeps the last K");
+    assert_eq!(&full.outs_checksum[len - 8..], &bounded.outs_checksum[..]);
+    // the running total is over all positions regardless of retention
+    assert_eq!(full.checksum_total, bounded.checksum_total);
+    let want: f64 = full.outs_checksum.iter().map(|&c| c as f64).sum();
+    assert_eq!(full.checksum_total, want);
+}
