@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Render BENCH_*.json documents as markdown tables into $GITHUB_STEP_SUMMARY.
+
+Each bench JSON is a flat object of scalar metadata plus one or more
+arrays of row-objects (e.g. ``rows``, ``sweep``, ``arrival_modes``).
+Scalars become an inline code line, every row array becomes a table, so
+the perf trajectory is readable per-run in the Actions UI instead of only
+as a downloadable artifact.
+
+Usage: bench_to_summary.py BENCH_a.json [BENCH_b.json ...]
+"""
+
+import json
+import os
+import sys
+
+
+def fmt(v):
+    if isinstance(v, bool):
+        return "yes" if v else "no"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    if v is None:
+        return "-"
+    return str(v)
+
+
+def table(rows):
+    cols = list(rows[0].keys())
+    lines = [
+        "| " + " | ".join(cols) + " |",
+        "|" + "---|" * len(cols),
+    ]
+    for r in rows:
+        lines.append("| " + " | ".join(fmt(r.get(c)) for c in cols) + " |")
+    return "\n".join(lines)
+
+
+def emit(path, out):
+    if not os.path.exists(path):
+        print(f"### {os.path.basename(path)}\n\n_missing (bench did not run)_\n", file=out)
+        return
+    with open(path) as f:
+        doc = json.load(f)
+    name = doc.get("bench", os.path.basename(path))
+    print(f"### bench: {name}\n", file=out)
+    scalars = {k: v for k, v in doc.items() if not isinstance(v, (list, dict)) and k != "bench"}
+    if scalars:
+        print(" ".join(f"`{k}={fmt(v)}`" for k, v in scalars.items()) + "\n", file=out)
+    arrays = {k: v for k, v in doc.items() if isinstance(v, list) and v and isinstance(v[0], dict)}
+    for key, rows in arrays.items():
+        if len(arrays) > 1:
+            print(f"**{key}**\n", file=out)
+        print(table(rows) + "\n", file=out)
+
+
+def main():
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not summary:
+        emit_to = sys.stdout
+        for path in sys.argv[1:]:
+            emit(path, emit_to)
+        return
+    with open(summary, "a") as out:
+        for path in sys.argv[1:]:
+            emit(path, out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,37 +1,146 @@
-//! End-to-end serving driver (the EXPERIMENTS.md validation run):
-//! start the HTTP server in-process on the Hyena build, replay a Poisson
-//! workload trace of batched requests over loopback, and report
-//! latency/throughput — a small but real serving deployment of the system.
+//! End-to-end serving driver (the EXPERIMENTS.md validation run and the
+//! CI `serving-smoke` gate): start the HTTP server in-process, replay a
+//! Poisson workload trace of batched requests over loopback, demonstrate
+//! per-position streaming, then run the **continuous-admission probe** —
+//! a long streaming request holds the batch while a staggered short
+//! request is seeded into a free lane mid-batch, and the short request's
+//! rollout is checked for bit-identical checksums against a fresh rerun
+//! of the same request. Any non-200, checksum mismatch, or failure to
+//! observe a mid-batch admission exits nonzero (CI fails).
 //!
 //!     make artifacts && cargo run --release --example serve_and_query
+//!     # or: cargo run --release --example serve_and_query artifacts/synthetic
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use flash_inference::config::ServerConfig;
+use flash_inference::engine::EngineOpts;
 use flash_inference::metrics::LatencyRecorder;
 use flash_inference::server::Server;
+use flash_inference::tau::TauKind;
 use flash_inference::trace::{TraceConfig, WorkloadTrace};
+use flash_inference::util::benchkit;
 use flash_inference::util::json::Json;
 
-fn post_generate(addr: std::net::SocketAddr, max_tokens: usize) -> anyhow::Result<(usize, f64)> {
-    let body = format!("{{\"max_tokens\": {max_tokens}}}");
-    let raw = format!(
+fn raw_post(body: &str) -> String {
+    format!(
         "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
         body.len(),
         body
-    );
+    )
+}
+
+fn post_generate(addr: std::net::SocketAddr, max_tokens: usize) -> anyhow::Result<(usize, f64)> {
+    let body = format!("{{\"max_tokens\": {max_tokens}}}");
     let t0 = Instant::now();
     let mut s = TcpStream::connect(addr)?;
-    s.write_all(raw.as_bytes())?;
+    s.write_all(raw_post(&body).as_bytes())?;
     let mut buf = String::new();
     s.read_to_string(&mut buf)?;
     let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(buf.contains("200 OK"), "non-200: {}", &buf[..buf.len().min(200)]);
     let payload = buf.split("\r\n\r\n").nth(1).unwrap_or("{}");
     let j = Json::parse(payload).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
     let toks = j.get("tokens").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(max_tokens);
     Ok((toks, latency_ms))
+}
+
+/// Buffered POST returning the parsed JSON document (status must be 200).
+fn post_generate_json(addr: std::net::SocketAddr, body: &str) -> anyhow::Result<Json> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(raw_post(body).as_bytes())?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    anyhow::ensure!(buf.contains("200 OK"), "non-200: {}", &buf[..buf.len().min(300)]);
+    let payload = buf.split("\r\n\r\n").nth(1).unwrap_or("{}");
+    Json::parse(payload).map_err(|e| anyhow::anyhow!("bad response body: {e}"))
+}
+
+/// Read from the socket until `needle` appears (or the stream closes).
+fn read_until(s: &mut TcpStream, needle: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        let n = s.read(&mut chunk)?;
+        if n == 0 {
+            anyhow::bail!(
+                "stream closed before {:?} appeared",
+                String::from_utf8_lossy(needle)
+            );
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(needle.len()).any(|w| w == needle) {
+            return Ok(buf);
+        }
+    }
+}
+
+fn scrape_metrics(addr: std::net::SocketAddr) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(b"GET /metrics HTTP/1.1\r\n\r\n")?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf)?;
+    Ok(buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string())
+}
+
+/// The continuous-admission probe: hold the batch open with a long
+/// streaming request, land a short staggered request mid-batch, then
+/// verify the short request's rollout is bit-identical to a fresh rerun.
+fn admission_probe(addr: std::net::SocketAddr) -> anyhow::Result<()> {
+    // per-request sampling: seed + sigma cover the synthetic variant,
+    // temperature/top_k the LM variant — the unused knobs are ignored
+    let probe_body =
+        "{\"max_tokens\": 16, \"seed\": 9, \"sigma\": 0.05, \"temperature\": 0.8, \"top_k\": 8}";
+    let mut probe: Option<Json> = None;
+    for attempt in 1..=3 {
+        // a long streaming request keeps the batch running underneath us
+        let mut long = TcpStream::connect(addr)?;
+        long.write_all(raw_post("{\"max_tokens\": 512, \"stream\": true}").as_bytes())?;
+        let head = read_until(&mut long, b"\"pos\":")?;
+        anyhow::ensure!(
+            String::from_utf8_lossy(&head).contains("200 OK"),
+            "long request non-200"
+        );
+        // the session is demonstrably mid-flight: stagger the short one in
+        let j = post_generate_json(addr, probe_body)?;
+        let admitted_pos = j.get("admitted_pos").and_then(Json::as_f64).unwrap_or(-1.0);
+        drop(long); // hang up; the lane finishes its schedule regardless
+        if admitted_pos > 0.0 {
+            println!(
+                "  attempt {attempt}: admitted at batch position {admitted_pos:.0} \
+                 (mid-batch), steps {}",
+                j.get("steps").and_then(Json::as_f64).unwrap_or(-1.0)
+            );
+            probe = Some(j);
+            break;
+        }
+        println!("  attempt {attempt}: request landed in a fresh batch, retrying");
+    }
+    let probe = probe
+        .ok_or_else(|| anyhow::anyhow!("no mid-batch admission observed in 3 attempts"))?;
+
+    // fresh rerun of the identical request: the paper-level claim under
+    // test is that admission position is semantically invisible, so the
+    // checksum (and tokens, LM variant) must match bit-for-bit
+    let fresh = post_generate_json(addr, probe_body)?;
+    let (a, b) = (probe.get("checksum"), fresh.get("checksum"));
+    anyhow::ensure!(
+        a.is_some() && a == b,
+        "checksum mismatch: admitted {a:?} vs fresh {b:?}"
+    );
+    anyhow::ensure!(
+        probe.get("tokens") == fresh.get("tokens"),
+        "token mismatch between admitted and fresh runs"
+    );
+    println!(
+        "  bit-identical rollout: checksum {} == fresh rerun (admitted_pos {} vs {})",
+        a.unwrap(),
+        probe.get("admitted_pos").and_then(Json::as_f64).unwrap_or(-1.0),
+        fresh.get("admitted_pos").and_then(Json::as_f64).unwrap_or(-1.0),
+    );
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -39,6 +148,17 @@ fn main() -> anyhow::Result<()> {
     let cfg = ServerConfig {
         port: 0, // ephemeral
         artifacts: artifacts.clone().into(),
+        engine: EngineOpts {
+            // the admission probe compares checksums bit-for-bit across
+            // different admission positions; that exactness holds for the
+            // direct kernel's term-by-term accumulation (zeroed history
+            // rows contribute exact +0.0s) but not for FFT tiles, which
+            // mix a block's sources through transforms — so the smoke
+            // pins rust-direct, which also keeps the async executor (and
+            // its admission fence) on the exercised path
+            tau: TauKind::RustDirect,
+            ..ServerConfig::default().engine
+        },
         ..Default::default()
     };
     println!("starting server on {artifacts} ...");
@@ -100,41 +220,46 @@ fn main() -> anyhow::Result<()> {
         lat.percentile_ns(95.0) / 1e6,
         lat.max_ns() / 1e6
     );
+    anyhow::ensure!(failures == 0, "{failures} Poisson-replay requests failed");
 
     // one streaming request: tokens leave the engine per position over
     // chunked NDJSON instead of arriving once the whole rollout is done
     println!("\n=== streaming request (\"stream\": true) ===");
     let body = "{\"max_tokens\": 32, \"stream\": true}";
     let mut s = TcpStream::connect(addr)?;
-    s.write_all(
-        format!(
-            "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
-            body.len(),
-            body
-        )
-        .as_bytes(),
-    )?;
+    s.write_all(raw_post(body).as_bytes())?;
     let t0 = Instant::now();
     let mut raw = String::new();
     s.read_to_string(&mut raw)?;
     let ms = t0.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(raw.contains("200 OK"), "streaming request non-200");
     let payload = flash_inference::server::http::decode_chunked(
         raw.split("\r\n\r\n").nth(1).unwrap_or(""),
     );
     let events = payload.lines().filter(|l| l.contains("\"pos\"")).count();
     let done = payload.lines().rfind(|l| l.contains("\"done\"")).unwrap_or("");
     println!("received {events} incremental events in {ms:.1}ms; summary: {done}");
+    anyhow::ensure!(events == 32, "expected 32 events, got {events}");
+    anyhow::ensure!(!done.contains("error"), "stream ended in error: {done}");
+
+    // continuous admission: a staggered request must join the running
+    // batch and still produce a bit-identical rollout
+    println!("\n=== continuous admission probe (staggered requests) ===");
+    admission_probe(addr)?;
 
     // scrape the server's own metrics
-    let mut s = TcpStream::connect(addr)?;
-    s.write_all(b"GET /metrics HTTP/1.1\r\n\r\n")?;
-    let mut buf = String::new();
-    s.read_to_string(&mut buf)?;
-    let metrics = buf.split("\r\n\r\n").nth(1).unwrap_or("");
+    let metrics = scrape_metrics(addr)?;
     println!("\n=== server metrics ===");
     for line in metrics.lines().filter(|l| !l.starts_with('#')) {
         println!("  {line}");
     }
+    let metric = |name| benchkit::scrape_metric(addr, name).unwrap_or(-1.0);
+    anyhow::ensure!(
+        metric("fi_admissions_mid_batch") >= 1.0,
+        "server never admitted a request mid-batch"
+    );
+    anyhow::ensure!(metric("fi_requests_failed") == 0.0, "failed requests");
     server.stop();
+    println!("\nserving smoke: OK");
     Ok(())
 }

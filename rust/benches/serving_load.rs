@@ -1,8 +1,21 @@
 //! Serving load test (beyond the paper's figures, backing the serving
-//! claims of the framework): replay Poisson traces against the HTTP
-//! server at increasing arrival rates, report throughput and latency.
+//! claims of the framework), in two parts:
 //!
-//! Knobs: FI_ARTIFACTS_SYN, FI_REQS.
+//! 1. **throughput sweep** — replay Poisson traces against the HTTP
+//!    server at increasing arrival rates, report throughput and latency;
+//! 2. **arrival-process A/B** — the continuous-admission experiment: the
+//!    *same* Poisson trace of streaming requests replayed against a
+//!    server with admission on and with admission off
+//!    (drain-then-refill), reporting p50/p99 **time-to-first-token**. A
+//!    request arriving mid-batch under drain-then-refill waits for the
+//!    whole batch; under admission it is seeded into a free lane at the
+//!    next step boundary — TTFT is where that shows up.
+//!
+//! Emits `BENCH_serving_load.json` (the machine-readable perf-trajectory
+//! artifact CI publishes to the step summary).
+//!
+//! Knobs: FI_ARTIFACTS_SYN, FI_REQS, FI_RATE, FI_TOKENS_MIN,
+//! FI_TOKENS_MAX, FI_BENCH_OUT.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -13,6 +26,7 @@ use flash_inference::metrics::LatencyRecorder;
 use flash_inference::server::Server;
 use flash_inference::trace::{TraceConfig, WorkloadTrace};
 use flash_inference::util::benchkit::{self, Table};
+use flash_inference::util::json::Json;
 
 fn post_generate(addr: std::net::SocketAddr, max_tokens: usize) -> anyhow::Result<f64> {
     let body = format!("{{\"max_tokens\": {max_tokens}}}");
@@ -30,6 +44,64 @@ fn post_generate(addr: std::net::SocketAddr, max_tokens: usize) -> anyhow::Resul
     Ok(t0.elapsed().as_secs_f64() * 1e3)
 }
 
+/// Streaming request; returns (time-to-first-token ms, total ms).
+fn stream_generate(addr: std::net::SocketAddr, max_tokens: usize) -> anyhow::Result<(f64, f64)> {
+    let body = format!("{{\"max_tokens\": {max_tokens}, \"stream\": true}}");
+    let raw = format!(
+        "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let t0 = Instant::now();
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(raw.as_bytes())?;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut first: Option<f64> = None;
+    loop {
+        let n = s.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if first.is_none() && buf.windows(6).any(|w| w == b"\"pos\":") {
+            first = Some(t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    let total = t0.elapsed().as_secs_f64() * 1e3;
+    let head = String::from_utf8_lossy(&buf[..buf.len().min(200)]).to_string();
+    anyhow::ensure!(head.contains("200 OK"), "bad response: {head}");
+    let ttft = first.ok_or_else(|| anyhow::anyhow!("no event line in: {head}"))?;
+    Ok((ttft, total))
+}
+
+/// Replay `trace` as streaming requests; returns per-request
+/// (ttft_ms, total_ms) in completion order (failures dropped).
+fn replay_streaming(
+    addr: std::net::SocketAddr,
+    trace: &WorkloadTrace,
+) -> (Vec<(f64, f64)>, f64) {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for req in trace.requests.clone() {
+        handles.push(std::thread::spawn(move || {
+            let wait = std::time::Duration::from_secs_f64(req.arrival_s);
+            let since = t0.elapsed();
+            if wait > since {
+                std::thread::sleep(wait - since);
+            }
+            stream_generate(addr, req.max_tokens)
+        }));
+    }
+    let mut results = Vec::new();
+    for h in handles {
+        if let Ok(r) = h.join().unwrap() {
+            results.push(r);
+        }
+    }
+    (results, t0.elapsed().as_secs_f64())
+}
+
 fn main() -> anyhow::Result<()> {
     let Some(dir) = benchkit::require_artifacts(&benchkit::env_str(
         "FI_ARTIFACTS_SYN",
@@ -38,11 +110,16 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     };
     let n = benchkit::env_usize("FI_REQS", 16);
+    let rate = benchkit::env_usize("FI_RATE", 4) as f64;
+    let min_tokens = benchkit::env_usize("FI_TOKENS_MIN", 16);
+    let max_tokens = benchkit::env_usize("FI_TOKENS_MAX", 128);
+    let out_path = benchkit::env_str("FI_BENCH_OUT", "BENCH_serving_load.json");
 
+    // ---- part 1: throughput sweep (admission on) ----------------------
     println!("\n=== serving load: Poisson replay vs arrival rate ===\n");
     let server = Server::start(ServerConfig {
         port: 0,
-        artifacts: dir,
+        artifacts: dir.clone(),
         ..Default::default()
     })?;
     let addr = server.addr;
@@ -50,12 +127,13 @@ fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&[
         "rate_rps", "requests", "ok", "wall_s", "tok_per_s", "p50_ms", "p95_ms", "max_ms",
     ]);
+    let mut sweep_rows = Vec::new();
     for rate in [1.0f64, 4.0, 16.0] {
         let trace = WorkloadTrace::generate(TraceConfig {
             rate,
             num_requests: n,
-            min_tokens: 16,
-            max_tokens: 128,
+            min_tokens,
+            max_tokens,
             seed: 42,
         });
         let total_tokens = trace.total_tokens();
@@ -80,19 +158,99 @@ fn main() -> anyhow::Result<()> {
             }
         }
         let wall = t0.elapsed().as_secs_f64();
+        let tok_per_s = total_tokens as f64 / wall;
         table.row(vec![
             format!("{rate:.0}"),
             n.to_string(),
             ok.to_string(),
             format!("{wall:.2}"),
-            format!("{:.0}", total_tokens as f64 / wall),
+            format!("{tok_per_s:.0}"),
             format!("{:.1}", lat.percentile_ns(50.0) / 1e6),
             format!("{:.1}", lat.percentile_ns(95.0) / 1e6),
             format!("{:.1}", lat.max_ns() / 1e6),
         ]);
+        sweep_rows.push(Json::from_pairs(vec![
+            ("rate_rps", Json::Num(rate)),
+            ("ok", Json::Num(ok as f64)),
+            ("tok_per_s", Json::Num(tok_per_s)),
+            ("p50_ms", Json::Num(lat.percentile_ns(50.0) / 1e6)),
+            ("p95_ms", Json::Num(lat.percentile_ns(95.0) / 1e6)),
+        ]));
     }
     table.print();
     table.write_csv("serving_load")?;
     server.stop();
+
+    // ---- part 2: arrival-process TTFT, admission on vs off ------------
+    println!("\n=== arrival process: time-to-first-token, admission on vs off ===\n");
+    let mut ab_table = Table::new(&[
+        "admission", "ok", "mid_batch", "ttft_p50_ms", "ttft_p99_ms", "total_p50_ms",
+        "total_p99_ms", "wall_s",
+    ]);
+    let mut mode_rows = Vec::new();
+    for admission in [true, false] {
+        let server = Server::start(ServerConfig {
+            port: 0,
+            artifacts: dir.clone(),
+            continuous_admission: admission,
+            ..Default::default()
+        })?;
+        let trace = WorkloadTrace::generate(TraceConfig {
+            rate,
+            num_requests: n,
+            min_tokens,
+            max_tokens,
+            seed: 7, // same trace for both modes: a paired experiment
+        });
+        let (results, wall) = replay_streaming(server.addr, &trace);
+        let mut ttft = LatencyRecorder::unbounded();
+        let mut total = LatencyRecorder::unbounded();
+        for (f, t) in &results {
+            ttft.record_ns(f * 1e6);
+            total.record_ns(t * 1e6);
+        }
+        let mid_batch =
+            benchkit::scrape_metric(server.addr, "fi_admissions_mid_batch").unwrap_or(-1.0);
+        server.stop();
+        ab_table.row(vec![
+            if admission { "on" } else { "off" }.into(),
+            results.len().to_string(),
+            format!("{mid_batch:.0}"),
+            format!("{:.1}", ttft.percentile_ns(50.0) / 1e6),
+            format!("{:.1}", ttft.percentile_ns(99.0) / 1e6),
+            format!("{:.1}", total.percentile_ns(50.0) / 1e6),
+            format!("{:.1}", total.percentile_ns(99.0) / 1e6),
+            format!("{wall:.2}"),
+        ]);
+        mode_rows.push(Json::from_pairs(vec![
+            ("admission", Json::Bool(admission)),
+            ("ok", Json::Num(results.len() as f64)),
+            ("mid_batch_admissions", Json::Num(mid_batch)),
+            ("ttft_p50_ms", Json::Num(ttft.percentile_ns(50.0) / 1e6)),
+            ("ttft_p99_ms", Json::Num(ttft.percentile_ns(99.0) / 1e6)),
+            ("total_p50_ms", Json::Num(total.percentile_ns(50.0) / 1e6)),
+            ("total_p99_ms", Json::Num(total.percentile_ns(99.0) / 1e6)),
+            ("wall_s", Json::Num(wall)),
+        ]));
+    }
+    ab_table.print();
+    ab_table.write_csv("serving_load_admission")?;
+    println!(
+        "\nreading: with admission ON, a request that lands mid-batch starts at the \
+         next step boundary, so ttft ~ queue-to-lane + one step; OFF, it waits for \
+         the running batch to drain first."
+    );
+
+    let doc = Json::from_pairs(vec![
+        ("bench", Json::Str("serving_load".into())),
+        ("requests", Json::Num(n as f64)),
+        ("arrival_rate_rps", Json::Num(rate)),
+        ("tokens_min", Json::Num(min_tokens as f64)),
+        ("tokens_max", Json::Num(max_tokens as f64)),
+        ("sweep", Json::Arr(sweep_rows)),
+        ("arrival_modes", Json::Arr(mode_rows)),
+    ]);
+    std::fs::write(&out_path, doc.to_string_pretty())?;
+    println!("wrote {out_path}");
     Ok(())
 }

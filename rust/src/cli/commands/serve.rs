@@ -11,8 +11,10 @@ pub fn run(argv: &[String]) -> Result<i32> {
         .value("config", "JSON config file (defaults < file < flags)")
         .value("host", "bind host (default 127.0.0.1)")
         .value("port", "bind port (default 7070)")
-        .value("batch-window-ms", "batcher fill window (default 5)")
-        .value("max-tokens", "default tokens per request (default 256)");
+        .value("batch-window-ms", "idle-state co-arrival window (default 5)")
+        .value("max-tokens", "default tokens per request (default 256)")
+        .switch("no-admission", "disable continuous admission (drain-then-refill batches)")
+        .value("max-queue", "waiting-queue bound before shedding 429s (default 1024)");
     if super::maybe_help("flashinfer serve", &schema, argv) {
         return Ok(0);
     }
@@ -25,13 +27,16 @@ pub fn run(argv: &[String]) -> Result<i32> {
 
     let server = Server::start(cfg.clone())?;
     println!(
-        "flashinfer serving {} on http://{} (batch B from artifacts, window {}ms)",
+        "flashinfer serving {} on http://{} (batch B from artifacts, window {}ms, \
+         continuous admission {})",
         cfg.artifacts.display(),
         server.addr,
-        cfg.batch_window_ms
+        cfg.batch_window_ms,
+        if cfg.continuous_admission { "on" } else { "off" }
     );
     println!("  GET  /health | GET /metrics | GET /v1/info");
     println!("  POST /v1/generate  {{\"max_tokens\": 128}}");
+    println!("  POST /v1/generate  {{\"max_tokens\": 128, \"seed\": 7, \"temperature\": 0.8, \"top_k\": 40}}  (per-lane sampling)");
     println!("  POST /v1/generate  {{\"max_tokens\": 128, \"stream\": true}}  (chunked NDJSON, one event per position)");
 
     // serve until killed

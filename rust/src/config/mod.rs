@@ -18,11 +18,19 @@ pub struct ServerConfig {
     pub port: u16,
     /// Artifact build directory (one model per server).
     pub artifacts: PathBuf,
-    /// How long the batcher waits to fill a batch before running it.
+    /// How long the scheduler waits (when idle) for co-arriving requests
+    /// before starting a session.
     pub batch_window_ms: u64,
     /// Default/maximum tokens per request.
     pub default_max_tokens: usize,
     pub max_max_tokens: usize,
+    /// Seed new requests into free lanes of the *running* batch at step
+    /// boundaries (continuous admission). Off = legacy drain-then-refill:
+    /// requests only start when the current session has fully drained.
+    pub continuous_admission: bool,
+    /// Waiting-queue bound: requests beyond this are shed with HTTP 429
+    /// instead of growing the queue without limit.
+    pub max_queue: usize,
     pub engine: EngineOpts,
 }
 
@@ -35,6 +43,8 @@ impl Default for ServerConfig {
             batch_window_ms: 5,
             default_max_tokens: 256,
             max_max_tokens: 4096,
+            continuous_admission: true,
+            max_queue: 1024,
             engine: EngineOpts {
                 // serving opt-in: bound the per-position checksum ring so
                 // long-lived streaming sessions cannot grow without limit
@@ -76,6 +86,12 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("max_max_tokens").and_then(Json::as_usize) {
             self.max_max_tokens = v;
+        }
+        if let Some(v) = j.get("continuous_admission").and_then(Json::as_bool) {
+            self.continuous_admission = v;
+        }
+        if let Some(v) = j.get("max_queue").and_then(Json::as_usize) {
+            self.max_queue = v;
         }
         if let Some(e) = j.get("engine") {
             if let Some(v) = e.get("method").and_then(Json::as_str) {
@@ -123,6 +139,10 @@ impl ServerConfig {
         }
         self.batch_window_ms = a.get_u64("batch-window-ms", self.batch_window_ms)?;
         self.default_max_tokens = a.get_usize("max-tokens", self.default_max_tokens)?;
+        if a.has("no-admission") {
+            self.continuous_admission = false;
+        }
+        self.max_queue = a.get_usize("max-queue", self.max_queue)?;
         if let Some(v) = a.get("method") {
             self.engine.method = Method::parse(v)?;
         }
@@ -221,6 +241,29 @@ mod tests {
         let a = schema.parse(&["--sync-mixer".to_string()]).unwrap();
         cfg2.apply_args(&a).unwrap();
         assert!(!cfg2.engine.async_mixer);
+    }
+
+    #[test]
+    fn admission_keys_layer_correctly() {
+        let mut cfg = ServerConfig::default();
+        assert!(cfg.continuous_admission, "admission on by default");
+        assert_eq!(cfg.max_queue, 1024);
+        let j = Json::parse(r#"{"continuous_admission": false, "max_queue": 32}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert!(!cfg.continuous_admission);
+        assert_eq!(cfg.max_queue, 32);
+
+        let schema = Schema::new().switch("no-admission", "").value("max-queue", "");
+        let a = schema
+            .parse(&["--max-queue".to_string(), "8".to_string()])
+            .unwrap();
+        let mut cfg2 = ServerConfig::default();
+        cfg2.apply_args(&a).unwrap();
+        assert!(cfg2.continuous_admission, "no flag given: stays on");
+        assert_eq!(cfg2.max_queue, 8);
+        let a = schema.parse(&["--no-admission".to_string()]).unwrap();
+        cfg2.apply_args(&a).unwrap();
+        assert!(!cfg2.continuous_admission);
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod store;
 use anyhow::{bail, Context, Result};
 
 pub use sampler::{Sampler, SamplerCfg};
-pub use session::{Session, SessionInit, StepOutput};
+pub use session::{LaneInit, Session, SessionInit, StepOutput};
 pub use store::{RowReadiness, Store};
 
 use crate::metrics::SessionMetrics;
@@ -196,31 +196,37 @@ impl<'rt> Engine<'rt> {
     pub(crate) fn make_sampler(&self) -> Result<Sampler> {
         let dims = self.rt.dims;
         Ok(match dims.variant {
-            Variant::Synthetic => Sampler::synthetic(self.opts.sample_sigma, self.opts.seed),
+            Variant::Synthetic => {
+                Sampler::synthetic(self.opts.sample_sigma, self.opts.seed, dims.b)
+            }
             Variant::Hyena => {
                 let embed = self.rt.weights.get("embed")?.clone();
-                Sampler::lm(self.opts.temperature, self.opts.top_k, embed, self.opts.seed)
+                Sampler::lm(self.opts.temperature, self.opts.top_k, embed, self.opts.seed, dims.b)
             }
         })
     }
 
-    /// Initial `a0` — must mirror aot.py's golden rollout start exactly:
-    /// synthetic: 1/sqrt(D) everywhere; hyena: embedding of token 0.
-    fn initial_a0(&self) -> Result<Vec<f32>> {
+    /// One lane's rollout-start input (`[D]`) — must mirror aot.py's
+    /// golden rollout start exactly: synthetic: 1/sqrt(D); hyena:
+    /// embedding of token 0. Identical for every lane, which is what lets
+    /// `Session::admit` restart a single lane mid-batch.
+    pub(crate) fn initial_lane_a0(&self) -> Result<Vec<f32>> {
         let dims = self.rt.dims;
         match dims.variant {
-            Variant::Synthetic => {
-                Ok(vec![1.0 / (dims.d as f32).sqrt(); dims.b * dims.d])
-            }
-            Variant::Hyena => {
-                let embed = self.rt.weights.get("embed")?;
-                let mut a0 = vec![0.0; dims.b * dims.d];
-                for bi in 0..dims.b {
-                    a0[bi * dims.d..(bi + 1) * dims.d].copy_from_slice(embed.row(0));
-                }
-                Ok(a0)
-            }
+            Variant::Synthetic => Ok(vec![1.0 / (dims.d as f32).sqrt(); dims.d]),
+            Variant::Hyena => Ok(self.rt.weights.get("embed")?.row(0).to_vec()),
         }
+    }
+
+    /// Initial `a0` for the whole batch (`[B, D]`).
+    fn initial_a0(&self) -> Result<Vec<f32>> {
+        let dims = self.rt.dims;
+        let lane = self.initial_lane_a0()?;
+        let mut a0 = vec![0.0; dims.b * dims.d];
+        for bi in 0..dims.b {
+            a0[bi * dims.d..(bi + 1) * dims.d].copy_from_slice(&lane);
+        }
+        Ok(a0)
     }
 
     /// Start a resumable session with the default (sampled) rollout start.

@@ -5,14 +5,27 @@
 //!   embedding"; sigma=0 gives the deterministic golden rollout.
 //! * hyena LM: temperature / top-k sampling over V logits, then embedding
 //!   lookup.
+//!
+//! ## Per-lane state (continuous admission)
+//!
+//! Serving admits requests into individual batch lanes mid-session, and
+//! each request carries its own sampling config (temperature/top-k/sigma)
+//! and seed. The sampler therefore keeps **one config and one PRNG per
+//! lane**: a lane's random stream depends only on its own seed and on how
+//! many positions *that lane* has sampled — never on the other lanes or
+//! on the batch's global position. That independence is what makes an
+//! admitted lane's rollout bit-identical to a fresh run of the same
+//! request (`tests/integration_admission.rs`). Lanes that are not given
+//! an explicit seed derive theirs as `base_seed + lane_index`, so whole
+//! batches stay deterministic per engine seed and lanes still decorrelate.
 
 use anyhow::Result;
 
 use crate::util::prng::Prng;
 use crate::util::tensor::Tensor;
 
-/// Sampling configuration.
-#[derive(Debug, Clone, Copy)]
+/// Sampling configuration (per lane).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SamplerCfg {
     /// Next input = out + sigma * N(0, 1).
     Synthetic { sigma: f32 },
@@ -20,59 +33,103 @@ pub enum SamplerCfg {
     Lm { temperature: f32, top_k: usize },
 }
 
-pub struct Sampler {
+/// One lane's sampling state: its config plus its private random stream.
+#[derive(Debug)]
+struct LaneSampler {
     cfg: SamplerCfg,
     prng: Prng,
-    /// `[V, D]` embedding table (LM only).
+}
+
+pub struct Sampler {
+    lanes: Vec<LaneSampler>,
+    /// Engine-default config, applied to lanes admitted without overrides.
+    default_cfg: SamplerCfg,
+    /// Engine seed; lane `i` defaults to stream `base_seed + i`.
+    base_seed: u64,
+    /// `[V, D]` embedding table (LM only, shared by all lanes).
     embed: Option<Tensor>,
 }
 
 impl Sampler {
-    pub fn synthetic(sigma: f32, seed: u64) -> Sampler {
-        Sampler { cfg: SamplerCfg::Synthetic { sigma }, prng: Prng::new(seed), embed: None }
+    pub fn synthetic(sigma: f32, seed: u64, lanes: usize) -> Sampler {
+        Sampler::new(SamplerCfg::Synthetic { sigma }, seed, lanes, None)
     }
 
-    pub fn lm(temperature: f32, top_k: usize, embed: Tensor, seed: u64) -> Sampler {
-        Sampler {
-            cfg: SamplerCfg::Lm { temperature, top_k },
-            prng: Prng::new(seed),
-            embed: Some(embed),
-        }
+    pub fn lm(temperature: f32, top_k: usize, embed: Tensor, seed: u64, lanes: usize) -> Sampler {
+        Sampler::new(SamplerCfg::Lm { temperature, top_k }, seed, lanes, Some(embed))
+    }
+
+    fn new(cfg: SamplerCfg, seed: u64, lanes: usize, embed: Option<Tensor>) -> Sampler {
+        let lanes = (0..lanes.max(1))
+            .map(|bi| LaneSampler { cfg, prng: Prng::new(seed.wrapping_add(bi as u64)) })
+            .collect();
+        Sampler { lanes, default_cfg: cfg, base_seed: seed, embed }
+    }
+
+    /// Number of lanes this sampler drives.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// This lane's active config (admission tests / introspection).
+    pub fn lane_cfg(&self, lane: usize) -> SamplerCfg {
+        self.lanes[lane].cfg
+    }
+
+    /// Rebase one lane for a newly admitted request: fresh PRNG (the
+    /// request's seed, or the engine default stream for this lane) and the
+    /// request's sampling config (or the engine default). The lane's
+    /// stream restarts exactly as a fresh session's lane would, which is
+    /// the per-lane half of the admission bit-identity contract.
+    pub fn reset_lane(&mut self, lane: usize, cfg: Option<SamplerCfg>, seed: Option<u64>) {
+        let seed = seed.unwrap_or_else(|| self.base_seed.wrapping_add(lane as u64));
+        self.lanes[lane] =
+            LaneSampler { cfg: cfg.unwrap_or(self.default_cfg), prng: Prng::new(seed) };
     }
 
     /// Consume `out` (`[B, W]`) and produce the next `a0` (`[B, D]`).
-    /// Returns the sampled token ids for LM sampling.
+    /// Returns the sampled token ids for LM sampling. Every lane draws
+    /// from its own PRNG under its own config.
     pub fn next_a0(&mut self, out: &[f32], b: usize, a0: &mut [f32]) -> Result<Option<Vec<u32>>> {
-        match self.cfg {
-            SamplerCfg::Synthetic { sigma } => {
-                debug_assert_eq!(out.len(), a0.len());
+        debug_assert_eq!(b, self.lanes.len(), "sampler lane count mismatch");
+        let lm = matches!(self.default_cfg, SamplerCfg::Lm { .. });
+        if !lm {
+            debug_assert_eq!(out.len(), a0.len());
+            let d = a0.len() / b;
+            for (bi, lane) in self.lanes.iter_mut().enumerate() {
+                let SamplerCfg::Synthetic { sigma } = lane.cfg else {
+                    anyhow::bail!("lane {bi}: LM sampling config on a synthetic model");
+                };
+                let src = &out[bi * d..(bi + 1) * d];
+                let dst = &mut a0[bi * d..(bi + 1) * d];
                 if sigma == 0.0 {
-                    a0.copy_from_slice(out);
+                    dst.copy_from_slice(src);
                 } else {
-                    for (dst, &src) in a0.iter_mut().zip(out) {
-                        *dst = src + sigma * self.prng.normal_f32();
+                    for (o, &s) in dst.iter_mut().zip(src) {
+                        *o = s + sigma * lane.prng.normal_f32();
                     }
                 }
-                Ok(None)
             }
-            SamplerCfg::Lm { temperature, top_k } => {
-                let embed = self.embed.as_ref().expect("LM sampler needs embeddings");
-                let v = out.len() / b;
-                let d = embed.shape()[1];
-                let mut tokens = Vec::with_capacity(b);
-                for bi in 0..b {
-                    let logits = &out[bi * v..(bi + 1) * v];
-                    let tok = if temperature <= 0.0 {
-                        argmax(logits)
-                    } else {
-                        categorical(logits, temperature, top_k, &mut self.prng)
-                    };
-                    tokens.push(tok as u32);
-                    a0[bi * d..(bi + 1) * d].copy_from_slice(embed.row(tok));
-                }
-                Ok(Some(tokens))
-            }
+            return Ok(None);
         }
+        let embed = self.embed.as_ref().expect("LM sampler needs embeddings");
+        let v = out.len() / b;
+        let d = embed.shape()[1];
+        let mut tokens = Vec::with_capacity(b);
+        for (bi, lane) in self.lanes.iter_mut().enumerate() {
+            let SamplerCfg::Lm { temperature, top_k } = lane.cfg else {
+                anyhow::bail!("lane {bi}: synthetic sampling config on an LM model");
+            };
+            let logits = &out[bi * v..(bi + 1) * v];
+            let tok = if temperature <= 0.0 {
+                argmax(logits)
+            } else {
+                categorical(logits, temperature, top_k, &mut lane.prng)
+            };
+            tokens.push(tok as u32);
+            a0[bi * d..(bi + 1) * d].copy_from_slice(embed.row(tok));
+        }
+        Ok(Some(tokens))
     }
 }
 
@@ -115,7 +172,7 @@ mod tests {
 
     #[test]
     fn synthetic_sigma_zero_is_identity() {
-        let mut s = Sampler::synthetic(0.0, 1);
+        let mut s = Sampler::synthetic(0.0, 1, 1);
         let out = vec![1.0, -2.0, 3.0];
         let mut a0 = vec![0.0; 3];
         assert!(s.next_a0(&out, 1, &mut a0).unwrap().is_none());
@@ -126,7 +183,7 @@ mod tests {
     fn synthetic_noise_is_deterministic_per_seed() {
         let out = vec![0.0; 8];
         let run = |seed| {
-            let mut s = Sampler::synthetic(0.5, seed);
+            let mut s = Sampler::synthetic(0.5, seed, 1);
             let mut a0 = vec![0.0; 8];
             s.next_a0(&out, 1, &mut a0).unwrap();
             a0
@@ -136,9 +193,47 @@ mod tests {
     }
 
     #[test]
+    fn lanes_draw_from_independent_streams() {
+        // lane 1's draws must not depend on lane 0's existence or config
+        let out = vec![0.0; 8]; // 2 lanes x d=4
+        let mut pair = Sampler::synthetic(1.0, 10, 2);
+        let mut a0 = vec![0.0; 8];
+        pair.next_a0(&out, 2, &mut a0).unwrap();
+
+        // lane 1 alone, seeded as base_seed + 1 = 11
+        let mut solo = Sampler::synthetic(1.0, 11, 1);
+        let mut a1 = vec![0.0; 4];
+        solo.next_a0(&out[..4], 1, &mut a1).unwrap();
+        assert_eq!(&a0[4..], &a1[..], "lane 1 stream == solo stream with its seed");
+    }
+
+    #[test]
+    fn reset_lane_restarts_the_stream() {
+        let out = vec![0.0; 4];
+        let mut s = Sampler::synthetic(0.7, 3, 1);
+        let mut first = vec![0.0; 4];
+        s.next_a0(&out, 1, &mut first).unwrap();
+        let mut drifted = vec![0.0; 4];
+        s.next_a0(&out, 1, &mut drifted).unwrap();
+        assert_ne!(first, drifted, "stream advances");
+
+        // reset with an explicit seed replays that seed's stream from 0
+        s.reset_lane(0, None, Some(3));
+        let mut replay = vec![0.0; 4];
+        s.next_a0(&out, 1, &mut replay).unwrap();
+        assert_eq!(first, replay, "reset_lane rebased the PRNG");
+
+        // per-lane sigma override takes effect on the named lane only
+        s.reset_lane(0, Some(SamplerCfg::Synthetic { sigma: 0.0 }), None);
+        let mut quiet = vec![9.0; 4];
+        s.next_a0(&out, 1, &mut quiet).unwrap();
+        assert_eq!(quiet, out, "sigma=0 override is identity");
+    }
+
+    #[test]
     fn lm_argmax_picks_max_and_embeds() {
         let embed = Tensor::from_vec(&[3, 2], vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]).unwrap();
-        let mut s = Sampler::lm(0.0, 0, embed, 0);
+        let mut s = Sampler::lm(0.0, 0, embed, 0, 1);
         let logits = vec![0.1, 5.0, -1.0];
         let mut a0 = vec![0.0; 2];
         let toks = s.next_a0(&logits, 1, &mut a0).unwrap().unwrap();
@@ -149,7 +244,7 @@ mod tests {
     #[test]
     fn lm_temperature_samples_valid_tokens() {
         let embed = Tensor::zeros(&[4, 2]);
-        let mut s = Sampler::lm(1.0, 2, embed, 3);
+        let mut s = Sampler::lm(1.0, 2, embed, 3, 1);
         let logits = vec![0.0, 1.0, 2.0, 3.0];
         let mut a0 = vec![0.0; 2];
         for _ in 0..50 {
@@ -162,11 +257,24 @@ mod tests {
     #[test]
     fn lm_batch_rows_sampled_independently() {
         let embed = Tensor::from_vec(&[2, 1], vec![10.0, 20.0]).unwrap();
-        let mut s = Sampler::lm(0.0, 0, embed, 0);
+        let mut s = Sampler::lm(0.0, 0, embed, 0, 2);
         let logits = vec![1.0, 0.0, 0.0, 1.0]; // b0 -> tok0, b1 -> tok1
         let mut a0 = vec![0.0; 2];
         let toks = s.next_a0(&logits, 2, &mut a0).unwrap().unwrap();
         assert_eq!(toks, vec![0, 1]);
         assert_eq!(a0, vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn lm_per_lane_temperature_overrides() {
+        let embed = Tensor::zeros(&[4, 1]);
+        let mut s = Sampler::lm(0.0, 0, embed, 5, 2);
+        // lane 1 samples hot over the top-1 (forced to the max logit)
+        s.reset_lane(1, Some(SamplerCfg::Lm { temperature: 2.0, top_k: 1 }), Some(9));
+        let logits = vec![0.0, 9.0, 1.0, 0.0, 0.0, 0.0, 2.0, 0.5];
+        let mut a0 = vec![0.0; 2];
+        let toks = s.next_a0(&logits, 2, &mut a0).unwrap().unwrap();
+        assert_eq!(toks[0], 1, "lane 0 argmax");
+        assert_eq!(toks[1], 2, "lane 1 top-1 restriction");
     }
 }

@@ -30,6 +30,16 @@
 //! first-token-latency probes — drive `step()` themselves: the paper's
 //! amortized O(log² L) per-token cost only pays off for serving if tokens
 //! can leave the engine per position instead of per rollout.
+//!
+//! **Continuous admission** ([`Session::admit`]): a serving scheduler can
+//! seed a *new request* into one lane of a running batch at any step
+//! boundary — fence in-flight τ tiles, clear the lane's activation rows,
+//! rebase its sampler/length bookkeeping — instead of waiting for the
+//! batch to drain. The lockstep tile schedule is untouched (all lanes
+//! still share every tile); only the recycled lane's *content* restarts,
+//! and because a lane's entire state is its store rows + `a0` + sampler
+//! stream, the admitted rollout is bit-identical to a fresh run of the
+//! same request (DESIGN.md §4, `tests/integration_admission.rs`).
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -42,7 +52,7 @@ use crate::runtime::Runtime;
 use crate::tau::{make_session_impl, TauExecCfg, TauImpl};
 use crate::tiling::{FlopCounter, Tile};
 
-use super::{eager, lazy, Engine, GenOutput, Method, Sampler, Store};
+use super::{eager, lazy, Engine, GenOutput, Method, Sampler, SamplerCfg, Store};
 
 /// Session initialization (prompt seeding, forcing, overrides).
 #[derive(Default)]
@@ -59,16 +69,39 @@ pub struct SessionInit {
     pub first_tokens: Option<Vec<u32>>,
 }
 
+/// Per-lane initialization for continuous admission ([`Session::admit`]).
+///
+/// Where [`SessionInit`] seeds a whole batch at position 0, `LaneInit`
+/// seeds **one lane** at the session's *current* position: the lane's
+/// activation history is cleared, its sampler stream rebased, and its
+/// length bookkeeping restarted, so the lane's rollout from here on is
+/// bit-identical to a fresh session running the same request.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaneInit {
+    /// Positions this lane will generate (its padded request length).
+    /// 0 means "run to the end of the session" (`len - pos`).
+    pub limit: usize,
+    /// Sampling config override (`None` = the engine default).
+    pub sampler_cfg: Option<SamplerCfg>,
+    /// Sampler seed override (`None` = engine seed + lane index).
+    pub seed: Option<u64>,
+}
+
 /// What one [`Session::step`] call produced.
 #[derive(Debug, Clone)]
 pub struct StepOutput {
-    /// 1-indexed position just computed.
+    /// 1-indexed position just computed (the session's global clock;
+    /// subtract a lane's admission position for its local clock).
     pub pos: usize,
     /// Token ids appended at this position (one per lane, LM variant).
     pub tokens: Option<Vec<u32>>,
     /// Checksum (sum) of this position's `out` — the cheap per-position
     /// observable the synthetic variant streams in place of tokens.
     pub checksum: f32,
+    /// Per-lane checksums (sum over each lane's `out` slice): the
+    /// per-request observable serving lanes stream and the admission
+    /// bit-identity tests compare.
+    pub lane_checksums: Vec<f32>,
     /// True once the session has computed all requested positions.
     pub done: bool,
 }
@@ -103,6 +136,13 @@ pub struct Session<'e, 'rt> {
     sc_dims: [usize; 4],
     forced: Option<Vec<f32>>,
     forced_steps: usize,
+    /// Per-lane admission clock: global position at which each lane was
+    /// (re)seeded — 0 for lanes running since session start. A lane's
+    /// local position is `pos - lane_start[lane]`.
+    lane_start: Vec<usize>,
+    /// Per-lane length bookkeeping: positions the lane generates before
+    /// it is done (admission rebases this alongside `lane_start`).
+    lane_limit: Vec<usize>,
     metrics: SessionMetrics,
     flops: FlopCounter,
     tokens: Option<Vec<Vec<u32>>>,
@@ -198,6 +238,8 @@ impl<'e, 'rt> Session<'e, 'rt> {
             sc_dims: [dims.ops(), 2, b, 3 * d],
             forced: init.forced,
             forced_steps,
+            lane_start: vec![0; b],
+            lane_limit: vec![len; b],
             metrics: SessionMetrics::with_capacity(len),
             flops: FlopCounter::new(),
             tokens,
@@ -228,6 +270,119 @@ impl<'e, 'rt> Session<'e, 'rt> {
     /// The step artifact's `out` at the most recent position (`[B, W]`).
     pub fn last_out(&self) -> &[f32] {
         &self.last_out
+    }
+
+    /// Positions lane `lane` has generated since it was (re)seeded.
+    pub fn lane_pos(&self, lane: usize) -> usize {
+        self.pos - self.lane_start[lane]
+    }
+
+    /// Positions lane `lane` will generate in total before it is done.
+    pub fn lane_limit(&self, lane: usize) -> usize {
+        self.lane_limit[lane]
+    }
+
+    /// Global position at which lane `lane` was last (re)seeded.
+    pub fn lane_start(&self, lane: usize) -> usize {
+        self.lane_start[lane]
+    }
+
+    /// This lane has generated everything its admission asked for.
+    pub fn lane_done(&self, lane: usize) -> bool {
+        self.lane_pos(lane) >= self.lane_limit[lane]
+    }
+
+    /// Positions left before the session's global schedule ends — the
+    /// admission capacity check (`admit` requires `limit <= remaining`).
+    pub fn remaining(&self) -> usize {
+        self.len - self.pos
+    }
+
+    /// Continuous admission: seed a new request into one lane of the
+    /// running batch at the current position (a **step boundary** — never
+    /// call between a step's gather and its tile submission; the public
+    /// API makes that impossible since `step` is atomic).
+    ///
+    /// What happens, in order (DESIGN.md §4):
+    ///
+    /// 1. **fence**: every in-flight async τ tile is drained. A gray
+    ///    tile's destination rows span all `G = M·B` groups — including
+    ///    the recycled lane's — so any in-flight tile would either read
+    ///    the predecessor's streams rows after the reset below (leaking
+    ///    its activations into the new request) or race the reset's
+    ///    zeroing of `pending`. `Store::reset_lane` asserts quiescence,
+    ///    turning a missed fence into a deterministic panic. The wait is
+    ///    accounted as exposed fence time on the session totals.
+    /// 2. **store reset**: the lane's `streams`/`pending` rows are zeroed
+    ///    across all its groups. Future tiles whose source blocks straddle
+    ///    the admission point then contribute exact zeros for pre-admission
+    ///    positions — the same values a fresh session's store holds — which
+    ///    is why the admitted rollout is bit-identical to a fresh run (the
+    ///    tile kernels accumulate term-by-term in ascending source order,
+    ///    and the filter index depends only on source→destination distance,
+    ///    which is shift-invariant).
+    /// 3. **lane state rebase**: `a0` slice reset to the model's rollout
+    ///    start, short-conv state zeroed, sampler stream re-seeded with the
+    ///    request's config, token buffer cleared, and the lane's
+    ///    start/limit clocks rebased to the current position.
+    ///
+    /// Errors if the lane is out of range, the capacity `len - pos` cannot
+    /// fit `limit`, the session is complete, or teacher forcing is still
+    /// active (forced inputs address the whole batch, so a mid-forcing
+    /// admission would overwrite the new lane's rollout).
+    pub fn admit(&mut self, lane: usize, init: LaneInit) -> Result<()> {
+        let engine = self.engine;
+        let dims = engine.runtime().dims;
+        let (d, b) = (dims.d, dims.b);
+        if lane >= b {
+            bail!("lane {lane} out of range (B={b})");
+        }
+        if self.pos >= self.len {
+            bail!("session complete: cannot admit into a finished schedule");
+        }
+        let limit = if init.limit == 0 { self.len - self.pos } else { init.limit };
+        if self.pos + limit > self.len {
+            bail!(
+                "admission needs {limit} positions but only {} remain of {}",
+                self.len - self.pos,
+                self.len
+            );
+        }
+        if self.pos < self.forced_steps {
+            bail!("cannot admit a lane while teacher forcing is active");
+        }
+
+        // 1. fence: drain every in-flight tile covering the recycled lane
+        // (all of them — a tile's dst spans every group).
+        if let Some(tau) = self.tau.as_mut() {
+            let fs = tau.fence_all()?;
+            self.metrics.totals.fence_ns += fs.wait_ns as f64;
+            self.metrics.totals.tau_worker_ns += tau.take_worker_ns() as f64;
+        }
+
+        // 2. store: clear the lane's activation history (asserts quiet).
+        self.store.reset_lane(lane, b);
+
+        // 3. lane state: rollout start input, short-conv state, sampler
+        // stream, token buffer, admission clocks.
+        let a0_lane = engine.initial_lane_a0()?;
+        self.a0[lane * d..(lane + 1) * d].copy_from_slice(&a0_lane);
+        if let Some(sc) = self.scstate.as_mut() {
+            let [ops, ph, _, w] = self.sc_dims;
+            for op in 0..ops {
+                for p in 0..ph {
+                    let base = (((op * ph) + p) * b + lane) * w;
+                    sc[base..base + w].fill(0.0);
+                }
+            }
+        }
+        self.sampler.reset_lane(lane, init.sampler_cfg, init.seed);
+        if let Some(all) = self.tokens.as_mut() {
+            all[lane].clear();
+        }
+        self.lane_start[lane] = self.pos;
+        self.lane_limit[lane] = limit;
+        Ok(())
     }
 
     /// Advance one position: upload → fence → pending-column gather →
@@ -302,6 +457,10 @@ impl<'e, 'rt> Session<'e, 'rt> {
         self.stage.streams_col = Runtime::literal_to_vec(&outs[0], g * d)?;
         self.store.set_streams_col(row_of(i), &self.stage.streams_col);
         self.last_out = Runtime::literal_to_vec(&outs[1], b * dims.out_width())?;
+        let w = dims.out_width();
+        let lane_checksums: Vec<f32> = (0..b)
+            .map(|bi| self.last_out[bi * w..(bi + 1) * w].iter().sum())
+            .collect();
         let checksum: f32 = self.last_out.iter().sum();
         self.checksum_total += checksum as f64;
         if self.outs_checksum.len() == self.checksum_history {
@@ -392,7 +551,13 @@ impl<'e, 'rt> Session<'e, 'rt> {
 
         self.metrics.push(bd);
         self.pos = i;
-        Ok(StepOutput { pos: i, tokens: step_tokens, checksum, done: self.pos == self.len })
+        Ok(StepOutput {
+            pos: i,
+            tokens: step_tokens,
+            checksum,
+            lane_checksums,
+            done: self.pos == self.len,
+        })
     }
 
     /// Consume the session into its [`GenOutput`]. Finishing early (before

@@ -119,6 +119,37 @@ impl Store {
         }
     }
 
+    /// Clear every row of one batch lane's groups — the store half of
+    /// continuous admission (`Session::admit`). With `g = m·B + lane`, a
+    /// lane's activation history lives in groups `lane, B+lane, 2B+lane,
+    /// …`; zeroing their `streams` and `pending` rows makes the recycled
+    /// lane's history exactly that of a fresh session (a gray tile whose
+    /// source block straddles the admission point reads true zeros for
+    /// the pre-admission positions, so its contribution to the new lane
+    /// is identical to a fresh run's).
+    ///
+    /// Every row must be quiet: a tile still in flight would read the
+    /// predecessor's streams rows (or re-deposit its pending sums) *after*
+    /// this reset, leaking the recycled lane's activations into the new
+    /// request. The caller fences first — every in-flight tile's dst
+    /// covers all groups, hence also the recycled lane — and this assert
+    /// turns a missed admission fence into a deterministic panic.
+    pub fn reset_lane(&mut self, lane: usize, b: usize) {
+        assert!(lane < b, "lane {lane} out of range (B={b})");
+        assert_eq!(self.g % b, 0, "group axis {} not a multiple of B={b}", self.g);
+        for row in 0..self.t {
+            self.readiness.assert_quiet(row);
+        }
+        let mut gi = lane;
+        while gi < self.g {
+            for row in 0..self.t {
+                self.streams.at2_mut(gi, row).fill(0.0);
+                self.pending.at2_mut(gi, row).fill(0.0);
+            }
+            gi += b;
+        }
+    }
+
     /// Scatter a `[G, D]` step output into `streams[:, col, :]`.
     pub fn set_streams_col(&mut self, col: usize, vals: &[f32]) {
         debug_assert_eq!(vals.len(), self.g * self.d);
@@ -193,6 +224,40 @@ mod tests {
         assert!(res.is_err(), "consuming an in-flight row must panic");
         r.end_write(1..3);
         s.gather_pending_col(2, &mut buf);
+    }
+
+    #[test]
+    fn reset_lane_clears_only_that_lanes_groups() {
+        // G = M·B with M = 2, B = 2: lane 0 -> groups {0, 2}, lane 1 -> {1, 3}
+        let (m, b, t, d) = (2usize, 2usize, 4usize, 3usize);
+        let mut s = Store::new(m * b, t, d);
+        for gi in 0..m * b {
+            for row in 0..t {
+                s.streams.at2_mut(gi, row).fill(gi as f32 + 1.0);
+                s.pending.at2_mut(gi, row).fill(-(gi as f32 + 1.0));
+            }
+        }
+        s.reset_lane(1, b);
+        for row in 0..t {
+            assert!(s.streams.at2(1, row).iter().all(|&v| v == 0.0));
+            assert!(s.pending.at2(3, row).iter().all(|&v| v == 0.0));
+            // lane 0's groups untouched
+            assert!(s.streams.at2(0, row).iter().all(|&v| v == 1.0));
+            assert!(s.pending.at2(2, row).iter().all(|&v| v == -3.0));
+        }
+    }
+
+    #[test]
+    fn reset_lane_panics_on_inflight_writer() {
+        let mut s = Store::new(2, 4, 2);
+        let r = s.readiness();
+        r.begin_write(1..2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            s.reset_lane(0, 2);
+        }));
+        assert!(res.is_err(), "recycling a lane under an in-flight tile must panic");
+        r.end_write(1..2);
+        s.reset_lane(0, 2);
     }
 
     #[test]

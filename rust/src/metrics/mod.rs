@@ -103,11 +103,14 @@ impl SessionMetrics {
     }
 }
 
-/// Monotonic counters for the server (`GET /metrics`).
+/// Monotonic counters + scheduler gauges for the server (`GET /metrics`).
 #[derive(Debug, Default)]
 pub struct ServerCounters {
     pub requests_total: u64,
     pub requests_failed: u64,
+    /// Requests rejected at the front door because the waiting queue was
+    /// at `max_queue` (HTTP 429).
+    pub requests_shed: u64,
     pub tokens_generated: u64,
     pub batches_run: u64,
     /// Requests served in streaming (chunked NDJSON) mode.
@@ -115,15 +118,32 @@ pub struct ServerCounters {
     /// Per-position events actually delivered to streaming lanes (early
     /// stop means this can be less than steps x lanes).
     pub stream_events: u64,
-    pub queue_latency: LatencyRecorder,
+    /// Requests seeded into a lane (at session start or mid-batch).
+    pub admissions_total: u64,
+    /// Admissions into a batch that had already advanced past position 0
+    /// — the continuous-admission path proper.
+    pub admissions_mid_batch: u64,
+    /// Generation sessions the scheduler has opened.
+    pub sessions_started: u64,
+    /// Gauge: requests waiting for a free lane right now.
+    pub queue_depth: u64,
+    /// Gauges: busy lanes / total lanes (B) in the running session.
+    pub lanes_busy: u64,
+    pub lanes_total: u64,
     pub request_latency: LatencyRecorder,
+    /// Enqueue → admission wait (the latency continuous admission is
+    /// supposed to shrink versus drain-then-refill). Recorded by the
+    /// scheduler for every admission — the single queue-wait family
+    /// (the old front-end `fi_queue_latency_*` measured the same wait
+    /// from the connection side and was retired with the scheduler).
+    pub admission_latency: LatencyRecorder,
 }
 
 impl ServerCounters {
     pub fn new() -> ServerCounters {
         ServerCounters {
-            queue_latency: LatencyRecorder::reservoir(4096),
             request_latency: LatencyRecorder::reservoir(4096),
+            admission_latency: LatencyRecorder::reservoir(4096),
             ..Default::default()
         }
     }
@@ -136,14 +156,39 @@ impl ServerCounters {
         };
         metric("fi_requests_total", "requests accepted", self.requests_total as f64);
         metric("fi_requests_failed", "requests failed", self.requests_failed as f64);
+        metric("fi_requests_shed", "requests shed with 429", self.requests_shed as f64);
         metric("fi_tokens_generated", "tokens generated", self.tokens_generated as f64);
         metric("fi_batches_run", "generation batches run", self.batches_run as f64);
         metric("fi_stream_requests", "streaming requests served", self.stream_requests as f64);
         metric("fi_stream_events", "per-position events streamed", self.stream_events as f64);
-        metric("fi_queue_latency_p50_ms", "queue wait p50", self.queue_latency.percentile_ns(50.0) / 1e6);
-        metric("fi_queue_latency_p99_ms", "queue wait p99", self.queue_latency.percentile_ns(99.0) / 1e6);
+        metric("fi_admissions_total", "requests admitted", self.admissions_total as f64);
+        metric(
+            "fi_admissions_mid_batch",
+            "admissions into an already-running batch",
+            self.admissions_mid_batch as f64,
+        );
+        metric("fi_sessions_started", "generation sessions opened", self.sessions_started as f64);
+        metric("fi_queue_depth", "requests waiting for a lane", self.queue_depth as f64);
+        metric("fi_lanes_busy", "lanes serving a request", self.lanes_busy as f64);
+        metric("fi_lanes_total", "batch lanes available (B)", self.lanes_total as f64);
+        let occupancy = if self.lanes_total > 0 {
+            100.0 * self.lanes_busy as f64 / self.lanes_total as f64
+        } else {
+            0.0
+        };
+        metric("fi_lane_occupancy_pct", "busy lanes as a percent of B", occupancy);
         metric("fi_request_latency_p50_ms", "request latency p50", self.request_latency.percentile_ns(50.0) / 1e6);
         metric("fi_request_latency_p99_ms", "request latency p99", self.request_latency.percentile_ns(99.0) / 1e6);
+        metric(
+            "fi_admission_latency_p50_ms",
+            "enqueue-to-admission wait p50",
+            self.admission_latency.percentile_ns(50.0) / 1e6,
+        );
+        metric(
+            "fi_admission_latency_p99_ms",
+            "enqueue-to-admission wait p99",
+            self.admission_latency.percentile_ns(99.0) / 1e6,
+        );
         out
     }
 }
@@ -204,5 +249,24 @@ mod tests {
         assert!(text.contains("fi_stream_requests 1"));
         assert!(text.contains("fi_stream_events 5"));
         assert!(text.contains("# TYPE fi_request_latency_p50_ms gauge"));
+    }
+
+    #[test]
+    fn admission_counters_render() {
+        let mut c = ServerCounters::new();
+        c.admissions_total = 7;
+        c.admissions_mid_batch = 3;
+        c.sessions_started = 2;
+        c.queue_depth = 4;
+        c.lanes_busy = 3;
+        c.lanes_total = 4;
+        c.admission_latency.record_ns(2e6);
+        let text = c.render();
+        assert!(text.contains("fi_admissions_total 7"));
+        assert!(text.contains("fi_admissions_mid_batch 3"));
+        assert!(text.contains("fi_sessions_started 2"));
+        assert!(text.contains("fi_queue_depth 4"));
+        assert!(text.contains("fi_lane_occupancy_pct 75"));
+        assert!(text.contains("fi_admission_latency_p50_ms 2"));
     }
 }

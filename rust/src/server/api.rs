@@ -1,37 +1,45 @@
-//! HTTP API + engine worker thread.
+//! HTTP API + engine worker thread + the continuous-admission scheduler.
 //!
 //! Routes:
 //! * `GET  /health`      — liveness + model summary
 //! * `GET  /metrics`     — Prometheus-style counters
 //! * `GET  /v1/info`     — model dims, engine opts, artifact dir
 //! * `POST /v1/generate` — `{"max_tokens": N}` → per-lane generation
-//!   result; `{"max_tokens": N, "stream": true}` → chunked NDJSON with one
-//!   event per position as the engine's `Session` advances, ending in a
+//!   result; optional per-request sampling (`"temperature"`, `"top_k"`,
+//!   `"sigma"`, `"seed"`); `{"stream": true}` → chunked NDJSON with one
+//!   event per position as the lane advances, ending in a
 //!   `{"done":true,...}` summary line (see DESIGN.md for the wire format).
 //!
 //! PJRT handles are not `Send`, so the `Runtime`/`Engine` live on one
 //! dedicated worker thread; connection threads talk to it over an mpsc
-//! queue (the batcher) and, for streaming lanes, receive per-position
-//! events back over a dedicated channel. This is the same topology as a
-//! vLLM-style router front-end over a single-device engine.
+//! queue and, for streaming lanes, receive per-position events back over a
+//! dedicated channel. The worker runs the [`Scheduler`]: one long-lived
+//! `Session` whose lanes are *individually* recycled — a queued request is
+//! seeded into a free lane at the next step boundary (`Session::admit`)
+//! instead of waiting for the whole batch to drain. This is the LCSM
+//! analogue of vLLM-style continuous batching, adapted to the lockstep
+//! tile schedule: lanes can't have private schedules, but their *content*
+//! can restart at any step boundary (DESIGN.md §4).
 
+use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::{batch_len, collect_batch, GenRequest, LaneResult, StreamEvent};
+use super::batcher::{collect_batch, lane_len, GenRequest, LaneResult, SamplingParams, StreamEvent};
 use super::http::{
     finish_chunks, read_request, write_chunk, write_chunked_head, write_response, Request,
     Response,
 };
 use crate::config::ServerConfig;
-use crate::engine::{Engine, EngineOpts, GenOutput};
+use crate::engine::{Engine, EngineOpts, LaneInit, SamplerCfg, Session, StepOutput};
 use crate::metrics::ServerCounters;
+use crate::model::Variant;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 
@@ -45,9 +53,316 @@ pub struct Server {
 
 struct Shared {
     cfg: ServerConfig,
-    counters: Mutex<ServerCounters>,
+    counters: Arc<Mutex<ServerCounters>>,
     queue: Mutex<Sender<GenRequest>>,
+    /// Requests accepted but not yet completed — the shed gate
+    /// (`max_queue`) reads this without bothering the engine thread.
+    inflight: Arc<AtomicU64>,
     info: Json,
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler: one running session, per-lane request slots, a waiting queue
+// ---------------------------------------------------------------------------
+
+/// One busy lane: the request it serves plus its rebased bookkeeping.
+struct LaneSlot {
+    req: GenRequest,
+    /// Global batch position at admission (lane-local clock offset).
+    admitted_pos: usize,
+    /// Padded positions this lane generates (`lane_len(max_tokens)`).
+    limit: usize,
+    admitted_at: Instant,
+    queue_ms: f64,
+    /// Busy lanes (incl. this one) at admission.
+    batch_size: usize,
+    tokens: Vec<u32>,
+    /// Per-lane checksum running sum over the first `max_tokens` positions.
+    checksum_total: f64,
+}
+
+/// Continuous-admission scheduler: owns the running [`Session`], tracks
+/// free lanes, and seeds queued requests into them at step boundaries.
+struct Scheduler<'e, 'rt> {
+    engine: &'e Engine<'rt>,
+    session: Option<Session<'e, 'rt>>,
+    lanes: Vec<Option<LaneSlot>>,
+    queue: VecDeque<GenRequest>,
+    /// Session schedule length (padded `max_max_tokens`, clamped to L) —
+    /// every admissible request fits a fresh session by construction.
+    horizon: usize,
+    /// `false` = legacy drain-then-refill (admission only at position 0).
+    admit_mid_batch: bool,
+    counters: Arc<Mutex<ServerCounters>>,
+    inflight: Arc<AtomicU64>,
+}
+
+impl<'e, 'rt> Scheduler<'e, 'rt> {
+    fn new(
+        engine: &'e Engine<'rt>,
+        horizon: usize,
+        admit_mid_batch: bool,
+        counters: Arc<Mutex<ServerCounters>>,
+        inflight: Arc<AtomicU64>,
+    ) -> Scheduler<'e, 'rt> {
+        let b = engine.runtime().dims.b;
+        counters.lock().unwrap().lanes_total = b as u64;
+        Scheduler {
+            engine,
+            session: None,
+            lanes: (0..b).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            horizon,
+            admit_mid_batch,
+            counters,
+            inflight,
+        }
+    }
+
+    fn enqueue(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// Nothing running and nothing waiting: the worker may block.
+    fn is_idle(&self) -> bool {
+        self.session.is_none() && self.queue.is_empty()
+    }
+
+    fn busy_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Per-request sampling override → the admitted lane's `SamplerCfg`
+    /// (`None` = keep the engine default for this lane).
+    fn lane_sampler_cfg(&self, s: &SamplingParams) -> Option<SamplerCfg> {
+        let opts: &EngineOpts = self.engine.opts();
+        match self.engine.runtime().dims.variant {
+            Variant::Synthetic => s.sigma.map(|sigma| SamplerCfg::Synthetic { sigma }),
+            Variant::Hyena => {
+                if s.temperature.is_none() && s.top_k.is_none() {
+                    None
+                } else {
+                    Some(SamplerCfg::Lm {
+                        temperature: s.temperature.unwrap_or(opts.temperature),
+                        top_k: s.top_k.unwrap_or(opts.top_k),
+                    })
+                }
+            }
+        }
+    }
+
+    /// Open a session if needed, then admit queued requests onto free
+    /// lanes (this is the step boundary: `tick` calls it before `step`).
+    fn admit_phase(&mut self) {
+        if self.session.is_none() && !self.queue.is_empty() {
+            // with mid-batch admission, open at the full horizon so later
+            // arrivals always have schedule headroom (the cost is one
+            // horizon-sized store allocation per session open); under
+            // drain-then-refill nothing joins later, so size the session
+            // to the batch it will actually run — the first B queued
+            // requests — like the legacy collector did
+            let len = if self.admit_mid_batch {
+                self.horizon
+            } else {
+                self.queue
+                    .iter()
+                    .take(self.lanes.len())
+                    .map(|r| lane_len(r.max_tokens, self.horizon))
+                    .max()
+                    .unwrap_or(1)
+            };
+            match self.engine.session(len) {
+                Ok(sess) => {
+                    self.session = Some(sess);
+                    for slot in &mut self.lanes {
+                        *slot = None;
+                    }
+                    self.counters.lock().unwrap().sessions_started += 1;
+                }
+                Err(e) => {
+                    // a session that cannot even open would error forever:
+                    // fail the whole queue instead of spinning on it
+                    self.fail_queued(&format!("open session: {e:#}"));
+                    return;
+                }
+            }
+        }
+        let (mid_batch, remaining) = match self.session.as_ref() {
+            Some(sess) => (sess.steps_done() > 0, sess.remaining()),
+            None => return,
+        };
+        if mid_batch && !self.admit_mid_batch {
+            return;
+        }
+        for lane in 0..self.lanes.len() {
+            if self.lanes[lane].is_some() {
+                continue;
+            }
+            // first queued request whose padded schedule fits what's left
+            let Some(qi) = self
+                .queue
+                .iter()
+                .position(|r| lane_len(r.max_tokens, self.horizon) <= remaining)
+            else {
+                break;
+            };
+            let req = self.queue.remove(qi).unwrap();
+            let limit = lane_len(req.max_tokens, self.horizon);
+            let init = LaneInit {
+                limit,
+                sampler_cfg: self.lane_sampler_cfg(&req.sampling),
+                seed: req.sampling.seed,
+            };
+            let admitted_pos = {
+                let sess = self.session.as_mut().unwrap();
+                match sess.admit(lane, init) {
+                    Ok(()) => sess.steps_done(),
+                    Err(e) => {
+                        // fail exactly this request (never silently drop
+                        // it or leak its inflight slot) and keep serving
+                        let _ = req.reply.send(Err(format!("admit: {e:#}")));
+                        self.inflight.fetch_sub(1, Ordering::Relaxed);
+                        continue;
+                    }
+                }
+            };
+            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let batch_size = self.lanes.iter().filter(|l| l.is_some()).count() + 1;
+            self.lanes[lane] = Some(LaneSlot {
+                req,
+                admitted_pos,
+                limit,
+                admitted_at: Instant::now(),
+                queue_ms,
+                batch_size,
+                tokens: Vec::new(),
+                checksum_total: 0.0,
+            });
+            let mut c = self.counters.lock().unwrap();
+            c.admissions_total += 1;
+            if mid_batch {
+                c.admissions_mid_batch += 1;
+            }
+            c.admission_latency.record_ns(queue_ms * 1e6);
+        }
+    }
+
+    /// Fail every *queued* (not yet admitted) request.
+    fn fail_queued(&mut self, msg: &str) {
+        while let Some(req) = self.queue.pop_front() {
+            let _ = req.reply.send(Err(msg.to_string()));
+            self.inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Route one step's outputs to the busy lanes; complete any lane that
+    /// reached its padded schedule.
+    fn deliver(&mut self, step: &StepOutput) {
+        for lane in 0..self.lanes.len() {
+            let finished = {
+                let Some(slot) = self.lanes[lane].as_mut() else { continue };
+                let local = step.pos - slot.admitted_pos;
+                let checksum = step.lane_checksums.get(lane).copied().unwrap_or(0.0);
+                if let Some(toks) = &step.tokens {
+                    slot.tokens.push(toks[lane]);
+                }
+                if local <= slot.req.max_tokens {
+                    slot.checksum_total += checksum as f64;
+                    if let Some(tx) = &slot.req.stream {
+                        let token = step.tokens.as_ref().map(|t| t[lane]);
+                        // a send error just means the client hung up; keep
+                        // the lane running (its reply still records the
+                        // rollout)
+                        let _ = tx.send(StreamEvent { pos: local, token, checksum });
+                    }
+                }
+                if local >= slot.req.max_tokens {
+                    slot.req.stream = None; // early stop: close the event stream
+                }
+                local >= slot.limit
+            };
+            if finished {
+                self.finish_lane(lane);
+            }
+        }
+    }
+
+    fn finish_lane(&mut self, lane: usize) {
+        let Some(slot) = self.lanes[lane].take() else { return };
+        let tokens = if slot.tokens.is_empty() {
+            None
+        } else {
+            Some(slot.tokens[..slot.req.max_tokens.min(slot.tokens.len())].to_vec())
+        };
+        let result = LaneResult {
+            tokens,
+            steps: slot.limit,
+            checksum_total: slot.checksum_total,
+            admitted_pos: slot.admitted_pos,
+            queue_ms: slot.queue_ms,
+            gen_ms: slot.admitted_at.elapsed().as_secs_f64() * 1e3,
+            batch_size: slot.batch_size,
+        };
+        let _ = slot.req.reply.send(Ok(result));
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Fail every busy lane (engine error): each admitted request gets the
+    /// error; queued requests stay queued for the next session.
+    fn fail_busy(&mut self, msg: &str) {
+        for slot_opt in &mut self.lanes {
+            if let Some(slot) = slot_opt.take() {
+                let _ = slot.req.reply.send(Err(msg.to_string()));
+                self.inflight.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        self.session = None;
+    }
+
+    /// A queued request could be admitted into the current session at the
+    /// next step boundary: something queued fits the remaining schedule
+    /// AND this session may still take admissions (mid-batch admissions
+    /// are disabled under drain-then-refill once the session has moved).
+    fn queue_admissible(&self) -> bool {
+        let Some(sess) = self.session.as_ref() else { return !self.queue.is_empty() };
+        if sess.steps_done() > 0 && !self.admit_mid_batch {
+            return false;
+        }
+        let remaining = sess.remaining();
+        self.queue.iter().any(|r| lane_len(r.max_tokens, self.horizon) <= remaining)
+    }
+
+    fn publish_gauges(&self) {
+        let mut c = self.counters.lock().unwrap();
+        c.queue_depth = self.queue.len() as u64;
+        c.lanes_busy = self.busy_lanes() as u64;
+    }
+
+    /// One step boundary: admit, advance one position, deliver, and
+    /// retire the session when it has nothing left to do.
+    fn tick(&mut self) -> Result<()> {
+        self.admit_phase();
+        if self.session.is_some() {
+            let step = self.session.as_mut().unwrap().step()?;
+            self.deliver(&step);
+            // retire: schedule exhausted, or every lane idle with nothing
+            // admissible left (a fresh session can always fit the queue)
+            let done = step.done;
+            if done || (self.busy_lanes() == 0 && !self.queue_admissible()) {
+                if let Some(sess) = self.session.take() {
+                    // finish() drains in-flight async tiles before the
+                    // store drops — required even for an early retire
+                    let _ = sess.finish();
+                    self.counters.lock().unwrap().batches_run += 1;
+                }
+                // a `done` session cannot have stragglers (admission
+                // guarantees limit <= remaining), but stay defensive
+                self.fail_busy("session retired with the lane still running");
+            }
+        }
+        self.publish_gauges();
+        Ok(())
+    }
 }
 
 impl Server {
@@ -60,10 +375,14 @@ impl Server {
 
         let (req_tx, req_rx) = channel::<GenRequest>();
         let shutdown = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(Mutex::new(ServerCounters::new()));
+        let inflight = Arc::new(AtomicU64::new(0));
 
         // ---- engine worker (owns the non-Send PJRT state) ----
         let (ready_tx, ready_rx) = channel::<Result<Json, String>>();
         let ecfg = cfg.clone();
+        let wcounters = counters.clone();
+        let winflight = inflight.clone();
         let engine_thread = thread::Builder::new()
             .name("fi-engine".into())
             .spawn(move || {
@@ -86,46 +405,53 @@ impl Server {
                 // PJRT tau executables) for the largest session a request
                 // can trigger, so the first request's measured gen_ms
                 // contains no one-time derivation cost.
-                let prewarm_len = ecfg.max_max_tokens.next_power_of_two().min(dims.l);
-                if let Err(e) = engine.prewarm(prewarm_len) {
+                let horizon = lane_len(ecfg.max_max_tokens, dims.l);
+                if let Err(e) = engine.prewarm(horizon) {
                     let _ = ready_tx.send(Err(format!("prewarm engine: {e:#}")));
                     return;
                 }
                 let info = info_json(&ecfg, &ecfg.engine, &rt);
                 let _ = ready_tx.send(Ok(info));
+                let engine = engine; // freeze: the scheduler borrows it
                 let window = Duration::from_millis(ecfg.batch_window_ms);
-                while let Some(mut batch) = collect_batch(&req_rx, dims.b, window) {
-                    let len = batch_len(&batch, dims.l);
-                    let t0 = Instant::now();
-                    let result = if batch.iter().any(|r| r.stream.is_some()) {
-                        stream_batch(&engine, &mut batch, len)
+                let mut sched = Scheduler::new(
+                    &engine,
+                    horizon,
+                    ecfg.continuous_admission,
+                    wcounters,
+                    winflight,
+                );
+                let mut disconnected = false;
+                loop {
+                    if sched.is_idle() {
+                        if disconnected {
+                            break;
+                        }
+                        // block for the first request; drain co-arrivals
+                        // within the window so they share one session
+                        match collect_batch(&req_rx, dims.b, window) {
+                            Some(batch) => {
+                                for r in batch {
+                                    sched.enqueue(r);
+                                }
+                            }
+                            None => break,
+                        }
                     } else {
-                        engine.generate(len)
-                    };
-                    let gen_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    match result {
-                        Ok(out) => {
-                            for (lane, req) in batch.into_iter().enumerate() {
-                                let tokens = out.tokens.as_ref().map(|all| {
-                                    let lane_toks = &all[lane.min(all.len() - 1)];
-                                    lane_toks[..req.max_tokens.min(lane_toks.len())].to_vec()
-                                });
-                                let _ = req.reply.send(Ok(LaneResult {
-                                    tokens,
-                                    steps: out.steps,
-                                    queue_ms: req.enqueued.elapsed().as_secs_f64() * 1e3
-                                        - gen_ms,
-                                    gen_ms,
-                                    batch_size: lane + 1,
-                                }));
+                        // step boundary: pick up new arrivals non-blocking
+                        loop {
+                            match req_rx.try_recv() {
+                                Ok(r) => sched.enqueue(r),
+                                Err(TryRecvError::Empty) => break,
+                                Err(TryRecvError::Disconnected) => {
+                                    disconnected = true;
+                                    break;
+                                }
                             }
                         }
-                        Err(e) => {
-                            let msg = format!("generate: {e:#}");
-                            for req in batch {
-                                let _ = req.reply.send(Err(msg.clone()));
-                            }
-                        }
+                    }
+                    if let Err(e) = sched.tick() {
+                        sched.fail_busy(&format!("generate: {e:#}"));
                     }
                 }
             })
@@ -139,8 +465,9 @@ impl Server {
 
         let shared = Arc::new(Shared {
             cfg,
-            counters: Mutex::new(ServerCounters::new()),
+            counters,
             queue: Mutex::new(req_tx),
+            inflight,
             info,
         });
 
@@ -202,42 +529,10 @@ fn info_json(cfg: &ServerConfig, eng: &EngineOpts, rt: &Runtime) -> Json {
         ("tau", Json::Str(eng.tau.as_str().into())),
         ("async_mixer", Json::Bool(eng.async_mixer)),
         ("split_min_u", Json::Num(eng.split_min_u as f64)),
+        ("continuous_admission", Json::Bool(cfg.continuous_admission)),
+        ("max_queue", Json::Num(cfg.max_queue as f64)),
         ("artifacts", Json::Str(cfg.artifacts.display().to_string())),
     ])
-}
-
-/// Drive one batch through the `Session` state machine, emitting a
-/// [`StreamEvent`] per position to every streaming lane that has not yet
-/// hit its `max_tokens`. Per-lane early stop: once a lane is satisfied its
-/// event channel is dropped — the client's event stream closes at the
-/// lane's own boundary — while the batch runs out its padded power-of-two
-/// schedule for the other lanes. The lockstep constraint documented in
-/// DESIGN.md only forces the *computation* to stay synchronized, not the
-/// delivery; the summary line still arrives once the batch completes,
-/// since it carries batch-level stats (steps, gen_ms).
-fn stream_batch(engine: &Engine, batch: &mut [GenRequest], len: usize) -> Result<GenOutput> {
-    let mut session = engine.session(len)?;
-    while !session.is_done() {
-        let step = session.step()?;
-        for (lane, req) in batch.iter_mut().enumerate() {
-            if let Some(tx) = &req.stream {
-                if step.pos <= req.max_tokens {
-                    let token =
-                        step.tokens.as_ref().map(|toks| toks[lane.min(toks.len() - 1)]);
-                    // a send error just means the client hung up; keep the
-                    // batch running for the other lanes
-                    let _ =
-                        tx.send(StreamEvent { pos: step.pos, token, checksum: step.checksum });
-                }
-            } else {
-                continue;
-            }
-            if step.pos >= req.max_tokens {
-                req.stream = None; // early stop: close this lane's event stream
-            }
-        }
-    }
-    Ok(session.finish())
 }
 
 fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) {
@@ -271,6 +566,24 @@ fn route(req: &Request, shared: &Shared) -> Response {
     }
 }
 
+/// Parse the optional per-request sampling overrides.
+fn parse_sampling(j: &Json) -> std::result::Result<SamplingParams, String> {
+    let mut s = SamplingParams::default();
+    if let Some(v) = j.get("temperature") {
+        s.temperature = Some(v.as_f64().ok_or("temperature must be a number")? as f32);
+    }
+    if let Some(v) = j.get("top_k") {
+        s.top_k = Some(v.as_usize().ok_or("top_k must be a non-negative integer")?);
+    }
+    if let Some(v) = j.get("sigma") {
+        s.sigma = Some(v.as_f64().ok_or("sigma must be a number")? as f32);
+    }
+    if let Some(v) = j.get("seed") {
+        s.seed = Some(v.as_i64().ok_or("seed must be an integer")? as u64);
+    }
+    Ok(s)
+}
+
 fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
     shared.counters.lock().unwrap().requests_total += 1;
     let reject = |msg: String| {
@@ -297,7 +610,32 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
         let _ = write_response(stream, &reject(msg));
         return;
     }
+    let sampling = match parse_sampling(&j) {
+        Ok(s) => s,
+        Err(msg) => {
+            let _ = write_response(stream, &reject(msg));
+            return;
+        }
+    };
     let want_stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
+
+    // shed before enqueueing: a bounded *waiting* queue keeps overload
+    // failures fast and explicit instead of timing out 600 s later.
+    // waiting = accepted-but-unfinished minus the lanes actively serving
+    // (the busy gauge lags by at most one step boundary, which only ever
+    // sheds a hair early under a full batch — never while lanes idle)
+    let waiting = shared
+        .inflight
+        .load(Ordering::Relaxed)
+        .saturating_sub(shared.counters.lock().unwrap().lanes_busy);
+    if waiting >= shared.cfg.max_queue as u64 {
+        let mut c = shared.counters.lock().unwrap();
+        c.requests_failed += 1;
+        c.requests_shed += 1;
+        drop(c);
+        let _ = write_response(stream, &Response::too_many_requests());
+        return;
+    }
 
     let (tx, rx) = channel();
     let (event_tx, event_rx) = if want_stream {
@@ -306,9 +644,16 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
     } else {
         (None, None)
     };
-    let request =
-        GenRequest { max_tokens, enqueued: Instant::now(), reply: tx, stream: event_tx };
+    let request = GenRequest {
+        max_tokens,
+        sampling,
+        enqueued: Instant::now(),
+        reply: tx,
+        stream: event_tx,
+    };
+    shared.inflight.fetch_add(1, Ordering::Relaxed);
     if shared.queue.lock().unwrap().send(request).is_err() {
+        shared.inflight.fetch_sub(1, Ordering::Relaxed);
         let _ =
             write_response(stream, &Response::json(503, "{\"error\":\"engine unavailable\"}".into()));
         return;
@@ -331,13 +676,14 @@ fn buffered_reply(
         Ok(Ok(lane)) => {
             let mut c = shared.counters.lock().unwrap();
             c.tokens_generated += max_tokens as u64;
-            c.batches_run += 1;
-            c.queue_latency.record_ns(lane.queue_ms.max(0.0) * 1e6);
             c.request_latency.record_ns(lane.gen_ms * 1e6);
             drop(c);
             let mut pairs = vec![
                 ("steps", Json::Num(lane.steps as f64)),
                 ("max_tokens", Json::Num(max_tokens as f64)),
+                ("checksum", Json::Num(lane.checksum_total)),
+                ("admitted_pos", Json::Num(lane.admitted_pos as f64)),
+                ("queue_ms", Json::Num(lane.queue_ms)),
                 ("gen_ms", Json::Num(lane.gen_ms)),
                 ("batch_size", Json::Num(lane.batch_size as f64)),
             ];
@@ -416,7 +762,7 @@ fn stream_reply(
 }
 
 /// Build the final summary line once the lane's event stream has closed:
-/// the batch has completed (or errored), so the LaneResult is (or is
+/// the lane has completed (or errored), so the LaneResult is (or is
 /// about to be) on the reply channel.
 fn stream_tail(
     shared: &Shared,
@@ -429,8 +775,6 @@ fn stream_tail(
             let mut c = shared.counters.lock().unwrap();
             c.tokens_generated += max_tokens as u64;
             c.stream_events += emitted;
-            c.batches_run += 1;
-            c.queue_latency.record_ns(lane.queue_ms.max(0.0) * 1e6);
             c.request_latency.record_ns(lane.gen_ms * 1e6);
             drop(c);
             Json::from_pairs(vec![
@@ -438,6 +782,9 @@ fn stream_tail(
                 ("steps", Json::Num(lane.steps as f64)),
                 ("tokens_emitted", Json::Num(emitted as f64)),
                 ("max_tokens", Json::Num(max_tokens as f64)),
+                ("checksum", Json::Num(lane.checksum_total)),
+                ("admitted_pos", Json::Num(lane.admitted_pos as f64)),
+                ("queue_ms", Json::Num(lane.queue_ms)),
                 ("gen_ms", Json::Num(lane.gen_ms)),
                 ("batch_size", Json::Num(lane.batch_size as f64)),
             ])

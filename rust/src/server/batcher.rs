@@ -1,36 +1,59 @@
-//! Static batcher: the artifact build fixes the batch width B (shapes are
-//! baked into HLO), so requests are grouped into lockstep lanes — collect
-//! up to B requests within a window, run one generation session, fan the
-//! per-lane results back. The LCSM analogue of vLLM's batching stage,
-//! adapted to position-synchronized decoding (every lane shares the tile
-//! schedule, so continuous batching would desynchronize the fractal tiling
-//! — a real design constraint of the paper's method, documented in
-//! DESIGN.md).
+//! Request/reply types for the serving queue, plus the idle-window
+//! collector the scheduler uses to batch the *first* admissions of a
+//! fresh session.
+//!
+//! The artifact build fixes the batch width B (shapes are baked into
+//! HLO), so the engine always steps B lockstep lanes. Historically that
+//! meant drain-then-refill batches; since the continuous-admission
+//! scheduler (`server/api.rs::Scheduler`, DESIGN.md §4) landed, a request
+//! is seeded into a *free lane of the running batch* at the next step
+//! boundary instead — `collect_batch` survives as the idle-state window
+//! (block for the first request, drain up to B more within
+//! `batch_window_ms` so simultaneous arrivals start one session together).
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
+
+/// Per-request sampling overrides, parsed from the request JSON and
+/// threaded through the scheduler into `Session::admit` — each admitted
+/// lane keeps its own temperature/top-k/sigma/seed (`None` = engine
+/// default; the seed default is `engine seed + lane index`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SamplingParams {
+    /// LM sampling temperature (0 = argmax).
+    pub temperature: Option<f32>,
+    /// LM top-k restriction (0 = all).
+    pub top_k: Option<usize>,
+    /// Synthetic-variant noise scale.
+    pub sigma: Option<f32>,
+    /// Per-request PRNG seed (reproducible rollouts under admission).
+    pub seed: Option<u64>,
+}
 
 /// One queued generation request.
 #[derive(Debug)]
 pub struct GenRequest {
     pub max_tokens: usize,
+    /// Per-lane sampling config for this request.
+    pub sampling: SamplingParams,
     pub enqueued: Instant,
     pub reply: Sender<Result<LaneResult, String>>,
     /// Streaming lane: the engine worker sends one event per position as
-    /// the batch's `Session` advances, and stops at this lane's
-    /// `max_tokens` even while the padded batch keeps running (per-lane
-    /// early stop). `None` = classic buffered reply.
+    /// the lane advances, and stops at this lane's `max_tokens` even
+    /// while the batch keeps running (per-lane early stop). `None` =
+    /// classic buffered reply.
     pub stream: Option<Sender<StreamEvent>>,
 }
 
 /// One incremental per-position event on a streaming lane.
 #[derive(Debug, Clone)]
 pub struct StreamEvent {
-    /// 1-indexed position in the batch's padded schedule.
+    /// 1-indexed position on the *lane's* clock (an admitted lane starts
+    /// at 1 regardless of the batch's global position).
     pub pos: usize,
     /// Token id sampled for this lane at this position (LM variant).
     pub token: Option<u32>,
-    /// Checksum of the position's `out` (the synthetic variant's
+    /// Checksum of the lane's `out` slice (the synthetic variant's
     /// per-position observable).
     pub checksum: f32,
 }
@@ -40,10 +63,21 @@ pub struct StreamEvent {
 pub struct LaneResult {
     /// Sampled tokens for this lane (LM variant), truncated to max_tokens.
     pub tokens: Option<Vec<u32>>,
-    /// Positions actually generated by the batch (padded power of two).
+    /// Positions actually generated for this lane (its padded power of
+    /// two), on the lane's own clock.
     pub steps: usize,
+    /// Running sum of the lane's per-position checksums over its first
+    /// `max_tokens` positions — the cheap whole-rollout observable the
+    /// serving smoke gate compares across admission schedules.
+    pub checksum_total: f64,
+    /// Global batch position at which the lane was admitted (0 = session
+    /// start; > 0 = a mid-batch admission).
+    pub admitted_pos: usize,
+    /// Time spent queued before a lane was free (enqueue → admit).
     pub queue_ms: f64,
+    /// Time from admission to the lane completing its padded schedule.
     pub gen_ms: f64,
+    /// Busy lanes (this one included) at the moment of admission.
     pub batch_size: usize,
 }
 
@@ -71,11 +105,12 @@ pub fn collect_batch(
     Some(batch)
 }
 
-/// Generation length for a batch: the largest request, rounded up to a
+/// Lane schedule length for one request: `max_tokens` rounded up to a
 /// power of two (the tile schedule needs 2^P), clamped to [1, max_len].
-pub fn batch_len(batch: &[GenRequest], max_len: usize) -> usize {
-    let want = batch.iter().map(|r| r.max_tokens).max().unwrap_or(1).max(1);
-    want.next_power_of_two().min(max_len)
+/// The scheduler uses it both per lane and (max'ed over a batch) to size
+/// drain-then-refill sessions.
+pub fn lane_len(max_tokens: usize, max_len: usize) -> usize {
+    max_tokens.max(1).next_power_of_two().min(max_len)
 }
 
 #[cfg(test)]
@@ -85,7 +120,16 @@ mod tests {
 
     fn req(n: usize) -> (GenRequest, Receiver<Result<LaneResult, String>>) {
         let (tx, rx) = channel();
-        (GenRequest { max_tokens: n, enqueued: Instant::now(), reply: tx, stream: None }, rx)
+        (
+            GenRequest {
+                max_tokens: n,
+                sampling: SamplingParams::default(),
+                enqueued: Instant::now(),
+                reply: tx,
+                stream: None,
+            },
+            rx,
+        )
     }
 
     #[test]
@@ -119,11 +163,16 @@ mod tests {
     }
 
     #[test]
-    fn batch_len_rounds_and_clamps() {
-        let reqs: Vec<GenRequest> = [5, 9].iter().map(|&n| req(n).0).collect();
-        assert_eq!(batch_len(&reqs, 4096), 16);
-        assert_eq!(batch_len(&reqs, 8), 8);
-        let one: Vec<GenRequest> = vec![req(0).0];
-        assert_eq!(batch_len(&one, 64), 1);
+    fn lane_len_rounds_and_clamps() {
+        assert_eq!(lane_len(5, 4096), 8);
+        assert_eq!(lane_len(16, 4096), 16);
+        assert_eq!(lane_len(0, 64), 1);
+        assert_eq!(lane_len(3000, 2048), 2048, "padded length clamps to L");
+    }
+
+    #[test]
+    fn sampling_params_default_is_all_engine_defaults() {
+        let s = SamplingParams::default();
+        assert_eq!(s, SamplingParams { temperature: None, top_k: None, sigma: None, seed: None });
     }
 }

@@ -63,6 +63,13 @@ impl Response {
         )]);
         Response::json(400, j.to_string())
     }
+
+    /// Load shed: the serving queue is at its configured bound
+    /// (`ServerConfig::max_queue`), so the request is rejected up front
+    /// instead of being queued toward a distant timeout.
+    pub fn too_many_requests() -> Response {
+        Response::json(429, "{\"error\":\"queue full, retry later\"}".into())
+    }
 }
 
 fn reason_for(status: u16) -> &'static str {

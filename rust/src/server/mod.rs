@@ -1,10 +1,12 @@
-//! Serving layer: minimal HTTP front-end, static lockstep batcher, and
-//! the engine worker thread, with per-token streaming lanes driven off
-//! the engine's `Session` state machine (see `rust/DESIGN.md`).
+//! Serving layer: minimal HTTP front-end, the engine worker thread, and
+//! the continuous-admission scheduler — queued requests are seeded into
+//! free lanes of the *running* batch at step boundaries, with per-lane
+//! sampling configs and per-token streaming driven off the engine's
+//! `Session` state machine (see `rust/DESIGN.md` §4).
 
 pub mod api;
 pub mod batcher;
 pub mod http;
 
 pub use api::Server;
-pub use batcher::{GenRequest, LaneResult, StreamEvent};
+pub use batcher::{GenRequest, LaneResult, SamplingParams, StreamEvent};

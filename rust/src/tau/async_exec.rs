@@ -34,6 +34,17 @@
 //!   (see DESIGN.md §Pipelining for the accumulation-order caveat —
 //!   equivalence is bit-exact with splitting off, tolerance-bounded with
 //!   it on).
+//! * **Lane recycling (continuous admission)**: `Session::admit` clears
+//!   one batch lane's store rows while the batch keeps running. Every
+//!   submitted tile's destination covers *all* `G = M·B` groups — there
+//!   is no per-lane tile — so a tile in flight at admission time always
+//!   covers the recycled lane: it would read the predecessor's streams
+//!   rows after the reset, or re-deposit predecessor pending sums over
+//!   the cleared rows. Admission therefore drains with [`AsyncTau::
+//!   fence_all`] (the "fence tiles whose dst covers the recycled lane"
+//!   rule degenerates to fence-everything), and `Store::reset_lane`'s
+//!   quiet-row assertion converts a missed admission fence into a
+//!   deterministic panic rather than cross-request activation leakage.
 //! * Wrap safety (Appendix D half store): a split remainder outlives the
 //!   next fence, so its source rows must not be recycled underneath it.
 //!   Splitting is therefore disabled when `2U > rows` — only the single

@@ -133,6 +133,22 @@ pub fn env_str(name: &str, default: &str) -> String {
     std::env::var(name).unwrap_or_else(|_| default.to_string())
 }
 
+/// Scrape one numeric metric off a running server's `GET /metrics`
+/// (Prometheus text exposition; shared by the serving bench and the
+/// serving-smoke example so the parse lives in one place).
+pub fn scrape_metric(addr: std::net::SocketAddr, name: &str) -> Option<f64> {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).ok()?;
+    s.write_all(b"GET /metrics HTTP/1.1\r\n\r\n").ok()?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).ok()?;
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("");
+    body.lines()
+        .find(|l| !l.starts_with('#') && l.starts_with(name))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
 /// Skip helper: benches need `make artifacts` to have run.
 pub fn require_artifacts(dir: &str) -> Option<std::path::PathBuf> {
     let p = std::path::PathBuf::from(dir);

@@ -1,0 +1,259 @@
+//! Integration: continuous admission (`Session::admit`) is *semantically
+//! invisible* to the admitted request. Seeding a request into a lane of a
+//! running batch at position `i` must produce **bit-identical** outputs to
+//! a fresh single-request run of the same request — including with the
+//! Appendix D half store wrapped past its halfway point and with the
+//! deadline-fenced async mixer in flight at the admission boundary.
+//!
+//! Why bit-identity is even possible: the direct τ kernel accumulates one
+//! `y·ρ` product at a time in ascending source order, the filter index
+//! depends only on source→destination distance (shift-invariant), and a
+//! recycled lane's cleared rows contribute exact `+0.0`s — so the admitted
+//! lane sees the same float operations in the same order as a fresh run,
+//! just translated along the global schedule. The FFT τ kernel mixes a
+//! tile's sources through transforms, so *across different admission
+//! positions* it is only tolerance-equal; what must still be bit-exact for
+//! it is async-vs-sync under one fixed admission schedule (the admission
+//! fence drains in-flight tiles before the lane reset — a missed fence
+//! panics via `RowReadiness`).
+
+use std::path::Path;
+
+use flash_inference::engine::{Engine, EngineOpts, LaneInit, Method, SamplerCfg};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+
+fn runtime(variant: &str) -> Option<Runtime> {
+    let dir = Path::new("artifacts").join(variant);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("load runtime"))
+}
+
+fn opts(tau: TauKind, async_mixer: bool) -> EngineOpts {
+    EngineOpts { method: Method::Flash, tau, async_mixer, ..Default::default() }
+}
+
+/// Run a `len`-position session, admit `init` into `lane` after
+/// `admit_at` completed positions, and return the lane's per-position
+/// checksums for its `limit` generated positions.
+fn drive_admitted(
+    engine: &Engine,
+    len: usize,
+    lane: usize,
+    admit_at: usize,
+    init: LaneInit,
+) -> Vec<f32> {
+    let mut sess = engine.session(len).expect("session");
+    for _ in 0..admit_at {
+        sess.step().expect("pre-admission step");
+    }
+    sess.admit(lane, init).expect("admit");
+    assert_eq!(sess.lane_start(lane), admit_at);
+    assert_eq!(sess.lane_pos(lane), 0);
+    let mut checksums = Vec::with_capacity(init.limit);
+    for _ in 0..init.limit {
+        let step = sess.step().expect("post-admission step");
+        checksums.push(step.lane_checksums[lane]);
+    }
+    assert!(sess.lane_done(lane));
+    sess.finish();
+    checksums
+}
+
+#[test]
+fn admitted_lane_is_bit_identical_to_fresh_run() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let lane = rt.dims.b - 1;
+    // async mixer ON (the acceptance criterion) + per-request sampling:
+    // the admitted lane's noise stream must restart exactly as a fresh
+    // run's does, independent of the batch's global position
+    let engine = Engine::new(&rt, opts(TauKind::RustDirect, true)).unwrap();
+    let init = LaneInit {
+        limit: 32,
+        sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.25 }),
+        seed: Some(77),
+    };
+    let fresh = drive_admitted(&engine, 64, lane, 0, init);
+    for admit_at in [1, 16, 17] {
+        let mid = drive_admitted(&engine, 64, lane, admit_at, init);
+        assert_eq!(fresh, mid, "admission at position {admit_at} diverged");
+    }
+}
+
+#[test]
+fn admission_after_half_store_wrap_is_bit_identical() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let lane = 0;
+    let engine = Engine::new(
+        &rt,
+        EngineOpts { half_store: true, ..opts(TauKind::RustDirect, true) },
+    )
+    .unwrap();
+    let init = LaneInit {
+        limit: 16,
+        sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.5 }),
+        seed: Some(3),
+    };
+    // len 64 -> 32 wrapped rows; admitting at 40 recycles rows that have
+    // already wrapped once, and the lane's tiles straddle row_of() seams
+    let fresh = drive_admitted(&engine, 64, lane, 0, init);
+    let wrapped = drive_admitted(&engine, 64, lane, 40, init);
+    assert_eq!(fresh, wrapped, "half-store admission diverged");
+}
+
+#[test]
+fn async_admission_matches_sync_admission_rust_fft() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let lane = rt.dims.b - 1;
+    let init = LaneInit {
+        limit: 32,
+        sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.25 }),
+        seed: Some(11),
+    };
+    // same admission schedule, async vs forced-sync: the admission fence
+    // drains the in-flight FFT tile before the lane reset, so the
+    // arithmetic (and therefore every checksum bit) must match; a dropped
+    // fence would instead panic in RowReadiness or corrupt the rollout
+    let run = |async_mixer| {
+        let engine = Engine::new(&rt, opts(TauKind::RustFft, async_mixer)).unwrap();
+        drive_admitted(&engine, 64, lane, 24, init)
+    };
+    assert_eq!(run(true), run(false), "async admission diverged from sync");
+}
+
+#[test]
+fn recycled_lane_leaves_no_stale_rows() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let dims = rt.dims;
+    let lane = dims.b - 1;
+    let engine = Engine::new(
+        &rt,
+        EngineOpts { record_streams: true, ..opts(TauKind::RustFft, true) },
+    )
+    .unwrap();
+    let mut sess = engine.session(32).unwrap();
+    sess.admit(lane, LaneInit { limit: 8, ..Default::default() }).unwrap();
+    for _ in 0..16 {
+        sess.step().unwrap();
+    }
+    // recycle the lane mid-batch; its first rollout's rows must vanish
+    sess.admit(lane, LaneInit { limit: 8, seed: Some(4), ..Default::default() }).unwrap();
+    for _ in 0..8 {
+        sess.step().unwrap();
+    }
+    let out = sess.finish();
+    let streams = out.streams.expect("record_streams");
+    let mut gi = lane;
+    while gi < dims.g {
+        // rows before the re-admission point (and after the early finish)
+        // were zeroed by the recycle and never rewritten
+        for row in (0..16).chain(24..32) {
+            assert!(
+                streams.at2(gi, row).iter().all(|&v| v == 0.0),
+                "stale activation in group {gi} row {row}"
+            );
+        }
+        gi += dims.b;
+    }
+}
+
+#[test]
+fn per_lane_seed_is_deterministic_under_admission_churn() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let lane = 0;
+    let engine = Engine::new(
+        &rt,
+        EngineOpts { threads: 2, ..opts(TauKind::RustDirect, true) },
+    )
+    .unwrap();
+    let init = LaneInit {
+        limit: 16,
+        sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.3 }),
+        seed: Some(123),
+    };
+    // one continuously running batch, the same request admitted into the
+    // same lane three times at different global positions: every rollout
+    // must replay the identical checksum trajectory
+    let mut sess = engine.session(64).unwrap();
+    let mut rollouts: Vec<Vec<f32>> = Vec::new();
+    for _round in 0..3 {
+        sess.admit(lane, init).unwrap();
+        let mut cs = Vec::new();
+        for _ in 0..16 {
+            cs.push(sess.step().unwrap().lane_checksums[lane]);
+        }
+        rollouts.push(cs);
+    }
+    sess.finish();
+    assert_eq!(rollouts[0], rollouts[1], "second admission diverged");
+    assert_eq!(rollouts[0], rollouts[2], "third admission diverged");
+}
+
+#[test]
+fn admission_bookkeeping_and_errors() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let b = rt.dims.b;
+    let engine = Engine::new(&rt, opts(TauKind::RustDirect, true)).unwrap();
+
+    let mut sess = engine.session(16).unwrap();
+    for _ in 0..8 {
+        sess.step().unwrap();
+    }
+    // capacity: only 8 positions remain
+    assert!(sess.admit(0, LaneInit { limit: 16, ..Default::default() }).is_err());
+    // lane range
+    assert!(sess.admit(b, LaneInit { limit: 4, ..Default::default() }).is_err());
+    // limit 0 = run to the end of the schedule
+    sess.admit(0, LaneInit::default()).unwrap();
+    assert_eq!(sess.lane_limit(0), 8);
+    assert_eq!(sess.lane_start(0), 8);
+    assert!(!sess.lane_done(0));
+    while !sess.is_done() {
+        sess.step().unwrap();
+    }
+    assert!(sess.lane_done(0));
+    // complete session refuses admissions
+    assert!(sess.admit(0, LaneInit { limit: 1, ..Default::default() }).is_err());
+    sess.finish();
+
+    // teacher forcing owns every lane's inputs: no admission while active
+    let dims = rt.dims;
+    let forced = vec![0.5f32; 8 * dims.b * dims.d];
+    let mut sess = engine.session_teacher_forced(16, &forced).unwrap();
+    sess.step().unwrap();
+    assert!(
+        sess.admit(0, LaneInit { limit: 4, ..Default::default() }).is_err(),
+        "admission during teacher forcing must fail"
+    );
+    sess.finish();
+}
+
+#[test]
+fn admitted_lane_tokens_match_fresh_run_lm() {
+    let Some(rt) = runtime("hyena") else { return };
+    let lane = rt.dims.b - 1;
+    let engine = Engine::new(&rt, opts(TauKind::RustDirect, true)).unwrap();
+    let init = LaneInit {
+        limit: 16,
+        sampler_cfg: Some(SamplerCfg::Lm { temperature: 0.7, top_k: 8 }),
+        seed: Some(9),
+    };
+    let drive = |admit_at: usize| {
+        let mut sess = engine.session(32).unwrap();
+        for _ in 0..admit_at {
+            sess.step().unwrap();
+        }
+        sess.admit(lane, init).unwrap();
+        let mut toks = Vec::new();
+        for _ in 0..16 {
+            let step = sess.step().unwrap();
+            toks.push(step.tokens.expect("LM tokens")[lane]);
+        }
+        sess.finish();
+        toks
+    };
+    assert_eq!(drive(0), drive(8), "admitted LM lane sampled different tokens");
+}
