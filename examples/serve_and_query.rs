@@ -143,6 +143,136 @@ fn admission_probe(addr: std::net::SocketAddr) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The session-paging probe: an oversubscribed arrival pattern — every
+/// lane pinned by a long streaming request, then more work queued than
+/// lanes exist — must force the scheduler to evict a lane into the pager,
+/// admit the queued request, resume the evicted one in a later session,
+/// and complete *everything* with checksums bit-identical to fresh
+/// uninterrupted reruns. Emits the rows for BENCH_paging.json.
+fn paging_probe(addr: std::net::SocketAddr) -> anyhow::Result<Json> {
+    let info = {
+        let mut s = TcpStream::connect(addr)?;
+        s.write_all(b"GET /v1/info HTTP/1.1\r\n\r\n")?;
+        let mut buf = String::new();
+        s.read_to_string(&mut buf)?;
+        Json::parse(buf.split("\r\n\r\n").nth(1).unwrap_or("{}"))
+            .map_err(|e| anyhow::anyhow!("bad info: {e}"))?
+    };
+    let b = info.req_usize("B")?;
+    anyhow::ensure!(
+        info.get("paging").and_then(Json::as_bool) == Some(true),
+        "server reports paging off"
+    );
+    let long_tokens = 384usize;
+    let short_tokens = 16usize;
+    let long_body = |seed: usize| {
+        format!(
+            "{{\"max_tokens\": {long_tokens}, \"sigma\": 0.05, \"seed\": {seed}, \
+             \"stream\": true}}"
+        )
+    };
+
+    let metric = |name| benchkit::scrape_metric(addr, name).unwrap_or(-1.0);
+    let mut outcome = None;
+    for attempt in 1..=3 {
+        let seed0 = 500 + attempt * 10;
+        let evict0 = metric("fi_evictions_total");
+        // pin every lane: B long streaming requests, each confirmed
+        // admitted by its first per-position event
+        let mut longs = Vec::new();
+        for i in 0..b {
+            let mut s = TcpStream::connect(addr)?;
+            s.write_all(raw_post(&long_body(seed0 + i)).as_bytes())?;
+            read_until(&mut s, b"\"pos\":")?;
+            longs.push(s);
+        }
+        // oversubscribe: two short requests with zero free lanes
+        let short_body =
+            format!("{{\"max_tokens\": {short_tokens}, \"sigma\": 0.05, \"seed\": 9}}");
+        let shorts: Vec<Json> = (0..2)
+            .map(|_| post_generate_json(addr, &short_body))
+            .collect::<anyhow::Result<_>>()?;
+        // every long must still complete (evicted or not)
+        let mut tails = Vec::new();
+        for mut s in longs {
+            let mut raw = String::new();
+            s.read_to_string(&mut raw)?;
+            let payload = flash_inference::server::http::decode_chunked(
+                raw.split("\r\n\r\n").nth(1).unwrap_or(""),
+            );
+            let done = payload
+                .lines()
+                .rfind(|l| l.contains("\"done\""))
+                .ok_or_else(|| anyhow::anyhow!("no summary line"))?
+                .to_string();
+            let t = Json::parse(&done).map_err(|e| anyhow::anyhow!("bad tail: {e}"))?;
+            anyhow::ensure!(t.get("error").is_none(), "long request errored: {t}");
+            tails.push(t);
+        }
+        if metric("fi_evictions_total") > evict0 {
+            outcome = Some((seed0, tails, shorts));
+            break;
+        }
+        println!("  attempt {attempt}: longs drained before pressure built, retrying");
+    }
+    let (seed0, tails, shorts) =
+        outcome.ok_or_else(|| anyhow::anyhow!("no eviction observed in 3 attempts"))?;
+
+    for s in &shorts {
+        anyhow::ensure!(
+            s.get("admitted_pos").and_then(Json::as_f64).unwrap_or(-1.0) > 0.0,
+            "short request did not admit into the running batch: {s}"
+        );
+    }
+    let evicted = tails
+        .iter()
+        .filter(|t| t.get("evictions").and_then(Json::as_f64).unwrap_or(0.0) > 0.0)
+        .count();
+    anyhow::ensure!(evicted >= 1, "no long request reports an eviction");
+
+    // the paging claim under test: eviction is semantically invisible —
+    // every rollout's checksum equals a fresh uninterrupted rerun
+    let mut rows = Vec::new();
+    for (i, t) in tails.iter().enumerate() {
+        let body =
+            format!("{{\"max_tokens\": {long_tokens}, \"sigma\": 0.05, \"seed\": {}}}", seed0 + i);
+        let fresh = post_generate_json(addr, &body)?;
+        let (a, f) = (
+            t.get("checksum").and_then(Json::as_f64),
+            fresh.get("checksum").and_then(Json::as_f64),
+        );
+        anyhow::ensure!(
+            a.is_some() && a == f,
+            "seed {}: paged checksum {a:?} != fresh {f:?}",
+            seed0 + i
+        );
+        rows.push(Json::from_pairs(vec![
+            ("seed", Json::Num((seed0 + i) as f64)),
+            ("max_tokens", Json::Num(long_tokens as f64)),
+            ("evictions", t.get("evictions").cloned().unwrap_or(Json::Num(0.0))),
+            ("queue_ms", t.get("queue_ms").cloned().unwrap_or(Json::Num(-1.0))),
+            ("gen_ms", t.get("gen_ms").cloned().unwrap_or(Json::Num(-1.0))),
+            ("checksum_match", Json::Bool(true)),
+        ]));
+    }
+    anyhow::ensure!(metric("fi_resumes_total") >= 1.0, "no resume counted");
+    println!(
+        "  oversubscribed {} requests over {b} lanes: {evicted} eviction(s), \
+         fi_evictions_total={:.0}, fi_resumes_total={:.0}, all checksums == fresh reruns",
+        b + 2,
+        metric("fi_evictions_total"),
+        metric("fi_resumes_total"),
+    );
+    Ok(Json::from_pairs(vec![
+        ("bench", Json::Str("paging".into())),
+        ("lanes", Json::Num(b as f64)),
+        ("concurrent_requests", Json::Num((b + 2) as f64)),
+        ("evictions_total", Json::Num(metric("fi_evictions_total"))),
+        ("resumes_total", Json::Num(metric("fi_resumes_total"))),
+        ("requests", Json::Arr(rows)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts/hyena".into());
     let cfg = ServerConfig {
@@ -246,6 +376,14 @@ fn main() -> anyhow::Result<()> {
     // batch and still produce a bit-identical rollout
     println!("\n=== continuous admission probe (staggered requests) ===");
     admission_probe(addr)?;
+
+    // session paging: oversubscribe the lanes and require evict + resume
+    // with bit-identical rollouts end to end (BENCH_paging.json)
+    println!("\n=== session paging probe (oversubscribed arrivals) ===");
+    let paging_doc = paging_probe(addr)?;
+    let out_path = benchkit::env_str("FI_PAGING_OUT", "BENCH_paging.json");
+    std::fs::write(&out_path, paging_doc.to_string_pretty())?;
+    println!("  wrote {out_path}");
 
     // scrape the server's own metrics
     let metrics = scrape_metrics(addr)?;

@@ -14,7 +14,9 @@ pub fn run(argv: &[String]) -> Result<i32> {
         .value("batch-window-ms", "idle-state co-arrival window (default 5)")
         .value("max-tokens", "default tokens per request (default 256)")
         .switch("no-admission", "disable continuous admission (drain-then-refill batches)")
-        .value("max-queue", "waiting-queue bound before shedding 429s (default 1024)");
+        .value("max-queue", "waiting-queue bound before shedding 429s (default 1024)")
+        .switch("no-paging", "disable session paging (no lane eviction under queue pressure)")
+        .value("pager-capacity-mb", "slab capacity for suspended-lane checkpoints (default 256)");
     if super::maybe_help("flashinfer serve", &schema, argv) {
         return Ok(0);
     }
@@ -28,11 +30,16 @@ pub fn run(argv: &[String]) -> Result<i32> {
     let server = Server::start(cfg.clone())?;
     println!(
         "flashinfer serving {} on http://{} (batch B from artifacts, window {}ms, \
-         continuous admission {})",
+         continuous admission {}, paging {})",
         cfg.artifacts.display(),
         server.addr,
         cfg.batch_window_ms,
-        if cfg.continuous_admission { "on" } else { "off" }
+        if cfg.continuous_admission { "on" } else { "off" },
+        if cfg.paging && cfg.continuous_admission {
+            format!("on ({} MB)", cfg.pager_capacity_mb)
+        } else {
+            "off".into()
+        }
     );
     println!("  GET  /health | GET /metrics | GET /v1/info");
     println!("  POST /v1/generate  {{\"max_tokens\": 128}}");

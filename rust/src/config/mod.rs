@@ -31,6 +31,14 @@ pub struct ServerConfig {
     /// Waiting-queue bound: requests beyond this are shed with HTTP 429
     /// instead of growing the queue without limit.
     pub max_queue: usize,
+    /// Session paging: under queue pressure the scheduler checkpoints the
+    /// busy lane with the most remaining schedule into a slab pager and
+    /// admits the waiting request, resuming the evicted lane later
+    /// (requires continuous admission; off = evicting never happens and
+    /// a request waits for a naturally free lane).
+    pub paging: bool,
+    /// Slab capacity for suspended-lane checkpoints, in megabytes.
+    pub pager_capacity_mb: usize,
     pub engine: EngineOpts,
 }
 
@@ -45,6 +53,8 @@ impl Default for ServerConfig {
             max_max_tokens: 4096,
             continuous_admission: true,
             max_queue: 1024,
+            paging: true,
+            pager_capacity_mb: 256,
             engine: EngineOpts {
                 // serving opt-in: bound the per-position checksum ring so
                 // long-lived streaming sessions cannot grow without limit
@@ -92,6 +102,12 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("max_queue").and_then(Json::as_usize) {
             self.max_queue = v;
+        }
+        if let Some(v) = j.get("paging").and_then(Json::as_bool) {
+            self.paging = v;
+        }
+        if let Some(v) = j.get("pager_capacity_mb").and_then(Json::as_usize) {
+            self.pager_capacity_mb = v;
         }
         if let Some(e) = j.get("engine") {
             if let Some(v) = e.get("method").and_then(Json::as_str) {
@@ -143,6 +159,10 @@ impl ServerConfig {
             self.continuous_admission = false;
         }
         self.max_queue = a.get_usize("max-queue", self.max_queue)?;
+        if a.has("no-paging") {
+            self.paging = false;
+        }
+        self.pager_capacity_mb = a.get_usize("pager-capacity-mb", self.pager_capacity_mb)?;
         if let Some(v) = a.get("method") {
             self.engine.method = Method::parse(v)?;
         }
@@ -264,6 +284,29 @@ mod tests {
         let a = schema.parse(&["--no-admission".to_string()]).unwrap();
         cfg2.apply_args(&a).unwrap();
         assert!(!cfg2.continuous_admission);
+    }
+
+    #[test]
+    fn paging_keys_layer_correctly() {
+        let mut cfg = ServerConfig::default();
+        assert!(cfg.paging, "paging on by default");
+        assert_eq!(cfg.pager_capacity_mb, 256);
+        let j = Json::parse(r#"{"paging": false, "pager_capacity_mb": 64}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert!(!cfg.paging);
+        assert_eq!(cfg.pager_capacity_mb, 64);
+
+        let schema = Schema::new().switch("no-paging", "").value("pager-capacity-mb", "");
+        let a = schema
+            .parse(&["--pager-capacity-mb".to_string(), "16".to_string()])
+            .unwrap();
+        let mut cfg2 = ServerConfig::default();
+        cfg2.apply_args(&a).unwrap();
+        assert!(cfg2.paging, "no flag given: stays on");
+        assert_eq!(cfg2.pager_capacity_mb, 16);
+        let a = schema.parse(&["--no-paging".to_string()]).unwrap();
+        cfg2.apply_args(&a).unwrap();
+        assert!(!cfg2.paging);
     }
 
     #[test]

@@ -24,12 +24,14 @@
 pub mod datadep;
 pub mod eager;
 pub mod lazy;
+pub mod pager;
 pub mod sampler;
 pub mod session;
 pub mod store;
 
 use anyhow::{bail, Context, Result};
 
+pub use pager::{LaneCheckpoint, Pager, SamplerSnapshot};
 pub use sampler::{Sampler, SamplerCfg};
 pub use session::{LaneInit, Session, SessionInit, StepOutput};
 pub use store::{RowReadiness, Store};
@@ -227,6 +229,16 @@ impl<'rt> Engine<'rt> {
             a0[bi * dims.d..(bi + 1) * dims.d].copy_from_slice(&lane);
         }
         Ok(a0)
+    }
+
+    /// Build a session pager sized for this model's lanes: slab blocks of
+    /// `[M, rows_chunk, D]` (one lane's share of the `G = M·B` group
+    /// axis), `capacity_mb` megabytes total. Checkpoints from any session
+    /// over this engine fit its blocks by construction
+    /// (`Session::suspend` / `Session::restore`, DESIGN.md §6).
+    pub fn make_pager(&self, capacity_mb: usize) -> Pager {
+        let dims = self.rt.dims;
+        Pager::new(dims.g / dims.b, dims.d, pager::DEFAULT_ROWS_CHUNK, capacity_mb)
     }
 
     /// Start a resumable session with the default (sampled) rollout start.

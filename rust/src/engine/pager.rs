@@ -1,0 +1,432 @@
+//! Session pager — KV-cache-style paging for LCSM lanes (ROADMAP
+//! "multi-session store sharing").
+//!
+//! Continuous admission recycles lanes *within* one live [`super::Store`],
+//! so an engine can hold exactly `B` resumable requests: a suspended
+//! request's activation rows have nowhere to live. The pager fixes that
+//! with a **slab allocator** over fixed `[groups, rows_chunk, D]` blocks
+//! (`groups = M`, one lane's share of the `G = M·B` group axis): a
+//! suspended lane's entire state — its non-zero `streams`/`pending` store
+//! rows, `a0`/short-conv slices, sampler PRNG snapshot, token buffer and
+//! start/limit clocks — is copied out into a [`LaneCheckpoint`], the lane
+//! is reset (freeing it for another request), and the checkpoint is
+//! restored later by the exact inverse copy. Checkpoints are small: only
+//! rows from the lane's admission row up to `pos` (streams) / `2·pos`
+//! (pending — a gray tile at iteration `i` deposits sums up to row
+//! `2i-1`) can be non-zero, so a lane pages out its own progress, not
+//! the whole store.
+//!
+//! Slab blocks are fixed-size so free/alloc cannot fragment: a checkpoint
+//! of `n` rows takes `ceil(n / rows_chunk)` blocks per tensor, handed back
+//! verbatim on restore (or [`Pager::discard`]). Capacity is bounded
+//! (`pager_capacity_mb`); a suspend that does not fit fails *before* any
+//! lane state is touched, so the scheduler simply skips that eviction.
+//!
+//! The bit-identity contract (why restore is exact) lives with
+//! [`super::Session::suspend`]/[`super::Session::restore`]; this module is
+//! only the storage substrate. See `rust/DESIGN.md` §6.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::engine::SamplerCfg;
+
+/// Monotonic arena ids: every [`Pager`] gets one, and every
+/// [`PagedRows`] remembers which arena minted it, so handing a
+/// checkpoint to the wrong (same-shaped) pager is a deterministic panic
+/// instead of silent garbage reads + free-list corruption.
+static PAGER_IDS: AtomicU64 = AtomicU64::new(1);
+
+/// Default rows per slab block. Small enough that an early eviction
+/// (few non-zero rows) wastes little tail space, large enough that a
+/// full-store checkpoint stays a handful of allocations.
+pub const DEFAULT_ROWS_CHUNK: usize = 16;
+
+/// One lane's sampler state inside a checkpoint: the active config plus
+/// the raw xoshiro256** state, so a resumed lane continues its private
+/// random stream mid-sequence (bit-identical draws).
+#[derive(Debug, Clone)]
+pub struct SamplerSnapshot {
+    pub cfg: SamplerCfg,
+    pub prng_state: [u64; 4],
+}
+
+/// Handle to a row range stored in the slab: block ids plus the logical
+/// row count (the last block may be partially filled) and the id of the
+/// arena that owns the blocks.
+#[derive(Debug)]
+pub struct PagedRows {
+    pager: u64,
+    blocks: Vec<usize>,
+    rows: usize,
+}
+
+impl PagedRows {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Slab f32 values this range actually occupies (whole blocks).
+    pub fn slab_values(&self, block_values: usize) -> usize {
+        self.blocks.len() * block_values
+    }
+}
+
+/// A suspended lane, ready to be re-injected by
+/// [`super::Session::restore`]. Holds slab handles (the bulky store rows)
+/// plus the small host-side lane state inline.
+#[derive(Debug)]
+pub struct LaneCheckpoint {
+    /// First checkpointed store row for both tensors. Rows below it are
+    /// zero by construction in the unwrapped store (the lane's admission
+    /// reset them and every later write lands at or above the admission
+    /// point), so a late-admitted lane's checkpoint pays for *its own*
+    /// rows, not the batch's global clock. 0 in the wrapped half store,
+    /// where recycled rows can sit anywhere.
+    pub(crate) row0: usize,
+    /// `streams` rows `row0 .. row0 + streams.rows` of each lane group.
+    pub(crate) streams: PagedRows,
+    /// `pending` rows `row0 .. row0 + pending.rows` (partial tile sums
+    /// with deadlines past the suspension point — they complement the
+    /// exact set of tiles that still run after restore, which is why
+    /// restore must happen at the same global schedule position).
+    pub(crate) pending: PagedRows,
+    /// The lane's next-step input slice (`[D]`).
+    pub(crate) a0: Vec<f32>,
+    /// The lane's short-conv state slices (Hyena variant).
+    pub(crate) scstate: Option<Vec<f32>>,
+    pub(crate) sampler: SamplerSnapshot,
+    /// Token buffer accumulated so far (LM variant).
+    pub(crate) tokens: Option<Vec<u32>>,
+    /// Global session position at suspension — the only position a
+    /// restore is legal at (same fractal-schedule alignment).
+    pub(crate) pos: usize,
+    /// The lane's admission clock and padded schedule length.
+    pub(crate) lane_start: usize,
+    pub(crate) lane_limit: usize,
+    /// Store geometry guards: a checkpoint only restores into a session
+    /// with the identical row layout.
+    pub(crate) rows: usize,
+    pub(crate) half: bool,
+}
+
+impl LaneCheckpoint {
+    /// Global position this checkpoint must be restored at.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn lane_start(&self) -> usize {
+        self.lane_start
+    }
+
+    pub fn lane_limit(&self) -> usize {
+        self.lane_limit
+    }
+
+    /// Positions the lane had already generated when it was suspended.
+    pub fn lane_pos(&self) -> usize {
+        self.pos - self.lane_start
+    }
+}
+
+/// Slab allocator over `[groups, rows_chunk, D]` f32 blocks.
+///
+/// All blocks live in one arena allocation; a free list recycles them
+/// exactly (no fragmentation, no growth). `groups` is the per-lane group
+/// count `M = G / B` — every block holds `rows_chunk` rows of *all* of
+/// one lane's groups, so one checkpoint's rows stay contiguous per block
+/// and copy in/out as straight `memcpy`s.
+pub struct Pager {
+    id: u64,
+    groups: usize,
+    d: usize,
+    rows_chunk: usize,
+    data: Vec<f32>,
+    free: Vec<usize>,
+    total_blocks: usize,
+}
+
+impl Pager {
+    /// Build a pager with `capacity_mb` megabytes of slab storage
+    /// (rounded down to whole blocks; at least one block).
+    pub fn new(groups: usize, d: usize, rows_chunk: usize, capacity_mb: usize) -> Pager {
+        assert!(groups > 0 && d > 0 && rows_chunk > 0, "degenerate pager shape");
+        let block_values = groups * rows_chunk * d;
+        let capacity_values = capacity_mb * (1 << 20) / std::mem::size_of::<f32>();
+        let total_blocks = (capacity_values / block_values).max(1);
+        Pager {
+            id: PAGER_IDS.fetch_add(1, Ordering::Relaxed),
+            groups,
+            d,
+            rows_chunk,
+            data: vec![0.0; total_blocks * block_values],
+            free: (0..total_blocks).rev().collect(),
+            total_blocks,
+        }
+    }
+
+    pub fn rows_chunk(&self) -> usize {
+        self.rows_chunk
+    }
+
+    /// f32 values per slab block.
+    pub fn block_values(&self) -> usize {
+        self.groups * self.rows_chunk * self.d
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// f32 values currently held by live checkpoints (the
+    /// `fi_pager_resident_values` gauge).
+    pub fn resident_values(&self) -> usize {
+        (self.total_blocks - self.free.len()) * self.block_values()
+    }
+
+    /// Blocks a range of `rows` rows needs (per tensor).
+    pub fn blocks_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.rows_chunk)
+    }
+
+    /// Whether a checkpoint needing `blocks` more blocks fits right now.
+    pub fn fits(&self, blocks: usize) -> bool {
+        blocks <= self.free.len()
+    }
+
+    fn alloc(&mut self, n: usize) -> Result<Vec<usize>> {
+        if n > self.free.len() {
+            bail!(
+                "pager full: need {n} blocks, {} of {} free",
+                self.free.len(),
+                self.total_blocks
+            );
+        }
+        Ok((0..n).map(|_| self.free.pop().unwrap()).collect())
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub(crate) fn release(&mut self, pr: PagedRows) {
+        assert_eq!(pr.pager, self.id, "slab handle belongs to a different pager");
+        for b in pr.blocks {
+            debug_assert!(!self.free.contains(&b), "double free of slab block {b}");
+            self.free.push(b);
+        }
+    }
+
+    /// Page `rows` rows of lane data into freshly allocated blocks.
+    /// `data` is `[groups, rows, D]` (group-major, the layout
+    /// `Store::copy_lane_rows_out` produces); block `k` receives rows
+    /// `k·rows_chunk ..` of **every** group.
+    pub fn store_rows(&mut self, data: &[f32], rows: usize) -> Result<PagedRows> {
+        debug_assert_eq!(data.len(), self.groups * rows * self.d);
+        let blocks = self.alloc(self.blocks_for(rows))?;
+        let (rc, d, bv) = (self.rows_chunk, self.d, self.block_values());
+        for (k, &blk) in blocks.iter().enumerate() {
+            let take = rc.min(rows - k * rc);
+            for g in 0..self.groups {
+                let src = (g * rows + k * rc) * d..(g * rows + k * rc + take) * d;
+                let dst = blk * bv + g * rc * d;
+                self.data[dst..dst + take * d].copy_from_slice(&data[src]);
+            }
+        }
+        Ok(PagedRows { pager: self.id, blocks, rows })
+    }
+
+    /// Copy a paged range back out into `[groups, rows, D]` layout and
+    /// return its blocks to the free list.
+    pub fn fetch_rows(&mut self, pr: PagedRows, out: &mut Vec<f32>) {
+        assert_eq!(pr.pager, self.id, "slab handle belongs to a different pager");
+        let rows = pr.rows;
+        out.resize(self.groups * rows * self.d, 0.0);
+        let (rc, d, bv) = (self.rows_chunk, self.d, self.block_values());
+        for (k, &blk) in pr.blocks.iter().enumerate() {
+            let take = rc.min(rows - k * rc);
+            for g in 0..self.groups {
+                let src = blk * bv + g * rc * d;
+                let dst = (g * rows + k * rc) * d..(g * rows + k * rc + take) * d;
+                out[dst].copy_from_slice(&self.data[src..src + take * d]);
+            }
+        }
+        self.release(pr);
+    }
+
+    /// Drop a checkpoint without restoring it (failed/abandoned request),
+    /// returning its blocks to the free list.
+    pub fn discard(&mut self, ckpt: LaneCheckpoint) {
+        self.release(ckpt.streams);
+        self.release(ckpt.pending);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, ensure};
+    use crate::util::prng::Prng;
+
+    fn tiny(total_blocks_hint_mb: usize) -> Pager {
+        // groups=2, d=2, rows_chunk=4 -> 16 values (64 bytes) per block
+        Pager::new(2, 2, 4, total_blocks_hint_mb)
+    }
+
+    #[test]
+    fn capacity_rounds_down_to_whole_blocks() {
+        let p = tiny(1); // 1 MiB / 64 B = 16384 blocks
+        assert_eq!(p.total_blocks(), 16384);
+        assert_eq!(p.free_blocks(), 16384);
+        assert_eq!(p.block_values(), 16);
+        assert_eq!(p.resident_values(), 0);
+        // a capacity below one block still yields one block
+        let q = Pager::new(64, 64, 64, 0);
+        assert_eq!(q.total_blocks(), 1);
+    }
+
+    #[test]
+    fn store_fetch_roundtrip_partial_tail_block() {
+        let mut p = tiny(1);
+        // 6 rows over rows_chunk=4 -> 2 blocks, second half-filled
+        let rows = 6;
+        let data: Vec<f32> = (0..2 * rows * 2).map(|i| i as f32).collect();
+        let pr = p.store_rows(&data, rows).unwrap();
+        assert_eq!(pr.rows(), 6);
+        assert_eq!(p.free_blocks(), p.total_blocks() - 2);
+        assert_eq!(p.resident_values(), 2 * 16);
+        let mut out = Vec::new();
+        p.fetch_rows(pr, &mut out);
+        assert_eq!(out, data, "paged rows must round-trip bit-exactly");
+        assert_eq!(p.free_blocks(), p.total_blocks(), "fetch frees the blocks");
+    }
+
+    #[test]
+    fn alloc_fails_cleanly_when_full() {
+        let mut p = Pager::new(2, 2, 4, 0); // exactly 1 block
+        let data = vec![1.0; 2 * 4 * 2];
+        let pr = p.store_rows(&data, 4).unwrap();
+        assert!(p.store_rows(&data, 4).is_err(), "second alloc must fail");
+        // capacity check matches
+        assert!(!p.fits(1));
+        let mut out = Vec::new();
+        p.fetch_rows(pr, &mut out);
+        assert!(p.fits(1));
+        p.store_rows(&data, 4).unwrap();
+    }
+
+    /// Property: interleaved store/fetch of random-sized checkpoints
+    /// never hands two live ranges the same block (payload integrity
+    /// proves no overlap), and freeing everything restores full capacity.
+    #[test]
+    fn prop_slab_no_overlap_full_reuse() {
+        propcheck::check(
+            "slab_no_overlap_full_reuse",
+            64,
+            |rng: &mut Prng| {
+                // (groups, d, rows_chunk, ops) — ops: row counts, with 0
+                // meaning "free the oldest live range"
+                let groups = rng.range(1, 3);
+                let d = rng.range(1, 3);
+                let rc = rng.range(1, 5);
+                let ops: Vec<usize> = (0..rng.range(4, 24)).map(|_| rng.range(0, 9)).collect();
+                (groups, d, rc, ops)
+            },
+            |(groups, d, rc, ops)| {
+                // tiny fixed arena (8 blocks) so the ops churn through
+                // full-capacity alloc/free cycles
+                let mut p = Pager {
+                    id: PAGER_IDS.fetch_add(1, Ordering::Relaxed),
+                    groups: *groups,
+                    d: *d,
+                    rows_chunk: *rc,
+                    data: vec![0.0; 8 * groups * rc * d],
+                    free: (0..8).rev().collect(),
+                    total_blocks: 8,
+                };
+                let mut live: Vec<(PagedRows, Vec<f32>)> = Vec::new();
+                let mut stamp = 1.0f32;
+                for &op in ops {
+                    if op == 0 || !p.fits(p.blocks_for(op)) {
+                        if !live.is_empty() {
+                            let (pr, want) = live.remove(0);
+                            let mut got = Vec::new();
+                            p.fetch_rows(pr, &mut got);
+                            ensure(
+                                got == want,
+                                format!("payload corrupted: {got:?} != {want:?}"),
+                            )?;
+                        }
+                        continue;
+                    }
+                    let n = groups * op * d;
+                    let data: Vec<f32> = (0..n).map(|i| stamp + i as f32).collect();
+                    stamp += 1000.0;
+                    let pr = p.store_rows(&data, op).map_err(|e| e.to_string())?;
+                    live.push((pr, data));
+                }
+                // drain: every payload intact, every block reusable
+                for (pr, want) in live.drain(..) {
+                    let mut got = Vec::new();
+                    p.fetch_rows(pr, &mut got);
+                    ensure(got == want, "payload corrupted at drain".to_string())?;
+                }
+                ensure(
+                    p.free_blocks() == p.total_blocks(),
+                    format!("leaked blocks: {} of {} free", p.free_blocks(), p.total_blocks()),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn handles_are_bound_to_their_arena() {
+        // two same-shaped pagers: a handle from one must not be honored
+        // by the other (silent garbage reads + free-list corruption)
+        let mut a = tiny(1);
+        let mut b = tiny(1);
+        let data = vec![1.0; 2 * 4 * 2];
+        let pr = a.store_rows(&data, 4).unwrap();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut out = Vec::new();
+            b.fetch_rows(pr, &mut out);
+        }));
+        assert!(res.is_err(), "cross-pager fetch must panic");
+    }
+
+    #[test]
+    fn discard_frees_both_tensors() {
+        let mut p = tiny(1);
+        let data = vec![0.5; 2 * 4 * 2];
+        let ckpt = LaneCheckpoint {
+            row0: 0,
+            streams: p.store_rows(&data, 4).unwrap(),
+            pending: p.store_rows(&data, 4).unwrap(),
+            a0: vec![0.0; 2],
+            scstate: None,
+            sampler: SamplerSnapshot {
+                cfg: SamplerCfg::Synthetic { sigma: 0.0 },
+                prng_state: [0; 4],
+            },
+            tokens: None,
+            pos: 4,
+            lane_start: 0,
+            lane_limit: 8,
+            rows: 8,
+            half: false,
+        };
+        assert_eq!(p.free_blocks(), p.total_blocks() - 2);
+        p.discard(ckpt);
+        assert_eq!(p.free_blocks(), p.total_blocks());
+    }
+}

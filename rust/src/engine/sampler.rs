@@ -21,6 +21,7 @@
 
 use anyhow::Result;
 
+use super::pager::SamplerSnapshot;
 use crate::util::prng::Prng;
 use crate::util::tensor::Tensor;
 
@@ -87,6 +88,25 @@ impl Sampler {
             LaneSampler { cfg: cfg.unwrap_or(self.default_cfg), prng: Prng::new(seed) };
     }
 
+    /// Capture one lane's sampling state for a pager checkpoint
+    /// (`Session::suspend`): its config plus the raw PRNG state, so the
+    /// resumed lane's stream continues mid-sequence instead of replaying
+    /// from its seed — the sampler half of evict/resume bit-identity.
+    pub fn snapshot_lane(&self, lane: usize) -> SamplerSnapshot {
+        SamplerSnapshot {
+            cfg: self.lanes[lane].cfg,
+            prng_state: self.lanes[lane].prng.state(),
+        }
+    }
+
+    /// The exact inverse of [`Sampler::snapshot_lane`]
+    /// (`Session::restore`): reinstate a suspended lane's config and
+    /// mid-sequence PRNG state.
+    pub fn restore_lane(&mut self, lane: usize, snap: &SamplerSnapshot) {
+        self.lanes[lane] =
+            LaneSampler { cfg: snap.cfg, prng: Prng::from_state(snap.prng_state) };
+    }
+
     /// Consume `out` (`[B, W]`) and produce the next `a0` (`[B, D]`).
     /// Returns the sampled token ids for LM sampling. Every lane draws
     /// from its own PRNG under its own config.
@@ -133,21 +153,40 @@ impl Sampler {
     }
 }
 
+/// Argmax over the *finite* logits. A NaN comparing false against
+/// everything used to be able to shadow the true maximum (and a head
+/// producing ±inf gave it absolute priority); non-finite entries are
+/// simply never sampled. All-non-finite degenerates to token 0.
 fn argmax(logits: &[f32]) -> usize {
-    let mut best = 0;
+    let mut best: Option<usize> = None;
     for (i, &v) in logits.iter().enumerate() {
-        if v > logits[best] {
-            best = i;
+        if !v.is_finite() {
+            continue;
+        }
+        match best {
+            Some(b) if v <= logits[b] => {}
+            _ => best = Some(i),
         }
     }
-    best
+    best.unwrap_or(0)
 }
 
 /// Temperature softmax draw, optionally restricted to the top-k logits.
+///
+/// Non-finite logits are skipped up front: a single NaN used to panic the
+/// sort's `partial_cmp(..).unwrap()` — on the server that death of the
+/// engine worker thread killed *every* lane, so one bad logit in one
+/// request was a whole-process denial of service. `f32::total_cmp` keeps
+/// the sort total regardless, and filtering keeps NaN/±inf out of the
+/// softmax weights (a +inf weight would make `total` NaN and the draw
+/// undefined). All-non-finite falls back to token 0, matching `argmax`.
 fn categorical(logits: &[f32], temperature: f32, top_k: usize, prng: &mut Prng) -> usize {
-    let mut idx: Vec<usize> = (0..logits.len()).collect();
-    if top_k > 0 && top_k < logits.len() {
-        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    let mut idx: Vec<usize> = (0..logits.len()).filter(|&i| logits[i].is_finite()).collect();
+    if idx.is_empty() {
+        return 0;
+    }
+    if top_k > 0 && top_k < idx.len() {
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
         idx.truncate(top_k);
     }
     let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
@@ -263,6 +302,55 @@ mod tests {
         let toks = s.next_a0(&logits, 2, &mut a0).unwrap().unwrap();
         assert_eq!(toks, vec![0, 1]);
         assert_eq!(a0, vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn non_finite_logits_do_not_panic_or_get_sampled() {
+        // regression: a single NaN logit used to panic the categorical
+        // sort (partial_cmp().unwrap()) — on the server that killed the
+        // engine worker and with it every lane
+        let embed = Tensor::zeros(&[5, 2]);
+        let mut s = Sampler::lm(0.8, 3, embed, 11, 1);
+        let logits = vec![f32::NAN, 1.0, f32::INFINITY, 0.5, f32::NEG_INFINITY];
+        let mut a0 = vec![0.0; 2];
+        for _ in 0..50 {
+            let toks = s.next_a0(&logits, 1, &mut a0).unwrap().unwrap();
+            assert!(
+                toks[0] == 1 || toks[0] == 3,
+                "non-finite logit sampled: tok={}",
+                toks[0]
+            );
+        }
+        // argmax path (temperature 0): NaN/inf must not win either
+        s.reset_lane(0, Some(SamplerCfg::Lm { temperature: 0.0, top_k: 0 }), None);
+        let toks = s.next_a0(&logits, 1, &mut a0).unwrap().unwrap();
+        assert_eq!(toks[0], 1, "argmax must pick the largest finite logit");
+        // fully non-finite rows degenerate to token 0 instead of panicking
+        let all_bad = vec![f32::NAN; 5];
+        let toks = s.next_a0(&all_bad, 1, &mut a0).unwrap().unwrap();
+        assert_eq!(toks[0], 0);
+        s.reset_lane(0, Some(SamplerCfg::Lm { temperature: 1.0, top_k: 2 }), None);
+        let toks = s.next_a0(&all_bad, 1, &mut a0).unwrap().unwrap();
+        assert_eq!(toks[0], 0);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_the_stream_mid_sequence() {
+        let out = vec![0.0; 4];
+        let mut s = Sampler::synthetic(1.0, 5, 1);
+        let mut scratch = vec![0.0; 4];
+        s.next_a0(&out, 1, &mut scratch).unwrap(); // advance the stream
+        let snap = s.snapshot_lane(0);
+        let mut want = vec![0.0; 4];
+        s.next_a0(&out, 1, &mut want).unwrap();
+
+        // churn the lane with a different request, then restore
+        s.reset_lane(0, Some(SamplerCfg::Synthetic { sigma: 0.2 }), Some(99));
+        s.next_a0(&out, 1, &mut scratch).unwrap();
+        s.restore_lane(0, &snap);
+        let mut got = vec![0.0; 4];
+        s.next_a0(&out, 1, &mut got).unwrap();
+        assert_eq!(want, got, "restored lane must continue mid-stream, not replay");
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::runtime::Runtime;
 use crate::tau::{make_session_impl, TauExecCfg, TauImpl};
 use crate::tiling::{FlopCounter, Tile};
 
+use super::pager::{LaneCheckpoint, Pager};
 use super::{eager, lazy, Engine, GenOutput, Method, Sampler, SamplerCfg, Store};
 
 /// Session initialization (prompt seeding, forcing, overrides).
@@ -136,6 +137,11 @@ pub struct Session<'e, 'rt> {
     sc_dims: [usize; 4],
     forced: Option<Vec<f32>>,
     forced_steps: usize,
+    /// Pending rows seeded at creation (prompt prefill): rows `0..seed_span`
+    /// hold the prompt's future contributions before any tile ran, so a
+    /// suspend must checkpoint at least this many pending rows for lanes
+    /// still carrying the seed (`lane_start == 0`).
+    seed_span: usize,
     /// Per-lane admission clock: global position at which each lane was
     /// (re)seeded — 0 for lanes running since session start. A lane's
     /// local position is `pos - lane_start[lane]`.
@@ -183,7 +189,20 @@ impl<'e, 'rt> Session<'e, 'rt> {
 
         let mut store = Store::new(g, rows, d);
         if let Some((fut, fut_span)) = &init.pending_seed {
-            // seed pending with the prompt's future contributions
+            // seed pending with the prompt's future contributions. In the
+            // full store, truncating to `rows = len` is exact: the dropped
+            // columns belong to positions past the session's end, which
+            // are never generated. In the wrapped half store those same
+            // columns alias rows that *will* be consumed again after the
+            // wrap — silently dropping them used to generate wrong
+            // activations for every position past len/2, so refuse.
+            if half && *fut_span > rows {
+                bail!(
+                    "pending seed spans {fut_span} positions but the wrapped half store \
+                     holds {rows}: prompt contributions past len/2 would be lost \
+                     (disable half_store for prompt prefill)"
+                );
+            }
             let span = (*fut_span).min(rows);
             for gi in 0..g {
                 for t in 0..span {
@@ -194,6 +213,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
                 }
             }
         }
+        let seed_span = init.pending_seed.as_ref().map_or(0, |(_, s)| (*s).min(rows));
         let sampler = engine.make_sampler()?;
         let scstate: Option<Vec<f32>> = match (&init.scstate_override, dims.variant) {
             (Some(sc), _) => Some(sc.clone()),
@@ -238,6 +258,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
             sc_dims: [dims.ops(), 2, b, 3 * d],
             forced: init.forced,
             forced_steps,
+            seed_span,
             lane_start: vec![0; b],
             lane_limit: vec![len; b],
             metrics: SessionMetrics::with_capacity(len),
@@ -296,6 +317,21 @@ impl<'e, 'rt> Session<'e, 'rt> {
     /// admission capacity check (`admit` requires `limit <= remaining`).
     pub fn remaining(&self) -> usize {
         self.len - self.pos
+    }
+
+    /// One lane's short-conv slice offsets: `(batch_off, packed_off)`
+    /// pairs, each `sc_dims[3]` wide — the single place the
+    /// `[ops, phases, B, 3D]` lane layout is derived (admission's
+    /// zero-fill and the pager's pack/unpack all iterate this).
+    fn sc_lane_offsets(&self, lane: usize, b: usize) -> Vec<(usize, usize)> {
+        let [ops, ph, _, w] = self.sc_dims;
+        let mut offs = Vec::with_capacity(ops * ph);
+        for op in 0..ops {
+            for p in 0..ph {
+                offs.push(((((op * ph) + p) * b + lane) * w, (op * ph + p) * w));
+            }
+        }
+        offs
     }
 
     /// Continuous admission: seed a new request into one lane of the
@@ -367,13 +403,11 @@ impl<'e, 'rt> Session<'e, 'rt> {
         // stream, token buffer, admission clocks.
         let a0_lane = engine.initial_lane_a0()?;
         self.a0[lane * d..(lane + 1) * d].copy_from_slice(&a0_lane);
+        let sc_offs = self.sc_lane_offsets(lane, b);
+        let w = self.sc_dims[3];
         if let Some(sc) = self.scstate.as_mut() {
-            let [ops, ph, _, w] = self.sc_dims;
-            for op in 0..ops {
-                for p in 0..ph {
-                    let base = (((op * ph) + p) * b + lane) * w;
-                    sc[base..base + w].fill(0.0);
-                }
+            for &(base, _) in &sc_offs {
+                sc[base..base + w].fill(0.0);
             }
         }
         self.sampler.reset_lane(lane, init.sampler_cfg, init.seed);
@@ -382,6 +416,235 @@ impl<'e, 'rt> Session<'e, 'rt> {
         }
         self.lane_start[lane] = self.pos;
         self.lane_limit[lane] = limit;
+        Ok(())
+    }
+
+    /// Session paging, swap-out half: checkpoint one lane into the pager
+    /// and free it for another request (`fence_all` → row copy-out →
+    /// `Store::reset_lane`, the same quiet-row fence rule as admission —
+    /// DESIGN.md §6).
+    ///
+    /// The checkpoint holds everything the lane *is*: its non-zero
+    /// `streams` rows (`< pos`) and `pending` rows (`< 2·pos` — a gray
+    /// tile at iteration `i` deposits partial sums up to row `2i-1`,
+    /// which complement exactly the tiles that have not run yet), its
+    /// `a0`/short-conv slices, the sampler lane's config + raw PRNG
+    /// state, its token buffer, and its start/limit clocks. Early
+    /// evictions page out only a few rows.
+    ///
+    /// Fails — **without touching any lane state** — if the pager lacks
+    /// capacity, the lane is out of range, the session is complete, or
+    /// teacher forcing is active. On success the lane is idle
+    /// (`lane_done` is true) and may be re-admitted immediately.
+    pub fn suspend(&mut self, lane: usize, pager: &mut Pager) -> Result<LaneCheckpoint> {
+        let dims = self.engine.runtime().dims;
+        let (d, b) = (dims.d, dims.b);
+        if lane >= b {
+            bail!("lane {lane} out of range (B={b})");
+        }
+        if self.pos >= self.len {
+            bail!("session complete: nothing to suspend");
+        }
+        if self.pos < self.forced_steps {
+            bail!("cannot suspend a lane while teacher forcing is active");
+        }
+        let m = dims.g / b;
+        if pager.groups() != m || pager.dim() != d {
+            bail!(
+                "pager shape [{}, ., {}] does not match lane shape [{m}, ., {d}]",
+                pager.groups(),
+                pager.dim()
+            );
+        }
+        // Rows below the lane's admission point are zero by construction
+        // in the unwrapped store (admission reset them, and every later
+        // write for this lane lands at or above `lane_start`), so skip
+        // them: a late-admitted lane's checkpoint pays for its own rows,
+        // not the batch's global clock. The wrapped half store recycles
+        // rows anywhere, so it pages from row 0.
+        let row0 = if self.half { 0 } else { self.lane_start[lane] };
+        // a lane still carrying the creation-time prompt seed
+        // (lane_start == 0, never re-admitted) has non-zero pending rows
+        // up to `seed_span` before any tile ran — checkpoint those too
+        let seed_floor = if self.lane_start[lane] == 0 { self.seed_span } else { 0 };
+        let streams_rows = row0..self.pos.min(self.rows);
+        let pending_rows = row0..(2 * self.pos).max(seed_floor).min(self.rows);
+        let (ns, np) = (streams_rows.len(), pending_rows.len());
+        let needed = pager.blocks_for(ns) + pager.blocks_for(np);
+        if !pager.fits(needed) {
+            bail!(
+                "pager full: lane checkpoint needs {needed} blocks, {} free",
+                pager.free_blocks()
+            );
+        }
+
+        // fence: same rule as admission — every in-flight tile's dst
+        // covers this lane, and the copy-out below reads rows a tile may
+        // still be writing (copy_lane_rows_out asserts quiescence).
+        if let Some(tau) = self.tau.as_mut() {
+            let fs = tau.fence_all()?;
+            self.metrics.totals.fence_ns += fs.wait_ns as f64;
+            self.metrics.totals.tau_worker_ns += tau.take_worker_ns() as f64;
+        }
+
+        let (mut sbuf, mut pbuf) = (Vec::new(), Vec::new());
+        self.store
+            .copy_lane_rows_out(lane, b, streams_rows, pending_rows, &mut sbuf, &mut pbuf);
+        let streams = pager.store_rows(&sbuf, ns)?;
+        let pending = match pager.store_rows(&pbuf, np) {
+            Ok(pr) => pr,
+            Err(e) => {
+                pager.release(streams);
+                return Err(e);
+            }
+        };
+
+        let a0 = self.a0[lane * d..(lane + 1) * d].to_vec();
+        let sc_offs = self.sc_lane_offsets(lane, b);
+        let w = self.sc_dims[3];
+        let scstate = self.scstate.as_ref().map(|sc| {
+            let mut out = vec![0.0; sc_offs.len() * w];
+            for &(base, src) in &sc_offs {
+                out[src..src + w].copy_from_slice(&sc[base..base + w]);
+            }
+            out
+        });
+        let tokens = self.tokens.as_mut().map(|all| std::mem::take(&mut all[lane]));
+        let ckpt = LaneCheckpoint {
+            row0,
+            streams,
+            pending,
+            a0,
+            scstate,
+            sampler: self.sampler.snapshot_lane(lane),
+            tokens,
+            pos: self.pos,
+            lane_start: self.lane_start[lane],
+            lane_limit: self.lane_limit[lane],
+            rows: self.rows,
+            half: self.half,
+        };
+
+        // the lane is now free: clear its activation history (asserts
+        // quiet) and retire its clocks so lane_done() reports idle
+        self.store.reset_lane(lane, b);
+        self.lane_start[lane] = self.pos;
+        self.lane_limit[lane] = 0;
+        Ok(ckpt)
+    }
+
+    /// Session paging, swap-in half: the exact inverse of
+    /// [`Session::suspend`], under the same fence rule.
+    ///
+    /// **Restore position.** The checkpoint must be restored when this
+    /// session's global clock equals the suspension position
+    /// (`steps_done() == ckpt.pos()`). The fractal tile schedule
+    /// partitions each lane's (source → destination) contribution pairs
+    /// by the lane's alignment in the *global* clock; the checkpointed
+    /// pending rows hold partial sums for exactly the pairs whose
+    /// covering tile had already run. Only at the same alignment do the
+    /// remaining tiles complement that set exactly — each contribution
+    /// lands exactly once, in the same float order — which is what makes
+    /// the resumed rollout **bit-identical** to an uninterrupted run
+    /// (`tests/integration_paging.rs`). At any other position the
+    /// restore refuses rather than double-count or drop contributions.
+    ///
+    /// The checkpoint is consumed either way; on error its slab blocks
+    /// are returned to the pager and the lane is left untouched.
+    pub fn restore(&mut self, lane: usize, ckpt: LaneCheckpoint, pager: &mut Pager) -> Result<()> {
+        let dims = self.engine.runtime().dims;
+        let (d, b) = (dims.d, dims.b);
+        let check = || -> Result<()> {
+            if lane >= b {
+                bail!("lane {lane} out of range (B={b})");
+            }
+            if self.pos != ckpt.pos {
+                bail!(
+                    "restore at position {} but checkpoint was suspended at {} \
+                     (same-alignment rule, DESIGN.md §6)",
+                    self.pos,
+                    ckpt.pos
+                );
+            }
+            if self.rows != ckpt.rows || self.half != ckpt.half {
+                bail!(
+                    "store geometry mismatch: session rows={} half={} vs checkpoint \
+                     rows={} half={}",
+                    self.rows,
+                    self.half,
+                    ckpt.rows,
+                    ckpt.half
+                );
+            }
+            if self.pos >= self.len {
+                bail!("session complete: cannot restore into a finished schedule");
+            }
+            if ckpt.lane_start + ckpt.lane_limit > self.len {
+                bail!(
+                    "checkpoint schedule [{}, {}) exceeds session length {}",
+                    ckpt.lane_start,
+                    ckpt.lane_start + ckpt.lane_limit,
+                    self.len
+                );
+            }
+            if self.pos < self.forced_steps {
+                bail!("cannot restore a lane while teacher forcing is active");
+            }
+            if ckpt.scstate.is_some() != self.scstate.is_some() {
+                bail!("checkpoint/session short-conv state mismatch");
+            }
+            Ok(())
+        };
+        if let Err(e) = check() {
+            pager.discard(ckpt);
+            return Err(e);
+        }
+
+        if let Some(tau) = self.tau.as_mut() {
+            match tau.fence_all() {
+                Ok(fs) => self.metrics.totals.fence_ns += fs.wait_ns as f64,
+                Err(e) => {
+                    // never strand the checkpoint's slab blocks
+                    pager.discard(ckpt);
+                    return Err(e);
+                }
+            }
+            self.metrics.totals.tau_worker_ns += tau.take_worker_ns() as f64;
+        }
+
+        // clear whatever the lane held (a previous request's rows), then
+        // write the checkpoint back — rows outside the checkpointed
+        // ranges stay zero, exactly as in the uninterrupted run
+        self.store.reset_lane(lane, b);
+        let row0 = ckpt.row0;
+        let (n_streams, n_pending) = (ckpt.streams.rows(), ckpt.pending.rows());
+        let (mut sbuf, mut pbuf) = (Vec::new(), Vec::new());
+        pager.fetch_rows(ckpt.streams, &mut sbuf);
+        pager.fetch_rows(ckpt.pending, &mut pbuf);
+        self.store.copy_lane_rows_in(
+            lane,
+            b,
+            row0..row0 + n_streams,
+            row0..row0 + n_pending,
+            &sbuf,
+            &pbuf,
+        );
+
+        self.a0[lane * d..(lane + 1) * d].copy_from_slice(&ckpt.a0);
+        let sc_offs = self.sc_lane_offsets(lane, b);
+        let w = self.sc_dims[3];
+        if let Some(sc) = self.scstate.as_mut() {
+            let lane_sc = ckpt.scstate.as_ref().unwrap();
+            for &(base, src) in &sc_offs {
+                sc[base..base + w].copy_from_slice(&lane_sc[src..src + w]);
+            }
+        }
+        self.sampler.restore_lane(lane, &ckpt.sampler);
+        if let Some(all) = self.tokens.as_mut() {
+            all[lane] = ckpt.tokens.unwrap_or_default();
+        }
+        self.lane_start[lane] = ckpt.lane_start;
+        self.lane_limit[lane] = ckpt.lane_limit;
         Ok(())
     }
 

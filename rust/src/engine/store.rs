@@ -150,6 +150,88 @@ impl Store {
         }
     }
 
+    /// Copy one lane's activation rows out for a pager checkpoint
+    /// (`Session::suspend`): the `streams_rows` range of the lane's
+    /// `streams` and the `pending_rows` range of its `pending`, across
+    /// all its groups, into `[M, n, D]` group-major buffers (`M = G/B` —
+    /// the lane's share of the group axis). Ranges let the caller skip a
+    /// known-zero prefix (rows below the lane's admission point in the
+    /// unwrapped store). Every row must be quiet: the caller fences all
+    /// in-flight τ tiles first, and the assert turns a missed suspend
+    /// fence into a deterministic panic (same rule as `reset_lane`).
+    pub fn copy_lane_rows_out(
+        &self,
+        lane: usize,
+        b: usize,
+        streams_rows: Range<usize>,
+        pending_rows: Range<usize>,
+        streams_buf: &mut Vec<f32>,
+        pending_buf: &mut Vec<f32>,
+    ) {
+        assert!(lane < b, "lane {lane} out of range (B={b})");
+        assert_eq!(self.g % b, 0, "group axis {} not a multiple of B={b}", self.g);
+        assert!(streams_rows.end <= self.t && pending_rows.end <= self.t, "range exceeds store");
+        for row in 0..self.t {
+            self.readiness.assert_quiet(row);
+        }
+        let m = self.g / b;
+        let (ns, np) = (streams_rows.len(), pending_rows.len());
+        streams_buf.resize(m * ns * self.d, 0.0);
+        pending_buf.resize(m * np * self.d, 0.0);
+        for mi in 0..m {
+            let gi = mi * b + lane;
+            if ns > 0 {
+                streams_buf[mi * ns * self.d..(mi + 1) * ns * self.d]
+                    .copy_from_slice(self.streams.block(gi, streams_rows.start, streams_rows.end));
+            }
+            if np > 0 {
+                pending_buf[mi * np * self.d..(mi + 1) * np * self.d]
+                    .copy_from_slice(self.pending.block(gi, pending_rows.start, pending_rows.end));
+            }
+        }
+    }
+
+    /// The exact inverse of [`Store::copy_lane_rows_out`]
+    /// (`Session::restore`): write checkpointed rows back into the lane's
+    /// groups at the same row ranges. The caller resets the lane first
+    /// (rows outside the checkpointed ranges must be zero, as in the
+    /// uninterrupted run) and fences, so the same quiet-row assert
+    /// applies.
+    pub fn copy_lane_rows_in(
+        &mut self,
+        lane: usize,
+        b: usize,
+        streams_rows: Range<usize>,
+        pending_rows: Range<usize>,
+        streams_buf: &[f32],
+        pending_buf: &[f32],
+    ) {
+        assert!(lane < b, "lane {lane} out of range (B={b})");
+        assert_eq!(self.g % b, 0, "group axis {} not a multiple of B={b}", self.g);
+        assert!(streams_rows.end <= self.t && pending_rows.end <= self.t, "range exceeds store");
+        let m = self.g / b;
+        let (ns, np) = (streams_rows.len(), pending_rows.len());
+        debug_assert_eq!(streams_buf.len(), m * ns * self.d);
+        debug_assert_eq!(pending_buf.len(), m * np * self.d);
+        for row in 0..self.t {
+            self.readiness.assert_quiet(row);
+        }
+        let (ss, ps) = (ns * self.d, np * self.d);
+        for mi in 0..m {
+            let gi = mi * b + lane;
+            if ns > 0 {
+                self.streams
+                    .block_mut(gi, streams_rows.start, streams_rows.end)
+                    .copy_from_slice(&streams_buf[mi * ss..(mi + 1) * ss]);
+            }
+            if np > 0 {
+                self.pending
+                    .block_mut(gi, pending_rows.start, pending_rows.end)
+                    .copy_from_slice(&pending_buf[mi * ps..(mi + 1) * ps]);
+            }
+        }
+    }
+
     /// Scatter a `[G, D]` step output into `streams[:, col, :]`.
     pub fn set_streams_col(&mut self, col: usize, vals: &[f32]) {
         debug_assert_eq!(vals.len(), self.g * self.d);
@@ -258,6 +340,82 @@ mod tests {
         assert!(res.is_err(), "recycling a lane under an in-flight tile must panic");
         r.end_write(1..2);
         s.reset_lane(0, 2);
+    }
+
+    #[test]
+    fn lane_rows_copy_out_in_roundtrip() {
+        // M = 2, B = 2: lane 1 -> groups {1, 3}
+        let (m, b, t, d) = (2usize, 2usize, 6usize, 2usize);
+        let mut s = Store::new(m * b, t, d);
+        for gi in 0..m * b {
+            for row in 0..t {
+                s.streams.at2_mut(gi, row).fill((gi * 10 + row) as f32);
+                s.pending.at2_mut(gi, row).fill(-((gi * 10 + row) as f32));
+            }
+        }
+        let (mut sb, mut pb) = (Vec::new(), Vec::new());
+        s.copy_lane_rows_out(1, b, 0..4, 0..6, &mut sb, &mut pb);
+        assert_eq!(sb.len(), m * 4 * d);
+        assert_eq!(pb.len(), m * 6 * d);
+        // group-major layout: [m=0 (gi=1) rows 0..4, m=1 (gi=3) rows 0..4]
+        assert_eq!(&sb[..d], s.streams.at2(1, 0));
+        assert_eq!(&sb[4 * d..5 * d], s.streams.at2(3, 0));
+        assert_eq!(&pb[6 * d..7 * d], s.pending.at2(3, 0));
+
+        s.reset_lane(1, b);
+        s.copy_lane_rows_in(1, b, 0..4, 0..6, &sb, &pb);
+        for row in 0..4 {
+            assert_eq!(s.streams.at2(1, row), &[(10 + row) as f32; 2]);
+            assert_eq!(s.streams.at2(3, row), &[(30 + row) as f32; 2]);
+        }
+        // streams rows beyond the checkpointed range stay cleared
+        assert!(s.streams.at2(1, 5).iter().all(|&v| v == 0.0));
+        for row in 0..6 {
+            assert_eq!(s.pending.at2(1, row), &[-((10 + row) as f32); 2]);
+        }
+        // the other lane was never touched
+        assert_eq!(s.streams.at2(0, 3), &[3.0; 2]);
+    }
+
+    #[test]
+    fn lane_rows_copy_respects_nonzero_range_start() {
+        // rows below the range start (a lane's admission point in the
+        // unwrapped store) are skipped on the way out and untouched on
+        // the way in
+        let (b, t, d) = (2usize, 6usize, 2usize);
+        let mut s = Store::new(b, t, d);
+        for row in 0..t {
+            s.streams.at2_mut(0, row).fill(row as f32 + 1.0);
+            s.pending.at2_mut(0, row).fill(-(row as f32 + 1.0));
+        }
+        let (mut sb, mut pb) = (Vec::new(), Vec::new());
+        s.copy_lane_rows_out(0, b, 2..5, 3..6, &mut sb, &mut pb);
+        assert_eq!(sb.len(), 3 * d);
+        assert_eq!(&sb[..d], &[3.0, 3.0], "first copied row is range.start");
+        assert_eq!(&pb[..d], &[-4.0, -4.0]);
+
+        s.reset_lane(0, b);
+        s.copy_lane_rows_in(0, b, 2..5, 3..6, &sb, &pb);
+        assert!(s.streams.at2(0, 0).iter().all(|&v| v == 0.0), "prefix stays zero");
+        assert_eq!(s.streams.at2(0, 2), &[3.0, 3.0]);
+        assert_eq!(s.streams.at2(0, 4), &[5.0, 5.0]);
+        assert!(s.streams.at2(0, 5).iter().all(|&v| v == 0.0));
+        assert_eq!(s.pending.at2(0, 3), &[-4.0, -4.0]);
+        assert_eq!(s.pending.at2(0, 5), &[-6.0, -6.0]);
+        assert!(s.pending.at2(0, 2).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn lane_rows_copy_out_panics_on_inflight_writer() {
+        let s = Store::new(2, 4, 2);
+        let r = s.readiness();
+        r.begin_write(2..3);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let (mut sb, mut pb) = (Vec::new(), Vec::new());
+            s.copy_lane_rows_out(0, 2, 0..2, 0..2, &mut sb, &mut pb);
+        }));
+        assert!(res.is_err(), "checkpointing under an in-flight tile must panic");
+        r.end_write(2..3);
     }
 
     #[test]

@@ -125,6 +125,13 @@ pub struct ServerCounters {
     pub admissions_mid_batch: u64,
     /// Generation sessions the scheduler has opened.
     pub sessions_started: u64,
+    /// Busy lanes checkpointed into the session pager under queue
+    /// pressure (each eviction freed a lane for a waiting request).
+    pub evictions_total: u64,
+    /// Evicted lanes restored from the pager and run to completion.
+    pub resumes_total: u64,
+    /// Gauge: f32 values held by live checkpoints in the session pager.
+    pub pager_resident_values: u64,
     /// Gauge: requests waiting for a free lane right now.
     pub queue_depth: u64,
     /// Gauges: busy lanes / total lanes (B) in the running session.
@@ -168,6 +175,17 @@ impl ServerCounters {
             self.admissions_mid_batch as f64,
         );
         metric("fi_sessions_started", "generation sessions opened", self.sessions_started as f64);
+        metric(
+            "fi_evictions_total",
+            "lanes checkpointed to the pager under queue pressure",
+            self.evictions_total as f64,
+        );
+        metric("fi_resumes_total", "evicted lanes restored", self.resumes_total as f64);
+        metric(
+            "fi_pager_resident_values",
+            "f32 values held by live pager checkpoints",
+            self.pager_resident_values as f64,
+        );
         metric("fi_queue_depth", "requests waiting for a lane", self.queue_depth as f64);
         metric("fi_lanes_busy", "lanes serving a request", self.lanes_busy as f64);
         metric("fi_lanes_total", "batch lanes available (B)", self.lanes_total as f64);
@@ -268,5 +286,17 @@ mod tests {
         assert!(text.contains("fi_queue_depth 4"));
         assert!(text.contains("fi_lane_occupancy_pct 75"));
         assert!(text.contains("fi_admission_latency_p50_ms 2"));
+    }
+
+    #[test]
+    fn paging_counters_render() {
+        let mut c = ServerCounters::new();
+        c.evictions_total = 5;
+        c.resumes_total = 4;
+        c.pager_resident_values = 8192;
+        let text = c.render();
+        assert!(text.contains("fi_evictions_total 5"));
+        assert!(text.contains("fi_resumes_total 4"));
+        assert!(text.contains("fi_pager_resident_values 8192"));
     }
 }

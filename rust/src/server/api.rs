@@ -20,6 +20,15 @@
 //! analogue of vLLM-style continuous batching, adapted to the lockstep
 //! tile schedule: lanes can't have private schedules, but their *content*
 //! can restart at any step boundary (DESIGN.md §4).
+//!
+//! On top of admission sits **session paging** (DESIGN.md §6): under
+//! queue pressure the scheduler checkpoints the busy lane with the most
+//! remaining schedule into a slab [`Pager`] (`Session::suspend`), admits
+//! the waiting request immediately, and restores the evicted lane when a
+//! later session's clock reaches the suspension position
+//! (`Session::restore` — the alignment at which the resumed rollout is
+//! bit-identical to an uninterrupted one). One engine therefore holds
+//! arbitrarily many resumable requests, not just `B`.
 
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
@@ -37,7 +46,9 @@ use super::http::{
     Response,
 };
 use crate::config::ServerConfig;
-use crate::engine::{Engine, EngineOpts, LaneInit, SamplerCfg, Session, StepOutput};
+use crate::engine::{
+    Engine, EngineOpts, LaneCheckpoint, LaneInit, Pager, SamplerCfg, Session, StepOutput,
+};
 use crate::metrics::ServerCounters;
 use crate::model::Variant;
 use crate::runtime::Runtime;
@@ -79,6 +90,19 @@ struct LaneSlot {
     tokens: Vec<u32>,
     /// Per-lane checksum running sum over the first `max_tokens` positions.
     checksum_total: f64,
+    /// Times this request was evicted into the session pager.
+    evictions: u64,
+}
+
+/// A request swapped out of its lane under queue pressure: its serving
+/// slot (tokens so far, reply channel, stats) plus the engine-side lane
+/// checkpoint. Lives in the scheduler until a later session's clock
+/// reaches the checkpoint's suspension position (`Session::restore`'s
+/// same-alignment rule), at which point the slot goes back into a lane
+/// and the rollout continues bit-identically.
+struct EvictedLane {
+    slot: LaneSlot,
+    ckpt: LaneCheckpoint,
 }
 
 /// Continuous-admission scheduler: owns the running [`Session`], tracks
@@ -93,6 +117,12 @@ struct Scheduler<'e, 'rt> {
     horizon: usize,
     /// `false` = legacy drain-then-refill (admission only at position 0).
     admit_mid_batch: bool,
+    /// Session pager for suspended-lane checkpoints (`None` = paging off;
+    /// forced off under drain-then-refill, which cannot re-seed lanes).
+    pager: Option<Pager>,
+    /// Requests evicted under queue pressure, waiting for a session whose
+    /// clock reaches their checkpoint's suspension position.
+    evicted: Vec<EvictedLane>,
     counters: Arc<Mutex<ServerCounters>>,
     inflight: Arc<AtomicU64>,
 }
@@ -102,6 +132,7 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         engine: &'e Engine<'rt>,
         horizon: usize,
         admit_mid_batch: bool,
+        pager: Option<Pager>,
         counters: Arc<Mutex<ServerCounters>>,
         inflight: Arc<AtomicU64>,
     ) -> Scheduler<'e, 'rt> {
@@ -114,6 +145,8 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
             queue: VecDeque::new(),
             horizon,
             admit_mid_batch,
+            pager: if admit_mid_batch { pager } else { None },
+            evicted: Vec::new(),
             counters,
             inflight,
         }
@@ -123,9 +156,10 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         self.queue.push_back(req);
     }
 
-    /// Nothing running and nothing waiting: the worker may block.
+    /// Nothing running, nothing waiting, nothing paged out: the worker
+    /// may block.
     fn is_idle(&self) -> bool {
-        self.session.is_none() && self.queue.is_empty()
+        self.session.is_none() && self.queue.is_empty() && self.evicted.is_empty()
     }
 
     fn busy_lanes(&self) -> usize {
@@ -151,10 +185,107 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         }
     }
 
+    /// Restore evicted lanes whose checkpoint position matches the
+    /// session clock (the only position `Session::restore` is exact at).
+    /// Runs *before* `evict_phase` so a just-evicted lane is never
+    /// bounced straight back in the same boundary; returns the lanes it
+    /// restored so `evict_phase` cannot re-evict them before they have
+    /// stepped even once (the inverse bounce).
+    fn resume_phase(&mut self) -> Vec<usize> {
+        let mut restored = Vec::new();
+        let Some(sess) = self.session.as_mut() else { return restored };
+        let now = sess.steps_done();
+        let mut i = 0;
+        while i < self.evicted.len() {
+            if self.evicted[i].ckpt.pos() != now {
+                i += 1;
+                continue;
+            }
+            let Some(lane) = (0..self.lanes.len()).find(|&l| self.lanes[l].is_none()) else {
+                break; // no free lane at the restore point: wait for a later session
+            };
+            let EvictedLane { slot, ckpt } = self.evicted.remove(i);
+            match sess.restore(lane, ckpt, self.pager.as_mut().unwrap()) {
+                Ok(()) => {
+                    self.lanes[lane] = Some(slot);
+                    restored.push(lane);
+                    self.counters.lock().unwrap().resumes_total += 1;
+                }
+                Err(e) => {
+                    // the checkpoint is gone (blocks already released):
+                    // fail exactly this request and keep serving
+                    let _ = slot.req.reply.send(Err(format!("resume: {e:#}")));
+                    self.inflight.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        }
+        restored
+    }
+
+    /// Under queue pressure — a waiting request, no free lane — suspend
+    /// the busy lane with the most remaining schedule into the pager so
+    /// the waiting request can be admitted now. Eviction only pays off
+    /// when the incoming request finishes before the victim would have,
+    /// so shorter-than-victim requests are the only trigger. Lanes in
+    /// `protected` (restored this very boundary) are never victims, and
+    /// already-evicted requests are preferred last, so a paged-out
+    /// request always makes forward progress between evictions instead
+    /// of thrashing under sustained pressure.
+    fn evict_phase(&mut self, protected: &[usize]) {
+        if self.pager.is_none() || self.session.is_none() {
+            return;
+        }
+        let sess = self.session.as_mut().unwrap();
+        let now = sess.steps_done();
+        if self.queue.is_empty() || self.lanes.iter().any(|l| l.is_none()) {
+            return;
+        }
+        // lanes freed now are reserved for checkpoints waiting further
+        // down this session's schedule — evicting would not admit anyone
+        if self.evicted.iter().any(|e| e.ckpt.pos() > now) {
+            return;
+        }
+        let remaining = sess.remaining();
+        let Some(need) = self
+            .queue
+            .iter()
+            .map(|r| lane_len(r.max_tokens, self.horizon))
+            .find(|&n| n <= remaining)
+        else {
+            return;
+        };
+        let Some(lane) = (0..self.lanes.len())
+            .filter(|&l| self.lanes[l].is_some() && !protected.contains(&l))
+            .max_by_key(|&l| {
+                let evictions = self.lanes[l].as_ref().unwrap().evictions;
+                let left = sess.lane_limit(l).saturating_sub(sess.lane_pos(l));
+                // fewest prior evictions first, then most remaining
+                (std::cmp::Reverse(evictions), left)
+            })
+        else {
+            return;
+        };
+        let victim_remaining = sess.lane_limit(lane).saturating_sub(sess.lane_pos(lane));
+        if victim_remaining <= need {
+            return;
+        }
+        // a full pager (or any transient failure) leaves every lane
+        // untouched — the waiting request simply keeps waiting
+        if let Ok(ckpt) = sess.suspend(lane, self.pager.as_mut().unwrap()) {
+            let mut slot = self.lanes[lane].take().unwrap();
+            slot.evictions += 1;
+            self.evicted.push(EvictedLane { slot, ckpt });
+            self.counters.lock().unwrap().evictions_total += 1;
+        }
+    }
+
     /// Open a session if needed, then admit queued requests onto free
     /// lanes (this is the step boundary: `tick` calls it before `step`).
+    /// Order matters: resume (exact-position restores) → evict (free a
+    /// lane under pressure) → fresh admissions (minus lanes reserved for
+    /// checkpoints waiting later in this session's schedule).
     fn admit_phase(&mut self) {
-        if self.session.is_none() && !self.queue.is_empty() {
+        if self.session.is_none() && !(self.queue.is_empty() && self.evicted.is_empty()) {
             // with mid-batch admission, open at the full horizon so later
             // arrivals always have schedule headroom (the cost is one
             // horizon-sized store allocation per session open); under
@@ -181,22 +312,35 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                 }
                 Err(e) => {
                     // a session that cannot even open would error forever:
-                    // fail the whole queue instead of spinning on it
+                    // fail the whole queue (and any paged-out requests,
+                    // which need a session to ever resume) instead of
+                    // spinning on it
                     self.fail_queued(&format!("open session: {e:#}"));
+                    self.fail_evicted(&format!("open session: {e:#}"));
                     return;
                 }
             }
         }
-        let (mid_batch, remaining) = match self.session.as_ref() {
-            Some(sess) => (sess.steps_done() > 0, sess.remaining()),
+        let (mid_batch, remaining, now) = match self.session.as_ref() {
+            Some(sess) => (sess.steps_done() > 0, sess.remaining(), sess.steps_done()),
             None => return,
         };
         if mid_batch && !self.admit_mid_batch {
             return;
         }
+        let restored = self.resume_phase();
+        self.evict_phase(&restored);
+        // lanes kept free for checkpoints that must restore later in this
+        // session's schedule (strictly later: a checkpoint at the current
+        // position either just resumed or just got evicted)
+        let reserved = self.evicted.iter().filter(|e| e.ckpt.pos() > now).count();
         for lane in 0..self.lanes.len() {
             if self.lanes[lane].is_some() {
                 continue;
+            }
+            let free_now = self.lanes.iter().filter(|l| l.is_none()).count();
+            if free_now <= reserved {
+                break;
             }
             // first queued request whose padded schedule fits what's left
             let Some(qi) = self
@@ -237,6 +381,7 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                 batch_size,
                 tokens: Vec::new(),
                 checksum_total: 0.0,
+                evictions: 0,
             });
             let mut c = self.counters.lock().unwrap();
             c.admissions_total += 1;
@@ -255,6 +400,19 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         }
     }
 
+    /// Fail every evicted (paged-out) request and release its checkpoint.
+    /// Only the cannot-even-open-a-session path uses this — a mere engine
+    /// step error keeps checkpoints alive for the next session.
+    fn fail_evicted(&mut self, msg: &str) {
+        for e in self.evicted.drain(..) {
+            if let Some(p) = self.pager.as_mut() {
+                p.discard(e.ckpt);
+            }
+            let _ = e.slot.req.reply.send(Err(msg.to_string()));
+            self.inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
     /// Route one step's outputs to the busy lanes; complete any lane that
     /// reached its padded schedule.
     fn deliver(&mut self, step: &StepOutput) {
@@ -266,7 +424,13 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                 if let Some(toks) = &step.tokens {
                     slot.tokens.push(toks[lane]);
                 }
-                if local <= slot.req.max_tokens {
+                // the lane generates min(max_tokens, limit) useful
+                // positions: with max_max_tokens clamped to L at startup
+                // the two are equal, but stay defensive so a request
+                // whose padded schedule got capped is never promised
+                // (or counted as) more positions than the lane runs
+                let wanted = slot.req.max_tokens.min(slot.limit);
+                if local <= wanted {
                     slot.checksum_total += checksum as f64;
                     if let Some(tx) = &slot.req.stream {
                         let token = step.tokens.as_ref().map(|t| t[lane]);
@@ -276,7 +440,7 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                         let _ = tx.send(StreamEvent { pos: local, token, checksum });
                     }
                 }
-                if local >= slot.req.max_tokens {
+                if local >= wanted {
                     slot.req.stream = None; // early stop: close the event stream
                 }
                 local >= slot.limit
@@ -302,6 +466,7 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
             queue_ms: slot.queue_ms,
             gen_ms: slot.admitted_at.elapsed().as_secs_f64() * 1e3,
             batch_size: slot.batch_size,
+            evictions: slot.evictions,
         };
         let _ = slot.req.reply.send(Ok(result));
         self.inflight.fetch_sub(1, Ordering::Relaxed);
@@ -332,10 +497,20 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         self.queue.iter().any(|r| lane_len(r.max_tokens, self.horizon) <= remaining)
     }
 
+    /// A checkpoint can still be restored by the *current* session (its
+    /// suspension position has not been stepped past) — keeps an
+    /// otherwise-idle session alive until the restore point.
+    fn resumes_reachable(&self) -> bool {
+        let Some(sess) = self.session.as_ref() else { return false };
+        let now = sess.steps_done();
+        self.evicted.iter().any(|e| e.ckpt.pos() >= now)
+    }
+
     fn publish_gauges(&self) {
         let mut c = self.counters.lock().unwrap();
         c.queue_depth = self.queue.len() as u64;
         c.lanes_busy = self.busy_lanes() as u64;
+        c.pager_resident_values = self.pager.as_ref().map_or(0, |p| p.resident_values() as u64);
     }
 
     /// One step boundary: admit, advance one position, deliver, and
@@ -347,8 +522,14 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
             self.deliver(&step);
             // retire: schedule exhausted, or every lane idle with nothing
             // admissible left (a fresh session can always fit the queue)
+            // and no checkpoint still restorable at a later position of
+            // this session — an idle session otherwise keeps stepping
+            // toward the restore point (bounded by the horizon)
             let done = step.done;
-            if done || (self.busy_lanes() == 0 && !self.queue_admissible()) {
+            let parked = self.busy_lanes() == 0
+                && !self.queue_admissible()
+                && !self.resumes_reachable();
+            if done || parked {
                 if let Some(sess) = self.session.take() {
                     // finish() drains in-flight async tiles before the
                     // store drops — required even for an early retire
@@ -379,7 +560,10 @@ impl Server {
         let inflight = Arc::new(AtomicU64::new(0));
 
         // ---- engine worker (owns the non-Send PJRT state) ----
-        let (ready_tx, ready_rx) = channel::<Result<Json, String>>();
+        // ready payload: the /v1/info document plus the *effective*
+        // max_max_tokens (clamped to the model's L — only the worker
+        // knows dims), which the front-end validation must agree on
+        let (ready_tx, ready_rx) = channel::<Result<(Json, usize), String>>();
         let ecfg = cfg.clone();
         let wcounters = counters.clone();
         let winflight = inflight.clone();
@@ -401,6 +585,20 @@ impl Server {
                     }
                 };
                 let dims = rt.dims;
+                let mut ecfg = ecfg;
+                // A request with max_tokens in (L, max_max_tokens] would
+                // get a lane schedule capped at L (`lane_len`) yet be
+                // accepted — and previously *accounted* — as max_tokens
+                // positions. Clamp the advertised ceiling to what a lane
+                // can actually run, once, loudly.
+                if ecfg.max_max_tokens > dims.l {
+                    eprintln!(
+                        "flashinfer: max_max_tokens {} exceeds the schedule ceiling L={}; \
+                         clamping (a lane can generate at most L positions)",
+                        ecfg.max_max_tokens, dims.l
+                    );
+                    ecfg.max_max_tokens = dims.l;
+                }
                 // Cold-start: derive every per-U rho structure (spectra +
                 // PJRT tau executables) for the largest session a request
                 // can trigger, so the first request's measured gen_ms
@@ -411,13 +609,19 @@ impl Server {
                     return;
                 }
                 let info = info_json(&ecfg, &ecfg.engine, &rt);
-                let _ = ready_tx.send(Ok(info));
+                let _ = ready_tx.send(Ok((info, ecfg.max_max_tokens)));
                 let engine = engine; // freeze: the scheduler borrows it
                 let window = Duration::from_millis(ecfg.batch_window_ms);
+                let pager = if ecfg.paging && ecfg.continuous_admission {
+                    Some(engine.make_pager(ecfg.pager_capacity_mb))
+                } else {
+                    None
+                };
                 let mut sched = Scheduler::new(
                     &engine,
                     horizon,
                     ecfg.continuous_admission,
+                    pager,
                     wcounters,
                     winflight,
                 );
@@ -457,11 +661,16 @@ impl Server {
             })
             .context("spawn engine thread")?;
 
-        let info = match ready_rx.recv() {
-            Ok(Ok(info)) => info,
+        let (info, effective_max) = match ready_rx.recv() {
+            Ok(Ok(ready)) => ready,
             Ok(Err(e)) => anyhow::bail!("engine failed to start: {e}"),
             Err(_) => anyhow::bail!("engine thread died during startup"),
         };
+        // adopt the worker's clamped ceiling so front-door validation,
+        // token accounting, and the engine's lane schedules all agree
+        let mut cfg = cfg;
+        cfg.max_max_tokens = effective_max;
+        cfg.default_max_tokens = cfg.default_max_tokens.min(effective_max);
 
         let shared = Arc::new(Shared {
             cfg,
@@ -531,6 +740,9 @@ fn info_json(cfg: &ServerConfig, eng: &EngineOpts, rt: &Runtime) -> Json {
         ("split_min_u", Json::Num(eng.split_min_u as f64)),
         ("continuous_admission", Json::Bool(cfg.continuous_admission)),
         ("max_queue", Json::Num(cfg.max_queue as f64)),
+        ("paging", Json::Bool(cfg.paging && cfg.continuous_admission)),
+        ("pager_capacity_mb", Json::Num(cfg.pager_capacity_mb as f64)),
+        ("max_max_tokens", Json::Num(cfg.max_max_tokens as f64)),
         ("artifacts", Json::Str(cfg.artifacts.display().to_string())),
     ])
 }
@@ -675,7 +887,9 @@ fn buffered_reply(
     match rx.recv_timeout(Duration::from_secs(600)) {
         Ok(Ok(lane)) => {
             let mut c = shared.counters.lock().unwrap();
-            c.tokens_generated += max_tokens as u64;
+            // positions the lane actually generated for this request —
+            // never the raw ask (a capped schedule generates lane.steps)
+            c.tokens_generated += max_tokens.min(lane.steps) as u64;
             c.request_latency.record_ns(lane.gen_ms * 1e6);
             drop(c);
             let mut pairs = vec![
@@ -686,6 +900,7 @@ fn buffered_reply(
                 ("queue_ms", Json::Num(lane.queue_ms)),
                 ("gen_ms", Json::Num(lane.gen_ms)),
                 ("batch_size", Json::Num(lane.batch_size as f64)),
+                ("evictions", Json::Num(lane.evictions as f64)),
             ];
             if let Some(toks) = lane.tokens {
                 pairs.push((
@@ -773,7 +988,7 @@ fn stream_tail(
     match reply.recv_timeout(Duration::from_secs(600)) {
         Ok(Ok(lane)) => {
             let mut c = shared.counters.lock().unwrap();
-            c.tokens_generated += max_tokens as u64;
+            c.tokens_generated += max_tokens.min(lane.steps) as u64;
             c.stream_events += emitted;
             c.request_latency.record_ns(lane.gen_ms * 1e6);
             drop(c);
@@ -787,6 +1002,7 @@ fn stream_tail(
                 ("queue_ms", Json::Num(lane.queue_ms)),
                 ("gen_ms", Json::Num(lane.gen_ms)),
                 ("batch_size", Json::Num(lane.batch_size as f64)),
+                ("evictions", Json::Num(lane.evictions as f64)),
             ])
         }
         Ok(Err(e)) => {

@@ -79,6 +79,11 @@ pub struct LaneResult {
     pub gen_ms: f64,
     /// Busy lanes (this one included) at the moment of admission.
     pub batch_size: usize,
+    /// Times this request was checkpointed into the session pager and
+    /// later resumed (0 = ran uninterrupted). Eviction is semantically
+    /// invisible — the rollout stays bit-identical — so this is purely an
+    /// observability/fairness signal (and what the paging probes assert).
+    pub evictions: u64,
 }
 
 /// Collect up to `max_lanes` requests: blocks for the first one, then

@@ -89,6 +89,19 @@ impl Prng {
     pub fn fork(&mut self) -> Prng {
         Prng::new(self.next_u64())
     }
+
+    /// The full 256-bit generator state — a suspended stream resumes
+    /// *exactly* where it left off via [`Prng::from_state`] (session
+    /// paging checkpoints a lane's sampler through this, so an
+    /// evicted-then-resumed rollout replays the identical draw sequence).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a captured [`Prng::state`].
+    pub fn from_state(s: [u64; 4]) -> Prng {
+        Prng { s }
+    }
 }
 
 #[cfg(test)]
@@ -165,5 +178,18 @@ mod tests {
         let mut a = p.fork();
         let mut b = p.fork();
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_mid_stream() {
+        let mut p = Prng::new(42);
+        for _ in 0..17 {
+            p.next_u64();
+        }
+        let snap = p.state();
+        let tail: Vec<u64> = (0..32).map(|_| p.next_u64()).collect();
+        let mut resumed = Prng::from_state(snap);
+        let replay: Vec<u64> = (0..32).map(|_| resumed.next_u64()).collect();
+        assert_eq!(tail, replay, "restored state must replay the exact stream");
     }
 }

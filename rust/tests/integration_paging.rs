@@ -1,0 +1,493 @@
+//! Integration: session paging (`Session::suspend` / `Session::restore`
+//! + the scheduler's eviction policy) is *semantically invisible* to the
+//! evicted request. A lane checkpointed out of a running batch and
+//! restored later — in the same session or a completely different one —
+//! must produce **bit-identical** per-position lane checksums to the same
+//! request run uninterrupted, with the deadline-fenced async mixer in
+//! flight at both the suspend and the restore boundary, and with the
+//! Appendix D half store wrapped past its halfway point.
+//!
+//! Why the restore position is constrained: the fractal tile schedule
+//! partitions a lane's (source → destination) contribution pairs by the
+//! lane's alignment in the *global* clock. The checkpointed pending rows
+//! hold partial sums for exactly the pairs whose covering tile had
+//! already run at suspension; only at the same global position do the
+//! remaining tiles complement that set exactly (each contribution lands
+//! once, in the same float order). `Session::restore` enforces this —
+//! and these tests prove the payoff: resumed == uninterrupted, bit for
+//! bit.
+
+use std::path::Path;
+
+use flash_inference::engine::{
+    Engine, EngineOpts, LaneInit, Method, Pager, SamplerCfg, SessionInit,
+};
+use flash_inference::runtime::Runtime;
+use flash_inference::tau::TauKind;
+
+fn runtime(variant: &str) -> Option<Runtime> {
+    let dir = Path::new("artifacts").join(variant);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("load runtime"))
+}
+
+fn opts(tau: TauKind) -> EngineOpts {
+    // async mixer ON — the acceptance criterion: suspend/restore must
+    // fence in-flight gray tiles (a missed fence panics via RowReadiness)
+    EngineOpts { method: Method::Flash, tau, async_mixer: true, ..Default::default() }
+}
+
+fn init(limit: usize, sigma: f32, seed: u64) -> LaneInit {
+    LaneInit {
+        limit,
+        sampler_cfg: Some(SamplerCfg::Synthetic { sigma }),
+        seed: Some(seed),
+    }
+}
+
+/// Baseline: admit `init` into `lane` at `admit_at` and run it
+/// uninterrupted, returning its per-position checksums.
+fn drive_uninterrupted(
+    engine: &Engine,
+    len: usize,
+    lane: usize,
+    admit_at: usize,
+    li: LaneInit,
+) -> Vec<f32> {
+    let mut sess = engine.session(len).expect("session");
+    for _ in 0..admit_at {
+        sess.step().expect("step");
+    }
+    sess.admit(lane, li).expect("admit");
+    let mut cs = Vec::with_capacity(li.limit);
+    for _ in 0..li.limit {
+        cs.push(sess.step().expect("step").lane_checksums[lane]);
+    }
+    sess.finish();
+    cs
+}
+
+#[test]
+fn evict_then_resume_in_later_session_is_bit_identical() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let lane = rt.dims.b - 1;
+    let engine = Engine::new(&rt, opts(TauKind::RustDirect)).unwrap();
+    let mut pager = engine.make_pager(64);
+    let (len, admit_at, limit, suspend_at) = (64usize, 8usize, 32usize, 20usize);
+    let li = init(limit, 0.25, 77);
+
+    let want = drive_uninterrupted(&engine, len, lane, admit_at, li);
+
+    // session 1: admit at 8, run to global position 20, suspend
+    let mut s1 = engine.session(len).unwrap();
+    for _ in 0..admit_at {
+        s1.step().unwrap();
+    }
+    s1.admit(lane, li).unwrap();
+    let mut got = Vec::new();
+    for _ in 0..(suspend_at - admit_at) {
+        got.push(s1.step().unwrap().lane_checksums[lane]);
+    }
+    let ckpt = s1.suspend(lane, &mut pager).expect("suspend");
+    assert_eq!(ckpt.pos(), suspend_at);
+    assert_eq!(ckpt.lane_start(), admit_at);
+    assert_eq!(ckpt.lane_limit(), limit);
+    assert!(s1.lane_done(lane), "suspended lane reads as idle");
+    // the checkpoint pages rows from the lane's admission point only:
+    // streams rows admit_at..suspend_at, pending rows admit_at..2*suspend_at
+    let want_blocks = pager.blocks_for(suspend_at - admit_at)
+        + pager.blocks_for(2 * suspend_at - admit_at);
+    assert_eq!(
+        pager.resident_values(),
+        want_blocks * pager.block_values(),
+        "checkpoint must exclude the zero prefix below lane_start"
+    );
+    // the donor session keeps running (other lanes unaffected)
+    for _ in 0..6 {
+        s1.step().unwrap();
+    }
+    s1.finish();
+
+    // session 2: a *different* session serves other content on that lane,
+    // then the clock reaches the suspension position and the lane resumes
+    let mut s2 = engine.session(len).unwrap();
+    for _ in 0..suspend_at {
+        s2.step().unwrap();
+    }
+    s2.restore(lane, ckpt, &mut pager).expect("restore");
+    assert_eq!(pager.free_blocks(), pager.total_blocks(), "restore frees the slab");
+    assert_eq!(s2.lane_start(lane), admit_at, "admission clock survives the round trip");
+    assert_eq!(s2.lane_pos(lane), suspend_at - admit_at);
+    while !s2.lane_done(lane) {
+        got.push(s2.step().unwrap().lane_checksums[lane]);
+    }
+    s2.finish();
+
+    assert_eq!(want.len(), got.len());
+    assert_eq!(want, got, "evict-then-resume diverged from the uninterrupted run");
+}
+
+#[test]
+fn evict_then_resume_with_half_store_wrap_is_bit_identical() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let lane = 0;
+    let engine = Engine::new(
+        &rt,
+        EngineOpts { half_store: true, ..opts(TauKind::RustDirect) },
+    )
+    .unwrap();
+    let mut pager = engine.make_pager(64);
+    // len 64 -> 32 wrapped rows; suspending at 40 checkpoints a store
+    // whose rows have already been recycled once, and the resumed lane's
+    // tiles keep crossing row_of() seams
+    let (len, limit, suspend_at) = (64usize, 64usize, 40usize);
+    let li = init(limit, 0.5, 3);
+
+    let want = drive_uninterrupted(&engine, len, lane, 0, li);
+
+    let mut s1 = engine.session(len).unwrap();
+    s1.admit(lane, li).unwrap();
+    let mut got = Vec::new();
+    for _ in 0..suspend_at {
+        got.push(s1.step().unwrap().lane_checksums[lane]);
+    }
+    let ckpt = s1.suspend(lane, &mut pager).expect("suspend under wrap");
+    for _ in 0..4 {
+        s1.step().unwrap();
+    }
+    s1.finish();
+
+    let mut s2 = engine.session(len).unwrap();
+    for _ in 0..suspend_at {
+        s2.step().unwrap();
+    }
+    s2.restore(lane, ckpt, &mut pager).expect("restore under wrap");
+    while !s2.lane_done(lane) {
+        got.push(s2.step().unwrap().lane_checksums[lane]);
+    }
+    s2.finish();
+    assert_eq!(want, got, "half-store evict/resume diverged");
+}
+
+#[test]
+fn suspend_restore_same_boundary_roundtrip() {
+    // degenerate but legal: suspend and restore at the same step boundary
+    // of the same session — the pure inverse-copy property, plus the
+    // rust-fft kernel under a fixed alignment (exact for any tau impl)
+    let Some(rt) = runtime("synthetic") else { return };
+    let lane = rt.dims.b - 1;
+    let engine = Engine::new(&rt, opts(TauKind::RustFft)).unwrap();
+    let mut pager = engine.make_pager(64);
+    let li = init(32, 0.25, 11);
+
+    let want = drive_uninterrupted(&engine, 64, lane, 0, li);
+    let mut sess = engine.session(64).unwrap();
+    sess.admit(lane, li).unwrap();
+    let mut got = Vec::new();
+    for _ in 0..17 {
+        got.push(sess.step().unwrap().lane_checksums[lane]);
+    }
+    let ckpt = sess.suspend(lane, &mut pager).unwrap();
+    sess.restore(lane, ckpt, &mut pager).unwrap();
+    while !sess.lane_done(lane) {
+        got.push(sess.step().unwrap().lane_checksums[lane]);
+    }
+    sess.finish();
+    assert_eq!(want, got, "same-boundary suspend/restore round trip diverged");
+}
+
+#[test]
+fn restore_guards_position_capacity_and_geometry() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let dims = rt.dims;
+    let engine = Engine::new(&rt, opts(TauKind::RustDirect)).unwrap();
+    let mut pager = engine.make_pager(64);
+
+    let mut sess = engine.session(32).unwrap();
+    for _ in 0..10 {
+        sess.step().unwrap();
+    }
+    // lane out of range
+    assert!(sess.suspend(dims.b, &mut pager).is_err());
+    // geometry mismatch: a pager built for the wrong lane shape refuses
+    let mut bad = Pager::new(dims.g / dims.b + 1, dims.d, 16, 64);
+    assert!(sess.suspend(0, &mut bad).is_err());
+
+    // wrong-position restore fails and releases the slab blocks
+    let ckpt = sess.suspend(0, &mut pager).unwrap();
+    sess.step().unwrap();
+    assert!(sess.restore(0, ckpt, &mut pager).is_err(), "restore at pos+1 must fail");
+    assert_eq!(pager.free_blocks(), pager.total_blocks(), "failed restore must not leak");
+
+    // a pager with no room (capacity 0 MB = a single block; this
+    // checkpoint needs 3) fails the suspend without touching the lane
+    let mut tiny = Pager::new(dims.g / dims.b, dims.d, 16, 0);
+    assert!(!tiny.fits(tiny.blocks_for(11) + tiny.blocks_for(22)));
+    assert!(sess.suspend(1, &mut tiny).is_err());
+    // the lane is untouched: the session keeps stepping normally
+    sess.step().unwrap();
+    sess.finish();
+}
+
+#[test]
+fn pending_seed_larger_than_half_store_bails() {
+    // regression (satellite): Session::new used to silently truncate a
+    // prompt's future contributions to the wrapped store's rows in
+    // half-store mode, generating wrong activations past len/2
+    let Some(rt) = runtime("synthetic") else { return };
+    let dims = rt.dims;
+    let (g, d, b) = (dims.g, dims.d, dims.b);
+    let len = 16usize;
+    let span = len; // contributions reaching past rows = len/2
+    let seed_init = || SessionInit {
+        a0: vec![0.1; b * d],
+        pending_seed: Some((vec![0.01; g * span * d], span)),
+        ..Default::default()
+    };
+
+    let half = Engine::new(&rt, EngineOpts { half_store: true, ..opts(TauKind::RustDirect) })
+        .unwrap();
+    let err = flash_inference::engine::Session::new(&half, len, seed_init());
+    assert!(err.is_err(), "half store must refuse a seed wider than its rows");
+
+    // the full store accepts the same seed (dropped columns are positions
+    // past the session's end — never generated, so truncation is exact)
+    let full = Engine::new(&rt, opts(TauKind::RustDirect)).unwrap();
+    let sess = flash_inference::engine::Session::new(&full, len, seed_init());
+    assert!(sess.is_ok(), "full store accepts seeds clipped to the session length");
+
+    // suspend on a seeded session must checkpoint the whole seed span,
+    // not just 2*pos — the prompt's future contributions live in pending
+    // rows the clock has not reached yet
+    let mut sess = sess.unwrap();
+    let mut pager = full.make_pager(64);
+    sess.step().unwrap(); // pos 1: 2*pos << span
+    let ckpt = sess.suspend(0, &mut pager).expect("suspend seeded session");
+    let want = (pager.blocks_for(1) + pager.blocks_for(span)) * pager.block_values();
+    assert_eq!(
+        pager.resident_values(),
+        want,
+        "checkpoint must cover the pending seed span"
+    );
+    sess.restore(0, ckpt, &mut pager).unwrap();
+    sess.step().unwrap();
+    sess.finish();
+}
+
+mod server_pressure {
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::path::Path;
+
+    use flash_inference::config::ServerConfig;
+    use flash_inference::engine::EngineOpts;
+    use flash_inference::server::http::decode_chunked;
+    use flash_inference::server::Server;
+    use flash_inference::tau::TauKind;
+    use flash_inference::util::json::Json;
+
+    fn raw_post(body: &str) -> String {
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    }
+
+    fn post_json(addr: std::net::SocketAddr, body: &str) -> Json {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(raw_post(body).as_bytes()).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.contains("200 OK"), "non-200: {}", &buf[..buf.len().min(300)]);
+        let payload = buf.split("\r\n\r\n").nth(1).unwrap_or("{}");
+        Json::parse(payload).expect("parse reply")
+    }
+
+    fn read_until(s: &mut TcpStream, needle: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 1024];
+        loop {
+            let n = s.read(&mut chunk).expect("read");
+            assert!(n > 0, "stream closed early: {}", String::from_utf8_lossy(&buf));
+            buf.extend_from_slice(&chunk[..n]);
+            if buf.windows(needle.len()).any(|w| w == needle) {
+                return buf;
+            }
+        }
+    }
+
+    fn metric(addr: std::net::SocketAddr, name: &str) -> f64 {
+        flash_inference::util::benchkit::scrape_metric(addr, name).unwrap_or(-1.0)
+    }
+
+    /// The paging acceptance test at the scheduler level: hold every lane
+    /// with long streaming requests, queue a short one, and require that
+    /// (a) the short admits mid-batch (eviction freed it a lane), (b) the
+    /// evicted request still completes, and (c) its checksum equals a
+    /// fresh uninterrupted rerun of the identical request.
+    #[test]
+    fn eviction_under_pressure_completes_all_with_fresh_checksums() {
+        if !Path::new("artifacts/synthetic/manifest.json").exists() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let cfg = ServerConfig {
+            port: 0,
+            artifacts: "artifacts/synthetic".into(),
+            max_max_tokens: 128,
+            default_max_tokens: 16,
+            engine: EngineOpts {
+                // rust-direct: bit-identity holds across admission/resume
+                // alignments (and keeps the async executor on the path)
+                tau: TauKind::RustDirect,
+                ..ServerConfig::default().engine
+            },
+            ..Default::default()
+        };
+        let server = Server::start(cfg).expect("start server");
+        let addr = server.addr;
+        let info = {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"GET /v1/info HTTP/1.1\r\n\r\n").unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            Json::parse(buf.split("\r\n\r\n").nth(1).unwrap_or("{}")).unwrap()
+        };
+        let b = info.req_usize("B").expect("info B");
+        assert_eq!(info.get("paging").and_then(Json::as_bool), Some(true));
+
+        let long_body = |seed: usize| {
+            format!("{{\"max_tokens\": 120, \"sigma\": 0.05, \"seed\": {seed}, \"stream\": true}}")
+        };
+        let short_body = "{\"max_tokens\": 8, \"sigma\": 0.05, \"seed\": 7}";
+
+        let mut observed = None;
+        for attempt in 0..3 {
+            let seed0 = 100 + attempt * 10;
+            let evict0 = metric(addr, "fi_evictions_total");
+            // occupy every lane with a long streaming request; its first
+            // event proves the lane is admitted and running
+            let mut longs = Vec::new();
+            for i in 0..b {
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.write_all(raw_post(&long_body(seed0 + i)).as_bytes()).unwrap();
+                read_until(&mut s, b"\"pos\":");
+                longs.push(s);
+            }
+            // queue pressure: a short request with every lane busy
+            let short = post_json(addr, short_body);
+            assert_eq!(short.req_usize("steps").unwrap(), 8);
+            // drain the longs (they must all complete, evicted or not)
+            let tails: Vec<Json> = longs
+                .into_iter()
+                .map(|mut s| {
+                    let mut raw = String::new();
+                    s.read_to_string(&mut raw).unwrap();
+                    let payload =
+                        decode_chunked(raw.split("\r\n\r\n").nth(1).unwrap_or(""));
+                    let done = payload
+                        .lines()
+                        .rfind(|l| l.contains("\"done\""))
+                        .expect("summary line")
+                        .to_string();
+                    Json::parse(&done).expect("parse tail")
+                })
+                .collect();
+            for t in &tails {
+                assert!(t.get("error").is_none(), "long request errored: {t}");
+            }
+            if metric(addr, "fi_evictions_total") > evict0 {
+                observed = Some((seed0, tails, short));
+                break;
+            }
+            eprintln!("attempt {attempt}: no eviction observed (longs finished first?), retrying");
+        }
+        let (seed0, tails, short) =
+            observed.expect("no eviction in 3 attempts under full-lane pressure");
+
+        // the queued short was admitted into a freed lane of the running
+        // batch — eviction, not batch drain, is what made room for it
+        assert!(
+            short.get("admitted_pos").and_then(Json::as_f64).unwrap_or(-1.0) > 0.0,
+            "short request did not admit mid-batch: {short}"
+        );
+        assert_eq!(short.get("evictions").and_then(Json::as_f64), Some(0.0));
+
+        // every long completed; at least one was evicted and resumed, and
+        // each one's checksum matches a fresh uninterrupted rerun
+        let evicted: Vec<&Json> = tails
+            .iter()
+            .filter(|t| t.get("evictions").and_then(Json::as_f64).unwrap_or(0.0) > 0.0)
+            .collect();
+        assert!(!evicted.is_empty(), "no tail reports an eviction");
+        for (i, t) in tails.iter().enumerate() {
+            let body = format!("{{\"max_tokens\": 120, \"sigma\": 0.05, \"seed\": {}}}", seed0 + i);
+            let fresh = post_json(addr, &body);
+            assert_eq!(
+                t.get("checksum").and_then(Json::as_f64),
+                fresh.get("checksum").and_then(Json::as_f64),
+                "request seed {} diverged from its fresh rerun (evictions={:?})",
+                seed0 + i,
+                t.get("evictions")
+            );
+        }
+        assert!(metric(addr, "fi_resumes_total") >= 1.0, "no resume counted");
+        assert_eq!(metric(addr, "fi_requests_failed"), 0.0);
+        server.stop();
+    }
+}
+
+/// Slab property check over the public API: random checkpoint sizes
+/// churned through a small pager never corrupt each other's payloads
+/// (no block overlap) and every block is reusable after release.
+#[test]
+fn pager_slab_property_no_overlap_full_reuse() {
+    use flash_inference::util::propcheck::{self, ensure};
+    use flash_inference::util::prng::Prng;
+
+    propcheck::check(
+        "public_slab_churn",
+        48,
+        |rng: &mut Prng| {
+            let ops: Vec<usize> = (0..rng.range(6, 30)).map(|_| rng.range(0, 13)).collect();
+            (rng.range(1, 3), rng.range(1, 4), ops)
+        },
+        |(groups, d, ops)| {
+            // capacity 0 MB still yields >= 1 block; use rows_chunk 4 and
+            // small dims so a few ops exhaust capacity and force reuse
+            let mut p = Pager::new(*groups, *d, 4, 0);
+            let cap = p.total_blocks();
+            let mut live: Vec<(flash_inference::engine::pager::PagedRows, Vec<f32>)> = Vec::new();
+            let mut stamp = 1.0f32;
+            for &rows in ops {
+                if rows == 0 || !p.fits(p.blocks_for(rows)) {
+                    if !live.is_empty() {
+                        let (pr, want) = live.remove(0);
+                        let mut got = Vec::new();
+                        p.fetch_rows(pr, &mut got);
+                        ensure(got == want, "payload corrupted".to_string())?;
+                    }
+                    continue;
+                }
+                let data: Vec<f32> =
+                    (0..groups * rows * d).map(|i| stamp + i as f32).collect();
+                stamp += 500.0;
+                let pr = p.store_rows(&data, rows).map_err(|e| e.to_string())?;
+                live.push((pr, data));
+            }
+            for (pr, want) in live.drain(..) {
+                let mut got = Vec::new();
+                p.fetch_rows(pr, &mut got);
+                ensure(got == want, "payload corrupted at drain".to_string())?;
+            }
+            ensure(
+                p.free_blocks() == cap,
+                format!("leaked blocks: {} of {cap} free", p.free_blocks()),
+            )
+        },
+    );
+}
