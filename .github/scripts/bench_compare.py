@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""Compare a bench JSON against its checked-in baseline snapshot.
+
+Usage: bench_compare.py CURRENT.json [BASELINE.json] [--strict]
+
+Modes:
+  * baseline exists  -> per-row numeric diff table (markdown, appended to
+    $GITHUB_STEP_SUMMARY when set, always printed to stdout), plus the
+    multi-worker fence-wait check: at the largest U, the highest worker
+    count's fence_wait_us must not exceed the single-worker value
+    (the "fence-wait -> ~0 at large U" gate from DESIGN.md §5).
+  * baseline missing -> snapshot mode: print the current rows and how to
+    commit the baseline; exit 0.
+
+The diff is report-only by default (shared CI runners are noisy); pass
+--strict to turn a fence-wait regression into a nonzero exit.
+"""
+
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt(v):
+    if isinstance(v, float):
+        return f"{v:.1f}"
+    return str(v)
+
+
+def emit(lines):
+    text = "\n".join(lines) + "\n"
+    print(text)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(text)
+
+
+def numeric_keys(rows):
+    keys = []
+    for row in rows:
+        for k, v in row.items():
+            if isinstance(v, (int, float)) and k not in keys:
+                keys.append(k)
+    return keys
+
+
+def fence_check(doc):
+    """The machine-checkable gate: multi-worker fence wait at the largest
+    U must not exceed the single-worker baseline (target ~0)."""
+    rows = doc.get("rows", [])
+    workers = [int(w) for w in doc.get("workers", [])]
+    if not rows or len(workers) < 2:
+        return None
+    last = max(rows, key=lambda r: r.get("u", 0))
+    w_lo, w_hi = min(workers), max(workers)
+    k_lo, k_hi = f"fence_wait_us_w{w_lo}", f"fence_wait_us_w{w_hi}"
+    if k_lo not in last or k_hi not in last:
+        return None
+    lo, hi = float(last[k_lo]), float(last[k_hi])
+    # absolute slack absorbs scheduler jitter when both values are ~0
+    ok = hi <= lo + max(0.25 * lo, 5.0)
+    return {
+        "u": last.get("u"),
+        "w_lo": w_lo,
+        "w_hi": w_hi,
+        "fence_lo": lo,
+        "fence_hi": hi,
+        "ok": ok,
+    }
+
+
+def main(argv):
+    strict = "--strict" in argv
+    args = [a for a in argv if not a.startswith("--")]
+    if not args:
+        print(__doc__)
+        return 2
+    cur_path = args[0]
+    base_path = (
+        args[1]
+        if len(args) > 1
+        else os.path.join("benches", "baselines", os.path.basename(cur_path))
+    )
+
+    cur = load(cur_path)
+    name = cur.get("bench", os.path.basename(cur_path))
+    cur_rows = cur.get("rows", [])
+
+    if not os.path.exists(base_path):
+        lines = [
+            f"### {name}: no baseline snapshot",
+            "",
+            f"`{base_path}` does not exist yet — running in snapshot mode.",
+            "To enable PR-over-PR comparison, commit the current JSON as the "
+            f"baseline: `cp {cur_path} {base_path}`.",
+            "",
+        ]
+        keys = numeric_keys(cur_rows)
+        if keys:
+            lines.append("| " + " | ".join(keys) + " |")
+            lines.append("|" + "---|" * len(keys))
+            for row in cur_rows:
+                lines.append(
+                    "| " + " | ".join(fmt(row.get(k, "")) for k in keys) + " |"
+                )
+        emit(lines)
+        gate = fence_check(cur)
+        if gate:
+            status = "PASS" if gate["ok"] else "REGRESSION"
+            emit(
+                [
+                    f"fence-wait gate ({status}): U={gate['u']} "
+                    f"w{gate['w_hi']}={gate['fence_hi']:.1f}us vs "
+                    f"w{gate['w_lo']}={gate['fence_lo']:.1f}us"
+                ]
+            )
+            if strict and not gate["ok"]:
+                return 1
+        return 0
+
+    base = load(base_path)
+    base_by_u = {r.get("u"): r for r in base.get("rows", [])}
+    keys = numeric_keys(cur_rows)
+    lines = [f"### {name}: current vs baseline (`{base_path}`)", ""]
+    header = ["u"] + [k for k in keys if k != "u"]
+    lines.append("| " + " | ".join(header) + " |")
+    lines.append("|" + "---|" * len(header))
+    for row in cur_rows:
+        u = row.get("u")
+        ref = base_by_u.get(u, {})
+        cells = [fmt(u)]
+        for k in header[1:]:
+            v = row.get(k)
+            r = ref.get(k)
+            if isinstance(v, (int, float)) and isinstance(r, (int, float)) and r:
+                cells.append(f"{fmt(v)} ({(v - r) / r * 100.0:+.0f}%)")
+            else:
+                cells.append(fmt(v) if v is not None else "")
+        lines.append("| " + " | ".join(cells) + " |")
+    lines.append("")
+    emit(lines)
+
+    gate = fence_check(cur)
+    if gate:
+        status = "PASS" if gate["ok"] else "REGRESSION"
+        emit(
+            [
+                f"fence-wait gate ({status}): at U={gate['u']}, "
+                f"{gate['w_hi']} workers wait {gate['fence_hi']:.1f}us vs "
+                f"{gate['fence_lo']:.1f}us single-worker"
+            ]
+        )
+        if strict and not gate["ok"]:
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -16,7 +16,7 @@ use flash_inference::tau::{make_impl, RhoCache, TauKind};
 use flash_inference::tiling::Tile;
 use flash_inference::util::benchkit::{self, fmt_ns, Table};
 use flash_inference::util::prng::Prng;
-use flash_inference::util::tensor::Tensor;
+use flash_inference::util::tensor::{CellTensor, Tensor};
 
 fn main() -> anyhow::Result<()> {
     let Some(dir) = benchkit::require_artifacts(&benchkit::env_str(
@@ -119,14 +119,15 @@ fn main() -> anyhow::Result<()> {
     let mut tc = Table::new(&["U", "threads=0", "threads=2", "threads=4", "best_speedup"]);
     for u in [256usize, 2048] {
         let tile = Tile::at(u);
-        let mut streams = Tensor::zeros(&[rt.dims.g, tile.dst_r, d]);
-        rng.fill_normal(streams.data_mut(), 1.0);
-        let mut pending = Tensor::zeros(&[rt.dims.g, tile.dst_r, d]);
+        let mut init = Tensor::zeros(&[rt.dims.g, tile.dst_r, d]);
+        rng.fill_normal(init.data_mut(), 1.0);
+        let streams = CellTensor::from_tensor(&init);
+        let pending = CellTensor::zeros(&[rt.dims.g, tile.dst_r, d]);
         let mut medians = Vec::new();
         for threads in [0usize, 2, 4] {
             let mut imp = make_impl(TauKind::RustFft, &cache, threads)?;
             let st = benchkit::bench(warmup, runs, || {
-                imp.apply(&streams, &mut pending, tile).unwrap();
+                imp.apply(&streams, &pending, tile).unwrap();
             });
             medians.push(st.median_ns);
         }

@@ -13,7 +13,15 @@
 //!    for EXPERIMENTS.md §Perf's conclusion that the non-mixer path sits
 //!    at the PJRT-CPU compute floor.
 //!
-//! Knobs: FI_MIN_U, FI_MAX_U, FI_G, FI_D, FI_RED_US, FI_RUNS,
+//! The overlap probe sweeps a **workers** dimension (FI_WORKERS, default
+//! "1,2,4"): at W workers the gray tile is sharded into W disjoint-dst
+//! jobs — each with its own output buffer and scratch, so nothing
+//! serializes them — submitted concurrently before the red work. The
+//! per-worker-count `async_us_w{W}` / `fence_wait_us_w{W}` columns in
+//! `BENCH_step_probe.json` make the "fence-wait → ~0 at large U" gate
+//! machine-checkable against the single-worker baseline.
+//!
+//! Knobs: FI_MIN_U, FI_MAX_U, FI_G, FI_D, FI_RED_US, FI_RUNS, FI_WORKERS,
 //! FI_BENCH_OUT, FI_ARTIFACTS_SYN.
 
 use std::collections::HashMap;
@@ -53,18 +61,36 @@ fn overlap_probe() -> anyhow::Result<()> {
     let red_us = benchkit::env_usize("FI_RED_US", 100) as f64;
     let runs = benchkit::env_usize("FI_RUNS", 100);
     let out_path = benchkit::env_str("FI_BENCH_OUT", "BENCH_step_probe.json");
+    let workers_list: Vec<usize> = benchkit::env_str("FI_WORKERS", "1,2,4")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&w: &usize| w >= 1)
+        .collect();
     assert!(min_u.is_power_of_two() && max_u.is_power_of_two() && min_u <= max_u);
+    assert!(!workers_list.is_empty(), "FI_WORKERS must name at least one worker count");
 
     println!("\n=== overlap probe: deadline-fenced tau vs the red critical path ===");
-    println!("G={g} D={d} | red-path budget {red_us:.0}us | medians-of-means over {runs} runs\n");
+    println!(
+        "G={g} D={d} | red-path budget {red_us:.0}us | workers {workers_list:?} | \
+         medians-of-means over {runs} runs\n"
+    );
 
     let mut rng = Prng::new(0x0F_F10AD);
     let mut red_buf: Vec<f32> = (0..4096).map(|_| rng.normal_f32()).collect();
     let red_iters = calibrate_red(&mut red_buf, red_us);
 
-    let mut table = Table::new(&[
-        "U", "tau_us", "sync_us", "async_us", "fence_wait_us", "hidden_%", "speedup",
-    ]);
+    let mut headers: Vec<String> = ["U", "tau_us", "sync_us"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    for &w in &workers_list {
+        headers.push(format!("async_us_w{w}"));
+        headers.push(format!("fence_us_w{w}"));
+    }
+    headers.push("hidden_%".into());
+    headers.push("speedup".into());
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(&header_refs);
     let mut rows = Vec::new();
 
     let mut u = min_u;
@@ -75,12 +101,12 @@ fn overlap_probe() -> anyhow::Result<()> {
         let spec = Arc::new((sre, sim));
         let y: Arc<Vec<f32>> =
             Arc::new((0..g * u * d).map(|_| rng.normal_f32()).collect());
-        // out + scratch live behind one lock: the job owns them while in
-        // flight, the main thread only touches them after the fence
-        let state = Arc::new(Mutex::new((vec![0.0f32; g * u * d], TileScratch::default())));
 
         let tile = {
-            let (y, spec, state, plan) = (y.clone(), spec.clone(), state.clone(), plan.clone());
+            // out + scratch live behind one lock: the job owns them while
+            // in flight, the main thread only touches them after the fence
+            let state = Arc::new(Mutex::new((vec![0.0f32; g * u * d], TileScratch::default())));
+            let (y, spec, plan) = (y.clone(), spec.clone(), plan.clone());
             move || {
                 let mut st = state.lock().unwrap();
                 let (out, scratch) = &mut *st;
@@ -108,47 +134,108 @@ fn overlap_probe() -> anyhow::Result<()> {
             })
         };
 
-        // async pipeline: submit, red work, fence — tau hides if it fits
-        let pool = ThreadPool::new(1);
-        let mut fence_ns_acc = 0.0f64;
-        let async_stats = benchkit::bench(2, runs, || {
-            let handle = pool.submit(Box::new(tile.clone()));
-            red_work(&mut red_buf, red_iters);
-            let f0 = Instant::now();
-            handle.join().expect("tau job");
-            fence_ns_acc += f0.elapsed().as_nanos() as f64;
-        });
-        let fence_us = fence_ns_acc / (runs + 2) as f64 / 1e3;
-        let tau_us = tau_only.median_ns / 1e3;
-        let hidden_pct = 100.0 * (tau_us - fence_us).max(0.0) / tau_us.max(1e-9);
-        let speedup = sync.median_ns / async_stats.median_ns;
+        // async pipeline per worker count W: shard the tile into W
+        // disjoint-dst jobs (contiguous group ranges), submit all, run the
+        // red work, then fence. Each shard owns its *own* out buffer and
+        // scratch — a shared lock would serialize the shards and report
+        // fake concurrency.
+        let mut per_w: Vec<(usize, f64, f64)> = Vec::new();
+        for &w in &workers_list {
+            let w_eff = w.min(g).max(1);
+            let states: Vec<Arc<Mutex<(Vec<f32>, TileScratch)>>> = (0..w_eff)
+                .map(|s| {
+                    let (lo, hi) = (s * g / w_eff, (s + 1) * g / w_eff);
+                    Arc::new(Mutex::new((
+                        vec![0.0f32; (hi - lo) * u * d],
+                        TileScratch::default(),
+                    )))
+                })
+                .collect();
+            let pool = ThreadPool::new(w_eff);
+            let mut fence_ns_acc = 0.0f64;
+            let async_stats = benchkit::bench(2, runs, || {
+                let handles: Vec<_> = (0..w_eff)
+                    .map(|s| {
+                        let (lo, hi) = (s * g / w_eff, (s + 1) * g / w_eff);
+                        let (y, spec, plan, state) =
+                            (y.clone(), spec.clone(), plan.clone(), states[s].clone());
+                        pool.submit(Box::new(move || {
+                            let mut st = state.lock().unwrap();
+                            let (out, scratch) = &mut *st;
+                            for gi in lo..hi {
+                                fft::tile_conv_rfft_into(
+                                    &plan,
+                                    &y[gi * u * d..(gi + 1) * u * d],
+                                    &spec.0,
+                                    &spec.1,
+                                    &mut out[(gi - lo) * u * d..(gi - lo + 1) * u * d],
+                                    scratch,
+                                    d,
+                                );
+                            }
+                        }))
+                    })
+                    .collect();
+                red_work(&mut red_buf, red_iters);
+                let f0 = Instant::now();
+                for h in handles {
+                    h.join().expect("tau shard");
+                }
+                fence_ns_acc += f0.elapsed().as_nanos() as f64;
+            });
+            let fence_us = fence_ns_acc / (runs + 2) as f64 / 1e3;
+            per_w.push((w, async_stats.median_ns / 1e3, fence_us));
+        }
 
-        table.row(vec![
+        // legacy single-number columns keep their meaning: the W=1 run
+        // (every FI_WORKERS list is expected to include 1 as baseline;
+        // fall back to the first entry if not)
+        let (_, async_us_1, fence_us_1) = *per_w
+            .iter()
+            .find(|(w, _, _)| *w == 1)
+            .unwrap_or(&per_w[0]);
+        let tau_us = tau_only.median_ns / 1e3;
+        let hidden_pct = 100.0 * (tau_us - fence_us_1).max(0.0) / tau_us.max(1e-9);
+        let speedup = sync.median_ns / 1e3 / async_us_1.max(1e-9);
+
+        let mut cells = vec![
             u.to_string(),
             format!("{tau_us:.1}"),
             format!("{:.1}", sync.median_ns / 1e3),
-            format!("{:.1}", async_stats.median_ns / 1e3),
-            format!("{fence_us:.1}"),
-            format!("{hidden_pct:.1}"),
-            format!("{speedup:.2}x"),
-        ]);
-        rows.push(Json::from_pairs(vec![
-            ("u", Json::Num(u as f64)),
-            ("tau_us", Json::Num(tau_us)),
-            ("sync_us", Json::Num(sync.median_ns / 1e3)),
-            ("async_us", Json::Num(async_stats.median_ns / 1e3)),
-            ("fence_wait_us", Json::Num(fence_us)),
-            ("hidden_pct", Json::Num(hidden_pct)),
-            ("overlap_speedup", Json::Num(speedup)),
-        ]));
+        ];
+        for &(_, a_us, f_us) in &per_w {
+            cells.push(format!("{a_us:.1}"));
+            cells.push(format!("{f_us:.1}"));
+        }
+        cells.push(format!("{hidden_pct:.1}"));
+        cells.push(format!("{speedup:.2}x"));
+        table.row(cells);
+
+        let mut pairs = vec![
+            ("u".to_string(), Json::Num(u as f64)),
+            ("tau_us".to_string(), Json::Num(tau_us)),
+            ("sync_us".to_string(), Json::Num(sync.median_ns / 1e3)),
+            ("async_us".to_string(), Json::Num(async_us_1)),
+            ("fence_wait_us".to_string(), Json::Num(fence_us_1)),
+            ("hidden_pct".to_string(), Json::Num(hidden_pct)),
+            ("overlap_speedup".to_string(), Json::Num(speedup)),
+        ];
+        for &(w, a_us, f_us) in &per_w {
+            pairs.push((format!("async_us_w{w}"), Json::Num(a_us)));
+            pairs.push((format!("fence_wait_us_w{w}"), Json::Num(f_us)));
+        }
+        rows.push(Json::from_pairs(
+            pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect(),
+        ));
         u *= 2;
     }
     table.print();
     println!(
         "\nreading: while tau_us <= the red budget ({red_us:.0}us) the fence wait \
          stays near zero — the tile is fully hidden; past the crossover the \
-         exposed residue is tau_us - {red_us:.0}us, which is where the split-tile \
-         path (urgent column now, FFT under the *next* red step too) takes over."
+         exposed residue is tau_us - {red_us:.0}us, which the multi-worker \
+         columns show shrinking toward ~0 as W grows (disjoint-dst shards run \
+         concurrently) and the split-tile path amortizes over later red steps."
     );
 
     let doc = Json::from_pairs(vec![
@@ -157,6 +244,10 @@ fn overlap_probe() -> anyhow::Result<()> {
         ("d", Json::Num(d as f64)),
         ("red_us", Json::Num(red_us)),
         ("runs", Json::Num(runs as f64)),
+        (
+            "workers",
+            Json::Arr(workers_list.iter().map(|&w| Json::Num(w as f64)).collect()),
+        ),
         ("rows", Json::Arr(rows)),
     ]);
     std::fs::write(&out_path, doc.to_string_pretty())?;

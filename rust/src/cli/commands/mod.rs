@@ -60,8 +60,9 @@ pub fn engine_schema(s: Schema) -> Schema {
         .value("temperature", "LM sampling temperature (default 0 = argmax)")
         .value("top-k", "LM top-k (default 0 = all)")
         .value("seed", "sampler seed (default 0)")
-        .switch("sync-mixer", "force gray tiles onto the critical path (async off)")
+        .switch("sync-mixer", "force gray tiles onto the critical path (async off, 1 worker)")
         .value("split-min-u", "async split-tile threshold (0 = never split, default)")
+        .value("mixer-workers", "async mixer worker threads (default 1; >1 needs native tau)")
         .value("checksum-history", "per-position checksums retained (default 4096)")
         .switch("help", "show this help")
 }

@@ -137,6 +137,9 @@ impl ServerConfig {
             if let Some(v) = e.get("split_min_u").and_then(Json::as_usize) {
                 self.engine.split_min_u = v;
             }
+            if let Some(v) = e.get("mixer_workers").and_then(Json::as_usize) {
+                self.engine.mixer_workers = v;
+            }
             if let Some(v) = e.get("checksum_history").and_then(Json::as_usize) {
                 self.engine.checksum_history = v;
             }
@@ -174,8 +177,12 @@ impl ServerConfig {
         self.engine.temperature = a.get_f32("temperature", self.engine.temperature)?;
         self.engine.top_k = a.get_usize("top-k", self.engine.top_k)?;
         self.engine.seed = a.get_u64("seed", self.engine.seed)?;
+        self.engine.mixer_workers = a.get_usize("mixer-workers", self.engine.mixer_workers)?;
         if a.has("sync-mixer") {
+            // forcing sync wins over any --mixer-workers value: a
+            // synchronous mixer is by definition single-worker
             self.engine.async_mixer = false;
+            self.engine.mixer_workers = 1;
         }
         self.engine.split_min_u = a.get_usize("split-min-u", self.engine.split_min_u)?;
         self.engine.checksum_history =
@@ -233,34 +240,53 @@ mod tests {
     #[test]
     fn async_mixer_keys_layer_correctly() {
         let mut cfg = ServerConfig::default();
-        // serving default: async on, bounded checksum ring
+        // serving default: async on, one worker, bounded checksum ring
         assert!(cfg.engine.async_mixer);
+        assert_eq!(cfg.engine.mixer_workers, 1);
         assert_eq!(cfg.engine.checksum_history, 4096);
         let j = Json::parse(
             r#"{"engine": {"async_mixer": false, "split_min_u": 64,
-                "checksum_history": 128}}"#,
+                "mixer_workers": 4, "checksum_history": 128}}"#,
         )
         .unwrap();
         cfg.apply_json(&j).unwrap();
         assert!(!cfg.engine.async_mixer);
         assert_eq!(cfg.engine.split_min_u, 64);
+        assert_eq!(cfg.engine.mixer_workers, 4);
         assert_eq!(cfg.engine.checksum_history, 128);
 
         let schema = Schema::new()
             .switch("sync-mixer", "")
             .value("split-min-u", "")
+            .value("mixer-workers", "")
             .value("checksum-history", "");
         let a = schema
-            .parse(&["--split-min-u".to_string(), "32".to_string()])
+            .parse(&[
+                "--split-min-u".to_string(),
+                "32".to_string(),
+                "--mixer-workers".to_string(),
+                "2".to_string(),
+            ])
             .unwrap();
         let mut cfg2 = ServerConfig::default();
         cfg2.apply_args(&a).unwrap();
         assert!(cfg2.engine.async_mixer, "no --sync-mixer flag given");
         assert_eq!(cfg2.engine.split_min_u, 32);
+        assert_eq!(cfg2.engine.mixer_workers, 2);
 
-        let a = schema.parse(&["--sync-mixer".to_string()]).unwrap();
+        // --sync-mixer forces a single worker even when --mixer-workers
+        // asks for more (a synchronous mixer is single-worker by
+        // definition), so the pair never reaches session validation
+        let a = schema
+            .parse(&[
+                "--sync-mixer".to_string(),
+                "--mixer-workers".to_string(),
+                "8".to_string(),
+            ])
+            .unwrap();
         cfg2.apply_args(&a).unwrap();
         assert!(!cfg2.engine.async_mixer);
+        assert_eq!(cfg2.engine.mixer_workers, 1);
     }
 
     #[test]

@@ -3,13 +3,13 @@
 //! position — O(L-i) MACs per lane at position i, Ω(L²) total.
 
 use crate::tiling::FlopCounter;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{CellTensor, Tensor};
 
 /// After `streams[:, i-1]` is written, accumulate
 /// `pending[g, t-1] += streams[g, i-1] ⊙ rho[m, t-i]` for `t in (i, len]`.
 pub fn eager_push(
-    streams: &Tensor,
-    pending: &mut Tensor,
+    streams: &CellTensor,
+    pending: &CellTensor,
     rho: &Tensor,
     b: usize,
     i: usize,
@@ -24,7 +24,9 @@ pub fn eager_push(
     for gi in 0..g {
         let m = gi / b;
         let y = streams.at2(gi, i - 1);
-        let dst = pending.block_mut(gi, i, len);
+        // SAFETY: the eager method never runs async τ tiles — the engine
+        // thread is the only writer, so the mutable view is exclusive.
+        let dst = unsafe { pending.block_mut(gi, i, len) };
         let rseg = rho.block(m, 1, span + 1);
         for t in 0..span {
             let o = &mut dst[t * d..(t + 1) * d];
@@ -43,12 +45,13 @@ mod tests {
 
     #[test]
     fn pushes_to_all_future_positions() {
-        let mut streams = Tensor::zeros(&[1, 4, 1]);
-        streams.at2_mut(0, 0)[0] = 2.0;
+        let mut init = Tensor::zeros(&[1, 4, 1]);
+        init.at2_mut(0, 0)[0] = 2.0;
+        let streams = CellTensor::from_tensor(&init);
         let rho = Tensor::from_vec(&[1, 4, 1], vec![10.0, 100.0, 1000.0, 10000.0]).unwrap();
-        let mut pending = Tensor::zeros(&[1, 4, 1]);
+        let pending = CellTensor::zeros(&[1, 4, 1]);
         let mut fl = FlopCounter::new();
-        eager_push(&streams, &mut pending, &rho, 1, 1, 4, &mut fl);
+        eager_push(&streams, &pending, &rho, 1, 1, 4, &mut fl);
         // pending[t] = y1 * rho[t-1] for t = 2..4
         assert_eq!(pending.at2(0, 1)[0], 200.0);
         assert_eq!(pending.at2(0, 2)[0], 2000.0);
@@ -59,11 +62,11 @@ mod tests {
 
     #[test]
     fn last_position_pushes_nothing() {
-        let streams = Tensor::zeros(&[1, 2, 1]);
+        let streams = CellTensor::zeros(&[1, 2, 1]);
         let rho = Tensor::zeros(&[1, 2, 1]);
-        let mut pending = Tensor::zeros(&[1, 2, 1]);
+        let pending = CellTensor::zeros(&[1, 2, 1]);
         let mut fl = FlopCounter::new();
-        eager_push(&streams, &mut pending, &rho, 1, 2, 2, &mut fl);
+        eager_push(&streams, &pending, &rho, 1, 2, 2, &mut fl);
         assert_eq!(fl.mixer_flops, 0);
     }
 }

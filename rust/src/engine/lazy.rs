@@ -3,13 +3,13 @@
 //! Ω(L²) total, touching the entire stream history every token.
 
 use crate::tiling::FlopCounter;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{CellTensor, Tensor};
 
 /// Compute `col[g] = sum_{j=1}^{i-1} streams[g, j-1] ⊙ rho[m, i-j]` for
 /// 1-indexed position `i` into `buf` (`[G, D]`). The red cell (j = i) is
 /// handled inside `step`, exactly as in the flash engine.
 pub fn lazy_pending_col(
-    streams: &Tensor,
+    streams: &CellTensor,
     rho: &Tensor,
     b: usize,
     i: usize,
@@ -40,9 +40,10 @@ mod tests {
     #[test]
     fn matches_hand_computation() {
         // G=1, D=1: streams = [2, 3], rho = [r0, r1, r2] = [10, 100, 1000]
-        let mut streams = Tensor::zeros(&[1, 4, 1]);
-        streams.at2_mut(0, 0)[0] = 2.0;
-        streams.at2_mut(0, 1)[0] = 3.0;
+        let mut init = Tensor::zeros(&[1, 4, 1]);
+        init.at2_mut(0, 0)[0] = 2.0;
+        init.at2_mut(0, 1)[0] = 3.0;
+        let streams = CellTensor::from_tensor(&init);
         let rho = Tensor::from_vec(&[1, 4, 1], vec![10.0, 100.0, 1000.0, 10000.0]).unwrap();
         let mut buf = Vec::new();
         let mut fl = FlopCounter::new();

@@ -98,11 +98,17 @@ pub struct EngineOpts {
     /// On by default; force off to pin every tile to the critical path.
     pub async_mixer: bool,
     /// Async split-tile threshold: tiles with U >= this are split into an
-    /// urgent first column (computed at submission by a direct kernel)
-    /// plus a relaxed remainder with a one-step-later deadline. 0 (the
-    /// default) disables splitting, keeping async output bit-identical
-    /// to sync output.
+    /// urgent first column (a staged direct chunk with the tile's own
+    /// deadline) plus relaxed remainder chunks whose deadlines amortize
+    /// over the following red steps. 0 (the default) disables splitting,
+    /// keeping async output bit-identical to sync output.
     pub split_min_u: usize,
+    /// Workers in the async mixer's dependency-tracked pool. Tiles (and
+    /// staged chunks) whose dst row ranges are disjoint run concurrently;
+    /// overlapping-dst work is ordered by per-job dependency edges.
+    /// 1 (the default) degenerates to the FIFO pipeline; > 1 requires
+    /// `async_mixer` and a native τ kind (validated at session creation).
+    pub mixer_workers: usize,
     /// Per-position checksums retained in `GenOutput::outs_checksum` (a
     /// ring of the last K values). `usize::MAX` (the default) keeps the
     /// full history; serving bounds it so month-long streaming sessions
@@ -125,6 +131,7 @@ impl Default for EngineOpts {
             half_store: false,
             async_mixer: true,
             split_min_u: 0,
+            mixer_workers: 1,
             checksum_history: usize::MAX,
         }
     }
@@ -373,6 +380,7 @@ mod tests {
         // with splitting off (bit-identical numerics) and full history
         assert!(o.async_mixer);
         assert_eq!(o.split_min_u, 0);
+        assert_eq!(o.mixer_workers, 1);
         assert_eq!(o.checksum_history, usize::MAX);
     }
 }

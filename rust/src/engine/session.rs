@@ -127,8 +127,11 @@ pub struct Session<'e, 'rt> {
     half: bool,
     rows: usize,
     /// τ executor. Declared before `store`: struct fields drop in
-    /// declaration order, so the executor (whose async tiles hold raw
-    /// pointers into the store) drains its queue before the store frees.
+    /// declaration order, so the executor drains its in-flight tiles
+    /// before the store drops. (In-flight jobs also hold `Arc` clones of
+    /// the store's cell planes, so the allocations outlive the jobs under
+    /// any drop order — the ordering here keeps readiness bookkeeping and
+    /// worker-time accounting deterministic, not memory safety.)
     tau: Option<Box<dyn TauImpl + 'e>>,
     store: Store,
     sampler: Sampler,
@@ -206,10 +209,11 @@ impl<'e, 'rt> Session<'e, 'rt> {
             let span = (*fut_span).min(rows);
             for gi in 0..g {
                 for t in 0..span {
-                    store
-                        .pending
-                        .at2_mut(gi, t)
-                        .copy_from_slice(&fut[(gi * fut_span + t) * d..(gi * fut_span + t) * d + d]);
+                    store.write_pending_row(
+                        gi,
+                        t,
+                        &fut[(gi * fut_span + t) * d..(gi * fut_span + t) * d + d],
+                    );
                 }
             }
         }
@@ -226,6 +230,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
             let exec = TauExecCfg {
                 async_mixer: opts.async_mixer,
                 split_min_u: opts.split_min_u,
+                mixer_workers: opts.mixer_workers,
             };
             let mut imp = make_session_impl(opts.tau, &engine.cache, opts.threads, exec)?;
             imp.attach_readiness(store.readiness());
@@ -702,9 +707,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
         }
         if self.half {
             // the consumed column's row will be reused by a future tile
-            for gi in 0..g {
-                self.store.pending.at2_mut(gi, row_of(i)).fill(0.0);
-            }
+            self.store.zero_pending_col(row_of(i));
         }
         if opts.method == Method::Lazy {
             bd.mixer_ns += t0.elapsed().as_nanos() as f64;
@@ -764,7 +767,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
                         tile
                     };
                     let imp = self.tau.as_mut().unwrap();
-                    imp.submit(&self.store.streams, &mut self.store.pending, tile)?;
+                    imp.submit(&self.store.streams, &self.store.pending, tile)?;
                     self.flops.record_tau(
                         tile.u,
                         imp.tile_flops(tile.u, g, d),
@@ -775,7 +778,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
                 Method::Eager => {
                     eager::eager_push(
                         &self.store.streams,
-                        &mut self.store.pending,
+                        &self.store.pending,
                         &engine.cache.rho,
                         b,
                         i,
@@ -827,9 +830,10 @@ impl<'e, 'rt> Session<'e, 'rt> {
     /// `is_done`) is allowed — `steps` reports the positions actually
     /// generated — so serving lanes can abandon a session cleanly.
     pub fn finish(mut self) -> GenOutput {
-        // drain in-flight async tiles before reading the store (their jobs
-        // hold raw pointers into it); residual worker time folds into the
-        // session totals so hidden-time accounting stays complete
+        // drain in-flight async tiles before reading the store (the
+        // streams export below must observe every completed write);
+        // residual worker time folds into the session totals so
+        // hidden-time accounting stays complete
         if let Some(tau) = self.tau.as_mut() {
             if let Ok(fs) = tau.fence_all() {
                 self.metrics.totals.fence_ns += fs.wait_ns as f64;
@@ -847,7 +851,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
             metrics: self.metrics,
             flops: self.flops,
             streams: if self.engine.opts().record_streams {
-                Some(self.store.streams)
+                Some(self.store.streams_tensor())
             } else {
                 None
             },

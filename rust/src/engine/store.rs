@@ -1,6 +1,6 @@
 //! Activation store — the LCSM analogue of a KV cache (§3.3).
 //!
-//! Two `[G, T, D]` tensors:
+//! Two `[G, T, D]` planes:
 //! * `streams` — the mixer-input sequences (`y_l`), written one column per
 //!   token by `step`, read in blocks by the gray tiles;
 //! * `pending` — the partially-aggregated mixer outputs (`b_l`), written in
@@ -10,75 +10,108 @@
 //! column is finalized by the red cell inside `step` and immediately turned
 //! into the streams column, so `b` never exists beyond one column. Peak
 //! memory accounting (`peak_scratch_values`) backs the Appendix D/E claims.
+//!
+//! Both planes are [`CellTensor`]s shared via `Arc` with the async mixer's
+//! in-flight tile jobs: workers on several pool threads accumulate into
+//! disjoint `pending` rows while the engine thread reads and writes other
+//! rows of the same planes. The `Arc` keeps the storage alive for as long
+//! as any job holds it, and the cell-based accessors keep the concurrent
+//! row traffic well-defined (no `&mut` aliasing, see `util::tensor`).
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{CellTensor, Tensor};
 
-/// Row-level readiness tracking for the pending tensor under concurrent
-/// writers (the async tau executor's deadline-fenced tiles).
+/// Per-row *versioned* readiness tracking for the pending plane under
+/// concurrent writers (the async tau executor's dependency-tracked tiles).
 ///
-/// Each store row carries a count of in-flight writers: the session (or
-/// executor) `begin`s the destination rows when it submits a tile and the
-/// job `end`s them when its accumulation lands. Consuming a pending
-/// column is only legal on a *quiet* row — [`Store::gather_pending_col`]
-/// asserts it — which turns a missed fence (the failure mode the
-/// Appendix D half-store wrap makes easiest to hit, since rows are
-/// recycled between the two halves) into a deterministic panic instead of
-/// silently corrupted activations.
+/// Each store row carries two monotonic counters: `scheduled` ticks when
+/// the engine thread submits a tile (or tile chunk) that will accumulate
+/// into the row, `completed` ticks when that job's accumulation lands. A
+/// row is *quiet* iff `completed == scheduled` — every write that was ever
+/// scheduled has landed. Consuming a pending column is only legal on a
+/// quiet row — [`Store::gather_pending_col`] asserts it — which turns a
+/// missed fence (the failure mode the Appendix D half-store wrap makes
+/// easiest to hit, since rows are recycled between the two halves) into a
+/// deterministic panic instead of silently corrupted activations.
+///
+/// Versions, not counts: with multiple workers retiring jobs in arbitrary
+/// order, a plain in-flight counter can transit through zero while an
+/// *older* scheduled write has yet to land being indistinguishable from
+/// "all clear" (the ABA shape). Monotonic versions cannot be confused
+/// that way — quietness states that the row has caught up with every
+/// submission ever made, and the panic message can cite exactly how far
+/// behind it is.
 ///
 /// `Arc`-shared and atomic so detached jobs can check rows out/in without
-/// borrowing the store.
+/// borrowing the store. `begin_write` is engine-thread-only (submission
+/// order defines the version sequence); `end_write` is called by the jobs.
 #[derive(Debug)]
 pub struct RowReadiness {
-    writers: Vec<AtomicU32>,
+    scheduled: Vec<AtomicU64>,
+    completed: Vec<AtomicU64>,
 }
 
 impl RowReadiness {
     pub fn new(rows: usize) -> RowReadiness {
-        RowReadiness { writers: (0..rows).map(|_| AtomicU32::new(0)).collect() }
+        RowReadiness {
+            scheduled: (0..rows).map(|_| AtomicU64::new(0)).collect(),
+            completed: (0..rows).map(|_| AtomicU64::new(0)).collect(),
+        }
     }
 
     pub fn rows(&self) -> usize {
-        self.writers.len()
+        self.scheduled.len()
     }
 
-    /// Mark `rows` (0-indexed, half-open) as having one more in-flight
-    /// writer. Called at submission time, before the job can run.
+    /// Advance the scheduled version of `rows` (0-indexed, half-open) by
+    /// one write. Called on the engine thread at submission time, before
+    /// the job can run.
     pub fn begin_write(&self, rows: Range<usize>) {
         for r in rows {
-            self.writers[r].fetch_add(1, Ordering::Release);
+            self.scheduled[r].fetch_add(1, Ordering::Relaxed);
         }
     }
 
-    /// Retire one in-flight writer from `rows`. Called by the job after
-    /// its accumulation landed.
+    /// Advance the completed version of `rows`: one scheduled write has
+    /// landed. Called by the job after its accumulation; the `Release`
+    /// pairs with the `Acquire` in [`Self::is_quiet`] so a reader that
+    /// observes quietness also observes the accumulated values.
     pub fn end_write(&self, rows: Range<usize>) {
         for r in rows {
-            let prev = self.writers[r].fetch_sub(1, Ordering::Release);
-            debug_assert!(prev > 0, "end_write on quiet row {r}");
+            let done = self.completed[r].fetch_add(1, Ordering::Release) + 1;
+            debug_assert!(
+                done <= self.scheduled[r].load(Ordering::Relaxed),
+                "end_write overran scheduled version on row {r}"
+            );
         }
     }
 
-    /// No in-flight writer covers `row`.
+    /// Every write ever scheduled against `row` has landed.
     pub fn is_quiet(&self, row: usize) -> bool {
-        self.writers[row].load(Ordering::Acquire) == 0
+        self.completed[row].load(Ordering::Acquire) == self.scheduled[row].load(Ordering::Relaxed)
     }
 
-    /// Panic if `row` still has in-flight writers — the caller is about
-    /// to consume a column whose fence did not drain.
+    /// Panic if `row` has not caught up with its scheduled version — the
+    /// caller is about to consume a column whose fence did not drain.
     pub fn assert_quiet(&self, row: usize) {
-        let n = self.writers[row].load(Ordering::Acquire);
-        assert!(n == 0, "store row {row} consumed with {n} in-flight writer(s) — missing fence");
+        let done = self.completed[row].load(Ordering::Acquire);
+        let sched = self.scheduled[row].load(Ordering::Relaxed);
+        assert!(
+            done == sched,
+            "store row {row} consumed at version {done}/{sched} — missing fence \
+             ({} write(s) still in flight)",
+            sched - done
+        );
     }
 }
 
 /// Per-session activation state.
 pub struct Store {
-    pub streams: Tensor,
-    pub pending: Tensor,
+    pub streams: Arc<CellTensor>,
+    pub pending: Arc<CellTensor>,
     /// In-flight-writer tracking for `pending` rows (shared with any
     /// asynchronous tau executor working on this store).
     readiness: Arc<RowReadiness>,
@@ -90,8 +123,8 @@ pub struct Store {
 impl Store {
     pub fn new(g: usize, t: usize, d: usize) -> Store {
         Store {
-            streams: Tensor::zeros(&[g, t, d]),
-            pending: Tensor::zeros(&[g, t, d]),
+            streams: Arc::new(CellTensor::zeros(&[g, t, d])),
+            pending: Arc::new(CellTensor::zeros(&[g, t, d])),
             readiness: Arc::new(RowReadiness::new(t)),
             g,
             t,
@@ -108,6 +141,13 @@ impl Store {
         self.readiness.clone()
     }
 
+    /// Snapshot the streams plane into an owned [`Tensor`] (the
+    /// `GenOutput::streams` export). The caller fences first, so the
+    /// plane is quiet.
+    pub fn streams_tensor(&self) -> Tensor {
+        self.streams.to_tensor()
+    }
+
     /// Gather `pending[:, col, :]` into `buf` (`[G, D]`; with `g = m·B+b`
     /// this is exactly the `[M, B, D]` layout the step artifact expects).
     /// The column's row must be quiet (every tile writing it fenced).
@@ -116,6 +156,26 @@ impl Store {
         buf.resize(self.g * self.d, 0.0);
         for gi in 0..self.g {
             buf[gi * self.d..(gi + 1) * self.d].copy_from_slice(self.pending.at2(gi, col));
+        }
+    }
+
+    /// Overwrite `pending[gi, row, :]` — session construction seeds the
+    /// Appendix D prefix sums this way. The row must be quiet.
+    pub fn write_pending_row(&mut self, gi: usize, row: usize, vals: &[f32]) {
+        self.readiness.assert_quiet(row);
+        // SAFETY: quiet row + `&mut self` — no in-flight writer, and the
+        // engine thread is the only other accessor.
+        unsafe { self.pending.at2_mut(gi, row) }.copy_from_slice(vals);
+    }
+
+    /// Zero `pending[:, col, :]` after the column was consumed — the
+    /// half-store recycles the row for the second half (Appendix D). The
+    /// row must be quiet (it was just gathered, which asserted it).
+    pub fn zero_pending_col(&mut self, col: usize) {
+        self.readiness.assert_quiet(col);
+        for gi in 0..self.g {
+            // SAFETY: quiet row + `&mut self`, as in `write_pending_row`.
+            unsafe { self.pending.at2_mut(gi, col) }.fill(0.0);
         }
     }
 
@@ -143,8 +203,12 @@ impl Store {
         let mut gi = lane;
         while gi < self.g {
             for row in 0..self.t {
-                self.streams.at2_mut(gi, row).fill(0.0);
-                self.pending.at2_mut(gi, row).fill(0.0);
+                // SAFETY: all rows quiet (asserted above) — nothing else
+                // touches the planes while `&mut self` is held.
+                unsafe {
+                    self.streams.at2_mut(gi, row).fill(0.0);
+                    self.pending.at2_mut(gi, row).fill(0.0);
+                }
             }
             gi += b;
         }
@@ -219,25 +283,29 @@ impl Store {
         let (ss, ps) = (ns * self.d, np * self.d);
         for mi in 0..m {
             let gi = mi * b + lane;
+            // SAFETY: all rows quiet (asserted above) + `&mut self`.
             if ns > 0 {
-                self.streams
-                    .block_mut(gi, streams_rows.start, streams_rows.end)
+                unsafe { self.streams.block_mut(gi, streams_rows.start, streams_rows.end) }
                     .copy_from_slice(&streams_buf[mi * ss..(mi + 1) * ss]);
             }
             if np > 0 {
-                self.pending
-                    .block_mut(gi, pending_rows.start, pending_rows.end)
+                unsafe { self.pending.block_mut(gi, pending_rows.start, pending_rows.end) }
                     .copy_from_slice(&pending_buf[mi * ps..(mi + 1) * ps]);
             }
         }
     }
 
     /// Scatter a `[G, D]` step output into `streams[:, col, :]`.
+    ///
+    /// In-flight tile jobs only *read* streams, and only rows of columns
+    /// produced before their tile was submitted — never `col`, which is
+    /// being produced right now (the wrap analysis in `tau/async_exec.rs`
+    /// covers the recycled-row case). So this write races with nothing.
     pub fn set_streams_col(&mut self, col: usize, vals: &[f32]) {
         debug_assert_eq!(vals.len(), self.g * self.d);
         for gi in 0..self.g {
-            self.streams
-                .at2_mut(gi, col)
+            // SAFETY: no in-flight job touches this row (see doc above).
+            unsafe { self.streams.at2_mut(gi, col) }
                 .copy_from_slice(&vals[gi * self.d..(gi + 1) * self.d]);
         }
     }
@@ -253,6 +321,12 @@ impl Store {
 mod tests {
     use super::*;
 
+    /// Test-only row write (single-threaded, no jobs in flight).
+    fn fill_row(plane: &CellTensor, gi: usize, row: usize, v: f32) {
+        // SAFETY: exclusive access in these single-threaded tests
+        unsafe { plane.at2_mut(gi, row) }.fill(v);
+    }
+
     #[test]
     fn gather_scatter_roundtrip() {
         let mut s = Store::new(3, 4, 2);
@@ -262,11 +336,15 @@ mod tests {
         assert_eq!(s.streams.at2(2, 2), &[4.0, 5.0]);
 
         for gi in 0..3 {
-            s.pending.at2_mut(gi, 1).copy_from_slice(&[gi as f32, -(gi as f32)]);
+            s.write_pending_row(gi, 1, &[gi as f32, -(gi as f32)]);
         }
         let mut buf = Vec::new();
         s.gather_pending_col(1, &mut buf);
         assert_eq!(buf, vec![0.0, -0.0, 1.0, -1.0, 2.0, -2.0]);
+
+        s.zero_pending_col(1);
+        s.gather_pending_col(1, &mut buf);
+        assert!(buf.iter().all(|&v| v == 0.0));
     }
 
     #[test]
@@ -293,6 +371,28 @@ mod tests {
     }
 
     #[test]
+    fn readiness_versions_are_monotonic_not_counts() {
+        // the version pair distinguishes "caught up after N writes" from
+        // "never written": both are quiet, but the versions advance
+        let r = RowReadiness::new(2);
+        for _ in 0..3 {
+            r.begin_write(0..1);
+            r.end_write(0..1);
+        }
+        assert!(r.is_quiet(0));
+        assert!(r.is_quiet(1));
+        // out-of-order retirement across two scheduled writes: the row
+        // only becomes quiet once *both* land, regardless of which job's
+        // end_write arrives first
+        r.begin_write(0..1);
+        r.begin_write(0..1);
+        r.end_write(0..1); // "second" job retires first — still not quiet
+        assert!(!r.is_quiet(0));
+        r.end_write(0..1);
+        assert!(r.is_quiet(0));
+    }
+
+    #[test]
     fn gather_on_unfenced_row_panics() {
         let s = Store::new(2, 4, 2);
         let r = s.readiness();
@@ -315,8 +415,8 @@ mod tests {
         let mut s = Store::new(m * b, t, d);
         for gi in 0..m * b {
             for row in 0..t {
-                s.streams.at2_mut(gi, row).fill(gi as f32 + 1.0);
-                s.pending.at2_mut(gi, row).fill(-(gi as f32 + 1.0));
+                fill_row(&s.streams, gi, row, gi as f32 + 1.0);
+                fill_row(&s.pending, gi, row, -(gi as f32 + 1.0));
             }
         }
         s.reset_lane(1, b);
@@ -349,8 +449,8 @@ mod tests {
         let mut s = Store::new(m * b, t, d);
         for gi in 0..m * b {
             for row in 0..t {
-                s.streams.at2_mut(gi, row).fill((gi * 10 + row) as f32);
-                s.pending.at2_mut(gi, row).fill(-((gi * 10 + row) as f32));
+                fill_row(&s.streams, gi, row, (gi * 10 + row) as f32);
+                fill_row(&s.pending, gi, row, -((gi * 10 + row) as f32));
             }
         }
         let (mut sb, mut pb) = (Vec::new(), Vec::new());
@@ -385,8 +485,8 @@ mod tests {
         let (b, t, d) = (2usize, 6usize, 2usize);
         let mut s = Store::new(b, t, d);
         for row in 0..t {
-            s.streams.at2_mut(0, row).fill(row as f32 + 1.0);
-            s.pending.at2_mut(0, row).fill(-(row as f32 + 1.0));
+            fill_row(&s.streams, 0, row, row as f32 + 1.0);
+            fill_row(&s.pending, 0, row, -(row as f32 + 1.0));
         }
         let (mut sb, mut pb) = (Vec::new(), Vec::new());
         s.copy_lane_rows_out(0, b, 2..5, 3..6, &mut sb, &mut pb);

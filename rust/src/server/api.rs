@@ -738,6 +738,7 @@ fn info_json(cfg: &ServerConfig, eng: &EngineOpts, rt: &Runtime) -> Json {
         ("tau", Json::Str(eng.tau.as_str().into())),
         ("async_mixer", Json::Bool(eng.async_mixer)),
         ("split_min_u", Json::Num(eng.split_min_u as f64)),
+        ("mixer_workers", Json::Num(eng.mixer_workers as f64)),
         ("continuous_admission", Json::Bool(cfg.continuous_admission)),
         ("max_queue", Json::Num(cfg.max_queue as f64)),
         ("paging", Json::Bool(cfg.paging && cfg.continuous_admission)),

@@ -4,68 +4,92 @@
 //! axis: a gray tile at iteration `i` produces `z[i+1..i+U]`, but only
 //! `z[i+1]` is consumed at the very next step — everything else has a
 //! deadline several red steps in the future. [`AsyncTau`] exploits that
-//! slack by running tiles on a dedicated pool worker while the engine
-//! thread continues with sampling, token bookkeeping, metrics, and the
-//! next step's host→device uploads, fencing only immediately before the
+//! slack by running tiles on pool workers while the engine thread
+//! continues with sampling, token bookkeeping, metrics, and the next
+//! step's host→device uploads, fencing only immediately before the
 //! pending column is gathered (FutureFill-style deadline scheduling;
 //! Laughing Hyena's observation that per-token critical path, not FLOPs,
 //! governs serving latency is exactly what this buys back).
 //!
-//! ## Execution model
+//! ## Execution model (dependency-tracked, multi-worker)
 //!
-//! * One in-flight queue on a **single-worker** [`ThreadPool`]: execution
-//!   order == submission order, so two tiles with overlapping destination
-//!   ranges (e.g. a split remainder of tile `i` and tile `i+1`, which both
-//!   accumulate into `z[i+2]`) can never race each other — ordering, not
-//!   locking, serializes the `+=`s in exactly the sync path's order.
-//! * [`AsyncTau::fence`] joins every in-flight tile whose destination
-//!   covers the named column; tiles aimed entirely at later columns keep
-//!   running. Completed tiles are retired opportunistically so the queue
-//!   never grows beyond the few truly outstanding jobs.
-//! * **Split tiles**: for `U >= split_min_u` the urgent first column
-//!   `z[i+1]` is computed *synchronously at submission* by a direct
-//!   kernel (O(U·D) per group — cheap), and the relaxed remainder
-//!   `z[i+2..i+U]` is submitted with its natural deadline of step `i+2`.
-//!   The expensive order-2U FFT then overlaps the *entire* next red-step
-//!   PJRT call instead of stalling the very next fence. The remainder's
-//!   FFT computes the full cyclic convolution but accumulates only rows
-//!   `>= 1`, so contributions land exactly once; the urgent column's
-//!   value differs from the unsplit path only by direct-vs-FFT rounding
-//!   (see DESIGN.md §Pipelining for the accumulation-order caveat —
-//!   equivalence is bit-exact with splitting off, tolerance-bounded with
-//!   it on).
+//! * Jobs go to a [`ThreadPool`] of `mixer_workers` workers. Safety for
+//!   the shared `+=` destinations comes from **dependency edges**, not
+//!   from global FIFO: at submission, a new job records a happens-before
+//!   edge ([`ThreadPool::submit_after`]) on every in-flight job whose
+//!   destination row range overlaps its own. Overlapping-dst jobs
+//!   therefore run in submission order — exactly the sync path's
+//!   accumulation order, which keeps unsplit async output bit-identical
+//!   to sync at *any* worker count — while disjoint-dst jobs fan out
+//!   across workers and run concurrently. At `mixer_workers = 1` the
+//!   dependency queue degenerates to the old FIFO executor.
+//! * [`AsyncTau::fence`] joins every in-flight job whose destination
+//!   covers the named column; jobs aimed entirely at later columns keep
+//!   running. Completed jobs are retired opportunistically so the queue
+//!   (and the dependency scan) never grows beyond the few truly
+//!   outstanding jobs.
+//! * **Staged split tiles**: for `U >= split_min_u` a tile is cut into
+//!   *chunks with staged deadlines* instead of one monolithic job. Output
+//!   rows `[0,1), [1,2), [2,4), [4,8), …` are direct-kernel chunks whose
+//!   deadlines are 1, 2, 3, 5, … red steps out — each chunk's cost
+//!   (`O(U·rows·D)` per group) is amortized over the slack before its
+//!   own fence, so no single fence ever waits on a whole size-U tile.
+//!   Under an FFT inner the doubling prefix stops at
+//!   [`STAGED_DIRECT_ROWS`] rows and one order-2U FFT *tail chunk*
+//!   covers the rest with ≥ `STAGED_DIRECT_ROWS` red steps of slack
+//!   (the tail computes the full cyclic convolution and lands only its
+//!   own rows, so contributions arrive exactly once). Chunks of one tile
+//!   have pairwise-disjoint destinations — no edges between them — so a
+//!   multi-worker pool runs them concurrently; each chunk still takes
+//!   edges on older overlapping jobs (e.g. the next tile's whole-job,
+//!   which shares destination columns with a larger tile's remainder).
+//!   The first chunk `[0,1)` is the urgent column: it rides the same
+//!   dependency mechanism instead of being computed synchronously at
+//!   submission, so nothing on the engine thread ever writes pending.
+//!   Split output differs from sync only by direct-vs-FFT rounding on
+//!   the direct-prefix rows (tolerance-bounded; bit-exact with splitting
+//!   off — see DESIGN.md §Pipelining).
 //! * **Lane recycling (continuous admission)**: `Session::admit` clears
 //!   one batch lane's store rows while the batch keeps running. Every
-//!   submitted tile's destination covers *all* `G = M·B` groups — there
-//!   is no per-lane tile — so a tile in flight at admission time always
-//!   covers the recycled lane: it would read the predecessor's streams
-//!   rows after the reset, or re-deposit predecessor pending sums over
-//!   the cleared rows. Admission therefore drains with [`AsyncTau::
-//!   fence_all`] (the "fence tiles whose dst covers the recycled lane"
-//!   rule degenerates to fence-everything), and `Store::reset_lane`'s
-//!   quiet-row assertion converts a missed admission fence into a
-//!   deterministic panic rather than cross-request activation leakage.
-//! * Wrap safety (Appendix D half store): a split remainder outlives the
+//!   submitted job's destination covers *all* `G = M·B` groups — there
+//!   is no per-lane job — so a job in flight at admission time always
+//!   covers the recycled lane. Admission therefore drains with
+//!   [`AsyncTau::fence_all`], and `Store::reset_lane`'s quiet-row
+//!   assertion converts a missed admission fence into a deterministic
+//!   panic rather than cross-request activation leakage.
+//! * Wrap safety (Appendix D half store): a split chunk outlives the
 //!   next fence, so its source rows must not be recycled underneath it.
 //!   Splitting is therefore disabled when `2U > rows` — only the single
 //!   largest tile in a wrapped store, where source row `row(1)` would be
 //!   overwritten by the red step writing `row(rows+1)` — and the
-//!   [`RowReadiness`] tracker attached by the session turns any future
-//!   violation of this analysis into a deterministic panic.
+//!   versioned [`RowReadiness`] tracker attached by the session turns
+//!   any future violation of this analysis into a deterministic panic.
+//!
+//! ## Memory model
+//!
+//! Jobs capture `Arc<CellTensor>` handles to the store planes: writes go
+//! through `UnsafeCell`-derived pointers scoped to each job's disjoint
+//! row range, so nothing the engine thread does through `&self` borrows
+//! of the same planes can invalidate a job's access (the pre-CellTensor
+//! executor smuggled raw `Tensor` pointers, which was well-defined only
+//! up to a Stacked Borrows technicality on split tiles). The `Arc` also
+//! keeps the planes alive under any drop order; the executor's `Drop`
+//! still drains the queue so a dying session never leaves detached
+//! writers running.
 //!
 //! ## Why only native impls
 //!
 //! The job closures must be `Send + 'static`, so they capture `Arc`'d
 //! filter state (rfft plans, half-spectrum planes, filter-prefix
-//! snapshots) plus raw tensor pointers — never `&RhoCache` (PJRT handles
-//! are not `Send`, and the cache's lazy maps are not `Sync`). The
-//! PJRT-backed kinds — and `Hybrid`, which may dispatch to them — stay on
-//! the engine thread via the trait's synchronous defaults.
+//! snapshots) plus `Arc<CellTensor>` planes — never `&RhoCache` (PJRT
+//! handles are not `Send`, and the cache's lazy maps are not `Sync`).
+//! The PJRT-backed kinds — and `Hybrid`, which may dispatch to them —
+//! stay on the engine thread via the trait's synchronous defaults (and
+//! `make_session_impl` rejects `mixer_workers > 1` for them outright).
 
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -75,34 +99,27 @@ use crate::engine::store::RowReadiness;
 use crate::fft::{tile_conv_rfft_into, RfftPlan, TileScratch};
 use crate::tau::rho_cache::Spectra;
 use crate::tiling::Tile;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::CellTensor;
 use crate::util::threadpool::{JobHandle, ThreadPool};
 
+/// Row count of the direct-kernel doubling prefix of a split tile under
+/// an FFT inner. Rows `[0, STAGED_DIRECT_ROWS)` are cheap direct chunks
+/// with per-row-ish deadlines; the FFT tail that covers the rest is
+/// first fenced `STAGED_DIRECT_ROWS` red steps after submission, which
+/// is the slack that hides it. 16 keeps the prefix cost (`16·U·D` per
+/// group) within a small factor of the tail FFT itself.
+const STAGED_DIRECT_ROWS: usize = 16;
+
 thread_local! {
-    /// Per-worker scratch: FFT planes plus a remainder accumulator. The
-    /// executor worker is persistent (util::threadpool), so after the
-    /// first tile the token loop stays allocation-free off-thread too.
+    /// Per-worker scratch: FFT planes plus a tail accumulator. The pool
+    /// workers are persistent (util::threadpool), so after the first few
+    /// tiles the token loop stays allocation-free off-thread too.
     static ASYNC_SCRATCH: RefCell<(TileScratch, Vec<f32>)> =
         RefCell::new((TileScratch::default(), Vec::new()));
 }
 
-/// Raw-pointer wrappers for the detached jobs. SAFETY: sendable only
-/// under the deadline contract — the session fences before any
-/// conflicting access and [`AsyncTau`]'s `Drop` drains the queue, so no
-/// dereference outlives the store or races a live borrow (all concurrent
-/// accesses are to disjoint `[row][D]` regions; see module docs).
-#[derive(Clone, Copy)]
-struct ConstPtr(*const f32);
-unsafe impl Send for ConstPtr {}
-unsafe impl Sync for ConstPtr {}
-
-#[derive(Clone, Copy)]
-struct MutPtr(*mut f32);
-unsafe impl Send for MutPtr {}
-unsafe impl Sync for MutPtr {}
-
 /// Worker-side tile kernel: the `Send + Sync` snapshot of everything a
-/// detached tile needs from the rho cache.
+/// detached job needs from the rho cache.
 #[derive(Clone)]
 enum Kernel {
     /// Native rfft pipeline (mirrors `RustFft::apply`'s inline loop).
@@ -112,12 +129,112 @@ enum Kernel {
     Direct { seg: Arc<Vec<f32>> },
 }
 
+/// Busy-span union clock for the hidden-mixer accounting. N workers can
+/// be computing simultaneously; summing their per-job durations would
+/// report more "hidden" time than wall time elapsed (double-counting the
+/// overlap in the fig3c breakdown). The clock instead accumulates the
+/// *union* of the busy intervals: time advances only while at least one
+/// job is running, so `take_ns` is bounded by wall time regardless of
+/// the worker count, and equals the old per-job sum at one worker.
+struct WorkerClock {
+    inner: Mutex<ClockInner>,
+}
+
+struct ClockInner {
+    /// Jobs currently inside an `enter` guard.
+    active: usize,
+    /// When `active` last rose from 0 (meaningless while `active == 0`).
+    since: Instant,
+    /// Closed busy spans, drained by `take_ns`.
+    total_ns: u64,
+}
+
+impl WorkerClock {
+    fn new() -> WorkerClock {
+        WorkerClock {
+            inner: Mutex::new(ClockInner { active: 0, since: Instant::now(), total_ns: 0 }),
+        }
+    }
+
+    /// Enter a busy span; the guard closes it on drop (unwind-safe, so a
+    /// panicking kernel does not wedge the clock open).
+    fn enter(&self) -> ClockGuard<'_> {
+        let mut c = self.inner.lock().unwrap();
+        if c.active == 0 {
+            c.since = Instant::now();
+        }
+        c.active += 1;
+        drop(c);
+        ClockGuard(self)
+    }
+
+    fn exit(&self) {
+        let mut c = self.inner.lock().unwrap();
+        c.active -= 1;
+        if c.active == 0 {
+            c.total_ns += c.since.elapsed().as_nanos() as u64;
+        }
+    }
+
+    /// Drain the accumulated busy time. An open span is folded in up to
+    /// now and restarted, so long-running jobs attribute their time to
+    /// the step that observed it.
+    fn take_ns(&self) -> u64 {
+        let mut c = self.inner.lock().unwrap();
+        let mut total = c.total_ns;
+        c.total_ns = 0;
+        if c.active > 0 {
+            total += c.since.elapsed().as_nanos() as u64;
+            c.since = Instant::now();
+        }
+        total
+    }
+}
+
+struct ClockGuard<'a>(&'a WorkerClock);
+
+impl Drop for ClockGuard<'_> {
+    fn drop(&mut self) {
+        self.0.exit();
+    }
+}
+
 struct InFlight {
     handle: JobHandle,
     /// Destination range in submitted-tile row coordinates (1-indexed,
-    /// inclusive — `fence(col)` joins jobs with `dst_l <= col <= dst_r`).
+    /// inclusive — `fence(col)` joins jobs with `dst_l <= col <= dst_r`,
+    /// and new jobs take dependency edges on overlapping ranges).
     dst_l: usize,
     dst_r: usize,
+}
+
+/// One staged chunk of a split tile: output rows `[k0, k1)` of the tile,
+/// computed by the direct kernel or (tail only) the order-2U FFT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Chunk {
+    k0: usize,
+    k1: usize,
+    fft: bool,
+}
+
+/// Staged-deadline chunk schedule for a split size-`u` tile. Row ranges
+/// are disjoint and cover `[0, u)`: a doubling direct prefix
+/// `[0,1), [1,2), [2,4), …` whose chunk deadlines amortize over the red
+/// steps before each chunk's own fence, and — iff `fft_tail` and the
+/// prefix stops short of `u` — one FFT chunk for the remaining rows.
+fn chunk_plan(u: usize, fft_tail: bool) -> Vec<Chunk> {
+    let c = if fft_tail { STAGED_DIRECT_ROWS.min(u) } else { u };
+    let mut plan = Vec::new();
+    let mut k0 = 0usize;
+    while k0 < c {
+        let k1 = if k0 == 0 { 1 } else { (2 * k0).min(c) };
+        plan.push(Chunk { k0, k1, fft: false });
+        k0 = k1;
+    }
+    if c < u {
+        plan.push(Chunk { k0: c, k1: u, fft: true });
+    }
+    plan
 }
 
 /// Asynchronous executor wrapping a native synchronous τ implementation.
@@ -125,16 +242,16 @@ pub struct AsyncTau<'c, 'rt> {
     cache: &'c RhoCache<'rt>,
     /// The wrapped impl: provides `kind`/`tile_flops` and the synchronous
     /// `apply` fallback; its own worker pool is idle under async
-    /// execution (tiles run group-sequential on the executor worker).
+    /// execution (tiles run group-sequential inside each job).
     inner: Box<dyn TauImpl + 'c>,
-    /// Single worker — FIFO execution is the write-ordering guarantee.
+    /// `mixer_workers` workers; the dependency edges recorded at submit
+    /// are the write-ordering guarantee (see module docs).
     pool: ThreadPool,
     inflight: VecDeque<InFlight>,
     readiness: Option<Arc<RowReadiness>>,
     split_min_u: usize,
-    /// Worker-side compute ns, drained by `take_worker_ns` (hidden-mixer
-    /// accounting).
-    worker_ns: Arc<AtomicU64>,
+    /// Busy-span union of all workers, drained by `take_worker_ns`.
+    clock: Arc<WorkerClock>,
     /// Per-U `[M, 2U, D]` filter-prefix snapshots for worker-side direct
     /// kernels (the cache's own segments borrow `'c`, jobs need owned).
     segs: HashMap<usize, Arc<Vec<f32>>>,
@@ -142,11 +259,13 @@ pub struct AsyncTau<'c, 'rt> {
 
 impl<'c, 'rt> AsyncTau<'c, 'rt> {
     /// `split_min_u == 0` disables tile splitting (async whole-tile
-    /// execution only — bit-identical to the sync path).
+    /// execution only — bit-identical to the sync path at any worker
+    /// count). `workers` is clamped to ≥ 1.
     pub fn new(
         cache: &'c RhoCache<'rt>,
         inner: Box<dyn TauImpl + 'c>,
         split_min_u: usize,
+        workers: usize,
     ) -> AsyncTau<'c, 'rt> {
         debug_assert!(
             matches!(inner.kind(), TauKind::RustDirect | TauKind::RustFft),
@@ -155,16 +274,16 @@ impl<'c, 'rt> AsyncTau<'c, 'rt> {
         AsyncTau {
             cache,
             inner,
-            pool: ThreadPool::new(1),
+            pool: ThreadPool::new(workers.max(1)),
             inflight: VecDeque::new(),
             readiness: None,
             split_min_u,
-            worker_ns: Arc::new(AtomicU64::new(0)),
+            clock: Arc::new(WorkerClock::new()),
             segs: HashMap::new(),
         }
     }
 
-    /// Tiles currently submitted but not yet retired by a fence.
+    /// Jobs currently submitted but not yet retired by a fence.
     pub fn in_flight(&self) -> usize {
         self.inflight.len()
     }
@@ -181,17 +300,6 @@ impl<'c, 'rt> AsyncTau<'c, 'rt> {
         let s = Arc::new(seg);
         self.segs.insert(u, s.clone());
         s
-    }
-
-    fn kernel_for(&mut self, u: usize) -> Kernel {
-        match self.inner.kind() {
-            TauKind::RustFft => Kernel::Fft {
-                plan: self.cache.plan(u),
-                spectra: self.cache.spectra(u),
-            },
-            TauKind::RustDirect => Kernel::Direct { seg: self.seg_snapshot(u) },
-            _ => unreachable!("AsyncTau wraps native impls only"),
-        }
     }
 
     fn retire(job: InFlight) -> Result<()> {
@@ -239,73 +347,56 @@ impl<'c, 'rt> AsyncTau<'c, 'rt> {
         })
     }
 
-    /// Urgent split-tile column: accumulate the tile's first output row
-    /// `z[dst_l]` for every group with a direct kernel (`k = 0` slice of
-    /// `fft::tile_conv_direct_into`), synchronously on the engine thread.
-    fn urgent_first_col(&self, streams: &Tensor, pending: &mut Tensor, tile: Tile) {
-        let dims = self.cache.runtime().dims;
-        let (g, d, b) = (dims.g, dims.d, dims.b);
-        let u = tile.u;
-        for gi in 0..g {
-            let rho = self.cache.seg(gi / b, u);
-            let y = streams.block(gi, tile.src_l - 1, tile.src_r);
-            let out = pending.at2_mut(gi, tile.dst_l - 1);
-            for j in 0..u {
-                let r = &rho[(u - j) * d..(u - j + 1) * d];
-                let yj = &y[j * d..(j + 1) * d];
-                for t in 0..d {
-                    out[t] += yj[t] * r[t];
-                }
-            }
-        }
-    }
-
-    /// Enqueue rows `k0..U` of `tile` onto the executor worker.
+    /// Enqueue output rows `[k0, k1)` of `tile` as one pool job, with
+    /// happens-before edges on every in-flight job whose destination
+    /// rows overlap this chunk's.
     fn enqueue(
         &mut self,
-        streams: &Tensor,
-        pending: &mut Tensor,
+        streams: &Arc<CellTensor>,
+        pending: &Arc<CellTensor>,
         tile: Tile,
-        k0: usize,
+        chunk: Chunk,
     ) {
         let dims = self.cache.runtime().dims;
-        let (g, d, b) = (dims.g, dims.d, dims.b);
-        let l = streams.shape()[1];
-        let kernel = self.kernel_for(tile.u);
+        let (d, b) = (dims.d, dims.b);
+        let kernel = if chunk.fft {
+            Kernel::Fft { plan: self.cache.plan(tile.u), spectra: self.cache.spectra(tile.u) }
+        } else {
+            Kernel::Direct { seg: self.seg_snapshot(tile.u) }
+        };
+        let (k0, k1) = (chunk.k0, chunk.k1);
         let dst_l = tile.dst_l + k0;
-        let dst_r = tile.dst_r;
+        let dst_r = tile.dst_l + k1 - 1;
 
         if let Some(r) = &self.readiness {
             r.begin_write(dst_l - 1..dst_r);
         }
         let readiness = self.readiness.clone();
-        let worker_ns = self.worker_ns.clone();
-        // SAFETY (lifetime erasure): the pointers outlive the job because
-        // every code path that drops or conflictingly touches the store
-        // fences first — `fence(col)` before each gather, `fence_all` in
-        // `apply`/`Session::finish`, and `Drop` below drains the queue
-        // unconditionally. Disjointness: the job writes only pending rows
-        // [dst_l-1+k0, dst_r) and reads only streams rows
-        // [src_l-1, src_r); the fence discipline (DESIGN.md §Pipelining)
-        // keeps all concurrent engine-thread accesses on other rows.
-        // Unsplit tiles (the default) are additionally clean under the
-        // Stacked Borrows model: the engine thread creates no store
-        // borrow between submission and the joining fence. Split
-        // remainders outlive the next step's gather/streams-store, whose
-        // safe reborrows of the same allocations technically invalidate
-        // these raw tags even though the rows are disjoint — the same
-        // model-gray disjoint-rows pattern as the scoped_for kernels; the
-        // model-clean fix (UnsafeCell-backed store) is a ROADMAP item.
-        let sp = ConstPtr(streams.data().as_ptr());
-        let pp = MutPtr(pending.data_mut().as_mut_ptr());
-        let handle = self.pool.submit(Box::new(move || {
-            let t0 = Instant::now();
-            run_tile(&kernel, sp, pp, l, g, b, d, tile, k0);
+        let clock = self.clock.clone();
+        let streams = streams.clone();
+        let pending = pending.clone();
+        let job = Box::new(move || {
+            let _busy = clock.enter();
+            run_tile(&kernel, &streams, &pending, b, d, tile, k0, k1);
             if let Some(r) = &readiness {
                 r.end_write(dst_l - 1..dst_r);
             }
-            worker_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        }));
+        });
+        // Dependency edges: in-flight jobs whose (1-indexed, inclusive)
+        // destination ranges intersect ours wrote or will write some of
+        // our rows — execution must respect submission order there to
+        // reproduce the sync path's `+=` order. Ranges are compared in
+        // store-row coordinates as submitted, so the Appendix D wrap
+        // (two absolute positions aliasing one store row) is covered.
+        // Already-done jobs need no edge; their writes are visible via
+        // the pool's status handshake.
+        let deps: Vec<&JobHandle> = self
+            .inflight
+            .iter()
+            .filter(|j| j.dst_l <= dst_r && dst_l <= j.dst_r && !j.handle.is_done())
+            .map(|j| &j.handle)
+            .collect();
+        let handle = self.pool.submit_after(&deps, job);
         self.inflight.push_back(InFlight { handle, dst_l, dst_r });
     }
 }
@@ -317,7 +408,7 @@ impl TauImpl for AsyncTau<'_, '_> {
 
     /// Synchronous fallback: drain in-flight work, then run the wrapped
     /// impl directly (callers that mix `apply` and `submit` stay safe).
-    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+    fn apply(&mut self, streams: &CellTensor, pending: &CellTensor, tile: Tile) -> Result<()> {
         self.fence_all()?;
         self.inner.apply(streams, pending, tile)
     }
@@ -326,10 +417,18 @@ impl TauImpl for AsyncTau<'_, '_> {
         self.inner.tile_flops(u, g, d)
     }
 
-    fn submit(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+    fn submit(
+        &mut self,
+        streams: &Arc<CellTensor>,
+        pending: &Arc<CellTensor>,
+        tile: Tile,
+    ) -> Result<()> {
+        // opportunistically retire completed jobs so the in-flight list
+        // (and with it every dependency scan) stays a few entries long
+        self.fence_where(|_| false)?;
         let rows = streams.shape()[1];
         // Split when the tile is big enough to be worth it and the store
-        // cannot wrap its source rows while the remainder is in flight
+        // cannot wrap its source rows while a chunk is in flight
         // (2U <= rows; see module docs — only excludes the largest tile
         // of an Appendix D half store).
         let split = self.split_min_u > 0
@@ -337,17 +436,13 @@ impl TauImpl for AsyncTau<'_, '_> {
             && tile.u >= 2
             && 2 * tile.u <= rows;
         if split {
-            // the urgent column is written on the engine thread; the FIFO
-            // deadline discipline guarantees no in-flight job still covers
-            // it (any such job covered col dst_l-1's gather fence, or had
-            // u = 1 and never split) — enforce that analysis
-            if let Some(r) = &self.readiness {
-                r.assert_quiet(tile.dst_l - 1);
+            let fft_tail = matches!(self.inner.kind(), TauKind::RustFft);
+            for chunk in chunk_plan(tile.u, fft_tail) {
+                self.enqueue(streams, pending, tile, chunk);
             }
-            self.urgent_first_col(streams, pending, tile);
-            self.enqueue(streams, pending, tile, 1);
         } else {
-            self.enqueue(streams, pending, tile, 0);
+            let fft = matches!(self.inner.kind(), TauKind::RustFft);
+            self.enqueue(streams, pending, tile, Chunk { k0: 0, k1: tile.u, fft });
         }
         Ok(())
     }
@@ -361,7 +456,7 @@ impl TauImpl for AsyncTau<'_, '_> {
     }
 
     fn take_worker_ns(&mut self) -> u64 {
-        self.worker_ns.swap(0, Ordering::Relaxed)
+        self.clock.take_ns()
     }
 
     fn attach_readiness(&mut self, readiness: Arc<RowReadiness>) {
@@ -370,9 +465,13 @@ impl TauImpl for AsyncTau<'_, '_> {
 }
 
 impl Drop for AsyncTau<'_, '_> {
-    /// Drain the queue so no job outlives the borrowed store. Join
-    /// errors are swallowed: a panicked tile already surfaced (or will)
-    /// via the owning session's fence, and `Drop` must not double-panic.
+    /// Drain the queue so no detached writer outlives the session's view
+    /// of the store (the `Arc`'d planes make a straggler memory-safe,
+    /// but a job landing after e.g. `reset_lane` would still be a logic
+    /// bug — drain keeps the semantics airtight under any drop order).
+    /// Join errors are swallowed: a panicked tile already surfaced (or
+    /// will) via the owning session's fence, and `Drop` must not
+    /// double-panic.
     fn drop(&mut self) {
         while let Some(job) = self.inflight.pop_front() {
             let _ = job.handle.join();
@@ -380,78 +479,72 @@ impl Drop for AsyncTau<'_, '_> {
     }
 }
 
-/// The detached tile body: accumulate rows `k0..U` of the tile for every
-/// group, group-sequential (identical per-group arithmetic order to the
-/// wrapped impl's inline loop, so unsplit async output is bit-identical
-/// to sync output).
+/// The detached job body: accumulate output rows `[k0, k1)` of the tile
+/// for every group, group-sequential (identical per-group arithmetic
+/// order to the wrapped impl's inline loop, so unsplit async output is
+/// bit-identical to sync output).
 #[allow(clippy::too_many_arguments)]
 fn run_tile(
     kernel: &Kernel,
-    streams: ConstPtr,
-    pending: MutPtr,
-    l: usize,
-    g: usize,
+    streams: &CellTensor,
+    pending: &CellTensor,
     b: usize,
     d: usize,
     tile: Tile,
     k0: usize,
+    k1: usize,
 ) {
+    let g = streams.shape()[0];
     let u = tile.u;
     ASYNC_SCRATCH.with(|cell| {
         let (scratch, acc) = &mut *cell.borrow_mut();
         for gi in 0..g {
             let m = gi / b;
-            // SAFETY: per the submission contract — disjoint rows, fenced
-            // lifetime (see `AsyncTau::enqueue`). The mutable slice starts
-            // at row k0, NOT at the tile's first row: for a split
-            // remainder the urgent row dst_l-1 belongs to the engine
-            // thread (it may gather or zero-fill it before this job's
-            // fence), so the job's &mut must never span it.
-            let y = unsafe {
-                std::slice::from_raw_parts(streams.0.add((gi * l + tile.src_l - 1) * d), u * d)
-            };
-            let out = unsafe {
-                std::slice::from_raw_parts_mut(
-                    pending.0.add((gi * l + tile.dst_l - 1 + k0) * d),
-                    (u - k0) * d,
-                )
-            };
+            let y = streams.block(gi, tile.src_l - 1, tile.src_r);
+            // SAFETY: this job owns pending rows [dst_l-1+k0, dst_l-1+k1)
+            // exclusively — chunks of one tile are disjoint, overlapping
+            // older jobs are ordered before us by dependency edges, and
+            // the engine thread fences before touching any of these rows
+            // (begin_write/end_write brackets the window). The slice
+            // covers exactly our rows, never the neighbours'.
+            let out = unsafe { pending.block_mut(gi, tile.dst_l - 1 + k0, tile.dst_l - 1 + k1) };
             match kernel {
                 Kernel::Fft { plan, spectra } => {
                     let (sre, sim) = spectra.planes(m);
-                    if k0 == 0 {
+                    if k0 == 0 && k1 == u {
                         tile_conv_rfft_into(plan, y, sre, sim, out, scratch, d);
                     } else {
-                        // remainder: full conv into the accumulator, land
-                        // only rows >= k0 (row 0 was the urgent column)
+                        // tail chunk: full cyclic conv into the
+                        // accumulator, land only rows [k0, k1) (earlier
+                        // rows belong to the direct-prefix chunks)
                         acc.clear();
                         acc.resize(u * d, 0.0);
                         tile_conv_rfft_into(plan, y, sre, sim, acc, scratch, d);
-                        for (o, v) in out.iter_mut().zip(&acc[k0 * d..]) {
+                        for (o, v) in out.iter_mut().zip(&acc[k0 * d..k1 * d]) {
                             *o += v;
                         }
                     }
                 }
                 Kernel::Direct { seg } => {
                     let rho = &seg[m * 2 * u * d..(m + 1) * 2 * u * d];
-                    direct_rows(y, rho, out, d, k0);
+                    direct_rows(y, rho, out, d, k0, k1);
                 }
             }
         }
     });
 }
 
-/// Direct tile restricted to output rows `k0..U`. `out_add` holds exactly
-/// those rows (`[(U-k0)][d]`, starting at row k0 of the tile) — the
-/// `k0 == 0` case is exactly `fft::tile_conv_direct_into`.
-fn direct_rows(y: &[f32], rho_seg: &[f32], out_add: &mut [f32], d: usize, k0: usize) {
+/// Direct tile restricted to output rows `[k0, k1)`. `out_add` holds
+/// exactly those rows (`[(k1-k0)][d]`, starting at row k0 of the tile) —
+/// the `(0, U)` case is exactly `fft::tile_conv_direct_into`.
+fn direct_rows(y: &[f32], rho_seg: &[f32], out_add: &mut [f32], d: usize, k0: usize, k1: usize) {
     let u = y.len() / d;
     debug_assert_eq!(rho_seg.len(), 2 * u * d);
-    debug_assert_eq!(out_add.len(), (u - k0) * d);
+    debug_assert_eq!(out_add.len(), (k1 - k0) * d);
     for j in 0..u {
         let yj = &y[j * d..(j + 1) * d];
         let rho_base = (u - j) * d;
-        for k in k0..u {
+        for k in k0..k1 {
             let r = &rho_seg[rho_base + k * d..rho_base + (k + 1) * d];
             let o = &mut out_add[(k - k0) * d..(k - k0 + 1) * d];
             for t in 0..d {
@@ -479,37 +572,96 @@ mod tests {
             let mut want = vec![0.0f32; u * d];
             crate::fft::tile_conv_direct_into(&y, &rho, &mut want, d);
             let mut got = vec![0.0f32; u * d];
-            direct_rows(&y, &rho, &mut got, d, 0);
+            direct_rows(&y, &rho, &mut got, d, 0, u);
             assert_eq!(got, want, "u={u} d={d}");
         }
     }
 
     #[test]
-    fn direct_rows_split_covers_each_row_once() {
-        // urgent row 0 + remainder rows 1.. must equal the whole tile
+    fn direct_rows_chunks_cover_each_row_once() {
+        // any disjoint chunking of [0, u) must reproduce the whole tile
         let (u, d) = (8usize, 4usize);
         let y = rand_vec(u * d, 3);
         let rho = rand_vec(2 * u * d, 4);
         let mut want = vec![0.0f32; u * d];
-        direct_rows(&y, &rho, &mut want, d, 0);
+        direct_rows(&y, &rho, &mut want, d, 0, u);
 
         let mut got = vec![0.0f32; u * d];
-        // row 0 via the urgent-column loop shape
-        for j in 0..u {
-            let r = &rho[(u - j) * d..(u - j + 1) * d];
-            let yj = &y[j * d..(j + 1) * d];
-            for t in 0..d {
-                got[t] += yj[t] * r[t];
-            }
+        for Chunk { k0, k1, .. } in chunk_plan(u, false) {
+            direct_rows(&y, &rho, &mut got[k0 * d..k1 * d], d, k0, k1);
         }
-        // remainder slice starts at row 1 (mirrors run_tile's offset view)
-        direct_rows(&y, &rho, &mut got[d..], d, 1);
         for (a, b) in got.iter().zip(&want) {
             assert_eq!(a, b);
         }
     }
 
-    // AsyncTau end-to-end behaviour (bit-identical unsplit output,
-    // tolerance-bounded split output, fence ordering under churn) is
-    // covered against real artifacts in tests/integration_async.rs.
+    #[test]
+    fn chunk_plan_is_disjoint_doubling_cover() {
+        for u in [2usize, 4, 16, 64, 1024] {
+            for fft_tail in [false, true] {
+                let plan = chunk_plan(u, fft_tail);
+                // contiguous, disjoint, covering [0, u)
+                assert_eq!(plan[0].k0, 0);
+                assert_eq!(plan.last().unwrap().k1, u);
+                for w in plan.windows(2) {
+                    assert_eq!(w[0].k1, w[1].k0, "u={u}");
+                    assert!(w[0].k1 > w[0].k0);
+                }
+                if fft_tail && u > STAGED_DIRECT_ROWS {
+                    let tail = plan.last().unwrap();
+                    assert!(tail.fft);
+                    assert_eq!(tail.k0, STAGED_DIRECT_ROWS);
+                    assert!(plan[..plan.len() - 1].iter().all(|c| !c.fft));
+                } else {
+                    assert!(plan.iter().all(|c| !c.fft), "u={u} stays all-direct");
+                }
+                // the direct prefix doubles: each chunk is at most as
+                // large as all rows before it (deadline ≥ cost shape)
+                for c in &plan {
+                    if !c.fft {
+                        assert!(c.k1 - c.k0 <= c.k0.max(1), "chunk {c:?} too eager");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_clock_unions_overlapping_spans() {
+        let clock = WorkerClock::new();
+        let wall = Instant::now();
+        let a = clock.enter();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let b = clock.enter();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        drop(a);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        drop(b);
+        let busy = clock.take_ns();
+        let wall = wall.elapsed().as_nanos() as u64;
+        // union spans all three sleeps once; the naive per-span sum
+        // (10+10 + 10+10 = 40ms of sleeps) would exceed wall time on a
+        // hypothetical 30ms wall — the union never can
+        assert!(busy >= 30_000_000, "busy {busy}ns < 30ms");
+        assert!(busy <= wall, "busy {busy}ns exceeds wall {wall}ns");
+        assert_eq!(clock.take_ns(), 0, "drained");
+    }
+
+    #[test]
+    fn worker_clock_folds_open_spans_into_take() {
+        let clock = WorkerClock::new();
+        let g = clock.enter();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let first = clock.take_ns();
+        assert!(first >= 5_000_000, "open span folded in: {first}");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        drop(g);
+        let second = clock.take_ns();
+        assert!(second >= 5_000_000, "span restarted at take: {second}");
+    }
+
+    // AsyncTau end-to-end behaviour (bit-identical unsplit output at
+    // mixer_workers ∈ {1, 2, 4}, tolerance-bounded split output, fence
+    // ordering under churn, drop-mid-flight drain) is covered against
+    // real artifacts in tests/integration_async.rs.
 }

@@ -11,7 +11,7 @@ use crate::tiling::{flops, Tile};
 use crate::util::benchkit;
 use crate::util::json::Json;
 use crate::util::prng::Prng;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::{CellTensor, Tensor};
 
 /// Per-tile-size implementation choice (keyed by log2 U).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -129,15 +129,16 @@ pub fn calibrate(
         // a real schedule position with this tile side: i = u
         let tile = Tile::at(u);
         let l_needed = tile.dst_r;
-        let mut streams = Tensor::zeros(&[g, l_needed, d]);
-        rng.fill_normal(streams.data_mut(), 1.0);
-        let mut pending = Tensor::zeros(&[g, l_needed, d]);
+        let mut init = Tensor::zeros(&[g, l_needed, d]);
+        rng.fill_normal(init.data_mut(), 1.0);
+        let streams = CellTensor::from_tensor(&init);
+        let pending = CellTensor::zeros(&[g, l_needed, d]);
 
         let mut medians = Vec::new();
         for kind in TauKind::ALL_FIXED {
             let mut imp = make_impl(kind, cache, 0)?;
             let stats = benchkit::bench(warmup, runs, || {
-                imp.apply(&streams, &mut pending, tile).expect("tau apply");
+                imp.apply(&streams, &pending, tile).expect("tau apply");
             });
             medians.push((kind, stats.median_ns));
         }

@@ -9,7 +9,7 @@ use super::{
     CalibrationTable, PjrtDirect, PjrtFft, RhoCache, RustDirect, RustFft, TauImpl, TauKind,
 };
 use crate::tiling::Tile;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::CellTensor;
 
 pub struct Hybrid<'c, 'rt> {
     table: CalibrationTable,
@@ -56,7 +56,7 @@ impl TauImpl for Hybrid<'_, '_> {
         TauKind::Hybrid
     }
 
-    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+    fn apply(&mut self, streams: &CellTensor, pending: &CellTensor, tile: Tile) -> Result<()> {
         match self.table.choice(tile.u) {
             TauKind::RustDirect => self.rust_direct.apply(streams, pending, tile),
             TauKind::RustFft => self.rust_fft.apply(streams, pending, tile),

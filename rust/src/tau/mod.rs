@@ -24,11 +24,11 @@ pub mod rust_fft;
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::engine::store::RowReadiness;
 use crate::tiling::{flops, Tile};
-use crate::util::tensor::Tensor;
+use crate::util::tensor::CellTensor;
 
 pub use async_exec::AsyncTau;
 pub use calibrate::{calibrate, CalibrationTable};
@@ -112,8 +112,12 @@ impl FenceStats {
 
 /// One τ implementation: accumulate a gray tile into `pending`.
 ///
-/// `streams` and `pending` are `[G, L, D]`; `tile` carries 1-indexed
-/// absolute ranges (row `t` of a group = position `t+1`).
+/// `streams` and `pending` are `[G, L, D]` [`CellTensor`] planes (shared
+/// with any in-flight async jobs — see `util::tensor`); `tile` carries
+/// 1-indexed absolute ranges (row `t` of a group = position `t+1`).
+/// Implementations write `pending` through the unsafe cell accessors
+/// under the deadline contract below: the submitted tile's destination
+/// rows are theirs exclusively until the corresponding fence.
 ///
 /// ## Submit/fence semantics (deadline-fenced execution)
 ///
@@ -133,16 +137,23 @@ impl FenceStats {
 pub trait TauImpl {
     fn kind(&self) -> TauKind;
 
-    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()>;
+    fn apply(&mut self, streams: &CellTensor, pending: &CellTensor, tile: Tile) -> Result<()>;
 
     /// FLOPs this impl spends on a side-`u` tile (for the FlopCounter).
     fn tile_flops(&self, u: usize, g: usize, d: usize) -> u64 {
         self.kind().tile_flops(u, g, d)
     }
 
-    /// Submit a tile under the deadline contract above. Default:
-    /// synchronous `apply` (the tile is complete on return).
-    fn submit(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+    /// Submit a tile under the deadline contract above. The planes come
+    /// as `Arc`s so an asynchronous impl can hand clones to detached
+    /// jobs. Default: synchronous `apply` (the tile is complete on
+    /// return).
+    fn submit(
+        &mut self,
+        streams: &Arc<CellTensor>,
+        pending: &Arc<CellTensor>,
+        tile: Tile,
+    ) -> Result<()> {
         self.apply(streams, pending, tile)
     }
 
@@ -191,32 +202,52 @@ pub fn make_impl<'rt, 'c>(
 pub struct TauExecCfg {
     /// Wrap native impls in the deadline-fenced [`AsyncTau`] executor.
     pub async_mixer: bool,
-    /// Split tiles with `U >= split_min_u` into an urgent first column +
-    /// relaxed remainder (0 disables splitting; see `async_exec`).
+    /// Split tiles with `U >= split_min_u` into staged-deadline chunks
+    /// (0 disables splitting; see `async_exec`).
     pub split_min_u: usize,
+    /// Pool workers for the async executor's dependency-tracked queue
+    /// (≥ 1; `> 1` requires `async_mixer` over a native kind).
+    pub mixer_workers: usize,
 }
 
 /// Construct the τ implementation a `Session` drives, applying the async
 /// execution policy. The PJRT-backed kinds (including `Hybrid`, which may
 /// dispatch to them per tile size) stay synchronous regardless: PJRT
 /// handles are not `Send`, so their tiles cannot leave the engine thread.
+/// Requesting `mixer_workers > 1` for a configuration that cannot run
+/// multi-worker is a hard error, not a silent fallback — a serving config
+/// that asks for concurrency should not quietly lose it.
 pub fn make_session_impl<'rt, 'c>(
     kind: TauKind,
     cache: &'c RhoCache<'rt>,
     threads: usize,
     exec: TauExecCfg,
 ) -> Result<Box<dyn TauImpl + 'c>> {
-    let sync = make_impl(kind, cache, threads)?;
-    if exec.async_mixer && matches!(kind, TauKind::RustDirect | TauKind::RustFft) {
-        return Ok(Box::new(AsyncTau::new(cache, sync, exec.split_min_u)));
+    if exec.mixer_workers == 0 {
+        bail!("mixer_workers must be >= 1 (use --sync-mixer to disable async execution)");
     }
-    Ok(sync)
+    let native = matches!(kind, TauKind::RustDirect | TauKind::RustFft);
+    if exec.async_mixer && native {
+        let sync = make_impl(kind, cache, threads)?;
+        return Ok(Box::new(AsyncTau::new(cache, sync, exec.split_min_u, exec.mixer_workers)));
+    }
+    if exec.mixer_workers > 1 {
+        bail!(
+            "mixer_workers = {} requires the async mixer over a native tau kind \
+             (rust-direct|rust-fft); '{}' with async_mixer = {} runs synchronously \
+             on the engine thread — set mixer_workers = 1",
+            exec.mixer_workers,
+            kind.as_str(),
+            exec.async_mixer,
+        );
+    }
+    make_impl(kind, cache, threads)
 }
 
 /// Stage the tile's input block `streams[g, src_l-1 .. src_r]` for all
 /// groups into a `[G, U, D]` scratch (PJRT impls need one contiguous
 /// buffer; per-group rows are already contiguous).
-pub fn stage_y(streams: &Tensor, tile: Tile, buf: &mut Vec<f32>) {
+pub fn stage_y(streams: &CellTensor, tile: Tile, buf: &mut Vec<f32>) {
     let (g, d) = (streams.shape()[0], streams.shape()[2]);
     let u = tile.u;
     // every row is copied in, so grown capacity must not be zero-filled
@@ -229,12 +260,16 @@ pub fn stage_y(streams: &Tensor, tile: Tile, buf: &mut Vec<f32>) {
 }
 
 /// Accumulate a `[G, U, D]` tau output into `pending[g, dst_l-1 .. dst_r]`.
-pub fn scatter_add(pending: &mut Tensor, tile: Tile, vals: &[f32]) {
+pub fn scatter_add(pending: &CellTensor, tile: Tile, vals: &[f32]) {
     let (g, d) = (pending.shape()[0], pending.shape()[2]);
     let u = tile.u;
     debug_assert_eq!(vals.len(), g * u * d);
     for gi in 0..g {
-        let dst = pending.block_mut(gi, tile.dst_l - 1, tile.dst_r);
+        // SAFETY: callers are synchronous impls running on the engine
+        // thread under the deadline contract — the tile's destination
+        // rows are exclusively theirs (no detached jobs exist for PJRT
+        // kinds, and sync native `apply` only runs after a full drain).
+        let dst = unsafe { pending.block_mut(gi, tile.dst_l - 1, tile.dst_r) };
         crate::util::tensor::ops::add_assign(dst, &vals[gi * u * d..(gi + 1) * u * d]);
     }
 }
@@ -253,19 +288,21 @@ mod tests {
 
     #[test]
     fn stage_and_scatter_are_inverse_shaped() {
+        use crate::util::tensor::Tensor;
         let (g, l, d) = (2usize, 8usize, 3usize);
-        let mut streams = Tensor::zeros(&[g, l, d]);
-        for (i, v) in streams.data_mut().iter_mut().enumerate() {
+        let mut base = Tensor::zeros(&[g, l, d]);
+        for (i, v) in base.data_mut().iter_mut().enumerate() {
             *v = i as f32;
         }
+        let streams = CellTensor::from_tensor(&base);
         let tile = Tile::at(4); // u=4: src [1,4], dst [5,8]
         let mut buf = Vec::new();
         stage_y(&streams, tile, &mut buf);
         assert_eq!(buf.len(), g * 4 * d);
         assert_eq!(&buf[..d], streams.at2(0, 0));
 
-        let mut pending = Tensor::zeros(&[g, l, d]);
-        scatter_add(&mut pending, tile, &buf);
+        let pending = CellTensor::zeros(&[g, l, d]);
+        scatter_add(&pending, tile, &buf);
         assert_eq!(pending.at2(0, 4), streams.at2(0, 0));
         assert_eq!(pending.at2(1, 7), streams.at2(1, 3));
         // untouched rows stay zero

@@ -8,7 +8,7 @@ use anyhow::Result;
 use super::{scatter_add, stage_y, RhoCache, TauImpl, TauKind};
 use crate::runtime::Runtime;
 use crate::tiling::Tile;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::CellTensor;
 
 pub struct PjrtFft<'c, 'rt> {
     cache: &'c RhoCache<'rt>,
@@ -26,7 +26,7 @@ impl TauImpl for PjrtFft<'_, '_> {
         TauKind::PjrtFft
     }
 
-    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+    fn apply(&mut self, streams: &CellTensor, pending: &CellTensor, tile: Tile) -> Result<()> {
         let rt = self.cache.runtime();
         let dims = rt.dims;
         let u = tile.u;

@@ -7,7 +7,7 @@ use anyhow::Result;
 use super::{RhoCache, TauImpl, TauKind};
 use crate::fft::tile_conv_direct_into;
 use crate::tiling::Tile;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::CellTensor;
 use crate::util::threadpool::ThreadPool;
 
 pub struct RustDirect<'c, 'rt> {
@@ -26,7 +26,7 @@ impl TauImpl for RustDirect<'_, '_> {
         TauKind::RustDirect
     }
 
-    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+    fn apply(&mut self, streams: &CellTensor, pending: &CellTensor, tile: Tile) -> Result<()> {
         let dims = self.cache.runtime().dims;
         let (g, d, b) = (dims.g, dims.d, dims.b);
         let u = tile.u;
@@ -36,39 +36,30 @@ impl TauImpl for RustDirect<'_, '_> {
             for gi in 0..g {
                 let m = gi / b;
                 let y = streams.block(gi, tile.src_l - 1, tile.src_r);
-                let out = pending.block_mut(gi, tile.dst_l - 1, tile.dst_r);
+                // SAFETY: synchronous apply under the deadline contract —
+                // the tile's dst rows are exclusively this caller's
+                let out = unsafe { pending.block_mut(gi, tile.dst_l - 1, tile.dst_r) };
                 tile_conv_direct_into(y, self.cache.seg(m, u), out, d);
             }
             return Ok(());
         }
 
         // parallel across groups (Algorithm 3): disjoint output blocks per
-        // group; hand each worker a raw view of its own slice. Filter
-        // segments are extracted first so the closure captures only Sync
-        // data (the RhoCache holds non-Sync PJRT state).
+        // group, each worker deriving a &mut over its own group's dst
+        // block through the Sync cell plane. Filter segments are extracted
+        // first so the closure captures only Sync data (the RhoCache holds
+        // non-Sync PJRT state).
         let segs: Vec<&[f32]> = (0..dims.m).map(|m| self.cache.seg(m, u)).collect();
-        let pend_ptr = PendingPtr(pending.data_mut().as_mut_ptr());
-        let pend_ptr = &pend_ptr; // borrow whole wrapper (edition-2021 disjoint capture)
-        let l = streams.shape()[1];
         self.pool.scoped_for(g, |gi| {
             let y = streams.block(gi, tile.src_l - 1, tile.src_r);
-            // SAFETY: blocks [gi, dst_l-1..dst_r] are disjoint across gi.
-            let out = unsafe {
-                std::slice::from_raw_parts_mut(
-                    (pend_ptr.0).add((gi * l + tile.dst_l - 1) * d),
-                    u * d,
-                )
-            };
+            // SAFETY: blocks [gi, dst_l-1..dst_r] are disjoint across gi,
+            // and the tile's rows are this apply call's per the contract.
+            let out = unsafe { pending.block_mut(gi, tile.dst_l - 1, tile.dst_r) };
             tile_conv_direct_into(y, segs[gi / b], out, d);
         });
         Ok(())
     }
 }
-
-/// Send-able wrapper for the disjoint-slice pattern above.
-struct PendingPtr(*mut f32);
-unsafe impl Send for PendingPtr {}
-unsafe impl Sync for PendingPtr {}
 
 #[cfg(test)]
 mod tests {

@@ -11,7 +11,7 @@ use anyhow::Result;
 use super::{RhoCache, TauImpl, TauKind};
 use crate::fft::{tile_conv_rfft_into, TileScratch};
 use crate::tiling::Tile;
-use crate::util::tensor::Tensor;
+use crate::util::tensor::CellTensor;
 use crate::util::threadpool::ThreadPool;
 
 thread_local! {
@@ -44,42 +44,38 @@ impl TauImpl for RustFft<'_, '_> {
         TauKind::RustFft
     }
 
-    fn apply(&mut self, streams: &Tensor, pending: &mut Tensor, tile: Tile) -> Result<()> {
+    fn apply(&mut self, streams: &CellTensor, pending: &CellTensor, tile: Tile) -> Result<()> {
         let dims = self.cache.runtime().dims;
         let (g, d, b) = (dims.g, dims.d, dims.b);
-        let u = tile.u;
-        let plan = self.cache.plan(u);
-        let spectra = self.cache.spectra(u);
+        let plan = self.cache.plan(tile.u);
+        let spectra = self.cache.spectra(tile.u);
 
         if self.pool.size() == 0 {
             for gi in 0..g {
                 let m = gi / b;
                 let (sre, sim) = spectra.planes(m);
                 let y = streams.block(gi, tile.src_l - 1, tile.src_r);
-                let out = pending.block_mut(gi, tile.dst_l - 1, tile.dst_r);
+                // SAFETY: synchronous apply under the deadline contract —
+                // the tile's dst rows are exclusively this caller's
+                let out = unsafe { pending.block_mut(gi, tile.dst_l - 1, tile.dst_r) };
                 tile_conv_rfft_into(&plan, y, sre, sim, out, &mut self.scratch, d);
             }
             return Ok(());
         }
 
         // parallel across groups; each persistent worker brings its own
-        // thread-local scratch (no allocation per task).
-        let pend_ptr = PendingPtr(pending.data_mut().as_mut_ptr());
-        let pend_ptr = &pend_ptr; // borrow whole wrapper (edition-2021 disjoint capture)
-        let l = streams.shape()[1];
+        // thread-local scratch (no allocation per task). The cell plane
+        // is Sync, so the closure borrows it directly — each worker
+        // derives a &mut over its own group's disjoint dst block.
         let plan_ref = plan.as_ref();
         let spectra_ref = spectra.as_ref();
         self.pool.scoped_for(g, |gi| {
             let m = gi / b;
             let (sre, sim) = spectra_ref.planes(m);
             let y = streams.block(gi, tile.src_l - 1, tile.src_r);
-            // SAFETY: dst blocks are disjoint across gi.
-            let out = unsafe {
-                std::slice::from_raw_parts_mut(
-                    (pend_ptr.0).add((gi * l + tile.dst_l - 1) * d),
-                    u * d,
-                )
-            };
+            // SAFETY: dst blocks are disjoint across gi, and the tile's
+            // rows are this apply call's per the deadline contract.
+            let out = unsafe { pending.block_mut(gi, tile.dst_l - 1, tile.dst_r) };
             WORKER_SCRATCH.with(|scratch| {
                 tile_conv_rfft_into(plan_ref, y, sre, sim, out, &mut scratch.borrow_mut(), d);
             });
@@ -87,7 +83,3 @@ impl TauImpl for RustFft<'_, '_> {
         Ok(())
     }
 }
-
-struct PendingPtr(*mut f32);
-unsafe impl Send for PendingPtr {}
-unsafe impl Sync for PendingPtr {}

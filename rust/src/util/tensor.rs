@@ -4,6 +4,8 @@
 //! of [`Tensor`] storage; the struct only carries shape metadata and the
 //! indexing helpers the engines need ([G, T, D] activation layouts).
 
+use std::cell::UnsafeCell;
+
 use anyhow::{bail, Result};
 
 /// Owned row-major f32 tensor with runtime shape.
@@ -125,6 +127,149 @@ impl Tensor {
     }
 }
 
+/// Shared-mutation rank-3 `[G, T, D]` f32 plane for the async mixer.
+///
+/// The deadline-fenced executor keeps tile jobs in flight on pool workers
+/// while the engine thread reads *other* rows of the same plane. A plain
+/// [`Tensor`] cannot express that: handing a worker a raw pointer carved
+/// from `data_mut()` and then touching the tensor through `&mut` again on
+/// the engine thread invalidates the worker's pointer under Stacked
+/// Borrows. `CellTensor` makes the aliasing legal at the type level —
+/// storage is element-wise `UnsafeCell<f32>`, every accessor (read *and*
+/// write) goes through `&self`, and pointers are derived with
+/// [`UnsafeCell::raw_get`] so no transient `&mut` is ever materialized.
+///
+/// Safety discipline, enforced dynamically by the store's row-readiness
+/// fences (see `engine/store.rs`):
+/// * writers hold row-exclusive access for the duration of the write
+///   (`begin_write` .. `end_write` around the unsafe `*_mut` accessors);
+/// * safe readers (`at2`, `block`, `to_tensor`) may only touch rows that
+///   are *quiet* — the caller fences before reading.
+///
+/// There is deliberately no `&mut CellTensor` API: sessions share the
+/// plane via `Arc<CellTensor>` with in-flight jobs, so exclusive borrows
+/// would be both unobtainable and, if conjured, unsound.
+pub struct CellTensor {
+    shape: Vec<usize>,
+    data: Box<[UnsafeCell<f32>]>,
+}
+
+// SAFETY: all mutation goes through `unsafe` accessors whose contract is
+// caller-guaranteed row exclusivity (the store's readiness fences); with
+// that contract upheld there are no data races, so sharing across threads
+// is sound.
+unsafe impl Sync for CellTensor {}
+// SAFETY: `UnsafeCell<f32>` is `Send`; the struct owns its storage.
+unsafe impl Send for CellTensor {}
+
+impl CellTensor {
+    pub fn zeros(shape: &[usize]) -> CellTensor {
+        let n: usize = shape.iter().product();
+        let data: Box<[UnsafeCell<f32>]> =
+            (0..n).map(|_| UnsafeCell::new(0.0)).collect();
+        CellTensor { shape: shape.to_vec(), data }
+    }
+
+    /// Copy a [`Tensor`]'s shape and contents into a fresh cell plane.
+    pub fn from_tensor(t: &Tensor) -> CellTensor {
+        let data: Box<[UnsafeCell<f32>]> =
+            t.data().iter().map(|&v| UnsafeCell::new(v)).collect();
+        CellTensor { shape: t.shape().to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Base pointer into the cell storage. A pure cast — deriving it does
+    /// not retag the allocation, so pointers handed to in-flight jobs stay
+    /// valid no matter what the engine thread does through `&self`.
+    #[inline]
+    fn base_ptr(&self) -> *mut f32 {
+        UnsafeCell::raw_get(self.data.as_ptr())
+    }
+
+    #[inline]
+    fn offset(&self, g: usize, t: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 3);
+        debug_assert!(g < self.shape[0] && t < self.shape[1]);
+        (g * self.shape[1] + t) * self.shape[2]
+    }
+
+    /// Read row `[g, t, :]`. The caller must have fenced: the row must be
+    /// quiet (no in-flight writer) for the lifetime of the slice.
+    #[inline]
+    pub fn at2(&self, g: usize, t: usize) -> &[f32] {
+        let d = self.shape[2];
+        let off = self.offset(g, t);
+        assert!(off + d <= self.data.len());
+        // SAFETY: in-bounds; quietness per the method contract means no
+        // concurrent writer overlaps this range.
+        unsafe { std::slice::from_raw_parts(self.base_ptr().add(off), d) }
+    }
+
+    /// Read block `[g, t0..t1, :]`. Same quietness contract as [`Self::at2`].
+    #[inline]
+    pub fn block(&self, g: usize, t0: usize, t1: usize) -> &[f32] {
+        let d = self.shape[2];
+        let off = self.offset(g, t0);
+        let n = (t1 - t0) * d;
+        assert!(t1 <= self.shape[1] && off + n <= self.data.len());
+        // SAFETY: in-bounds; quiet rows per the method contract.
+        unsafe { std::slice::from_raw_parts(self.base_ptr().add(off), n) }
+    }
+
+    /// Mutable row `[g, t, :]`.
+    ///
+    /// # Safety
+    /// The caller must guarantee exclusive access to this row for the
+    /// lifetime of the slice — in the engine that means the row is inside
+    /// a `begin_write`..`end_write` window this caller owns, or no jobs
+    /// are in flight at all.
+    #[allow(clippy::mut_from_ref)] // shared-mutation container; exclusivity is the unsafe contract
+    #[inline]
+    pub unsafe fn at2_mut(&self, g: usize, t: usize) -> &mut [f32] {
+        let d = self.shape[2];
+        let off = self.offset(g, t);
+        assert!(off + d <= self.data.len());
+        std::slice::from_raw_parts_mut(self.base_ptr().add(off), d)
+    }
+
+    /// Mutable block `[g, t0..t1, :]`.
+    ///
+    /// # Safety
+    /// Same row-exclusivity contract as [`Self::at2_mut`], over every row
+    /// in `t0..t1`.
+    #[allow(clippy::mut_from_ref)] // shared-mutation container; exclusivity is the unsafe contract
+    #[inline]
+    pub unsafe fn block_mut(&self, g: usize, t0: usize, t1: usize) -> &mut [f32] {
+        let d = self.shape[2];
+        let off = self.offset(g, t0);
+        let n = (t1 - t0) * d;
+        assert!(t1 <= self.shape[1] && off + n <= self.data.len());
+        std::slice::from_raw_parts_mut(self.base_ptr().add(off), n)
+    }
+
+    /// Snapshot into an owned [`Tensor`]. The whole plane must be quiet.
+    pub fn to_tensor(&self) -> Tensor {
+        let data: Vec<f32> = self
+            .data
+            .iter()
+            // SAFETY: quiet plane per the method contract — plain reads.
+            .map(|c| unsafe { *c.get() })
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+}
+
 /// `axpy`-style helpers used by the native tau kernels and engines.
 pub mod ops {
     /// out += a ⊙ b (elementwise), all length-n.
@@ -200,5 +345,51 @@ mod tests {
         let mut out = vec![1.0, 1.0];
         ops::add_mul(&mut out, &[2.0, 3.0], &[10.0, 100.0]);
         assert_eq!(out, vec![21.0, 301.0]);
+    }
+
+    #[test]
+    fn cell_tensor_roundtrips_tensor() {
+        let mut t = Tensor::zeros(&[2, 3, 2]);
+        t.at2_mut(1, 2).copy_from_slice(&[5.0, 6.0]);
+        let c = CellTensor::from_tensor(&t);
+        assert_eq!(c.shape(), &[2, 3, 2]);
+        assert_eq!(c.len(), 12);
+        assert_eq!(c.at2(1, 2), &[5.0, 6.0]);
+        assert_eq!(c.block(1, 1, 3).len(), 4);
+        assert_eq!(c.to_tensor().max_abs_diff(&t), 0.0);
+    }
+
+    #[test]
+    fn cell_tensor_writes_through_shared_ref() {
+        let c = CellTensor::zeros(&[1, 4, 2]);
+        // SAFETY: single-threaded test, no other access to these rows
+        unsafe {
+            c.at2_mut(0, 1).copy_from_slice(&[1.0, 2.0]);
+            c.block_mut(0, 2, 4).fill(7.0);
+        }
+        assert_eq!(c.at2(0, 0), &[0.0, 0.0]);
+        assert_eq!(c.at2(0, 1), &[1.0, 2.0]);
+        assert_eq!(c.at2(0, 3), &[7.0, 7.0]);
+    }
+
+    #[test]
+    fn cell_tensor_disjoint_rows_written_from_threads() {
+        use std::sync::Arc;
+        let c = Arc::new(CellTensor::zeros(&[1, 8, 4]));
+        let handles: Vec<_> = (0..8usize)
+            .map(|t| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    // SAFETY: each thread owns exactly one row
+                    unsafe { c.at2_mut(0, t) }.fill(t as f32);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for t in 0..8 {
+            assert!(c.at2(0, t).iter().all(|&v| v == t as f32));
+        }
     }
 }

@@ -19,11 +19,19 @@
 //! Two submission modes share the workers:
 //! * [`ThreadPool::scoped_for`] — fork-join over borrowed closures, the
 //!   caller blocks until done (the tau across-group fan-out);
-//! * [`ThreadPool::submit`] — fire one `'static` job and get a
-//!   [`JobHandle`] back; the caller continues and joins later (the async
-//!   tau executor's deadline-fenced tiles). A single-worker pool runs
-//!   submitted jobs strictly in submission order — the ordering guarantee
-//!   `tau::AsyncTau` builds its overlapping-tile-write safety on.
+//! * [`ThreadPool::submit`] / [`ThreadPool::submit_after`] — fire one
+//!   `'static` job and get a [`JobHandle`] back; the caller continues and
+//!   joins later (the async tau executor's deadline-fenced tiles).
+//!
+//! The submit queue is *dependency-tracked*: `submit_after` records
+//! happens-before edges on earlier handles, and a worker only dequeues a
+//! task once every dependency is terminal. Among ready tasks, workers pick
+//! in FIFO submission order; dependency-free tasks therefore still run in
+//! submission order on a single-worker pool, while on a multi-worker pool
+//! tasks with no edges between them run concurrently. `tau::AsyncTau`
+//! builds its overlapping-destination-write safety on these edges: tiles
+//! whose `+=` destinations overlap are chained, disjoint tiles fan out
+//! across workers.
 
 use std::cell::Cell;
 use std::collections::VecDeque;
@@ -74,9 +82,11 @@ struct State {
     active: usize,
     /// A worker closure panicked during the current job.
     panicked: bool,
-    /// One-shot jobs queued by [`ThreadPool::submit`], run FIFO whenever
-    /// no scoped job is pending (scoped callers block a whole fork-join,
-    /// so they take priority over latency-relaxed submitted work).
+    /// One-shot jobs queued by [`ThreadPool::submit`] /
+    /// [`ThreadPool::submit_after`]. Workers dequeue the first task whose
+    /// dependencies are all terminal (FIFO among ready tasks) whenever no
+    /// scoped job is pending (scoped callers block a whole fork-join, so
+    /// they take priority over latency-relaxed submitted work).
     queue: VecDeque<QueuedTask>,
 }
 
@@ -124,6 +134,16 @@ struct TaskShared {
 struct QueuedTask {
     f: Box<dyn FnOnce() + Send + 'static>,
     shared: Arc<TaskShared>,
+    /// Happens-before edges: this task may not start until every listed
+    /// task is terminal. Already-terminal deps are filtered at submit, so
+    /// the scan stays cheap in the steady state.
+    deps: Vec<Arc<TaskShared>>,
+}
+
+impl QueuedTask {
+    fn is_ready(&self) -> bool {
+        self.deps.iter().all(|d| d.status.lock().unwrap().is_terminal())
+    }
 }
 
 /// Completion handle for a job submitted with [`ThreadPool::submit`].
@@ -271,21 +291,42 @@ impl ThreadPool {
     }
 
     /// Queue `f` for asynchronous execution on a pool worker and return a
-    /// completion handle. FIFO per pool; on a **single-worker** pool that
-    /// makes execution order == submission order (the property the async
-    /// tau executor relies on for overlapping destination ranges).
+    /// completion handle. Equivalent to [`Self::submit_after`] with no
+    /// dependencies: ready immediately, FIFO among ready tasks — on a
+    /// **single-worker** pool that makes execution order == submission
+    /// order for dependency-free tasks.
+    pub fn submit(&self, f: Box<dyn FnOnce() + Send + 'static>) -> JobHandle {
+        self.submit_after(&[], f)
+    }
+
+    /// Queue `f` with happens-before edges: it will not start until every
+    /// job in `deps` is terminal (done, panicked, or cancelled). Workers
+    /// pick the first *ready* task in submission order, so two tasks whose
+    /// dep sets chain them run in submission order, while independent
+    /// tasks fan out across workers. A completed dep's effects are visible
+    /// to `f` (the dep's status mutex carries the happens-before).
     ///
     /// Degenerate cases run `f` inline and return an already-completed
-    /// handle: a `size == 0` pool (no workers to hand off to) and a call
-    /// from inside a worker closure of this same pool (handing off could
-    /// deadlock a joiner against itself).
-    pub fn submit(&self, f: Box<dyn FnOnce() + Send + 'static>) -> JobHandle {
+    /// handle: a `size == 0` pool (everything, deps included, already ran
+    /// inline) and a call from inside a worker closure of this same pool
+    /// (handing off could deadlock a joiner against itself; outstanding
+    /// deps are joined first, which requires them to be runnable on the
+    /// remaining workers — the async executor only submits from the engine
+    /// thread, so this path never carries deps in practice).
+    pub fn submit_after(
+        &self,
+        deps: &[&JobHandle],
+        f: Box<dyn FnOnce() + Send + 'static>,
+    ) -> JobHandle {
         if self.size == 0 {
             f();
             return JobHandle::completed();
         }
         let inner = self.inner.get_or_init(|| Inner::spawn(self.size));
         if ACTIVE_POOL.with(Cell::get) == Arc::as_ptr(&inner.shared) as usize {
+            for d in deps {
+                let _ = d.join();
+            }
             f();
             return JobHandle::completed();
         }
@@ -294,9 +335,14 @@ impl ThreadPool {
             cv: Condvar::new(),
         });
         let handle = JobHandle { shared: shared.clone() };
+        let deps: Vec<Arc<TaskShared>> = deps
+            .iter()
+            .filter(|h| !h.is_done())
+            .map(|h| h.shared.clone())
+            .collect();
         {
             let mut st = inner.shared.state.lock().unwrap();
-            st.queue.push_back(QueuedTask { f, shared });
+            st.queue.push_back(QueuedTask { f, shared, deps });
             inner.shared.work.notify_all();
         }
         handle
@@ -341,8 +387,11 @@ fn worker_loop(shared: &Shared) {
                     Some(job) if job.epoch > last_epoch => break Work::Scoped(job),
                     _ => {}
                 }
-                if let Some(t) = st.queue.pop_front() {
-                    break Work::Task(t);
+                // first *ready* task in submission order: dependency-free
+                // tasks keep FIFO; a task behind an unfinished dep is
+                // skipped so an independent later task can run concurrently
+                if let Some(idx) = st.queue.iter().position(QueuedTask::is_ready) {
+                    break Work::Task(st.queue.remove(idx).expect("index in bounds"));
                 }
                 st = shared.work.wait(st).unwrap();
             }
@@ -382,6 +431,12 @@ fn worker_loop(shared: &Shared) {
                     &task.shared,
                     if ok { TaskStatus::Done } else { TaskStatus::Panicked },
                 );
+                // finishing this task may have made a queued dependent
+                // ready; parked workers only rescan on a wakeup
+                let st = shared.state.lock().unwrap();
+                if !st.queue.is_empty() {
+                    shared.work.notify_all();
+                }
             }
         }
     }
@@ -539,8 +594,9 @@ mod tests {
 
     #[test]
     fn submit_on_single_worker_pool_is_fifo() {
-        // the AsyncTau safety contract: one worker ⇒ execution order ==
-        // submission order, so jobs with overlapping writes never race
+        // dependency-free tasks keep FIFO pick order, so one worker ⇒
+        // execution order == submission order (the pre-dependency-queue
+        // AsyncTau contract still holds at mixer_workers = 1)
         let pool = ThreadPool::new(1);
         let order = Arc::new(Mutex::new(Vec::new()));
         let handles: Vec<JobHandle> = (0..64)
@@ -641,6 +697,160 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(hits.load(Ordering::Relaxed), 8 * 5);
+    }
+
+    #[test]
+    fn submit_after_orders_dependent_tasks() {
+        // A is held open by a gate; B depends on A and must not start
+        // until A finishes even though three other workers sit idle
+        let pool = ThreadPool::new(4);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let (g, o) = (gate.clone(), order.clone());
+        let a = pool.submit(Box::new(move || {
+            let (m, cv) = &*g;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            o.lock().unwrap().push("a");
+        }));
+        let o = order.clone();
+        let b = pool.submit_after(&[&a], Box::new(move || o.lock().unwrap().push("b")));
+        // B stays queued behind the gated A
+        thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!b.is_done());
+        assert!(order.lock().unwrap().is_empty());
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        b.join().unwrap();
+        assert_eq!(*order.lock().unwrap(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn submit_after_chain_is_sequential_on_many_workers() {
+        // a dependency chain serializes even when workers are plentiful
+        let pool = ThreadPool::new(4);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut prev: Option<JobHandle> = None;
+        for i in 0..16 {
+            let o = order.clone();
+            let f = Box::new(move || o.lock().unwrap().push(i));
+            let h = match &prev {
+                Some(p) => pool.submit_after(&[p], f),
+                None => pool.submit(f),
+            };
+            prev = Some(h);
+        }
+        prev.unwrap().join().unwrap();
+        assert_eq!(*order.lock().unwrap(), (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn independent_tasks_bypass_a_blocked_dependent() {
+        // with 2 workers: A gated, B depends on A, C independent. C must
+        // run to completion while B waits — the ready-scan skips B.
+        let pool = ThreadPool::new(2);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = gate.clone();
+        let a = pool.submit(Box::new(move || {
+            let (m, cv) = &*g;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        }));
+        let b = pool.submit_after(&[&a], Box::new(|| {}));
+        let c = pool.submit(Box::new(|| {}));
+        c.join().unwrap(); // completes while A is still gated
+        assert!(!a.is_done());
+        assert!(!b.is_done());
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        a.join().unwrap();
+        b.join().unwrap();
+    }
+
+    #[test]
+    fn independent_tasks_run_concurrently_on_multi_worker_pool() {
+        // two tasks that each wait for the other's arrival can only finish
+        // if they are genuinely on two workers at the same time
+        let pool = ThreadPool::new(2);
+        let arrived = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mk = |arrived: Arc<(Mutex<usize>, Condvar)>| {
+            Box::new(move || {
+                let (m, cv) = &*arrived;
+                let mut n = m.lock().unwrap();
+                *n += 1;
+                cv.notify_all();
+                while *n < 2 {
+                    n = cv.wait(n).unwrap();
+                }
+            })
+        };
+        let h1 = pool.submit(mk(arrived.clone()));
+        let h2 = pool.submit(mk(arrived.clone()));
+        h1.join().unwrap();
+        h2.join().unwrap();
+    }
+
+    #[test]
+    fn submit_after_terminal_dep_runs_immediately() {
+        let pool = ThreadPool::new(1);
+        let a = pool.submit(Box::new(|| {}));
+        a.join().unwrap();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = {
+            let hits = hits.clone();
+            pool.submit_after(
+                &[&a],
+                Box::new(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }),
+            )
+        };
+        h.join().unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn dependent_of_panicked_dep_still_runs() {
+        // a panicked dep is terminal — the dependent proceeds (the async
+        // executor surfaces the dep's panic at its own fence/retire)
+        let pool = ThreadPool::new(2);
+        let bad = pool.submit(Box::new(|| panic!("dep boom")));
+        let h = pool.submit_after(&[&bad], Box::new(|| {}));
+        h.join().unwrap();
+        assert_eq!(bad.join(), Err(JobError::Panicked));
+    }
+
+    #[test]
+    fn drop_cancels_queued_dependents() {
+        let pool = ThreadPool::new(1);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = gate.clone();
+        let blocker = pool.submit(Box::new(move || {
+            let (m, cv) = &*g;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        }));
+        let dep = pool.submit_after(&[&blocker], Box::new(|| {}));
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        blocker.join().unwrap();
+        drop(pool);
+        assert!(matches!(dep.join(), Ok(()) | Err(JobError::Cancelled)));
     }
 
     #[test]

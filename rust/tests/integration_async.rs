@@ -7,10 +7,17 @@
 //! the urgent column's direct-vs-FFT rounding bounds the difference to
 //! kernel tolerance. A churn test shakes out fence/ordering bugs by
 //! running many short sessions with worker threads enabled.
+//!
+//! The `multi_worker_*` tests extend all of that to `mixer_workers > 1`:
+//! the dependency-tracked queue must keep the unsplit path bit-identical
+//! (dep edges reproduce the sync accumulation order for overlapping dst
+//! ranges), survive half-store row reuse, staged-chunk churn, mid-flight
+//! drops, and paging suspend/resume, and cleanly reject configs that
+//! cannot run concurrently (PJRT-backed kinds, forced-sync, 0 workers).
 
 use std::path::Path;
 
-use flash_inference::engine::{Engine, EngineOpts, GenOutput, Method};
+use flash_inference::engine::{Engine, EngineOpts, GenOutput, LaneInit, Method, SamplerCfg};
 use flash_inference::runtime::Runtime;
 use flash_inference::tau::TauKind;
 use flash_inference::util::prng::Prng;
@@ -203,6 +210,207 @@ fn async_session_abandoned_mid_flight_drains_cleanly() {
         session.step().unwrap();
     }
     drop(session);
+}
+
+#[test]
+fn multi_worker_unsplit_is_bit_identical_to_sync() {
+    // dependency edges preserve the submission (= sync accumulation)
+    // order wherever dst ranges overlap, so the unsplit async pipeline is
+    // bit-identical to sync at ANY worker count — not just the FIFO W=1
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 64;
+    for tau in [TauKind::RustFft, TauKind::RustDirect] {
+        let sync = Engine::new(&rt, opts(tau, false)).unwrap().generate(len).unwrap();
+        for workers in [2usize, 4] {
+            let asy = Engine::new(
+                &rt,
+                EngineOpts { mixer_workers: workers, ..opts(tau, true) },
+            )
+            .unwrap()
+            .generate(len)
+            .unwrap();
+            assert_bit_identical(&sync, &asy, &format!("{} workers={workers}", tau.as_str()));
+            assert!(
+                asy.metrics.totals.tau_worker_ns > 0.0,
+                "{} workers={workers}: no worker time",
+                tau.as_str()
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_worker_matches_sync_with_half_store() {
+    // the wrapped store's row reuse is the hardest aliasing case for
+    // concurrent tiles: per-row versioning + dep edges must still yield
+    // the sync rollout exactly
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 64;
+    let mk = |async_mixer, workers| EngineOpts {
+        half_store: true,
+        mixer_workers: workers,
+        ..opts(TauKind::RustFft, async_mixer)
+    };
+    let sync = Engine::new(&rt, mk(false, 1)).unwrap().generate(len).unwrap();
+    for workers in [2usize, 4] {
+        let asy = Engine::new(&rt, mk(true, workers)).unwrap().generate(len).unwrap();
+        assert_bit_identical(&sync, &asy, &format!("half_store workers={workers}"));
+        assert_eq!(sync.resident_values, asy.resident_values);
+    }
+}
+
+#[test]
+fn multi_worker_split_churn_overlapping_dst() {
+    // staged deadlines + aggressive splitting put many chunks in flight
+    // with a mix of disjoint and overlapping dst ranges, over a 2-thread
+    // kernel pool and {2, 4} mixer workers — any missing dependency edge
+    // or missed fence shows up as a tolerance blowout or readiness panic
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 32;
+    for round in 0..8u64 {
+        let workers = if round % 2 == 0 { 2 } else { 4 };
+        let half = round % 4 >= 2;
+        let mk = |async_mixer, split_min_u, workers| EngineOpts {
+            threads: 2,
+            half_store: half,
+            split_min_u,
+            mixer_workers: workers,
+            seed: round,
+            ..opts(TauKind::RustFft, async_mixer)
+        };
+        let sync = Engine::new(&rt, mk(false, 0, 1)).unwrap().generate(len).unwrap();
+        let unsplit = Engine::new(&rt, mk(true, 0, workers)).unwrap().generate(len).unwrap();
+        assert_bit_identical(&sync, &unsplit, &format!("round {round} w={workers} unsplit"));
+
+        let split = Engine::new(&rt, mk(true, 2, workers)).unwrap().generate(len).unwrap();
+        let (ss, sp) = (sync.streams.as_ref().unwrap(), split.streams.as_ref().unwrap());
+        let err = sp.rel_l2(ss);
+        assert!(err < 1e-4, "round {round} w={workers} split err {err}");
+    }
+}
+
+#[test]
+fn multi_worker_drop_mid_flight_drains_cleanly() {
+    // dropping a session with staged chunks queued across 4 workers must
+    // drain every in-flight job (AsyncTau::drop → fence_all), not leave a
+    // worker writing into freed cell planes
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 32;
+    let eng = Engine::new(
+        &rt,
+        EngineOpts {
+            split_min_u: 2,
+            mixer_workers: 4,
+            ..opts(TauKind::RustFft, true)
+        },
+    )
+    .unwrap();
+
+    let mut session = eng.session(len).unwrap();
+    for _ in 0..len / 2 {
+        session.step().unwrap();
+    }
+    let out = session.finish();
+    assert_eq!(out.steps, len / 2);
+
+    let mut session = eng.session(len).unwrap();
+    for _ in 0..3 {
+        session.step().unwrap();
+    }
+    drop(session);
+}
+
+#[test]
+fn multi_worker_paging_suspend_resume_is_deterministic() {
+    // suspend/restore must fence a multi-worker queue with staged chunks
+    // in flight; the resumed lane's rollout must equal the uninterrupted
+    // run under the identical config (the computation is deterministic:
+    // chunk dsts are disjoint and overlapping-dst order is edge-enforced)
+    let Some(rt) = runtime("synthetic") else { return };
+    let lane = rt.dims.b - 1;
+    let engine = Engine::new(
+        &rt,
+        EngineOpts {
+            split_min_u: 2,
+            mixer_workers: 2,
+            ..opts(TauKind::RustFft, true)
+        },
+    )
+    .unwrap();
+    let mut pager = engine.make_pager(64);
+    let (len, admit_at, limit, suspend_at) = (64usize, 8usize, 32usize, 20usize);
+    let li = LaneInit {
+        limit,
+        sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.25 }),
+        seed: Some(77),
+    };
+
+    // uninterrupted baseline with the same multi-worker config
+    let mut base = engine.session(len).unwrap();
+    for _ in 0..admit_at {
+        base.step().unwrap();
+    }
+    base.admit(lane, li).unwrap();
+    let mut want = Vec::with_capacity(limit);
+    for _ in 0..limit {
+        want.push(base.step().unwrap().lane_checksums[lane]);
+    }
+    base.finish();
+
+    // interrupted run: suspend mid-flight, resume in a later session
+    let mut s1 = engine.session(len).unwrap();
+    for _ in 0..admit_at {
+        s1.step().unwrap();
+    }
+    s1.admit(lane, li).unwrap();
+    let mut got = Vec::new();
+    for _ in 0..(suspend_at - admit_at) {
+        got.push(s1.step().unwrap().lane_checksums[lane]);
+    }
+    let ckpt = s1.suspend(lane, &mut pager).expect("suspend");
+    for _ in 0..4 {
+        s1.step().unwrap();
+    }
+    s1.finish();
+
+    let mut s2 = engine.session(len).unwrap();
+    for _ in 0..suspend_at {
+        s2.step().unwrap();
+    }
+    s2.restore(lane, ckpt, &mut pager).expect("restore");
+    while !s2.lane_done(lane) {
+        got.push(s2.step().unwrap().lane_checksums[lane]);
+    }
+    s2.finish();
+
+    assert_eq!(want, got, "suspend/resume diverged from the uninterrupted multi-worker run");
+}
+
+#[test]
+fn multi_worker_rejected_for_unsupported_configs() {
+    // config validation, not silent fallback: PJRT-backed kinds (incl.
+    // Hybrid) and the forced-sync path must refuse mixer_workers > 1
+    let Some(rt) = runtime("synthetic") else { return };
+    let cases = [
+        ("hybrid async", opts(TauKind::Hybrid, true)),
+        ("pjrt-fft async", opts(TauKind::PjrtFft, true)),
+        ("native sync", opts(TauKind::RustFft, false)),
+    ];
+    for (what, base) in cases {
+        let eng = Engine::new(&rt, EngineOpts { mixer_workers: 2, ..base }).unwrap();
+        let err = eng.session(16).err().unwrap_or_else(|| panic!("{what}: accepted workers=2"));
+        assert!(
+            err.to_string().contains("mixer_workers"),
+            "{what}: unhelpful error: {err}"
+        );
+    }
+    // zero workers is meaningless at any kind
+    let eng = Engine::new(
+        &rt,
+        EngineOpts { mixer_workers: 0, ..opts(TauKind::RustFft, true) },
+    )
+    .unwrap();
+    assert!(eng.session(16).is_err(), "workers=0 accepted");
 }
 
 #[test]

@@ -8,7 +8,7 @@ use flash_inference::tau::{self, make_impl, CalibrationTable, RhoCache, TauImpl,
 use flash_inference::tiling::Tile;
 use flash_inference::runtime::Runtime;
 use flash_inference::util::prng::Prng;
-use flash_inference::util::tensor::Tensor;
+use flash_inference::util::tensor::{CellTensor, Tensor};
 
 fn runtime() -> Option<Runtime> {
     let dir = Path::new("artifacts/synthetic");
@@ -19,13 +19,13 @@ fn runtime() -> Option<Runtime> {
     Some(Runtime::load(dir).expect("load runtime"))
 }
 
-fn random_state(rt: &Runtime, l: usize, seed: u64) -> (Tensor, Tensor) {
+fn random_state(rt: &Runtime, l: usize, seed: u64) -> (CellTensor, Tensor) {
     let dims = rt.dims;
     let mut rng = Prng::new(seed);
     let mut streams = Tensor::zeros(&[dims.g, l, dims.d]);
     rng.fill_normal(streams.data_mut(), 1.0);
     let pending = Tensor::zeros(&[dims.g, l, dims.d]);
-    (streams, pending)
+    (CellTensor::from_tensor(&streams), pending)
 }
 
 #[test]
@@ -40,9 +40,9 @@ fn all_impls_agree_on_every_tile_size() {
         let mut results = Vec::new();
         for kind in TauKind::ALL_FIXED {
             let mut imp = make_impl(kind, &cache, 0).unwrap();
-            let mut pending = base_pending.clone();
-            imp.apply(&streams, &mut pending, tile).unwrap();
-            results.push((kind, pending));
+            let pending = CellTensor::from_tensor(&base_pending);
+            imp.apply(&streams, &pending, tile).unwrap();
+            results.push((kind, pending.to_tensor()));
         }
         let (_, reference) = &results[0];
         for (kind, pending) in &results[1..] {
@@ -63,12 +63,17 @@ fn parallel_matches_serial() {
     for kind in [TauKind::RustDirect, TauKind::RustFft] {
         let tile = Tile::at(16);
         let (streams, base) = random_state(&rt, tile.dst_r, 3);
-        let mut serial = base.clone();
-        make_impl(kind, &cache, 0).unwrap().apply(&streams, &mut serial, tile).unwrap();
-        let mut parallel = base.clone();
-        make_impl(kind, &cache, 3).unwrap().apply(&streams, &mut parallel, tile).unwrap();
+        let serial = CellTensor::from_tensor(&base);
+        make_impl(kind, &cache, 0).unwrap().apply(&streams, &serial, tile).unwrap();
+        let parallel = CellTensor::from_tensor(&base);
+        make_impl(kind, &cache, 3).unwrap().apply(&streams, &parallel, tile).unwrap();
         // identical summation order per group => bitwise equal
-        assert_eq!(serial.max_abs_diff(&parallel), 0.0, "{}", kind.as_str());
+        assert_eq!(
+            serial.to_tensor().max_abs_diff(&parallel.to_tensor()),
+            0.0,
+            "{}",
+            kind.as_str()
+        );
     }
 }
 
@@ -78,13 +83,14 @@ fn tau_accumulates_into_prior_pending() {
     let cache = RhoCache::new(&rt).expect("rho cache");
     let tile = Tile::at(4);
     let (streams, zero) = random_state(&rt, tile.dst_r, 9);
-    let mut from_zero = zero.clone();
+    let from_zero = CellTensor::from_tensor(&zero);
     let mut imp = make_impl(TauKind::RustFft, &cache, 0).unwrap();
-    imp.apply(&streams, &mut from_zero, tile).unwrap();
+    imp.apply(&streams, &from_zero, tile).unwrap();
 
-    let mut primed = zero.clone();
-    primed.data_mut().iter_mut().for_each(|v| *v = 1.0);
-    imp.apply(&streams, &mut primed, tile).unwrap();
+    let mut ones = zero.clone();
+    ones.data_mut().iter_mut().for_each(|v| *v = 1.0);
+    let primed = CellTensor::from_tensor(&ones);
+    imp.apply(&streams, &primed, tile).unwrap();
     // primed = 1 + contribution everywhere in the dst block
     let d = rt.dims.d;
     for gi in 0..rt.dims.g {
