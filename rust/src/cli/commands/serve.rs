@@ -1,10 +1,49 @@
 //! `flashinfer serve` — start the HTTP serving front-end.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use anyhow::Result;
 
 use crate::cli::args::Schema;
 use crate::config::ServerConfig;
 use crate::server::Server;
+
+/// Latched by the SIGTERM/SIGINT handler; the serve loop polls it and
+/// runs the graceful drain (`Server::stop`) instead of dying mid-request.
+static TERM: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sig {
+    use super::TERM;
+    use std::sync::atomic::Ordering;
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    // No libc crate in the offline build: bind the two POSIX calls we
+    // need directly. `signal` is enough here — the handler only stores
+    // to an atomic, which is async-signal-safe.
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::Relaxed);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_term);
+            signal(SIGINT, on_term);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    /// Non-unix: no signal hook; the process stops when killed.
+    pub fn install() {}
+}
 
 pub fn run(argv: &[String]) -> Result<i32> {
     let schema = super::engine_schema(Schema::new())
@@ -16,7 +55,15 @@ pub fn run(argv: &[String]) -> Result<i32> {
         .switch("no-admission", "disable continuous admission (drain-then-refill batches)")
         .value("max-queue", "waiting-queue bound before shedding 429s (default 1024)")
         .switch("no-paging", "disable session paging (no lane eviction under queue pressure)")
-        .value("pager-capacity-mb", "slab capacity for suspended-lane checkpoints (default 256)");
+        .value("pager-capacity-mb", "slab capacity for suspended-lane checkpoints (default 256)")
+        .value("deadline-ms", "per-request wall-clock budget, 0 = unlimited (default 0)")
+        .value("max-connections", "live connection cap before shedding 503s (default 256)")
+        .value("restart-budget", "engine panics tolerated per rolling window (default 3)")
+        .value("restart-window-s", "rolling window for the restart budget (default 60)")
+        .value("drain-deadline-ms", "graceful-shutdown drain window (default 5000)")
+        .value("socket-read-timeout-ms", "per-connection read timeout, 0 = none (default 10000)")
+        .value("socket-write-timeout-ms", "per-connection write timeout, 0 = none (default 10000)")
+        .value("faults", "fault-injection spec, e.g. engine_step:panic@3 (FI_FAULTS wins)");
     if super::maybe_help("flashinfer serve", &schema, argv) {
         return Ok(0);
     }
@@ -46,8 +93,16 @@ pub fn run(argv: &[String]) -> Result<i32> {
     println!("  POST /v1/generate  {{\"max_tokens\": 128, \"seed\": 7, \"temperature\": 0.8, \"top_k\": 40}}  (per-lane sampling)");
     println!("  POST /v1/generate  {{\"max_tokens\": 128, \"stream\": true}}  (chunked NDJSON, one event per position)");
 
-    // serve until killed
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    // serve until SIGTERM/SIGINT, then drain gracefully
+    sig::install();
+    while !TERM.load(Ordering::Relaxed) {
+        std::thread::sleep(std::time::Duration::from_millis(200));
     }
+    println!(
+        "flashinfer: shutdown signal received; draining (deadline {} ms)",
+        cfg.drain_deadline_ms
+    );
+    server.stop();
+    println!("flashinfer: drained, exiting");
+    Ok(0)
 }

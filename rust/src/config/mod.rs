@@ -39,6 +39,31 @@ pub struct ServerConfig {
     pub paging: bool,
     /// Slab capacity for suspended-lane checkpoints, in megabytes.
     pub pager_capacity_mb: usize,
+    /// Per-request wall-clock deadline in milliseconds, measured from
+    /// enqueue (0 = none). A request may *lower* it via the JSON
+    /// `deadline_ms` field; expired lanes are cancelled at the next step
+    /// boundary and the request fails with a structured error.
+    pub deadline_ms: u64,
+    /// Concurrent connection-handler cap: accepted sockets beyond this
+    /// many live `fi-conn` threads are shed with 503 + Retry-After
+    /// instead of spawning threads without bound.
+    pub max_connections: usize,
+    /// Supervisor restart budget: more than this many engine panics
+    /// inside `restart_window_s` latches the server unhealthy (`/health`
+    /// 503) instead of flapping through endless restarts.
+    pub restart_budget: usize,
+    /// Rolling window (seconds) the restart budget is counted over.
+    pub restart_window_s: u64,
+    /// Graceful-shutdown drain deadline: requests still in flight this
+    /// long after SIGTERM are failed with 503 + Retry-After.
+    pub drain_deadline_ms: u64,
+    /// Socket read/write timeouts for connection handlers, so one stuck
+    /// peer cannot pin an `fi-conn` thread forever.
+    pub socket_read_timeout_ms: u64,
+    pub socket_write_timeout_ms: u64,
+    /// Fault-injection spec (see `util::faultpoint`); the `FI_FAULTS`
+    /// env var takes precedence. Empty = disabled.
+    pub faults: String,
     pub engine: EngineOpts,
 }
 
@@ -55,6 +80,14 @@ impl Default for ServerConfig {
             max_queue: 1024,
             paging: true,
             pager_capacity_mb: 256,
+            deadline_ms: 0,
+            max_connections: 256,
+            restart_budget: 3,
+            restart_window_s: 60,
+            drain_deadline_ms: 5000,
+            socket_read_timeout_ms: 10_000,
+            socket_write_timeout_ms: 10_000,
+            faults: String::new(),
             engine: EngineOpts {
                 // serving opt-in: bound the per-position checksum ring so
                 // long-lived streaming sessions cannot grow without limit
@@ -108,6 +141,30 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("pager_capacity_mb").and_then(Json::as_usize) {
             self.pager_capacity_mb = v;
+        }
+        if let Some(v) = j.get("deadline_ms").and_then(Json::as_usize) {
+            self.deadline_ms = v as u64;
+        }
+        if let Some(v) = j.get("max_connections").and_then(Json::as_usize) {
+            self.max_connections = v;
+        }
+        if let Some(v) = j.get("restart_budget").and_then(Json::as_usize) {
+            self.restart_budget = v;
+        }
+        if let Some(v) = j.get("restart_window_s").and_then(Json::as_usize) {
+            self.restart_window_s = v as u64;
+        }
+        if let Some(v) = j.get("drain_deadline_ms").and_then(Json::as_usize) {
+            self.drain_deadline_ms = v as u64;
+        }
+        if let Some(v) = j.get("socket_read_timeout_ms").and_then(Json::as_usize) {
+            self.socket_read_timeout_ms = v as u64;
+        }
+        if let Some(v) = j.get("socket_write_timeout_ms").and_then(Json::as_usize) {
+            self.socket_write_timeout_ms = v as u64;
+        }
+        if let Some(v) = j.get("faults").and_then(Json::as_str) {
+            self.faults = v.to_string();
         }
         if let Some(e) = j.get("engine") {
             if let Some(v) = e.get("method").and_then(Json::as_str) {
@@ -166,6 +223,18 @@ impl ServerConfig {
             self.paging = false;
         }
         self.pager_capacity_mb = a.get_usize("pager-capacity-mb", self.pager_capacity_mb)?;
+        self.deadline_ms = a.get_u64("deadline-ms", self.deadline_ms)?;
+        self.max_connections = a.get_usize("max-connections", self.max_connections)?;
+        self.restart_budget = a.get_usize("restart-budget", self.restart_budget)?;
+        self.restart_window_s = a.get_u64("restart-window-s", self.restart_window_s)?;
+        self.drain_deadline_ms = a.get_u64("drain-deadline-ms", self.drain_deadline_ms)?;
+        self.socket_read_timeout_ms =
+            a.get_u64("socket-read-timeout-ms", self.socket_read_timeout_ms)?;
+        self.socket_write_timeout_ms =
+            a.get_u64("socket-write-timeout-ms", self.socket_write_timeout_ms)?;
+        if let Some(v) = a.get("faults") {
+            self.faults = v.to_string();
+        }
         if let Some(v) = a.get("method") {
             self.engine.method = Method::parse(v)?;
         }
@@ -333,6 +402,60 @@ mod tests {
         let a = schema.parse(&["--no-paging".to_string()]).unwrap();
         cfg2.apply_args(&a).unwrap();
         assert!(!cfg2.paging);
+    }
+
+    #[test]
+    fn robustness_keys_layer_correctly() {
+        let mut cfg = ServerConfig::default();
+        assert_eq!(cfg.deadline_ms, 0, "no deadline by default");
+        assert_eq!(cfg.max_connections, 256);
+        assert_eq!(cfg.restart_budget, 3);
+        assert_eq!(cfg.restart_window_s, 60);
+        assert_eq!(cfg.drain_deadline_ms, 5000);
+        assert_eq!(cfg.socket_read_timeout_ms, 10_000);
+        assert_eq!(cfg.socket_write_timeout_ms, 10_000);
+        assert!(cfg.faults.is_empty(), "fault injection off by default");
+        let j = Json::parse(
+            r#"{"deadline_ms": 2000, "max_connections": 8, "restart_budget": 1,
+                "restart_window_s": 10, "drain_deadline_ms": 250,
+                "socket_read_timeout_ms": 500, "socket_write_timeout_ms": 750,
+                "faults": "engine_step:panic@3"}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.deadline_ms, 2000);
+        assert_eq!(cfg.max_connections, 8);
+        assert_eq!(cfg.restart_budget, 1);
+        assert_eq!(cfg.restart_window_s, 10);
+        assert_eq!(cfg.drain_deadline_ms, 250);
+        assert_eq!(cfg.socket_read_timeout_ms, 500);
+        assert_eq!(cfg.socket_write_timeout_ms, 750);
+        assert_eq!(cfg.faults, "engine_step:panic@3");
+
+        let schema = Schema::new()
+            .value("deadline-ms", "")
+            .value("max-connections", "")
+            .value("restart-budget", "")
+            .value("restart-window-s", "")
+            .value("drain-deadline-ms", "")
+            .value("faults", "");
+        let a = schema
+            .parse(&[
+                "--deadline-ms".to_string(),
+                "100".to_string(),
+                "--max-connections".to_string(),
+                "4".to_string(),
+                "--faults".to_string(),
+                "tau_tile:panic@2".to_string(),
+            ])
+            .unwrap();
+        cfg.apply_args(&a).unwrap();
+        assert_eq!(cfg.deadline_ms, 100, "flag wins over json");
+        assert_eq!(cfg.max_connections, 4);
+        assert_eq!(cfg.faults, "tau_tile:panic@2");
+        // json-set values survive when no flag overrides them
+        assert_eq!(cfg.restart_budget, 1);
+        assert_eq!(cfg.drain_deadline_ms, 250);
     }
 
     #[test]

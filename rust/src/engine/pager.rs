@@ -201,6 +201,10 @@ impl Pager {
     }
 
     fn alloc(&mut self, n: usize) -> Result<Vec<usize>> {
+        // Chaos handle: `pager_alloc:fail@k` makes one suspend/store fail
+        // as if the slab were full — the scheduler must skip that
+        // eviction and keep serving (checkpoint-store errors are soft).
+        crate::util::faultpoint::check("pager_alloc")?;
         if n > self.free.len() {
             bail!(
                 "pager full: need {n} blocks, {} of {} free",

@@ -660,6 +660,10 @@ impl<'e, 'rt> Session<'e, 'rt> {
         if self.pos >= self.len {
             bail!("session complete: all {} positions generated", self.len);
         }
+        // Chaos handle: `engine_step:panic@k` exercises the supervisor's
+        // catch_unwind/rebuild path, `engine_step:fail@k` the plain
+        // error path. Inert (one atomic load) when nothing is armed.
+        crate::util::faultpoint::check("engine_step")?;
         let engine = self.engine;
         let rt = engine.runtime();
         let dims = rt.dims;

@@ -137,6 +137,21 @@ pub struct ServerCounters {
     /// Gauges: busy lanes / total lanes (B) in the running session.
     pub lanes_busy: u64,
     pub lanes_total: u64,
+    /// Engine panics absorbed by the supervisor (session torn down and
+    /// rebuilt; serving continued).
+    pub engine_restarts_total: u64,
+    /// Lanes failed with a structured error — engine panics/errors,
+    /// deadline expiry, disconnects, and shutdown stragglers all count.
+    pub lanes_failed_total: u64,
+    /// Requests failed because their per-request deadline expired.
+    pub requests_deadline_exceeded: u64,
+    /// Lanes cancelled because the client hung up mid-generation.
+    pub clients_disconnected: u64,
+    /// Connections shed with 503 at the accept loop (`fi-conn` cap).
+    pub conn_shed_total: u64,
+    /// Gauge: 1 while the restart budget holds, 0 once exceeded (latched;
+    /// `/health` mirrors this as 200 vs 503).
+    pub healthy: u64,
     pub request_latency: LatencyRecorder,
     /// Enqueue → admission wait (the latency continuous admission is
     /// supposed to shrink versus drain-then-refill). Recorded by the
@@ -149,6 +164,7 @@ pub struct ServerCounters {
 impl ServerCounters {
     pub fn new() -> ServerCounters {
         ServerCounters {
+            healthy: 1,
             request_latency: LatencyRecorder::reservoir(4096),
             admission_latency: LatencyRecorder::reservoir(4096),
             ..Default::default()
@@ -182,6 +198,32 @@ impl ServerCounters {
         );
         metric("fi_resumes_total", "evicted lanes restored", self.resumes_total as f64);
         metric(
+            "fi_engine_restarts_total",
+            "engine panics absorbed by the supervisor",
+            self.engine_restarts_total as f64,
+        );
+        metric(
+            "fi_lanes_failed_total",
+            "lanes failed with a structured error",
+            self.lanes_failed_total as f64,
+        );
+        metric(
+            "fi_requests_deadline_exceeded",
+            "requests failed on their per-request deadline",
+            self.requests_deadline_exceeded as f64,
+        );
+        metric(
+            "fi_clients_disconnected",
+            "lanes cancelled after the client hung up",
+            self.clients_disconnected as f64,
+        );
+        metric(
+            "fi_conn_shed_total",
+            "connections shed at the fi-conn thread cap",
+            self.conn_shed_total as f64,
+        );
+        metric("fi_healthy", "1 while the restart budget holds, else 0", self.healthy as f64);
+        metric(
             "fi_pager_resident_values",
             "f32 values held by live pager checkpoints",
             self.pager_resident_values as f64,
@@ -208,6 +250,28 @@ impl ServerCounters {
             self.admission_latency.percentile_ns(99.0) / 1e6,
         );
         out
+    }
+}
+
+/// Shared, poison-tolerant handle to the server counters.
+///
+/// Every HTTP handler and the engine thread funnel through [`lock`]; if a
+/// holder ever panicked mid-update, the counters would be at worst one
+/// increment off — not worth cascading `PoisonError` panics into every
+/// `/metrics` scrape and request handler, so the guard is recovered.
+///
+/// [`lock`]: Counters::lock
+#[derive(Clone)]
+pub struct Counters(std::sync::Arc<std::sync::Mutex<ServerCounters>>);
+
+impl Counters {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Counters {
+        Counters(std::sync::Arc::new(std::sync::Mutex::new(ServerCounters::new())))
+    }
+
+    pub fn lock(&self) -> std::sync::MutexGuard<'_, ServerCounters> {
+        self.0.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 }
 
@@ -286,6 +350,42 @@ mod tests {
         assert!(text.contains("fi_queue_depth 4"));
         assert!(text.contains("fi_lane_occupancy_pct 75"));
         assert!(text.contains("fi_admission_latency_p50_ms 2"));
+    }
+
+    #[test]
+    fn robustness_counters_render() {
+        let mut c = ServerCounters::new();
+        assert_eq!(c.healthy, 1, "servers start healthy");
+        c.engine_restarts_total = 2;
+        c.lanes_failed_total = 3;
+        c.requests_deadline_exceeded = 1;
+        c.clients_disconnected = 4;
+        c.conn_shed_total = 6;
+        c.healthy = 0;
+        let text = c.render();
+        assert!(text.contains("fi_engine_restarts_total 2"));
+        assert!(text.contains("fi_lanes_failed_total 3"));
+        assert!(text.contains("fi_requests_deadline_exceeded 1"));
+        assert!(text.contains("fi_clients_disconnected 4"));
+        assert!(text.contains("fi_conn_shed_total 6"));
+        assert!(text.contains("fi_healthy 0"));
+    }
+
+    #[test]
+    fn counters_survive_a_poisoned_holder() {
+        let c = Counters::new();
+        c.lock().requests_total = 1;
+        // a panic while holding the lock poisons the mutex ...
+        let c2 = c.clone();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _g = c2.lock();
+            panic!("handler died mid-update");
+        }));
+        assert!(r.is_err());
+        // ... and every later holder still gets through
+        c.lock().requests_total += 1;
+        assert_eq!(c.lock().requests_total, 2);
+        assert!(c.lock().render().contains("fi_requests_total 2"));
     }
 
     #[test]

@@ -32,9 +32,10 @@
 
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -42,34 +43,84 @@ use anyhow::{Context, Result};
 
 use super::batcher::{collect_batch, lane_len, GenRequest, LaneResult, SamplingParams, StreamEvent};
 use super::http::{
-    finish_chunks, read_request, write_chunk, write_chunked_head, write_response, Request,
-    Response,
+    configure_stream, finish_chunks, read_request, write_chunk, write_chunked_head,
+    write_response, Request, Response,
 };
 use crate::config::ServerConfig;
 use crate::engine::{
     Engine, EngineOpts, LaneCheckpoint, LaneInit, Pager, SamplerCfg, Session, StepOutput,
 };
-use crate::metrics::ServerCounters;
+use crate::metrics::Counters;
 use crate::model::Variant;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
+use crate::util::threadpool::payload_text;
 
 /// A running server (listener + engine worker).
 pub struct Server {
     pub addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     accept_thread: Option<thread::JoinHandle<()>>,
     engine_thread: Option<thread::JoinHandle<()>>,
 }
 
 struct Shared {
     cfg: ServerConfig,
-    counters: Arc<Mutex<ServerCounters>>,
-    queue: Mutex<Sender<GenRequest>>,
+    counters: Counters,
+    /// `None` once the server is draining: the engine worker unparks and
+    /// exits when the last sender drops, so shutdown cannot hang.
+    queue: Mutex<Option<Sender<GenRequest>>>,
     /// Requests accepted but not yet completed — the shed gate
     /// (`max_queue`) reads this without bothering the engine thread.
     inflight: Arc<AtomicU64>,
+    /// Live `fi-conn` handler threads (accept-loop shed gate).
+    conns: Arc<AtomicU64>,
+    /// Cleared (latched) once the supervisor's restart budget is
+    /// exhausted; `/health` mirrors it as 200 vs 503.
+    healthy: Arc<AtomicBool>,
+    /// Set during graceful shutdown: new and straggling requests are
+    /// failed with 503 + Retry-After instead of being served.
+    draining: Arc<AtomicBool>,
     info: Json,
+}
+
+/// Decrements the live-connection count even if the handler panics.
+struct ConnGuard(Arc<AtomicU64>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Rolling-window panic budget for the engine supervisor: absorbing the
+/// occasional panic keeps serving alive, but a crash loop should flip
+/// `/health` to 503 (latched — no flapping) so a load balancer drains us.
+struct RestartBudget {
+    budget: usize,
+    window: Duration,
+    panics: VecDeque<Instant>,
+}
+
+impl RestartBudget {
+    fn new(budget: usize, window: Duration) -> RestartBudget {
+        RestartBudget { budget, window, panics: VecDeque::new() }
+    }
+
+    /// Record one panic; returns `false` once the window holds more than
+    /// `budget` panics (the caller latches unhealthy).
+    fn record(&mut self, now: Instant) -> bool {
+        self.panics.push_back(now);
+        while let Some(&t) = self.panics.front() {
+            if now.duration_since(t) > self.window {
+                self.panics.pop_front();
+            } else {
+                break;
+            }
+        }
+        self.panics.len() <= self.budget
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -123,7 +174,7 @@ struct Scheduler<'e, 'rt> {
     /// Requests evicted under queue pressure, waiting for a session whose
     /// clock reaches their checkpoint's suspension position.
     evicted: Vec<EvictedLane>,
-    counters: Arc<Mutex<ServerCounters>>,
+    counters: Counters,
     inflight: Arc<AtomicU64>,
 }
 
@@ -133,11 +184,11 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         horizon: usize,
         admit_mid_batch: bool,
         pager: Option<Pager>,
-        counters: Arc<Mutex<ServerCounters>>,
+        counters: Counters,
         inflight: Arc<AtomicU64>,
     ) -> Scheduler<'e, 'rt> {
         let b = engine.runtime().dims.b;
-        counters.lock().unwrap().lanes_total = b as u64;
+        counters.lock().lanes_total = b as u64;
         Scheduler {
             engine,
             session: None,
@@ -209,7 +260,7 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                 Ok(()) => {
                     self.lanes[lane] = Some(slot);
                     restored.push(lane);
-                    self.counters.lock().unwrap().resumes_total += 1;
+                    self.counters.lock().resumes_total += 1;
                 }
                 Err(e) => {
                     // the checkpoint is gone (blocks already released):
@@ -275,7 +326,7 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
             let mut slot = self.lanes[lane].take().unwrap();
             slot.evictions += 1;
             self.evicted.push(EvictedLane { slot, ckpt });
-            self.counters.lock().unwrap().evictions_total += 1;
+            self.counters.lock().evictions_total += 1;
         }
     }
 
@@ -308,7 +359,7 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                     for slot in &mut self.lanes {
                         *slot = None;
                     }
-                    self.counters.lock().unwrap().sessions_started += 1;
+                    self.counters.lock().sessions_started += 1;
                 }
                 Err(e) => {
                     // a session that cannot even open would error forever:
@@ -383,7 +434,7 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                 checksum_total: 0.0,
                 evictions: 0,
             });
-            let mut c = self.counters.lock().unwrap();
+            let mut c = self.counters.lock();
             c.admissions_total += 1;
             if mid_batch {
                 c.admissions_mid_batch += 1;
@@ -434,10 +485,12 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                     slot.checksum_total += checksum as f64;
                     if let Some(tx) = &slot.req.stream {
                         let token = step.tokens.as_ref().map(|t| t[lane]);
-                        // a send error just means the client hung up; keep
-                        // the lane running (its reply still records the
-                        // rollout)
-                        let _ = tx.send(StreamEvent { pos: local, token, checksum });
+                        if tx.send(StreamEvent { pos: local, token, checksum }).is_err() {
+                            // receiver dropped: the streaming client hung
+                            // up — flag the lane so `cancel_phase` frees
+                            // it at the next step boundary
+                            slot.req.cancel.store(true, Ordering::Relaxed);
+                        }
                     }
                 }
                 if local >= wanted {
@@ -472,16 +525,78 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         self.inflight.fetch_sub(1, Ordering::Relaxed);
     }
 
-    /// Fail every busy lane (engine error): each admitted request gets the
-    /// error; queued requests stay queued for the next session.
+    /// Fail exactly one busy lane with a structured error; the lane frees
+    /// at this step boundary and can be re-admitted immediately.
+    fn fail_lane(&mut self, lane: usize, msg: &str) {
+        let Some(slot) = self.lanes[lane].take() else { return };
+        let _ = slot.req.reply.send(Err(msg.to_string()));
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.counters.lock().lanes_failed_total += 1;
+    }
+
+    /// Fail every busy lane (engine error or panic): each admitted request
+    /// gets the error; queued requests stay queued for the next session.
+    /// Dropping the session here is the panic-safe teardown path: AsyncTau's
+    /// Drop drains in-flight tile jobs swallowing join errors, and the
+    /// worker-side readiness guard has already balanced `end_write` on any
+    /// panicking job, so the take() can neither hang nor re-panic. Pager
+    /// checkpoints live *outside* the session and survive untouched.
     fn fail_busy(&mut self, msg: &str) {
-        for slot_opt in &mut self.lanes {
-            if let Some(slot) = slot_opt.take() {
-                let _ = slot.req.reply.send(Err(msg.to_string()));
-                self.inflight.fetch_sub(1, Ordering::Relaxed);
-            }
+        for lane in 0..self.lanes.len() {
+            self.fail_lane(lane, msg);
         }
         self.session = None;
+    }
+
+    /// Step-boundary sweep for requests that should stop early: the client
+    /// hung up (cancel flag) or the deadline passed. Busy lanes are failed
+    /// and freed for re-admission; queued and paged-out requests are
+    /// dropped before they ever (re)occupy a lane.
+    fn cancel_phase(&mut self) {
+        let now = Instant::now();
+        for lane in 0..self.lanes.len() {
+            let Some(c) = self.lanes[lane].as_ref().and_then(|s| check_cancel(&s.req, now))
+            else {
+                continue;
+            };
+            self.note_cancel(&c);
+            self.fail_lane(lane, c.message());
+        }
+        let mut i = 0;
+        while i < self.queue.len() {
+            match check_cancel(&self.queue[i], now) {
+                None => i += 1,
+                Some(c) => {
+                    let req = self.queue.remove(i).unwrap();
+                    self.note_cancel(&c);
+                    let _ = req.reply.send(Err(c.message().to_string()));
+                    self.inflight.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        }
+        let mut i = 0;
+        while i < self.evicted.len() {
+            match check_cancel(&self.evicted[i].slot.req, now) {
+                None => i += 1,
+                Some(c) => {
+                    let e = self.evicted.remove(i);
+                    if let Some(p) = self.pager.as_mut() {
+                        p.discard(e.ckpt);
+                    }
+                    self.note_cancel(&c);
+                    let _ = e.slot.req.reply.send(Err(c.message().to_string()));
+                    self.inflight.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    fn note_cancel(&mut self, c: &Cancel) {
+        let mut g = self.counters.lock();
+        match c {
+            Cancel::Deadline => g.requests_deadline_exceeded += 1,
+            Cancel::Disconnected => g.clients_disconnected += 1,
+        }
     }
 
     /// A queued request could be admitted into the current session at the
@@ -507,15 +622,16 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
     }
 
     fn publish_gauges(&self) {
-        let mut c = self.counters.lock().unwrap();
+        let mut c = self.counters.lock();
         c.queue_depth = self.queue.len() as u64;
         c.lanes_busy = self.busy_lanes() as u64;
         c.pager_resident_values = self.pager.as_ref().map_or(0, |p| p.resident_values() as u64);
     }
 
-    /// One step boundary: admit, advance one position, deliver, and
-    /// retire the session when it has nothing left to do.
+    /// One step boundary: cancel, admit, advance one position, deliver,
+    /// and retire the session when it has nothing left to do.
     fn tick(&mut self) -> Result<()> {
+        self.cancel_phase();
         self.admit_phase();
         if self.session.is_some() {
             let step = self.session.as_mut().unwrap().step()?;
@@ -534,7 +650,7 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                     // finish() drains in-flight async tiles before the
                     // store drops — required even for an early retire
                     let _ = sess.finish();
-                    self.counters.lock().unwrap().batches_run += 1;
+                    self.counters.lock().batches_run += 1;
                 }
                 // a `done` session cannot have stragglers (admission
                 // guarantees limit <= remaining), but stay defensive
@@ -544,6 +660,33 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         self.publish_gauges();
         Ok(())
     }
+}
+
+/// Why a request is being cancelled at a step boundary.
+enum Cancel {
+    Deadline,
+    Disconnected,
+}
+
+impl Cancel {
+    fn message(&self) -> &'static str {
+        match self {
+            Cancel::Deadline => "deadline exceeded",
+            Cancel::Disconnected => "client disconnected",
+        }
+    }
+}
+
+/// Deadline first: a request that is both late *and* abandoned reports
+/// the deadline (the deterministic one of the two).
+fn check_cancel(req: &GenRequest, now: Instant) -> Option<Cancel> {
+    if req.deadline.is_some_and(|d| now >= d) {
+        return Some(Cancel::Deadline);
+    }
+    if req.cancel.load(Ordering::Relaxed) {
+        return Some(Cancel::Disconnected);
+    }
+    None
 }
 
 impl Server {
@@ -556,8 +699,27 @@ impl Server {
 
         let (req_tx, req_rx) = channel::<GenRequest>();
         let shutdown = Arc::new(AtomicBool::new(false));
-        let counters = Arc::new(Mutex::new(ServerCounters::new()));
+        let counters = Counters::new();
         let inflight = Arc::new(AtomicU64::new(0));
+        let conns = Arc::new(AtomicU64::new(0));
+        let healthy = Arc::new(AtomicBool::new(true));
+        let draining = Arc::new(AtomicBool::new(false));
+
+        // fault injection: the FI_FAULTS env var wins over the config
+        // spec so a chaos harness can arm faults without a config file
+        match crate::util::faultpoint::install_from_env() {
+            Ok(Some(spec)) => {
+                eprintln!("flashinfer: fault injection armed from FI_FAULTS: {spec}");
+            }
+            Ok(None) => {
+                if !cfg.faults.is_empty() {
+                    crate::util::faultpoint::install(&cfg.faults)
+                        .with_context(|| format!("install fault spec {:?}", cfg.faults))?;
+                    eprintln!("flashinfer: fault injection armed from config: {}", cfg.faults);
+                }
+            }
+            Err(e) => anyhow::bail!("invalid FI_FAULTS: {e:#}"),
+        }
 
         // ---- engine worker (owns the non-Send PJRT state) ----
         // ready payload: the /v1/info document plus the *effective*
@@ -567,6 +729,8 @@ impl Server {
         let ecfg = cfg.clone();
         let wcounters = counters.clone();
         let winflight = inflight.clone();
+        let whealthy = healthy.clone();
+        let wdraining = draining.clone();
         let engine_thread = thread::Builder::new()
             .name("fi-engine".into())
             .spawn(move || {
@@ -617,6 +781,7 @@ impl Server {
                 } else {
                     None
                 };
+                let lcounters = wcounters.clone();
                 let mut sched = Scheduler::new(
                     &engine,
                     horizon,
@@ -625,8 +790,20 @@ impl Server {
                     wcounters,
                     winflight,
                 );
+                let mut budget = RestartBudget::new(
+                    ecfg.restart_budget,
+                    Duration::from_secs(ecfg.restart_window_s),
+                );
                 let mut disconnected = false;
                 loop {
+                    if wdraining.load(Ordering::Relaxed) {
+                        // graceful shutdown: stragglers get a retryable
+                        // 503 instead of hanging past the drain deadline
+                        sched.fail_busy("shutting down, retry later");
+                        sched.fail_queued("shutting down, retry later");
+                        sched.fail_evicted("shutting down, retry later");
+                        break;
+                    }
                     if sched.is_idle() {
                         if disconnected {
                             break;
@@ -639,7 +816,12 @@ impl Server {
                                     sched.enqueue(r);
                                 }
                             }
-                            None => break,
+                            None => {
+                                // all senders gone: re-check the drain
+                                // flag at the loop top before exiting
+                                disconnected = true;
+                                continue;
+                            }
                         }
                     } else {
                         // step boundary: pick up new arrivals non-blocking
@@ -654,8 +836,30 @@ impl Server {
                             }
                         }
                     }
-                    if let Err(e) = sched.tick() {
-                        sched.fail_busy(&format!("generate: {e:#}"));
+                    // One supervised step boundary. On panic every busy
+                    // lane gets a structured error and the (possibly
+                    // inconsistent) Session is dropped via the panic-safe
+                    // drain, so no broken invariant survives into the
+                    // next iteration; pager checkpoints are preserved and
+                    // a fresh session opens on the next admissible tick.
+                    match catch_unwind(AssertUnwindSafe(|| sched.tick())) {
+                        Ok(Ok(())) => {}
+                        Ok(Err(e)) => sched.fail_busy(&format!("generate: {e:#}")),
+                        Err(payload) => {
+                            let msg = payload_text(payload.as_ref());
+                            eprintln!("flashinfer: engine step panicked: {msg}");
+                            sched.fail_busy(&format!("engine panicked: {msg}"));
+                            lcounters.lock().engine_restarts_total += 1;
+                            if !budget.record(Instant::now()) {
+                                eprintln!(
+                                    "flashinfer: engine restart budget exhausted \
+                                     (> {} panics within {}s); marking unhealthy",
+                                    ecfg.restart_budget, ecfg.restart_window_s
+                                );
+                                lcounters.lock().healthy = 0;
+                                whealthy.store(false, Ordering::Relaxed);
+                            }
+                        }
                     }
                 }
             })
@@ -675,8 +879,11 @@ impl Server {
         let shared = Arc::new(Shared {
             cfg,
             counters,
-            queue: Mutex::new(req_tx),
+            queue: Mutex::new(Some(req_tx)),
             inflight,
+            conns,
+            healthy,
+            draining,
             info,
         });
 
@@ -688,11 +895,33 @@ impl Server {
             .spawn(move || {
                 while !sd.load(Ordering::Relaxed) {
                     match listener.accept() {
-                        Ok((stream, _)) => {
-                            let sh = sh.clone();
-                            let _ = thread::Builder::new()
-                                .name("fi-conn".into())
-                                .spawn(move || handle_connection(stream, sh));
+                        Ok((mut stream, _)) => {
+                            // connection-cap shed: a flood of sockets must
+                            // not exhaust the process's thread/fd budget
+                            let cap = sh.cfg.max_connections as u64;
+                            if sh.conns.load(Ordering::Relaxed) >= cap {
+                                sh.counters.lock().conn_shed_total += 1;
+                                let resp = Response::unavailable(
+                                    "server at connection capacity, retry later",
+                                    1,
+                                );
+                                let _ = write_response(&mut stream, &resp);
+                                continue;
+                            }
+                            sh.conns.fetch_add(1, Ordering::Relaxed);
+                            let sh2 = sh.clone();
+                            let spawned =
+                                thread::Builder::new().name("fi-conn".into()).spawn(move || {
+                                    let _guard = ConnGuard(sh2.conns.clone());
+                                    handle_connection(stream, sh2);
+                                });
+                            if let Err(e) = spawned {
+                                // the stream moved into the dropped
+                                // closure, so no response can be written —
+                                // undo the count and say why
+                                sh.conns.fetch_sub(1, Ordering::Relaxed);
+                                eprintln!("flashinfer: spawn fi-conn failed: {e}");
+                            }
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             thread::sleep(Duration::from_millis(5));
@@ -706,19 +935,29 @@ impl Server {
         Ok(Server {
             addr,
             shutdown,
+            shared: shared.clone(),
             accept_thread: Some(accept_thread),
             engine_thread: Some(engine_thread),
         })
     }
 
-    /// Stop accepting; the engine drains once the queue sender drops.
+    /// Graceful shutdown: stop accepting, give in-flight requests up to
+    /// `drain_deadline_ms` to finish, then flip the draining flag so the
+    /// engine fails stragglers with a retryable 503 and exits.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        // engine thread exits when all GenRequest senders are gone; the
-        // Shared (and its queue Sender) died with the accept/conn threads.
+        let deadline = Instant::now() + Duration::from_millis(self.shared.cfg.drain_deadline_ms);
+        while self.shared.inflight.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(10));
+        }
+        // flip draining *before* dropping the queue sender: a worker
+        // blocked in collect_batch unparks on the drop and re-checks the
+        // flag, failing stragglers with "shutting down, retry later"
+        self.shared.draining.store(true, Ordering::Relaxed);
+        *self.shared.queue.lock().unwrap_or_else(PoisonError::into_inner) = None;
         if let Some(t) = self.engine_thread.take() {
             let _ = t.join();
         }
@@ -744,12 +983,21 @@ fn info_json(cfg: &ServerConfig, eng: &EngineOpts, rt: &Runtime) -> Json {
         ("paging", Json::Bool(cfg.paging && cfg.continuous_admission)),
         ("pager_capacity_mb", Json::Num(cfg.pager_capacity_mb as f64)),
         ("max_max_tokens", Json::Num(cfg.max_max_tokens as f64)),
+        ("deadline_ms", Json::Num(cfg.deadline_ms as f64)),
+        ("max_connections", Json::Num(cfg.max_connections as f64)),
+        ("restart_budget", Json::Num(cfg.restart_budget as f64)),
+        ("restart_window_s", Json::Num(cfg.restart_window_s as f64)),
+        ("drain_deadline_ms", Json::Num(cfg.drain_deadline_ms as f64)),
         ("artifacts", Json::Str(cfg.artifacts.display().to_string())),
     ])
 }
 
 fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = configure_stream(
+        &stream,
+        shared.cfg.socket_read_timeout_ms,
+        shared.cfg.socket_write_timeout_ms,
+    );
     let req = match read_request(&mut stream) {
         Ok(req) => req,
         Err(e) => {
@@ -769,11 +1017,31 @@ fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) {
 
 fn route(req: &Request, shared: &Shared) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/health") => Response::json(200, "{\"status\":\"ok\"}".into()),
-        ("GET", "/metrics") => {
-            Response::text(200, shared.counters.lock().unwrap().render())
+        ("GET", "/health") => {
+            // latched by the supervisor once the restart budget is
+            // exhausted: a load balancer sees a deterministic 503, not a
+            // flapping crash loop
+            if shared.healthy.load(Ordering::Relaxed) {
+                Response::json(200, "{\"status\":\"ok\"}".into())
+            } else {
+                let restarts = shared.counters.lock().engine_restarts_total;
+                let body = Json::from_pairs(vec![
+                    ("status", Json::Str("unhealthy".into())),
+                    ("engine_restarts", Json::Num(restarts as f64)),
+                ]);
+                Response::json(503, body.to_string())
+            }
         }
-        ("GET", "/v1/info") => Response::json(200, shared.info.to_string()),
+        ("GET", "/metrics") => Response::text(200, shared.counters.lock().render()),
+        ("GET", "/v1/info") => {
+            let mut info = shared.info.clone();
+            let restarts = shared.counters.lock().engine_restarts_total;
+            info.set("engine_restarts", Json::Num(restarts as f64));
+            info.set("healthy", Json::Bool(shared.healthy.load(Ordering::Relaxed)));
+            let faults = crate::util::faultpoint::active_spec().unwrap_or_default();
+            info.set("faults", Json::Str(faults));
+            Response::json(200, info.to_string())
+        }
         ("POST" | "GET", _) => Response::not_found(),
         _ => Response::json(405, "{\"error\":\"method not allowed\"}".into()),
     }
@@ -798,9 +1066,14 @@ fn parse_sampling(j: &Json) -> std::result::Result<SamplingParams, String> {
 }
 
 fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
-    shared.counters.lock().unwrap().requests_total += 1;
+    shared.counters.lock().requests_total += 1;
+    if shared.draining.load(Ordering::Relaxed) {
+        shared.counters.lock().requests_failed += 1;
+        let _ = write_response(stream, &Response::unavailable("shutting down, retry later", 1));
+        return;
+    }
     let reject = |msg: String| {
-        shared.counters.lock().unwrap().requests_failed += 1;
+        shared.counters.lock().requests_failed += 1;
         Response::bad_request(&msg)
     };
     let body = match req.body_str() {
@@ -831,6 +1104,30 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
         }
     };
     let want_stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    let req_deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(ms) => Some(ms as u64),
+            None => {
+                let msg = "deadline_ms must be a non-negative integer".to_string();
+                let _ = write_response(stream, &reject(msg));
+                return;
+            }
+        },
+    };
+    // effective deadline: the sooner of the server-wide and per-request
+    // budgets (0 or absent = unbounded on that side)
+    let mut budget_ms = u64::MAX;
+    if shared.cfg.deadline_ms > 0 {
+        budget_ms = budget_ms.min(shared.cfg.deadline_ms);
+    }
+    if let Some(ms) = req_deadline_ms {
+        if ms > 0 {
+            budget_ms = budget_ms.min(ms);
+        }
+    }
+    let deadline =
+        (budget_ms != u64::MAX).then(|| Instant::now() + Duration::from_millis(budget_ms));
 
     // shed before enqueueing: a bounded *waiting* queue keeps overload
     // failures fast and explicit instead of timing out 600 s later.
@@ -840,9 +1137,9 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
     let waiting = shared
         .inflight
         .load(Ordering::Relaxed)
-        .saturating_sub(shared.counters.lock().unwrap().lanes_busy);
+        .saturating_sub(shared.counters.lock().lanes_busy);
     if waiting >= shared.cfg.max_queue as u64 {
-        let mut c = shared.counters.lock().unwrap();
+        let mut c = shared.counters.lock();
         c.requests_failed += 1;
         c.requests_shed += 1;
         drop(c);
@@ -857,37 +1154,104 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
     } else {
         (None, None)
     };
+    let cancel = Arc::new(AtomicBool::new(false));
     let request = GenRequest {
         max_tokens,
         sampling,
         enqueued: Instant::now(),
         reply: tx,
         stream: event_tx,
+        deadline,
+        cancel: cancel.clone(),
     };
     shared.inflight.fetch_add(1, Ordering::Relaxed);
-    if shared.queue.lock().unwrap().send(request).is_err() {
+    let sent = {
+        let q = shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
+        match q.as_ref() {
+            Some(tx) => tx.send(request).is_ok(),
+            None => false, // draining: the sender is already gone
+        }
+    };
+    if !sent {
         shared.inflight.fetch_sub(1, Ordering::Relaxed);
-        let _ =
-            write_response(stream, &Response::json(503, "{\"error\":\"engine unavailable\"}".into()));
+        shared.counters.lock().requests_failed += 1;
+        let resp = Response::unavailable("engine unavailable, retry later", 1);
+        let _ = write_response(stream, &resp);
         return;
     }
     match event_rx {
-        Some(events) => stream_reply(shared, stream, events, rx, max_tokens),
+        Some(events) => stream_reply(shared, stream, events, rx, max_tokens, &cancel),
         None => {
-            let resp = buffered_reply(shared, rx, max_tokens);
+            let resp = buffered_reply(shared, stream, rx, max_tokens, &cancel);
             let _ = write_response(stream, &resp);
         }
     }
 }
 
+/// Best-effort client-disconnect probe: a nonblocking `peek` returning
+/// `Ok(0)` means the peer sent EOF; hard errors (reset) count as gone,
+/// `WouldBlock` means the peer is simply quiet.
+fn socket_closed(stream: &TcpStream) -> bool {
+    let mut buf = [0u8; 1];
+    if stream.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let closed = match stream.peek(&mut buf) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    closed
+}
+
+/// Map a scheduler-side failure string to a wire response: shutdown
+/// stragglers get a retryable 503, everything else a structured 500.
+fn error_response(e: String) -> Response {
+    if e.starts_with("shutting down") {
+        Response::unavailable(&e, 1)
+    } else {
+        Response::json(500, Json::from_pairs(vec![("error", Json::Str(e))]).to_string())
+    }
+}
+
 fn buffered_reply(
     shared: &Shared,
+    stream: &TcpStream,
     rx: Receiver<std::result::Result<LaneResult, String>>,
     max_tokens: usize,
+    cancel: &AtomicBool,
 ) -> Response {
-    match rx.recv_timeout(Duration::from_secs(600)) {
-        Ok(Ok(lane)) => {
-            let mut c = shared.counters.lock().unwrap();
+    // Poll in short slices so a hung-up client is noticed while its lane
+    // is still generating: the cancel flag makes the scheduler free the
+    // lane at the next step boundary instead of running for a ghost.
+    let overall = Instant::now() + Duration::from_secs(600);
+    let outcome = loop {
+        match rx.recv_timeout(Duration::from_millis(250)) {
+            Ok(r) => break r,
+            Err(RecvTimeoutError::Timeout) => {
+                if socket_closed(stream) {
+                    cancel.store(true, Ordering::Relaxed);
+                    shared.counters.lock().requests_failed += 1;
+                    // nobody is listening; the write below fails harmlessly
+                    return Response::json(499, "{\"error\":\"client disconnected\"}".into());
+                }
+                if Instant::now() >= overall {
+                    shared.counters.lock().requests_failed += 1;
+                    return Response::json(408, "{\"error\":\"generation timed out\"}".into());
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // engine worker died without replying
+                shared.counters.lock().requests_failed += 1;
+                return Response::unavailable("engine unavailable, retry later", 1);
+            }
+        }
+    };
+    match outcome {
+        Ok(lane) => {
+            let mut c = shared.counters.lock();
             // positions the lane actually generated for this request —
             // never the raw ask (a capped schedule generates lane.steps)
             c.tokens_generated += max_tokens.min(lane.steps) as u64;
@@ -911,13 +1275,9 @@ fn buffered_reply(
             }
             Response::json(200, Json::from_pairs(pairs).to_string())
         }
-        Ok(Err(e)) => {
-            shared.counters.lock().unwrap().requests_failed += 1;
-            Response::json(500, Json::from_pairs(vec![("error", Json::Str(e))]).to_string())
-        }
-        Err(_) => {
-            shared.counters.lock().unwrap().requests_failed += 1;
-            Response::json(408, "{\"error\":\"generation timed out\"}".into())
+        Err(e) => {
+            shared.counters.lock().requests_failed += 1;
+            error_response(e)
         }
     }
 }
@@ -931,8 +1291,9 @@ fn stream_reply(
     events: Receiver<StreamEvent>,
     reply: Receiver<std::result::Result<LaneResult, String>>,
     max_tokens: usize,
+    cancel: &AtomicBool,
 ) {
-    shared.counters.lock().unwrap().stream_requests += 1;
+    shared.counters.lock().stream_requests += 1;
     if write_chunked_head(stream, 200, "application/x-ndjson").is_err() {
         return;
     }
@@ -950,8 +1311,10 @@ fn stream_reply(
                 }
                 let line = format!("{}\n", Json::from_pairs(pairs));
                 if write_chunk(stream, line.as_bytes()).is_err() {
-                    // client hung up; sends are non-blocking on an mpsc
-                    // channel, so just dropping our receiver is enough
+                    // client hung up: flag the lane for cancellation (the
+                    // dropped event receiver alone would only stop the
+                    // per-position sends, not free the lane)
+                    cancel.store(true, Ordering::Relaxed);
                     break;
                 }
                 emitted += 1;
@@ -965,7 +1328,7 @@ fn stream_reply(
         }
     }
     let tail = if timed_out {
-        shared.counters.lock().unwrap().requests_failed += 1;
+        shared.counters.lock().requests_failed += 1;
         Json::from_pairs(vec![
             ("done", Json::Bool(true)),
             ("error", Json::Str("generation timed out".into())),
@@ -988,7 +1351,7 @@ fn stream_tail(
 ) -> Json {
     match reply.recv_timeout(Duration::from_secs(600)) {
         Ok(Ok(lane)) => {
-            let mut c = shared.counters.lock().unwrap();
+            let mut c = shared.counters.lock();
             c.tokens_generated += max_tokens.min(lane.steps) as u64;
             c.stream_events += emitted;
             c.request_latency.record_ns(lane.gen_ms * 1e6);
@@ -1007,11 +1370,11 @@ fn stream_tail(
             ])
         }
         Ok(Err(e)) => {
-            shared.counters.lock().unwrap().requests_failed += 1;
+            shared.counters.lock().requests_failed += 1;
             Json::from_pairs(vec![("done", Json::Bool(true)), ("error", Json::Str(e))])
         }
         Err(_) => {
-            shared.counters.lock().unwrap().requests_failed += 1;
+            shared.counters.lock().requests_failed += 1;
             Json::from_pairs(vec![
                 ("done", Json::Bool(true)),
                 ("error", Json::Str("generation timed out".into())),

@@ -11,7 +11,9 @@
 //! (block for the first request, drain up to B more within
 //! `batch_window_ms` so simultaneous arrivals start one session together).
 
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Per-request sampling overrides, parsed from the request JSON and
@@ -43,6 +45,15 @@ pub struct GenRequest {
     /// while the batch keeps running (per-lane early stop). `None` =
     /// classic buffered reply.
     pub stream: Option<Sender<StreamEvent>>,
+    /// Absolute wall-clock deadline (config `deadline_ms` layered with
+    /// the request's own `deadline_ms` field, whichever is sooner).
+    /// Checked by the scheduler at step boundaries and before admission;
+    /// `None` = no deadline.
+    pub deadline: Option<Instant>,
+    /// Set by the connection thread when the client hangs up; the
+    /// scheduler cancels the lane (or dequeues the request) at the next
+    /// step boundary instead of generating for a ghost.
+    pub cancel: Arc<AtomicBool>,
 }
 
 /// One incremental per-position event on a streaming lane.
@@ -132,6 +143,8 @@ mod tests {
                 enqueued: Instant::now(),
                 reply: tx,
                 stream: None,
+                deadline: None,
+                cancel: Arc::new(AtomicBool::new(false)),
             },
             rx,
         )

@@ -6,6 +6,7 @@
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -31,6 +32,9 @@ pub struct Response {
     pub reason: &'static str,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Emitted as a `Retry-After: <seconds>` header when set (503 shed /
+    /// drain responses tell well-behaved clients when to come back).
+    pub retry_after_s: Option<u64>,
 }
 
 impl Response {
@@ -40,6 +44,7 @@ impl Response {
             reason: reason_for(status),
             content_type: "application/json",
             body: body.into_bytes(),
+            retry_after_s: None,
         }
     }
 
@@ -49,6 +54,7 @@ impl Response {
             reason: reason_for(status),
             content_type: "text/plain; charset=utf-8",
             body: body.into_bytes(),
+            retry_after_s: None,
         }
     }
 
@@ -70,6 +76,27 @@ impl Response {
     pub fn too_many_requests() -> Response {
         Response::json(429, "{\"error\":\"queue full, retry later\"}".into())
     }
+
+    /// 503 with a `Retry-After` hint: connection-cap shed, engine
+    /// unavailable, and graceful-shutdown stragglers all use this shape.
+    pub fn unavailable(msg: &str, retry_after_s: u64) -> Response {
+        let j = crate::util::json::Json::from_pairs(vec![(
+            "error",
+            crate::util::json::Json::Str(msg.to_string()),
+        )]);
+        let mut r = Response::json(503, j.to_string());
+        r.retry_after_s = Some(retry_after_s);
+        r
+    }
+}
+
+/// Apply the configured socket read/write timeouts (0 = unlimited) so a
+/// stuck or malicious peer cannot pin an `fi-conn` thread forever.
+pub fn configure_stream(stream: &TcpStream, read_ms: u64, write_ms: u64) -> Result<()> {
+    let t = |ms: u64| (ms > 0).then(|| Duration::from_millis(ms));
+    stream.set_read_timeout(t(read_ms)).context("set read timeout")?;
+    stream.set_write_timeout(t(write_ms)).context("set write timeout")?;
+    Ok(())
 }
 
 fn reason_for(status: u16) -> &'static str {
@@ -80,6 +107,7 @@ fn reason_for(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         408 => "Request Timeout",
         429 => "Too Many Requests",
+        499 => "Client Closed Request",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
@@ -195,12 +223,17 @@ pub fn decode_chunked(body: &str) -> String {
 
 /// Serialize and send a response, closing the connection after.
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let retry = resp
+        .retry_after_s
+        .map(|s| format!("Retry-After: {s}\r\n"))
+        .unwrap_or_default();
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}Connection: close\r\n\r\n",
         resp.status,
         resp.reason,
         resp.content_type,
-        resp.body.len()
+        resp.body.len(),
+        retry
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
@@ -280,6 +313,27 @@ mod tests {
         assert_eq!(decode_chunked(body), "{\"pos\":1}\n{\"pos\":2}\n");
         // two separate payload chunks on the wire = incremental delivery
         assert_eq!(body.matches("a\r\n").count(), 2);
+    }
+
+    #[test]
+    fn unavailable_carries_retry_after() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let mut buf = String::new();
+            c.read_to_string(&mut buf).unwrap();
+            buf
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        write_response(&mut s, &Response::unavailable("draining", 2)).unwrap();
+        drop(s);
+        let got = h.join().unwrap();
+        assert!(got.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(got.contains("Retry-After: 2\r\n"));
+        assert!(got.contains("\"error\":\"draining\""));
+        // plain responses must not grow the header
+        assert!(!format!("{:?}", Response::json(200, "{}".into())).contains("Some"));
     }
 
     #[test]

@@ -99,6 +99,7 @@ use crate::engine::store::RowReadiness;
 use crate::fft::{tile_conv_rfft_into, RfftPlan, TileScratch};
 use crate::tau::rho_cache::Spectra;
 use crate::tiling::Tile;
+use crate::util::faultpoint;
 use crate::util::tensor::CellTensor;
 use crate::util::threadpool::{JobHandle, ThreadPool};
 
@@ -196,6 +197,25 @@ struct ClockGuard<'a>(&'a WorkerClock);
 impl Drop for ClockGuard<'_> {
     fn drop(&mut self) {
         self.0.exit();
+    }
+}
+
+/// Balances a `begin_write` bracket even when the tile kernel panics:
+/// the worker's `catch_unwind` drops this guard during unwind, so
+/// `RowReadiness` never sticks at `scheduled > completed`. The panic
+/// then surfaces *only* as `JobError::Panicked` at the next fence — a
+/// lane-level failure the supervisor can absorb — instead of poisoning
+/// every later `assert_quiet` (reset/suspend/teardown) into a re-panic.
+struct EndWriteGuard {
+    readiness: Option<Arc<RowReadiness>>,
+    rows: std::ops::Range<usize>,
+}
+
+impl Drop for EndWriteGuard {
+    fn drop(&mut self) {
+        if let Some(r) = &self.readiness {
+            r.end_write(self.rows.clone());
+        }
     }
 }
 
@@ -303,9 +323,10 @@ impl<'c, 'rt> AsyncTau<'c, 'rt> {
     }
 
     fn retire(job: InFlight) -> Result<()> {
-        job.handle
-            .join()
-            .map_err(|e| anyhow!("async tau tile [{}, {}]: {e}", job.dst_l, job.dst_r))
+        job.handle.join().map_err(|e| match job.handle.panic_message() {
+            Some(msg) => anyhow!("async tau tile [{}, {}]: {e}: {msg}", job.dst_l, job.dst_r),
+            None => anyhow!("async tau tile [{}, {}]: {e}", job.dst_l, job.dst_r),
+        })
     }
 
     /// Join in-flight jobs selected by `pred`; retire any job observed
@@ -377,10 +398,15 @@ impl<'c, 'rt> AsyncTau<'c, 'rt> {
         let pending = pending.clone();
         let job = Box::new(move || {
             let _busy = clock.enter();
+            // Drop order: the guard ends the readiness window whether the
+            // kernel returns or unwinds (see `EndWriteGuard`).
+            let _end = EndWriteGuard { readiness, rows: dst_l - 1..dst_r };
+            // Chaos handles for the worker-side tile path. `check` only
+            // errs for `fail` actions; on this no-Result path that
+            // degrades to a panic at the same site, which is the intent.
+            faultpoint::check("tile_delay").expect("fault injection: tile_delay");
+            faultpoint::check("tau_tile").expect("fault injection: tau_tile");
             run_tile(&kernel, &streams, &pending, b, d, tile, k0, k1);
-            if let Some(r) = &readiness {
-                r.end_write(dst_l - 1..dst_r);
-            }
         });
         // Dependency edges: in-flight jobs whose (1-indexed, inclusive)
         // destination ranges intersect ours wrote or will write some of

@@ -1,0 +1,265 @@
+//! Named fault points for chaos testing, zero-cost when disabled.
+//!
+//! A fault point is a named call site (`engine_step`, `tau_tile`,
+//! `tile_delay`, `pager_alloc`, ...) that consults a process-global
+//! registry. With no faults armed the whole check is a single relaxed
+//! atomic load — safe to leave in the hot step loop.
+//!
+//! Spec grammar (`FI_FAULTS` env var or the `faults` config key), comma
+//! separated:
+//!
+//! ```text
+//! <point>:<action>@<nth>
+//!   action := panic          panic on the nth hit (once)
+//!           | fail           return an error on the nth hit (once)
+//!           | delay:<ms>     sleep <ms> milliseconds; nth = 0 fires on
+//!                            every hit, otherwise on the nth hit only
+//! ```
+//!
+//! `nth` is 1-indexed; `engine_step:panic@3` panics on the third call to
+//! `check("engine_step")` and is inert before and after, so a supervised
+//! server recovers deterministically once the fault has fired.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// What an armed fault point does when its trigger count is reached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Action {
+    Panic,
+    Fail,
+    DelayMs(u64),
+}
+
+#[derive(Debug)]
+struct Point {
+    name: String,
+    action: Action,
+    /// 1-indexed hit that triggers the action; 0 = every hit (delay only).
+    nth: u64,
+    hits: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    spec: String,
+    points: Vec<Point>,
+}
+
+/// Fast path: false means `check` returns immediately without touching
+/// the registry mutex. Armed/disarmed only through `install`/`clear`.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+fn registry() -> std::sync::MutexGuard<'static, Option<Registry>> {
+    // Poison-tolerant: an injected panic may unwind through a caller
+    // while a sibling thread holds this lock; the registry itself is
+    // never left mid-update.
+    REGISTRY
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<Point>> {
+    let mut points = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (name, rest) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("fault spec '{part}': expected <point>:<action>@<n>"))?;
+        let (action_s, nth_s) = rest
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("fault spec '{part}': expected <action>@<n>"))?;
+        let nth: u64 = nth_s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault spec '{part}': bad trigger count '{nth_s}'"))?;
+        let action = match action_s {
+            "panic" => Action::Panic,
+            "fail" => Action::Fail,
+            _ => match action_s.strip_prefix("delay:") {
+                Some(ms) => Action::DelayMs(ms.parse().map_err(|_| {
+                    anyhow::anyhow!("fault spec '{part}': bad delay millis '{ms}'")
+                })?),
+                None => bail!("fault spec '{part}': unknown action '{action_s}'"),
+            },
+        };
+        if nth == 0 && !matches!(action, Action::DelayMs(_)) {
+            bail!("fault spec '{part}': @0 (every hit) is only valid for delay");
+        }
+        points.push(Point {
+            name: name.to_string(),
+            action,
+            nth,
+            hits: AtomicU64::new(0),
+        });
+    }
+    Ok(points)
+}
+
+/// Parse `spec` and arm it process-wide, replacing any previous
+/// installation and resetting all hit counters. An empty spec disarms.
+pub fn install(spec: &str) -> Result<()> {
+    let points = parse_spec(spec)?;
+    let mut reg = registry();
+    if points.is_empty() {
+        *reg = None;
+        ARMED.store(false, Ordering::Release);
+    } else {
+        *reg = Some(Registry {
+            spec: spec.trim().to_string(),
+            points,
+        });
+        ARMED.store(true, Ordering::Release);
+    }
+    Ok(())
+}
+
+/// Arm from the `FI_FAULTS` environment variable if set and non-empty.
+/// Returns the installed spec, if any.
+pub fn install_from_env() -> Result<Option<String>> {
+    match std::env::var("FI_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            install(&spec)?;
+            Ok(Some(spec))
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Disarm every fault point.
+pub fn clear() {
+    *registry() = None;
+    ARMED.store(false, Ordering::Release);
+}
+
+/// The currently armed spec string (for `/v1/info`), if any.
+pub fn active_spec() -> Option<String> {
+    registry().as_ref().map(|r| r.spec.clone())
+}
+
+/// Consult the fault point `name`. Zero-cost when nothing is armed.
+/// Panics for `panic` actions, sleeps for `delay`, and returns an error
+/// for `fail` — callers on no-`Result` paths may `expect` the return,
+/// which degrades a misconfigured `fail` into a panic at the same site.
+#[inline]
+pub fn check(name: &str) -> Result<()> {
+    if !ARMED.load(Ordering::Acquire) {
+        return Ok(());
+    }
+    check_slow(name)
+}
+
+#[cold]
+fn check_slow(name: &str) -> Result<()> {
+    // Decide under the lock, act (panic/sleep) after releasing it.
+    let mut fire: Option<(Action, u64)> = None;
+    if let Some(reg) = registry().as_ref() {
+        for p in reg.points.iter().filter(|p| p.name == name) {
+            let hit = p.hits.fetch_add(1, Ordering::Relaxed) + 1;
+            let triggered = if p.nth == 0 { true } else { hit == p.nth };
+            if triggered {
+                fire = Some((p.action, hit));
+                break;
+            }
+        }
+    }
+    match fire {
+        None => Ok(()),
+        Some((Action::DelayMs(ms), _)) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some((Action::Fail, hit)) => {
+            bail!("fault injection: {name} fail@{hit}")
+        }
+        Some((Action::Panic, hit)) => {
+            panic!("fault injection: {name} panic@{hit}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; tests that arm it serialize here so
+    // they cannot observe each other's installs under the parallel runner.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        SERIAL
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let _s = serial();
+        clear();
+        for _ in 0..100 {
+            check("engine_step").unwrap();
+        }
+        assert_eq!(active_spec(), None);
+    }
+
+    #[test]
+    fn fail_triggers_on_exact_nth_hit_once() {
+        let _s = serial();
+        install("pager_alloc:fail@3").unwrap();
+        assert!(check("pager_alloc").is_ok());
+        assert!(check("pager_alloc").is_ok());
+        let err = check("pager_alloc").unwrap_err();
+        assert!(err.to_string().contains("pager_alloc fail@3"), "{err}");
+        // one-shot: later hits pass, so a supervised server can recover
+        assert!(check("pager_alloc").is_ok());
+        // unrelated points never trip
+        assert!(check("engine_step").is_ok());
+        clear();
+    }
+
+    #[test]
+    fn panic_action_panics_with_point_name() {
+        let _s = serial();
+        install("tau_tile:panic@1").unwrap();
+        let r = std::panic::catch_unwind(|| check("tau_tile").unwrap());
+        clear();
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("fault injection: tau_tile panic@1"), "{msg}");
+    }
+
+    #[test]
+    fn delay_every_hit_and_spec_roundtrip() {
+        let _s = serial();
+        install("tile_delay:delay:1@0, engine_step:panic@9").unwrap();
+        assert_eq!(
+            active_spec().as_deref(),
+            Some("tile_delay:delay:1@0, engine_step:panic@9")
+        );
+        let t0 = std::time::Instant::now();
+        check("tile_delay").unwrap();
+        check("tile_delay").unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+        clear();
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let _s = serial();
+        clear();
+        for bad in [
+            "engine_step",           // no action
+            "engine_step:panic",     // no trigger count
+            "engine_step:panic@x",   // bad count
+            "engine_step:explode@1", // unknown action
+            "engine_step:panic@0",   // @0 only valid for delay
+            "tile_delay:delay:ms@0", // bad delay millis
+        ] {
+            assert!(install(bad).is_err(), "spec '{bad}' should be rejected");
+        }
+        // a failed install leaves the registry disarmed
+        assert_eq!(active_spec(), None);
+        check("engine_step").unwrap();
+    }
+}

@@ -2,6 +2,7 @@
 //! serde/rand/rayon/proptest/criterion — see DESIGN.md §2.2).
 
 pub mod benchkit;
+pub mod faultpoint;
 pub mod json;
 pub mod prng;
 pub mod propcheck;

@@ -129,6 +129,10 @@ impl std::error::Error for JobError {}
 struct TaskShared {
     status: Mutex<TaskStatus>,
     cv: Condvar,
+    /// Panic payload text captured when the job panics on the worker —
+    /// written before the status flips to `Panicked`, so any joiner that
+    /// observes the terminal state also sees the message.
+    panic_msg: Mutex<Option<String>>,
 }
 
 struct QueuedTask {
@@ -157,6 +161,7 @@ impl JobHandle {
             shared: Arc::new(TaskShared {
                 status: Mutex::new(TaskStatus::Done),
                 cv: Condvar::new(),
+                panic_msg: Mutex::new(None),
             }),
         }
     }
@@ -180,11 +185,36 @@ impl JobHandle {
             TaskStatus::Queued | TaskStatus::Running => unreachable!(),
         }
     }
+
+    /// The captured panic payload text, if the job panicked on a worker.
+    /// Non-blocking; `None` while the job is in flight or for non-panic
+    /// terminal states. Lets joiners build a structured error (e.g. a
+    /// lane-level 500 naming the fault) instead of a bare "panicked".
+    pub fn panic_message(&self) -> Option<String> {
+        self.shared
+            .panic_msg
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone()
+    }
 }
 
 fn finish_task(shared: &TaskShared, status: TaskStatus) {
     *shared.status.lock().unwrap() = status;
     shared.cv.notify_all();
+}
+
+/// Best-effort text of a panic payload (`panic!` with a literal carries a
+/// `&str`, with a format string a `String`; anything else is opaque).
+/// Public: the engine supervisor uses it on `catch_unwind` payloads too.
+pub fn payload_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Lifetime-erased job description published to the workers.
@@ -333,6 +363,7 @@ impl ThreadPool {
         let shared = Arc::new(TaskShared {
             status: Mutex::new(TaskStatus::Queued),
             cv: Condvar::new(),
+            panic_msg: Mutex::new(None),
         });
         let handle = JobHandle { shared: shared.clone() };
         let deps: Vec<Arc<TaskShared>> = deps
@@ -425,12 +456,21 @@ fn worker_loop(shared: &Shared) {
             Work::Task(task) => {
                 *task.shared.status.lock().unwrap() = TaskStatus::Running;
                 ACTIVE_POOL.with(|c| c.set(shared as *const Shared as usize));
-                let ok = panic::catch_unwind(AssertUnwindSafe(task.f)).is_ok();
+                let result = panic::catch_unwind(AssertUnwindSafe(task.f));
                 ACTIVE_POOL.with(|c| c.set(0));
-                finish_task(
-                    &task.shared,
-                    if ok { TaskStatus::Done } else { TaskStatus::Panicked },
-                );
+                let status = match result {
+                    Ok(()) => TaskStatus::Done,
+                    Err(payload) => {
+                        *task
+                            .shared
+                            .panic_msg
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner) =
+                            Some(payload_text(payload.as_ref()));
+                        TaskStatus::Panicked
+                    }
+                };
+                finish_task(&task.shared, status);
                 // finishing this task may have made a queued dependent
                 // ready; parked workers only rescan on a wakeup
                 let st = shared.state.lock().unwrap();
@@ -851,6 +891,19 @@ mod tests {
         blocker.join().unwrap();
         drop(pool);
         assert!(matches!(dep.join(), Ok(()) | Err(JobError::Cancelled)));
+    }
+
+    #[test]
+    fn panicked_job_surfaces_payload_text() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit(Box::new(|| panic!("boom at tile {}", 7)));
+        assert_eq!(h.join(), Err(JobError::Panicked));
+        let msg = h.panic_message().expect("payload text captured");
+        assert!(msg.contains("boom at tile 7"), "{msg}");
+        // non-panic terminal states carry no message
+        let ok = pool.submit(Box::new(|| {}));
+        ok.join().unwrap();
+        assert_eq!(ok.panic_message(), None);
     }
 
     #[test]
