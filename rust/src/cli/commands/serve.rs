@@ -60,6 +60,11 @@ pub fn run(argv: &[String]) -> Result<i32> {
         .value("max-connections", "live connection cap before shedding 503s (default 256)")
         .value("restart-budget", "engine panics tolerated per rolling window (default 3)")
         .value("restart-window-s", "rolling window for the restart budget (default 60)")
+        .value("replicas", "engine replicas, each an isolated failure domain (default 1)")
+        .value("failover-retries", "re-dispatches for a queued request whose replica died (default 2)")
+        .value("quarantine-backoff-ms", "initial respawn backoff for a quarantined replica (default 500)")
+        .value("quarantine-backoff-max-ms", "respawn backoff cap (default 30000)")
+        .value("probe-window-ms", "clean probe window before a respawned replica rejoins (default 2000)")
         .value("drain-deadline-ms", "graceful-shutdown drain window (default 5000)")
         .value("socket-read-timeout-ms", "per-connection read timeout, 0 = none (default 10000)")
         .value("socket-write-timeout-ms", "per-connection write timeout, 0 = none (default 10000)")
@@ -76,10 +81,12 @@ pub fn run(argv: &[String]) -> Result<i32> {
 
     let server = Server::start(cfg.clone())?;
     println!(
-        "flashinfer serving {} on http://{} (batch B from artifacts, window {}ms, \
+        "flashinfer serving {} on http://{} ({} replica{}, batch B from artifacts, window {}ms, \
          continuous admission {}, paging {})",
         cfg.artifacts.display(),
         server.addr,
+        cfg.replicas.max(1),
+        if cfg.replicas.max(1) == 1 { "" } else { "s" },
         cfg.batch_window_ms,
         if cfg.continuous_admission { "on" } else { "off" },
         if cfg.paging && cfg.continuous_admission {

@@ -57,6 +57,22 @@ pub struct ServerConfig {
     /// Graceful-shutdown drain deadline: requests still in flight this
     /// long after SIGTERM are failed with 503 + Retry-After.
     pub drain_deadline_ms: u64,
+    /// Engine replicas behind the router. 1 (the default) keeps the PR 7
+    /// single-engine behavior exactly: terminal health latch, unchanged
+    /// metric names. N > 1 spawns N workers, each its own failure domain
+    /// (private Scheduler + Pager + RestartBudget), with quarantine +
+    /// supervised respawn instead of a terminal latch.
+    pub replicas: usize,
+    /// How many times a queued request that never produced a token may be
+    /// re-dispatched to another replica after its replica is quarantined.
+    pub failover_retries: u32,
+    /// Initial respawn backoff after a replica is quarantined; doubles
+    /// per consecutive quarantine, capped at `quarantine_backoff_max_ms`.
+    pub quarantine_backoff_ms: u64,
+    pub quarantine_backoff_max_ms: u64,
+    /// A respawned replica serves probe traffic for this long without a
+    /// panic before it is promoted back into full rotation.
+    pub probe_window_ms: u64,
     /// Socket read/write timeouts for connection handlers, so one stuck
     /// peer cannot pin an `fi-conn` thread forever.
     pub socket_read_timeout_ms: u64,
@@ -85,6 +101,11 @@ impl Default for ServerConfig {
             restart_budget: 3,
             restart_window_s: 60,
             drain_deadline_ms: 5000,
+            replicas: 1,
+            failover_retries: 2,
+            quarantine_backoff_ms: 500,
+            quarantine_backoff_max_ms: 30_000,
+            probe_window_ms: 2000,
             socket_read_timeout_ms: 10_000,
             socket_write_timeout_ms: 10_000,
             faults: String::new(),
@@ -157,6 +178,21 @@ impl ServerConfig {
         if let Some(v) = j.get("drain_deadline_ms").and_then(Json::as_usize) {
             self.drain_deadline_ms = v as u64;
         }
+        if let Some(v) = j.get("replicas").and_then(Json::as_usize) {
+            self.replicas = v;
+        }
+        if let Some(v) = j.get("failover_retries").and_then(Json::as_usize) {
+            self.failover_retries = v as u32;
+        }
+        if let Some(v) = j.get("quarantine_backoff_ms").and_then(Json::as_usize) {
+            self.quarantine_backoff_ms = v as u64;
+        }
+        if let Some(v) = j.get("quarantine_backoff_max_ms").and_then(Json::as_usize) {
+            self.quarantine_backoff_max_ms = v as u64;
+        }
+        if let Some(v) = j.get("probe_window_ms").and_then(Json::as_usize) {
+            self.probe_window_ms = v as u64;
+        }
         if let Some(v) = j.get("socket_read_timeout_ms").and_then(Json::as_usize) {
             self.socket_read_timeout_ms = v as u64;
         }
@@ -228,6 +264,14 @@ impl ServerConfig {
         self.restart_budget = a.get_usize("restart-budget", self.restart_budget)?;
         self.restart_window_s = a.get_u64("restart-window-s", self.restart_window_s)?;
         self.drain_deadline_ms = a.get_u64("drain-deadline-ms", self.drain_deadline_ms)?;
+        self.replicas = a.get_usize("replicas", self.replicas)?;
+        self.failover_retries =
+            a.get_usize("failover-retries", self.failover_retries as usize)? as u32;
+        self.quarantine_backoff_ms =
+            a.get_u64("quarantine-backoff-ms", self.quarantine_backoff_ms)?;
+        self.quarantine_backoff_max_ms =
+            a.get_u64("quarantine-backoff-max-ms", self.quarantine_backoff_max_ms)?;
+        self.probe_window_ms = a.get_u64("probe-window-ms", self.probe_window_ms)?;
         self.socket_read_timeout_ms =
             a.get_u64("socket-read-timeout-ms", self.socket_read_timeout_ms)?;
         self.socket_write_timeout_ms =
@@ -456,6 +500,48 @@ mod tests {
         // json-set values survive when no flag overrides them
         assert_eq!(cfg.restart_budget, 1);
         assert_eq!(cfg.drain_deadline_ms, 250);
+    }
+
+    #[test]
+    fn fleet_keys_layer_correctly() {
+        let mut cfg = ServerConfig::default();
+        assert_eq!(cfg.replicas, 1, "single replica by default (PR 7 behavior)");
+        assert_eq!(cfg.failover_retries, 2);
+        assert_eq!(cfg.quarantine_backoff_ms, 500);
+        assert_eq!(cfg.quarantine_backoff_max_ms, 30_000);
+        assert_eq!(cfg.probe_window_ms, 2000);
+        let j = Json::parse(
+            r#"{"replicas": 4, "failover_retries": 1, "quarantine_backoff_ms": 100,
+                "quarantine_backoff_max_ms": 800, "probe_window_ms": 50}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.replicas, 4);
+        assert_eq!(cfg.failover_retries, 1);
+        assert_eq!(cfg.quarantine_backoff_ms, 100);
+        assert_eq!(cfg.quarantine_backoff_max_ms, 800);
+        assert_eq!(cfg.probe_window_ms, 50);
+
+        let schema = Schema::new()
+            .value("replicas", "")
+            .value("failover-retries", "")
+            .value("quarantine-backoff-ms", "")
+            .value("quarantine-backoff-max-ms", "")
+            .value("probe-window-ms", "");
+        let a = schema
+            .parse(&[
+                "--replicas".to_string(),
+                "2".to_string(),
+                "--probe-window-ms".to_string(),
+                "25".to_string(),
+            ])
+            .unwrap();
+        cfg.apply_args(&a).unwrap();
+        assert_eq!(cfg.replicas, 2, "flag wins over json");
+        assert_eq!(cfg.probe_window_ms, 25);
+        // json-set values survive when no flag overrides them
+        assert_eq!(cfg.failover_retries, 1);
+        assert_eq!(cfg.quarantine_backoff_ms, 100);
     }
 
     #[test]

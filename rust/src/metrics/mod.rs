@@ -140,6 +140,13 @@ pub struct ServerCounters {
     /// Engine panics absorbed by the supervisor (session torn down and
     /// rebuilt; serving continued).
     pub engine_restarts_total: u64,
+    /// Replica workers respawned after quarantine (fleet mode): distinct
+    /// from `engine_restarts_total`, which counts in-place session
+    /// rebuilds inside a still-running worker.
+    pub replica_restarts_total: u64,
+    /// Queued requests re-dispatched to a healthy replica after their
+    /// replica was quarantined (retried-iff-zero-tokens).
+    pub failovers_total: u64,
     /// Lanes failed with a structured error — engine panics/errors,
     /// deadline expiry, disconnects, and shutdown stragglers all count.
     pub lanes_failed_total: u64,
@@ -201,6 +208,16 @@ impl ServerCounters {
             "fi_engine_restarts_total",
             "engine panics absorbed by the supervisor",
             self.engine_restarts_total as f64,
+        );
+        metric(
+            "fi_replica_restarts_total",
+            "replica workers respawned after quarantine",
+            self.replica_restarts_total as f64,
+        );
+        metric(
+            "fi_failovers_total",
+            "queued requests re-dispatched after a replica quarantine",
+            self.failovers_total as f64,
         );
         metric(
             "fi_lanes_failed_total",
@@ -369,6 +386,21 @@ mod tests {
         assert!(text.contains("fi_clients_disconnected 4"));
         assert!(text.contains("fi_conn_shed_total 6"));
         assert!(text.contains("fi_healthy 0"));
+    }
+
+    #[test]
+    fn fleet_counters_render() {
+        let mut c = ServerCounters::new();
+        c.replica_restarts_total = 2;
+        c.failovers_total = 5;
+        let text = c.render();
+        assert!(text.contains("fi_replica_restarts_total 2"));
+        assert!(text.contains("fi_failovers_total 5"));
+        // the fleet counters render even at zero so dashboards can rely
+        // on the series existing in single-replica mode too
+        let text = ServerCounters::new().render();
+        assert!(text.contains("fi_replica_restarts_total 0"));
+        assert!(text.contains("fi_failovers_total 0"));
     }
 
     #[test]

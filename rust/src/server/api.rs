@@ -1,83 +1,71 @@
-//! HTTP API + engine worker thread + the continuous-admission scheduler.
+//! HTTP API + the replica fleet front-end.
 //!
 //! Routes:
-//! * `GET  /health`      — liveness + model summary
-//! * `GET  /metrics`     — Prometheus-style counters
-//! * `GET  /v1/info`     — model dims, engine opts, artifact dir
+//! * `GET  /health`      — liveness; aggregates per-replica states
+//!   (`healthy`/`degraded`, 503 only when zero replicas are serviceable;
+//!   a fleet of one keeps PR 7's latched form exactly)
+//! * `GET  /metrics`     — Prometheus-style counters + fleet breakdown
+//! * `GET  /v1/info`     — model dims, engine opts, per-replica states
 //! * `POST /v1/generate` — `{"max_tokens": N}` → per-lane generation
 //!   result; optional per-request sampling (`"temperature"`, `"top_k"`,
-//!   `"sigma"`, `"seed"`); `{"stream": true}` → chunked NDJSON with one
-//!   event per position as the lane advances, ending in a
-//!   `{"done":true,...}` summary line (see DESIGN.md for the wire format).
+//!   `"sigma"`, `"seed"`), an optional `"session"` affinity key, and
+//!   `{"stream": true}` → chunked NDJSON with one event per position as
+//!   the lane advances, ending in a `{"done":true,...}` summary line
+//!   (see DESIGN.md for the wire format).
 //!
-//! PJRT handles are not `Send`, so the `Runtime`/`Engine` live on one
-//! dedicated worker thread; connection threads talk to it over an mpsc
-//! queue and, for streaming lanes, receive per-position events back over a
-//! dedicated channel. The worker runs the [`Scheduler`]: one long-lived
-//! `Session` whose lanes are *individually* recycled — a queued request is
-//! seeded into a free lane at the next step boundary (`Session::admit`)
-//! instead of waiting for the whole batch to drain. This is the LCSM
-//! analogue of vLLM-style continuous batching, adapted to the lockstep
-//! tile schedule: lanes can't have private schedules, but their *content*
-//! can restart at any step boundary (DESIGN.md §4).
-//!
-//! On top of admission sits **session paging** (DESIGN.md §6): under
-//! queue pressure the scheduler checkpoints the busy lane with the most
-//! remaining schedule into a slab [`Pager`] (`Session::suspend`), admits
-//! the waiting request immediately, and restores the evicted lane when a
-//! later session's clock reaches the suspension position
-//! (`Session::restore` — the alignment at which the resumed rollout is
-//! bit-identical to an uninterrupted one). One engine therefore holds
-//! arbitrarily many resumable requests, not just `B`.
+//! The engine side lives in [`super::replica`]: `--replicas N` spawns N
+//! `fi-engine-<id>` worker threads, each owning a private Runtime +
+//! Engine + Scheduler + Pager + restart budget (PJRT handles are not
+//! `Send`, and one failure domain per engine is the point — a panic
+//! storm quarantines one replica, not the server). Connection threads
+//! hand requests to [`super::router::Router`], which picks a replica by
+//! checkpoint affinity then least-loaded, and the `fi-router` supervisor
+//! thread re-dispatches failed-over work and respawns quarantined
+//! replicas (DESIGN.md §8).
 
-use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
-use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::{collect_batch, lane_len, GenRequest, LaneResult, SamplingParams, StreamEvent};
+use super::batcher::{GenRequest, LaneResult, SamplingParams, StreamEvent};
 use super::http::{
     configure_stream, finish_chunks, read_request, write_chunk, write_chunked_head,
     write_response, Request, Response,
 };
+use super::replica::{ReadyMsg, Replica, ReplicaCtx};
+use super::router::{supervise, Dispatch, Router};
 use crate::config::ServerConfig;
-use crate::engine::{
-    Engine, EngineOpts, LaneCheckpoint, LaneInit, Pager, SamplerCfg, Session, StepOutput,
-};
 use crate::metrics::Counters;
-use crate::model::Variant;
-use crate::runtime::Runtime;
 use crate::util::json::Json;
-use crate::util::threadpool::payload_text;
 
-/// A running server (listener + engine worker).
+/// A running server (listener + replica fleet + supervisor).
 pub struct Server {
     pub addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
+    /// Flipped only after the replica workers are joined, so a final
+    /// quarantine failback is still drained by the supervisor.
+    sup_shutdown: Arc<AtomicBool>,
     shared: Arc<Shared>,
     accept_thread: Option<thread::JoinHandle<()>>,
-    engine_thread: Option<thread::JoinHandle<()>>,
+    supervisor_thread: Option<thread::JoinHandle<()>>,
 }
 
 struct Shared {
     cfg: ServerConfig,
     counters: Counters,
-    /// `None` once the server is draining: the engine worker unparks and
-    /// exits when the last sender drops, so shutdown cannot hang.
-    queue: Mutex<Option<Sender<GenRequest>>>,
-    /// Requests accepted but not yet completed — the shed gate
-    /// (`max_queue`) reads this without bothering the engine thread.
+    router: Arc<Router>,
+    /// Requests accepted but not yet completed (drain gate at shutdown).
     inflight: Arc<AtomicU64>,
     /// Live `fi-conn` handler threads (accept-loop shed gate).
     conns: Arc<AtomicU64>,
-    /// Cleared (latched) once the supervisor's restart budget is
-    /// exhausted; `/health` mirrors it as 200 vs 503.
+    /// Fleet-of-one only: cleared (latched) once the single engine's
+    /// restart budget is exhausted; `/health` mirrors it as 200 vs 503.
+    /// Fleets aggregate per-replica states instead.
     healthy: Arc<AtomicBool>,
     /// Set during graceful shutdown: new and straggling requests are
     /// failed with 503 + Retry-After instead of being served.
@@ -94,601 +82,6 @@ impl Drop for ConnGuard {
     }
 }
 
-/// Rolling-window panic budget for the engine supervisor: absorbing the
-/// occasional panic keeps serving alive, but a crash loop should flip
-/// `/health` to 503 (latched — no flapping) so a load balancer drains us.
-struct RestartBudget {
-    budget: usize,
-    window: Duration,
-    panics: VecDeque<Instant>,
-}
-
-impl RestartBudget {
-    fn new(budget: usize, window: Duration) -> RestartBudget {
-        RestartBudget { budget, window, panics: VecDeque::new() }
-    }
-
-    /// Record one panic; returns `false` once the window holds more than
-    /// `budget` panics (the caller latches unhealthy).
-    fn record(&mut self, now: Instant) -> bool {
-        self.panics.push_back(now);
-        while let Some(&t) = self.panics.front() {
-            if now.duration_since(t) > self.window {
-                self.panics.pop_front();
-            } else {
-                break;
-            }
-        }
-        self.panics.len() <= self.budget
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Scheduler: one running session, per-lane request slots, a waiting queue
-// ---------------------------------------------------------------------------
-
-/// One busy lane: the request it serves plus its rebased bookkeeping.
-struct LaneSlot {
-    req: GenRequest,
-    /// Global batch position at admission (lane-local clock offset).
-    admitted_pos: usize,
-    /// Padded positions this lane generates (`lane_len(max_tokens)`).
-    limit: usize,
-    admitted_at: Instant,
-    queue_ms: f64,
-    /// Busy lanes (incl. this one) at admission.
-    batch_size: usize,
-    tokens: Vec<u32>,
-    /// Per-lane checksum running sum over the first `max_tokens` positions.
-    checksum_total: f64,
-    /// Times this request was evicted into the session pager.
-    evictions: u64,
-}
-
-/// A request swapped out of its lane under queue pressure: its serving
-/// slot (tokens so far, reply channel, stats) plus the engine-side lane
-/// checkpoint. Lives in the scheduler until a later session's clock
-/// reaches the checkpoint's suspension position (`Session::restore`'s
-/// same-alignment rule), at which point the slot goes back into a lane
-/// and the rollout continues bit-identically.
-struct EvictedLane {
-    slot: LaneSlot,
-    ckpt: LaneCheckpoint,
-}
-
-/// Continuous-admission scheduler: owns the running [`Session`], tracks
-/// free lanes, and seeds queued requests into them at step boundaries.
-struct Scheduler<'e, 'rt> {
-    engine: &'e Engine<'rt>,
-    session: Option<Session<'e, 'rt>>,
-    lanes: Vec<Option<LaneSlot>>,
-    queue: VecDeque<GenRequest>,
-    /// Session schedule length (padded `max_max_tokens`, clamped to L) —
-    /// every admissible request fits a fresh session by construction.
-    horizon: usize,
-    /// `false` = legacy drain-then-refill (admission only at position 0).
-    admit_mid_batch: bool,
-    /// Session pager for suspended-lane checkpoints (`None` = paging off;
-    /// forced off under drain-then-refill, which cannot re-seed lanes).
-    pager: Option<Pager>,
-    /// Requests evicted under queue pressure, waiting for a session whose
-    /// clock reaches their checkpoint's suspension position.
-    evicted: Vec<EvictedLane>,
-    counters: Counters,
-    inflight: Arc<AtomicU64>,
-}
-
-impl<'e, 'rt> Scheduler<'e, 'rt> {
-    fn new(
-        engine: &'e Engine<'rt>,
-        horizon: usize,
-        admit_mid_batch: bool,
-        pager: Option<Pager>,
-        counters: Counters,
-        inflight: Arc<AtomicU64>,
-    ) -> Scheduler<'e, 'rt> {
-        let b = engine.runtime().dims.b;
-        counters.lock().lanes_total = b as u64;
-        Scheduler {
-            engine,
-            session: None,
-            lanes: (0..b).map(|_| None).collect(),
-            queue: VecDeque::new(),
-            horizon,
-            admit_mid_batch,
-            pager: if admit_mid_batch { pager } else { None },
-            evicted: Vec::new(),
-            counters,
-            inflight,
-        }
-    }
-
-    fn enqueue(&mut self, req: GenRequest) {
-        self.queue.push_back(req);
-    }
-
-    /// Nothing running, nothing waiting, nothing paged out: the worker
-    /// may block.
-    fn is_idle(&self) -> bool {
-        self.session.is_none() && self.queue.is_empty() && self.evicted.is_empty()
-    }
-
-    fn busy_lanes(&self) -> usize {
-        self.lanes.iter().filter(|l| l.is_some()).count()
-    }
-
-    /// Per-request sampling override → the admitted lane's `SamplerCfg`
-    /// (`None` = keep the engine default for this lane).
-    fn lane_sampler_cfg(&self, s: &SamplingParams) -> Option<SamplerCfg> {
-        let opts: &EngineOpts = self.engine.opts();
-        match self.engine.runtime().dims.variant {
-            Variant::Synthetic => s.sigma.map(|sigma| SamplerCfg::Synthetic { sigma }),
-            Variant::Hyena => {
-                if s.temperature.is_none() && s.top_k.is_none() {
-                    None
-                } else {
-                    Some(SamplerCfg::Lm {
-                        temperature: s.temperature.unwrap_or(opts.temperature),
-                        top_k: s.top_k.unwrap_or(opts.top_k),
-                    })
-                }
-            }
-        }
-    }
-
-    /// Restore evicted lanes whose checkpoint position matches the
-    /// session clock (the only position `Session::restore` is exact at).
-    /// Runs *before* `evict_phase` so a just-evicted lane is never
-    /// bounced straight back in the same boundary; returns the lanes it
-    /// restored so `evict_phase` cannot re-evict them before they have
-    /// stepped even once (the inverse bounce).
-    fn resume_phase(&mut self) -> Vec<usize> {
-        let mut restored = Vec::new();
-        let Some(sess) = self.session.as_mut() else { return restored };
-        let now = sess.steps_done();
-        let mut i = 0;
-        while i < self.evicted.len() {
-            if self.evicted[i].ckpt.pos() != now {
-                i += 1;
-                continue;
-            }
-            let Some(lane) = (0..self.lanes.len()).find(|&l| self.lanes[l].is_none()) else {
-                break; // no free lane at the restore point: wait for a later session
-            };
-            let EvictedLane { slot, ckpt } = self.evicted.remove(i);
-            match sess.restore(lane, ckpt, self.pager.as_mut().unwrap()) {
-                Ok(()) => {
-                    self.lanes[lane] = Some(slot);
-                    restored.push(lane);
-                    self.counters.lock().resumes_total += 1;
-                }
-                Err(e) => {
-                    // the checkpoint is gone (blocks already released):
-                    // fail exactly this request and keep serving
-                    let _ = slot.req.reply.send(Err(format!("resume: {e:#}")));
-                    self.inflight.fetch_sub(1, Ordering::Relaxed);
-                }
-            }
-        }
-        restored
-    }
-
-    /// Under queue pressure — a waiting request, no free lane — suspend
-    /// the busy lane with the most remaining schedule into the pager so
-    /// the waiting request can be admitted now. Eviction only pays off
-    /// when the incoming request finishes before the victim would have,
-    /// so shorter-than-victim requests are the only trigger. Lanes in
-    /// `protected` (restored this very boundary) are never victims, and
-    /// already-evicted requests are preferred last, so a paged-out
-    /// request always makes forward progress between evictions instead
-    /// of thrashing under sustained pressure.
-    fn evict_phase(&mut self, protected: &[usize]) {
-        if self.pager.is_none() || self.session.is_none() {
-            return;
-        }
-        let sess = self.session.as_mut().unwrap();
-        let now = sess.steps_done();
-        if self.queue.is_empty() || self.lanes.iter().any(|l| l.is_none()) {
-            return;
-        }
-        // lanes freed now are reserved for checkpoints waiting further
-        // down this session's schedule — evicting would not admit anyone
-        if self.evicted.iter().any(|e| e.ckpt.pos() > now) {
-            return;
-        }
-        let remaining = sess.remaining();
-        let Some(need) = self
-            .queue
-            .iter()
-            .map(|r| lane_len(r.max_tokens, self.horizon))
-            .find(|&n| n <= remaining)
-        else {
-            return;
-        };
-        let Some(lane) = (0..self.lanes.len())
-            .filter(|&l| self.lanes[l].is_some() && !protected.contains(&l))
-            .max_by_key(|&l| {
-                let evictions = self.lanes[l].as_ref().unwrap().evictions;
-                let left = sess.lane_limit(l).saturating_sub(sess.lane_pos(l));
-                // fewest prior evictions first, then most remaining
-                (std::cmp::Reverse(evictions), left)
-            })
-        else {
-            return;
-        };
-        let victim_remaining = sess.lane_limit(lane).saturating_sub(sess.lane_pos(lane));
-        if victim_remaining <= need {
-            return;
-        }
-        // a full pager (or any transient failure) leaves every lane
-        // untouched — the waiting request simply keeps waiting
-        if let Ok(ckpt) = sess.suspend(lane, self.pager.as_mut().unwrap()) {
-            let mut slot = self.lanes[lane].take().unwrap();
-            slot.evictions += 1;
-            self.evicted.push(EvictedLane { slot, ckpt });
-            self.counters.lock().evictions_total += 1;
-        }
-    }
-
-    /// Open a session if needed, then admit queued requests onto free
-    /// lanes (this is the step boundary: `tick` calls it before `step`).
-    /// Order matters: resume (exact-position restores) → evict (free a
-    /// lane under pressure) → fresh admissions (minus lanes reserved for
-    /// checkpoints waiting later in this session's schedule).
-    fn admit_phase(&mut self) {
-        if self.session.is_none() && !(self.queue.is_empty() && self.evicted.is_empty()) {
-            // with mid-batch admission, open at the full horizon so later
-            // arrivals always have schedule headroom (the cost is one
-            // horizon-sized store allocation per session open); under
-            // drain-then-refill nothing joins later, so size the session
-            // to the batch it will actually run — the first B queued
-            // requests — like the legacy collector did
-            let len = if self.admit_mid_batch {
-                self.horizon
-            } else {
-                self.queue
-                    .iter()
-                    .take(self.lanes.len())
-                    .map(|r| lane_len(r.max_tokens, self.horizon))
-                    .max()
-                    .unwrap_or(1)
-            };
-            match self.engine.session(len) {
-                Ok(sess) => {
-                    self.session = Some(sess);
-                    for slot in &mut self.lanes {
-                        *slot = None;
-                    }
-                    self.counters.lock().sessions_started += 1;
-                }
-                Err(e) => {
-                    // a session that cannot even open would error forever:
-                    // fail the whole queue (and any paged-out requests,
-                    // which need a session to ever resume) instead of
-                    // spinning on it
-                    self.fail_queued(&format!("open session: {e:#}"));
-                    self.fail_evicted(&format!("open session: {e:#}"));
-                    return;
-                }
-            }
-        }
-        let (mid_batch, remaining, now) = match self.session.as_ref() {
-            Some(sess) => (sess.steps_done() > 0, sess.remaining(), sess.steps_done()),
-            None => return,
-        };
-        if mid_batch && !self.admit_mid_batch {
-            return;
-        }
-        let restored = self.resume_phase();
-        self.evict_phase(&restored);
-        // lanes kept free for checkpoints that must restore later in this
-        // session's schedule (strictly later: a checkpoint at the current
-        // position either just resumed or just got evicted)
-        let reserved = self.evicted.iter().filter(|e| e.ckpt.pos() > now).count();
-        for lane in 0..self.lanes.len() {
-            if self.lanes[lane].is_some() {
-                continue;
-            }
-            let free_now = self.lanes.iter().filter(|l| l.is_none()).count();
-            if free_now <= reserved {
-                break;
-            }
-            // first queued request whose padded schedule fits what's left
-            let Some(qi) = self
-                .queue
-                .iter()
-                .position(|r| lane_len(r.max_tokens, self.horizon) <= remaining)
-            else {
-                break;
-            };
-            let req = self.queue.remove(qi).unwrap();
-            let limit = lane_len(req.max_tokens, self.horizon);
-            let init = LaneInit {
-                limit,
-                sampler_cfg: self.lane_sampler_cfg(&req.sampling),
-                seed: req.sampling.seed,
-            };
-            let admitted_pos = {
-                let sess = self.session.as_mut().unwrap();
-                match sess.admit(lane, init) {
-                    Ok(()) => sess.steps_done(),
-                    Err(e) => {
-                        // fail exactly this request (never silently drop
-                        // it or leak its inflight slot) and keep serving
-                        let _ = req.reply.send(Err(format!("admit: {e:#}")));
-                        self.inflight.fetch_sub(1, Ordering::Relaxed);
-                        continue;
-                    }
-                }
-            };
-            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-            let batch_size = self.lanes.iter().filter(|l| l.is_some()).count() + 1;
-            self.lanes[lane] = Some(LaneSlot {
-                req,
-                admitted_pos,
-                limit,
-                admitted_at: Instant::now(),
-                queue_ms,
-                batch_size,
-                tokens: Vec::new(),
-                checksum_total: 0.0,
-                evictions: 0,
-            });
-            let mut c = self.counters.lock();
-            c.admissions_total += 1;
-            if mid_batch {
-                c.admissions_mid_batch += 1;
-            }
-            c.admission_latency.record_ns(queue_ms * 1e6);
-        }
-    }
-
-    /// Fail every *queued* (not yet admitted) request.
-    fn fail_queued(&mut self, msg: &str) {
-        while let Some(req) = self.queue.pop_front() {
-            let _ = req.reply.send(Err(msg.to_string()));
-            self.inflight.fetch_sub(1, Ordering::Relaxed);
-        }
-    }
-
-    /// Fail every evicted (paged-out) request and release its checkpoint.
-    /// Only the cannot-even-open-a-session path uses this — a mere engine
-    /// step error keeps checkpoints alive for the next session.
-    fn fail_evicted(&mut self, msg: &str) {
-        for e in self.evicted.drain(..) {
-            if let Some(p) = self.pager.as_mut() {
-                p.discard(e.ckpt);
-            }
-            let _ = e.slot.req.reply.send(Err(msg.to_string()));
-            self.inflight.fetch_sub(1, Ordering::Relaxed);
-        }
-    }
-
-    /// Route one step's outputs to the busy lanes; complete any lane that
-    /// reached its padded schedule.
-    fn deliver(&mut self, step: &StepOutput) {
-        for lane in 0..self.lanes.len() {
-            let finished = {
-                let Some(slot) = self.lanes[lane].as_mut() else { continue };
-                let local = step.pos - slot.admitted_pos;
-                let checksum = step.lane_checksums.get(lane).copied().unwrap_or(0.0);
-                if let Some(toks) = &step.tokens {
-                    slot.tokens.push(toks[lane]);
-                }
-                // the lane generates min(max_tokens, limit) useful
-                // positions: with max_max_tokens clamped to L at startup
-                // the two are equal, but stay defensive so a request
-                // whose padded schedule got capped is never promised
-                // (or counted as) more positions than the lane runs
-                let wanted = slot.req.max_tokens.min(slot.limit);
-                if local <= wanted {
-                    slot.checksum_total += checksum as f64;
-                    if let Some(tx) = &slot.req.stream {
-                        let token = step.tokens.as_ref().map(|t| t[lane]);
-                        if tx.send(StreamEvent { pos: local, token, checksum }).is_err() {
-                            // receiver dropped: the streaming client hung
-                            // up — flag the lane so `cancel_phase` frees
-                            // it at the next step boundary
-                            slot.req.cancel.store(true, Ordering::Relaxed);
-                        }
-                    }
-                }
-                if local >= wanted {
-                    slot.req.stream = None; // early stop: close the event stream
-                }
-                local >= slot.limit
-            };
-            if finished {
-                self.finish_lane(lane);
-            }
-        }
-    }
-
-    fn finish_lane(&mut self, lane: usize) {
-        let Some(slot) = self.lanes[lane].take() else { return };
-        let tokens = if slot.tokens.is_empty() {
-            None
-        } else {
-            Some(slot.tokens[..slot.req.max_tokens.min(slot.tokens.len())].to_vec())
-        };
-        let result = LaneResult {
-            tokens,
-            steps: slot.limit,
-            checksum_total: slot.checksum_total,
-            admitted_pos: slot.admitted_pos,
-            queue_ms: slot.queue_ms,
-            gen_ms: slot.admitted_at.elapsed().as_secs_f64() * 1e3,
-            batch_size: slot.batch_size,
-            evictions: slot.evictions,
-        };
-        let _ = slot.req.reply.send(Ok(result));
-        self.inflight.fetch_sub(1, Ordering::Relaxed);
-    }
-
-    /// Fail exactly one busy lane with a structured error; the lane frees
-    /// at this step boundary and can be re-admitted immediately.
-    fn fail_lane(&mut self, lane: usize, msg: &str) {
-        let Some(slot) = self.lanes[lane].take() else { return };
-        let _ = slot.req.reply.send(Err(msg.to_string()));
-        self.inflight.fetch_sub(1, Ordering::Relaxed);
-        self.counters.lock().lanes_failed_total += 1;
-    }
-
-    /// Fail every busy lane (engine error or panic): each admitted request
-    /// gets the error; queued requests stay queued for the next session.
-    /// Dropping the session here is the panic-safe teardown path: AsyncTau's
-    /// Drop drains in-flight tile jobs swallowing join errors, and the
-    /// worker-side readiness guard has already balanced `end_write` on any
-    /// panicking job, so the take() can neither hang nor re-panic. Pager
-    /// checkpoints live *outside* the session and survive untouched.
-    fn fail_busy(&mut self, msg: &str) {
-        for lane in 0..self.lanes.len() {
-            self.fail_lane(lane, msg);
-        }
-        self.session = None;
-    }
-
-    /// Step-boundary sweep for requests that should stop early: the client
-    /// hung up (cancel flag) or the deadline passed. Busy lanes are failed
-    /// and freed for re-admission; queued and paged-out requests are
-    /// dropped before they ever (re)occupy a lane.
-    fn cancel_phase(&mut self) {
-        let now = Instant::now();
-        for lane in 0..self.lanes.len() {
-            let Some(c) = self.lanes[lane].as_ref().and_then(|s| check_cancel(&s.req, now))
-            else {
-                continue;
-            };
-            self.note_cancel(&c);
-            self.fail_lane(lane, c.message());
-        }
-        let mut i = 0;
-        while i < self.queue.len() {
-            match check_cancel(&self.queue[i], now) {
-                None => i += 1,
-                Some(c) => {
-                    let req = self.queue.remove(i).unwrap();
-                    self.note_cancel(&c);
-                    let _ = req.reply.send(Err(c.message().to_string()));
-                    self.inflight.fetch_sub(1, Ordering::Relaxed);
-                }
-            }
-        }
-        let mut i = 0;
-        while i < self.evicted.len() {
-            match check_cancel(&self.evicted[i].slot.req, now) {
-                None => i += 1,
-                Some(c) => {
-                    let e = self.evicted.remove(i);
-                    if let Some(p) = self.pager.as_mut() {
-                        p.discard(e.ckpt);
-                    }
-                    self.note_cancel(&c);
-                    let _ = e.slot.req.reply.send(Err(c.message().to_string()));
-                    self.inflight.fetch_sub(1, Ordering::Relaxed);
-                }
-            }
-        }
-    }
-
-    fn note_cancel(&mut self, c: &Cancel) {
-        let mut g = self.counters.lock();
-        match c {
-            Cancel::Deadline => g.requests_deadline_exceeded += 1,
-            Cancel::Disconnected => g.clients_disconnected += 1,
-        }
-    }
-
-    /// A queued request could be admitted into the current session at the
-    /// next step boundary: something queued fits the remaining schedule
-    /// AND this session may still take admissions (mid-batch admissions
-    /// are disabled under drain-then-refill once the session has moved).
-    fn queue_admissible(&self) -> bool {
-        let Some(sess) = self.session.as_ref() else { return !self.queue.is_empty() };
-        if sess.steps_done() > 0 && !self.admit_mid_batch {
-            return false;
-        }
-        let remaining = sess.remaining();
-        self.queue.iter().any(|r| lane_len(r.max_tokens, self.horizon) <= remaining)
-    }
-
-    /// A checkpoint can still be restored by the *current* session (its
-    /// suspension position has not been stepped past) — keeps an
-    /// otherwise-idle session alive until the restore point.
-    fn resumes_reachable(&self) -> bool {
-        let Some(sess) = self.session.as_ref() else { return false };
-        let now = sess.steps_done();
-        self.evicted.iter().any(|e| e.ckpt.pos() >= now)
-    }
-
-    fn publish_gauges(&self) {
-        let mut c = self.counters.lock();
-        c.queue_depth = self.queue.len() as u64;
-        c.lanes_busy = self.busy_lanes() as u64;
-        c.pager_resident_values = self.pager.as_ref().map_or(0, |p| p.resident_values() as u64);
-    }
-
-    /// One step boundary: cancel, admit, advance one position, deliver,
-    /// and retire the session when it has nothing left to do.
-    fn tick(&mut self) -> Result<()> {
-        self.cancel_phase();
-        self.admit_phase();
-        if self.session.is_some() {
-            let step = self.session.as_mut().unwrap().step()?;
-            self.deliver(&step);
-            // retire: schedule exhausted, or every lane idle with nothing
-            // admissible left (a fresh session can always fit the queue)
-            // and no checkpoint still restorable at a later position of
-            // this session — an idle session otherwise keeps stepping
-            // toward the restore point (bounded by the horizon)
-            let done = step.done;
-            let parked = self.busy_lanes() == 0
-                && !self.queue_admissible()
-                && !self.resumes_reachable();
-            if done || parked {
-                if let Some(sess) = self.session.take() {
-                    // finish() drains in-flight async tiles before the
-                    // store drops — required even for an early retire
-                    let _ = sess.finish();
-                    self.counters.lock().batches_run += 1;
-                }
-                // a `done` session cannot have stragglers (admission
-                // guarantees limit <= remaining), but stay defensive
-                self.fail_busy("session retired with the lane still running");
-            }
-        }
-        self.publish_gauges();
-        Ok(())
-    }
-}
-
-/// Why a request is being cancelled at a step boundary.
-enum Cancel {
-    Deadline,
-    Disconnected,
-}
-
-impl Cancel {
-    fn message(&self) -> &'static str {
-        match self {
-            Cancel::Deadline => "deadline exceeded",
-            Cancel::Disconnected => "client disconnected",
-        }
-    }
-}
-
-/// Deadline first: a request that is both late *and* abandoned reports
-/// the deadline (the deterministic one of the two).
-fn check_cancel(req: &GenRequest, now: Instant) -> Option<Cancel> {
-    if req.deadline.is_some_and(|d| now >= d) {
-        return Some(Cancel::Deadline);
-    }
-    if req.cancel.load(Ordering::Relaxed) {
-        return Some(Cancel::Disconnected);
-    }
-    None
-}
-
 impl Server {
     /// Bind and start serving. `port = 0` picks an ephemeral port.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
@@ -697,8 +90,10 @@ impl Server {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
 
-        let (req_tx, req_rx) = channel::<GenRequest>();
+        let mut cfg = cfg;
+        cfg.replicas = cfg.replicas.max(1);
         let shutdown = Arc::new(AtomicBool::new(false));
+        let sup_shutdown = Arc::new(AtomicBool::new(false));
         let counters = Counters::new();
         let inflight = Arc::new(AtomicU64::new(0));
         let conns = Arc::new(AtomicU64::new(0));
@@ -721,165 +116,78 @@ impl Server {
             Err(e) => anyhow::bail!("invalid FI_FAULTS: {e:#}"),
         }
 
-        // ---- engine worker (owns the non-Send PJRT state) ----
-        // ready payload: the /v1/info document plus the *effective*
-        // max_max_tokens (clamped to the model's L — only the worker
-        // knows dims), which the front-end validation must agree on
-        let (ready_tx, ready_rx) = channel::<Result<(Json, usize), String>>();
-        let ecfg = cfg.clone();
-        let wcounters = counters.clone();
-        let winflight = inflight.clone();
-        let whealthy = healthy.clone();
-        let wdraining = draining.clone();
-        let engine_thread = thread::Builder::new()
-            .name("fi-engine".into())
-            .spawn(move || {
-                let rt = match Runtime::load(&ecfg.artifacts) {
-                    Ok(rt) => rt,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("load runtime: {e:#}")));
-                        return;
+        // ---- replica fleet (each worker owns non-Send PJRT state) ----
+        let (failback_tx, failback_rx) = channel::<GenRequest>();
+        let ctx = ReplicaCtx {
+            cfg: cfg.clone(),
+            counters: counters.clone(),
+            inflight: inflight.clone(),
+            healthy: healthy.clone(),
+            draining: draining.clone(),
+            failback: failback_tx,
+        };
+        let replicas: Vec<Arc<Replica>> =
+            (0..cfg.replicas).map(|i| Replica::new(i, &cfg)).collect();
+        let mut readies: Vec<Receiver<ReadyMsg>> = Vec::with_capacity(replicas.len());
+        for r in &replicas {
+            let (ready_tx, ready_rx) = channel::<ReadyMsg>();
+            r.clone().spawn_worker(ctx.clone(), Some(ready_tx));
+            readies.push(ready_rx);
+        }
+        // Every replica serves the same artifacts, so the first clean
+        // boot's info document + clamped ceiling speak for the fleet.
+        // Partial boot failures leave those replicas quarantined for the
+        // supervisor to retry; zero clean boots is a startup error, with
+        // PR 7's message shape for the single-replica case.
+        let mut adopted: Option<(Json, usize)> = None;
+        let mut first_err: Option<String> = None;
+        for (i, ready) in readies.into_iter().enumerate() {
+            match ready.recv() {
+                Ok(Ok(payload)) => {
+                    if adopted.is_none() {
+                        adopted = Some(payload);
                     }
-                };
-                let mut engine = match Engine::new(&rt, ecfg.engine) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("init engine: {e:#}")));
-                        return;
-                    }
-                };
-                let dims = rt.dims;
-                let mut ecfg = ecfg;
-                // A request with max_tokens in (L, max_max_tokens] would
-                // get a lane schedule capped at L (`lane_len`) yet be
-                // accepted — and previously *accounted* — as max_tokens
-                // positions. Clamp the advertised ceiling to what a lane
-                // can actually run, once, loudly.
-                if ecfg.max_max_tokens > dims.l {
+                }
+                Ok(Err(e)) => {
                     eprintln!(
-                        "flashinfer: max_max_tokens {} exceeds the schedule ceiling L={}; \
-                         clamping (a lane can generate at most L positions)",
-                        ecfg.max_max_tokens, dims.l
+                        "flashinfer: replica {i} failed to boot: {e} \
+                         (quarantined; the supervisor will retry)"
                     );
-                    ecfg.max_max_tokens = dims.l;
+                    first_err.get_or_insert(e);
                 }
-                // Cold-start: derive every per-U rho structure (spectra +
-                // PJRT tau executables) for the largest session a request
-                // can trigger, so the first request's measured gen_ms
-                // contains no one-time derivation cost.
-                let horizon = lane_len(ecfg.max_max_tokens, dims.l);
-                if let Err(e) = engine.prewarm(horizon) {
-                    let _ = ready_tx.send(Err(format!("prewarm engine: {e:#}")));
-                    return;
+                Err(_) => {
+                    eprintln!("flashinfer: replica {i} died during startup");
                 }
-                let info = info_json(&ecfg, &ecfg.engine, &rt);
-                let _ = ready_tx.send(Ok((info, ecfg.max_max_tokens)));
-                let engine = engine; // freeze: the scheduler borrows it
-                let window = Duration::from_millis(ecfg.batch_window_ms);
-                let pager = if ecfg.paging && ecfg.continuous_admission {
-                    Some(engine.make_pager(ecfg.pager_capacity_mb))
-                } else {
-                    None
-                };
-                let lcounters = wcounters.clone();
-                let mut sched = Scheduler::new(
-                    &engine,
-                    horizon,
-                    ecfg.continuous_admission,
-                    pager,
-                    wcounters,
-                    winflight,
-                );
-                let mut budget = RestartBudget::new(
-                    ecfg.restart_budget,
-                    Duration::from_secs(ecfg.restart_window_s),
-                );
-                let mut disconnected = false;
-                loop {
-                    if wdraining.load(Ordering::Relaxed) {
-                        // graceful shutdown: stragglers get a retryable
-                        // 503 instead of hanging past the drain deadline
-                        sched.fail_busy("shutting down, retry later");
-                        sched.fail_queued("shutting down, retry later");
-                        sched.fail_evicted("shutting down, retry later");
-                        break;
-                    }
-                    if sched.is_idle() {
-                        if disconnected {
-                            break;
-                        }
-                        // block for the first request; drain co-arrivals
-                        // within the window so they share one session
-                        match collect_batch(&req_rx, dims.b, window) {
-                            Some(batch) => {
-                                for r in batch {
-                                    sched.enqueue(r);
-                                }
-                            }
-                            None => {
-                                // all senders gone: re-check the drain
-                                // flag at the loop top before exiting
-                                disconnected = true;
-                                continue;
-                            }
-                        }
-                    } else {
-                        // step boundary: pick up new arrivals non-blocking
-                        loop {
-                            match req_rx.try_recv() {
-                                Ok(r) => sched.enqueue(r),
-                                Err(TryRecvError::Empty) => break,
-                                Err(TryRecvError::Disconnected) => {
-                                    disconnected = true;
-                                    break;
-                                }
-                            }
-                        }
-                    }
-                    // One supervised step boundary. On panic every busy
-                    // lane gets a structured error and the (possibly
-                    // inconsistent) Session is dropped via the panic-safe
-                    // drain, so no broken invariant survives into the
-                    // next iteration; pager checkpoints are preserved and
-                    // a fresh session opens on the next admissible tick.
-                    match catch_unwind(AssertUnwindSafe(|| sched.tick())) {
-                        Ok(Ok(())) => {}
-                        Ok(Err(e)) => sched.fail_busy(&format!("generate: {e:#}")),
-                        Err(payload) => {
-                            let msg = payload_text(payload.as_ref());
-                            eprintln!("flashinfer: engine step panicked: {msg}");
-                            sched.fail_busy(&format!("engine panicked: {msg}"));
-                            lcounters.lock().engine_restarts_total += 1;
-                            if !budget.record(Instant::now()) {
-                                eprintln!(
-                                    "flashinfer: engine restart budget exhausted \
-                                     (> {} panics within {}s); marking unhealthy",
-                                    ecfg.restart_budget, ecfg.restart_window_s
-                                );
-                                lcounters.lock().healthy = 0;
-                                whealthy.store(false, Ordering::Relaxed);
-                            }
-                        }
-                    }
-                }
-            })
-            .context("spawn engine thread")?;
-
-        let (info, effective_max) = match ready_rx.recv() {
-            Ok(Ok(ready)) => ready,
-            Ok(Err(e)) => anyhow::bail!("engine failed to start: {e}"),
-            Err(_) => anyhow::bail!("engine thread died during startup"),
+            }
+        }
+        let (info, effective_max) = match adopted {
+            Some(ready) => ready,
+            None => match first_err {
+                Some(e) => anyhow::bail!("engine failed to start: {e}"),
+                None => anyhow::bail!("engine thread died during startup"),
+            },
         };
         // adopt the worker's clamped ceiling so front-door validation,
         // token accounting, and the engine's lane schedules all agree
-        let mut cfg = cfg;
         cfg.max_max_tokens = effective_max;
         cfg.default_max_tokens = cfg.default_max_tokens.min(effective_max);
+        let b = info.get("B").and_then(Json::as_usize).unwrap_or(0);
+        counters.lock().lanes_total = (cfg.replicas * b) as u64;
+
+        let router = Arc::new(Router::new(replicas, &cfg));
+
+        // ---- supervisor: failover re-dispatch + quarantine respawn ----
+        let sup_router = router.clone();
+        let sup_flag = sup_shutdown.clone();
+        let supervisor_thread = thread::Builder::new()
+            .name("fi-router".into())
+            .spawn(move || supervise(sup_router, ctx, failback_rx, sup_flag))
+            .context("spawn router supervisor thread")?;
 
         let shared = Arc::new(Shared {
             cfg,
             counters,
-            queue: Mutex::new(Some(req_tx)),
+            router,
             inflight,
             conns,
             healthy,
@@ -935,15 +243,17 @@ impl Server {
         Ok(Server {
             addr,
             shutdown,
-            shared: shared.clone(),
+            sup_shutdown,
+            shared,
             accept_thread: Some(accept_thread),
-            engine_thread: Some(engine_thread),
+            supervisor_thread: Some(supervisor_thread),
         })
     }
 
     /// Graceful shutdown: stop accepting, give in-flight requests up to
-    /// `drain_deadline_ms` to finish, then flip the draining flag so the
-    /// engine fails stragglers with a retryable 503 and exits.
+    /// `drain_deadline_ms` to finish, then flip the draining flag so
+    /// every replica fails stragglers with a retryable 503 and exits.
+    /// All replicas drain concurrently against the one deadline.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
@@ -953,43 +263,20 @@ impl Server {
         while self.shared.inflight.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
             thread::sleep(Duration::from_millis(10));
         }
-        // flip draining *before* dropping the queue sender: a worker
+        // flip draining *before* dropping the queue senders: a worker
         // blocked in collect_batch unparks on the drop and re-checks the
         // flag, failing stragglers with "shutting down, retry later"
         self.shared.draining.store(true, Ordering::Relaxed);
-        *self.shared.queue.lock().unwrap_or_else(PoisonError::into_inner) = None;
-        if let Some(t) = self.engine_thread.take() {
+        self.shared.router.close();
+        self.shared.router.join_workers();
+        // the supervisor exits last: a replica that quarantined during
+        // the drain may have handed work back, and the supervisor's own
+        // shutdown path fails that straggler traffic structurally
+        self.sup_shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.supervisor_thread.take() {
             let _ = t.join();
         }
     }
-}
-
-fn info_json(cfg: &ServerConfig, eng: &EngineOpts, rt: &Runtime) -> Json {
-    let d = rt.dims;
-    Json::from_pairs(vec![
-        ("variant", Json::Str(d.variant.as_str().into())),
-        ("M", Json::Num(d.m as f64)),
-        ("D", Json::Num(d.d as f64)),
-        ("L", Json::Num(d.l as f64)),
-        ("B", Json::Num(d.b as f64)),
-        ("V", Json::Num(d.v as f64)),
-        ("method", Json::Str(eng.method.as_str().into())),
-        ("tau", Json::Str(eng.tau.as_str().into())),
-        ("async_mixer", Json::Bool(eng.async_mixer)),
-        ("split_min_u", Json::Num(eng.split_min_u as f64)),
-        ("mixer_workers", Json::Num(eng.mixer_workers as f64)),
-        ("continuous_admission", Json::Bool(cfg.continuous_admission)),
-        ("max_queue", Json::Num(cfg.max_queue as f64)),
-        ("paging", Json::Bool(cfg.paging && cfg.continuous_admission)),
-        ("pager_capacity_mb", Json::Num(cfg.pager_capacity_mb as f64)),
-        ("max_max_tokens", Json::Num(cfg.max_max_tokens as f64)),
-        ("deadline_ms", Json::Num(cfg.deadline_ms as f64)),
-        ("max_connections", Json::Num(cfg.max_connections as f64)),
-        ("restart_budget", Json::Num(cfg.restart_budget as f64)),
-        ("restart_window_s", Json::Num(cfg.restart_window_s as f64)),
-        ("drain_deadline_ms", Json::Num(cfg.drain_deadline_ms as f64)),
-        ("artifacts", Json::Str(cfg.artifacts.display().to_string())),
-    ])
 }
 
 fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) {
@@ -1015,31 +302,77 @@ fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) {
     let _ = write_response(&mut stream, &resp);
 }
 
+/// `true` = the server can take traffic: the PR 7 latch for a fleet of
+/// one, "some replica is serviceable" for a real fleet.
+fn fleet_healthy(shared: &Shared) -> bool {
+    if shared.cfg.replicas <= 1 {
+        shared.healthy.load(Ordering::Relaxed)
+    } else {
+        shared.router.serviceable() > 0
+    }
+}
+
+fn health(shared: &Shared) -> Response {
+    if shared.cfg.replicas <= 1 {
+        // PR 7 shape, exactly: latched by the worker once the restart
+        // budget is exhausted — a load balancer sees a deterministic
+        // 503, not a flapping crash loop
+        return if shared.healthy.load(Ordering::Relaxed) {
+            Response::json(200, "{\"status\":\"ok\"}".into())
+        } else {
+            let restarts = shared.counters.lock().engine_restarts_total;
+            let body = Json::from_pairs(vec![
+                ("status", Json::Str("unhealthy".into())),
+                ("engine_restarts", Json::Num(restarts as f64)),
+            ]);
+            Response::json(503, body.to_string())
+        };
+    }
+    // fleet: aggregate — one quarantined replica degrades, it does not
+    // condemn; 503 is reserved for a full outage
+    let total = shared.cfg.replicas;
+    let serving = shared.router.serving();
+    let serviceable = shared.router.serviceable();
+    let status = if serviceable == 0 {
+        "unhealthy"
+    } else if serving == total {
+        "healthy"
+    } else {
+        "degraded"
+    };
+    let body = Json::from_pairs(vec![
+        ("status", Json::Str(status.into())),
+        ("replicas_total", Json::Num(total as f64)),
+        ("replicas_serving", Json::Num(serving as f64)),
+        ("replicas_serviceable", Json::Num(serviceable as f64)),
+        ("replicas", shared.router.replica_states()),
+    ]);
+    Response::json(if serviceable == 0 { 503 } else { 200 }, body.to_string())
+}
+
 fn route(req: &Request, shared: &Shared) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/health") => {
-            // latched by the supervisor once the restart budget is
-            // exhausted: a load balancer sees a deterministic 503, not a
-            // flapping crash loop
-            if shared.healthy.load(Ordering::Relaxed) {
-                Response::json(200, "{\"status\":\"ok\"}".into())
-            } else {
-                let restarts = shared.counters.lock().engine_restarts_total;
-                let body = Json::from_pairs(vec![
-                    ("status", Json::Str("unhealthy".into())),
-                    ("engine_restarts", Json::Num(restarts as f64)),
-                ]);
-                Response::json(503, body.to_string())
-            }
+        ("GET", "/health") => health(shared),
+        ("GET", "/metrics") => {
+            // roll per-replica gauges into the counters first so the
+            // rendered fi_queue_depth/fi_lanes_busy lines are current
+            let fleet = shared.router.publish(&shared.counters, &shared.healthy);
+            let mut text = shared.counters.lock().render();
+            text.push_str(&fleet);
+            Response::text(200, text)
         }
-        ("GET", "/metrics") => Response::text(200, shared.counters.lock().render()),
         ("GET", "/v1/info") => {
             let mut info = shared.info.clone();
             let restarts = shared.counters.lock().engine_restarts_total;
             info.set("engine_restarts", Json::Num(restarts as f64));
-            info.set("healthy", Json::Bool(shared.healthy.load(Ordering::Relaxed)));
+            info.set("healthy", Json::Bool(fleet_healthy(shared)));
             let faults = crate::util::faultpoint::active_spec().unwrap_or_default();
             info.set("faults", Json::Str(faults));
+            info.set(
+                "replicas_serviceable",
+                Json::Num(shared.router.serviceable() as f64),
+            );
+            info.set("replica_states", shared.router.replica_states());
             Response::json(200, info.to_string())
         }
         ("POST" | "GET", _) => Response::not_found(),
@@ -1103,6 +436,16 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
             return;
         }
     };
+    let session = match j.get("session") {
+        None => None,
+        Some(v) => match v.as_str() {
+            Some(s) => Some(s.to_string()),
+            None => {
+                let _ = write_response(stream, &reject("session must be a string".into()));
+                return;
+            }
+        },
+    };
     let want_stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
     let req_deadline_ms = match j.get("deadline_ms") {
         None => None,
@@ -1129,24 +472,6 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
     let deadline =
         (budget_ms != u64::MAX).then(|| Instant::now() + Duration::from_millis(budget_ms));
 
-    // shed before enqueueing: a bounded *waiting* queue keeps overload
-    // failures fast and explicit instead of timing out 600 s later.
-    // waiting = accepted-but-unfinished minus the lanes actively serving
-    // (the busy gauge lags by at most one step boundary, which only ever
-    // sheds a hair early under a full batch — never while lanes idle)
-    let waiting = shared
-        .inflight
-        .load(Ordering::Relaxed)
-        .saturating_sub(shared.counters.lock().lanes_busy);
-    if waiting >= shared.cfg.max_queue as u64 {
-        let mut c = shared.counters.lock();
-        c.requests_failed += 1;
-        c.requests_shed += 1;
-        drop(c);
-        let _ = write_response(stream, &Response::too_many_requests());
-        return;
-    }
-
     let (tx, rx) = channel();
     let (event_tx, event_rx) = if want_stream {
         let (etx, erx) = channel();
@@ -1163,21 +488,44 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
         stream: event_tx,
         deadline,
         cancel: cancel.clone(),
+        session,
+        failovers: 0,
     };
+    // The router is the shed gate: per-replica queues are bounded at
+    // `max_queue`, and only when *every* serviceable replica is full
+    // does the request bounce (429 for a single engine — PR 7's shape —
+    // 503 + Retry-After for a fleet, where "all queues full" is a
+    // capacity statement about the whole deployment).
     shared.inflight.fetch_add(1, Ordering::Relaxed);
-    let sent = {
-        let q = shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
-        match q.as_ref() {
-            Some(tx) => tx.send(request).is_ok(),
-            None => false, // draining: the sender is already gone
+    match shared.router.dispatch(request) {
+        Dispatch::Ok => {}
+        Dispatch::Fault(msg, _req) => {
+            shared.inflight.fetch_sub(1, Ordering::Relaxed);
+            shared.counters.lock().requests_failed += 1;
+            let _ = write_response(stream, &error_response(msg));
+            return;
         }
-    };
-    if !sent {
-        shared.inflight.fetch_sub(1, Ordering::Relaxed);
-        shared.counters.lock().requests_failed += 1;
-        let resp = Response::unavailable("engine unavailable, retry later", 1);
-        let _ = write_response(stream, &resp);
-        return;
+        Dispatch::AllFull(_req) => {
+            shared.inflight.fetch_sub(1, Ordering::Relaxed);
+            let mut c = shared.counters.lock();
+            c.requests_failed += 1;
+            c.requests_shed += 1;
+            drop(c);
+            let resp = if shared.cfg.replicas <= 1 {
+                Response::too_many_requests()
+            } else {
+                Response::shed(503, "all replica queues full, retry later", 1)
+            };
+            let _ = write_response(stream, &resp);
+            return;
+        }
+        Dispatch::NoReplica(_req) => {
+            shared.inflight.fetch_sub(1, Ordering::Relaxed);
+            shared.counters.lock().requests_failed += 1;
+            let resp = Response::unavailable("no healthy replica, retry later", 1);
+            let _ = write_response(stream, &resp);
+            return;
+        }
     }
     match event_rx {
         Some(events) => stream_reply(shared, stream, events, rx, max_tokens, &cancel),
@@ -1207,9 +555,10 @@ fn socket_closed(stream: &TcpStream) -> bool {
 }
 
 /// Map a scheduler-side failure string to a wire response: shutdown
-/// stragglers get a retryable 503, everything else a structured 500.
+/// stragglers and fleet outages get a retryable 503, everything else a
+/// structured 500.
 fn error_response(e: String) -> Response {
-    if e.starts_with("shutting down") {
+    if e.starts_with("shutting down") || e.starts_with("no healthy replica") {
         Response::unavailable(&e, 1)
     } else {
         Response::json(500, Json::from_pairs(vec![("error", Json::Str(e))]).to_string())
@@ -1243,7 +592,7 @@ fn buffered_reply(
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
-                // engine worker died without replying
+                // replica worker died without replying
                 shared.counters.lock().requests_failed += 1;
                 return Response::unavailable("engine unavailable, retry later", 1);
             }
@@ -1266,6 +615,7 @@ fn buffered_reply(
                 ("gen_ms", Json::Num(lane.gen_ms)),
                 ("batch_size", Json::Num(lane.batch_size as f64)),
                 ("evictions", Json::Num(lane.evictions as f64)),
+                ("replica", Json::Num(lane.replica as f64)),
             ];
             if let Some(toks) = lane.tokens {
                 pairs.push((
@@ -1367,6 +717,7 @@ fn stream_tail(
                 ("gen_ms", Json::Num(lane.gen_ms)),
                 ("batch_size", Json::Num(lane.batch_size as f64)),
                 ("evictions", Json::Num(lane.evictions as f64)),
+                ("replica", Json::Num(lane.replica as f64)),
             ])
         }
         Ok(Err(e)) => {

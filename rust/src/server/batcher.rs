@@ -54,6 +54,15 @@ pub struct GenRequest {
     /// scheduler cancels the lane (or dequeues the request) at the next
     /// step boundary instead of generating for a ghost.
     pub cancel: Arc<AtomicBool>,
+    /// Client-supplied session key, used by the router for
+    /// checkpoint-affinity: repeated requests with the same key land on
+    /// the same replica so an evicted checkpoint can be resumed there.
+    pub session: Option<String>,
+    /// Times this request has been re-dispatched after its replica was
+    /// quarantined. Only requests that never produced a token are
+    /// retried (retried-iff-zero-tokens), bounded by
+    /// `ServerConfig::failover_retries`.
+    pub failovers: u32,
 }
 
 /// One incremental per-position event on a streaming lane.
@@ -95,6 +104,10 @@ pub struct LaneResult {
     /// invisible — the rollout stays bit-identical — so this is purely an
     /// observability/fairness signal (and what the paging probes assert).
     pub evictions: u64,
+    /// Id of the replica that ran this lane (always 0 when
+    /// `replicas == 1`). Rollouts are bit-identical across replicas, so
+    /// this is an observability field, not a correctness one.
+    pub replica: usize,
 }
 
 /// Collect up to `max_lanes` requests: blocks for the first one, then
@@ -145,6 +158,8 @@ mod tests {
                 stream: None,
                 deadline: None,
                 cancel: Arc::new(AtomicBool::new(false)),
+                session: None,
+                failovers: 0,
             },
             rx,
         )

@@ -74,17 +74,26 @@ impl Response {
     /// (`ServerConfig::max_queue`), so the request is rejected up front
     /// instead of being queued toward a distant timeout.
     pub fn too_many_requests() -> Response {
-        Response::json(429, "{\"error\":\"queue full, retry later\"}".into())
+        Response::shed(429, "queue full, retry later", 1)
     }
 
     /// 503 with a `Retry-After` hint: connection-cap shed, engine
     /// unavailable, and graceful-shutdown stragglers all use this shape.
     pub fn unavailable(msg: &str, retry_after_s: u64) -> Response {
+        Response::shed(503, msg, retry_after_s)
+    }
+
+    /// The one shed constructor: every rejected-for-capacity path — the
+    /// 429 queue shed, 503 connection/replica sheds, drain stragglers —
+    /// emits a structured error body *and* a `Retry-After` hint through
+    /// here, so no shed response can forget to tell a well-behaved
+    /// client when to come back.
+    pub fn shed(status: u16, msg: &str, retry_after_s: u64) -> Response {
         let j = crate::util::json::Json::from_pairs(vec![(
             "error",
             crate::util::json::Json::Str(msg.to_string()),
         )]);
-        let mut r = Response::json(503, j.to_string());
+        let mut r = Response::json(status, j.to_string());
         r.retry_after_s = Some(retry_after_s);
         r
     }
@@ -334,6 +343,20 @@ mod tests {
         assert!(got.contains("\"error\":\"draining\""));
         // plain responses must not grow the header
         assert!(!format!("{:?}", Response::json(200, "{}".into())).contains("Some"));
+    }
+
+    #[test]
+    fn every_shed_path_carries_retry_after() {
+        // 429 queue shed and 503 unavailability route through the same
+        // helper, so both carry the hint
+        let r = Response::too_many_requests();
+        assert_eq!(r.status, 429);
+        assert_eq!(r.retry_after_s, Some(1));
+        assert!(String::from_utf8_lossy(&r.body).contains("queue full"));
+        let r = Response::shed(503, "all replica queues full, retry later", 2);
+        assert_eq!(r.status, 503);
+        assert_eq!(r.retry_after_s, Some(2));
+        assert!(String::from_utf8_lossy(&r.body).contains("replica queues"));
     }
 
     #[test]

@@ -1,12 +1,16 @@
-//! Serving layer: minimal HTTP front-end, the engine worker thread, and
-//! the continuous-admission scheduler — queued requests are seeded into
-//! free lanes of the *running* batch at step boundaries, with per-lane
-//! sampling configs and per-token streaming driven off the engine's
-//! `Session` state machine (see `rust/DESIGN.md` §4).
+//! Serving layer: minimal HTTP front-end, a fleet of replica engine
+//! workers, and the continuous-admission scheduler — queued requests are
+//! seeded into free lanes of the *running* batch at step boundaries,
+//! with per-lane sampling configs and per-token streaming driven off the
+//! engine's `Session` state machine (see `rust/DESIGN.md` §4). With
+//! `--replicas N` the router dispatches across N isolated failure
+//! domains with supervised failover (§8).
 
 pub mod api;
 pub mod batcher;
 pub mod http;
+pub(crate) mod replica;
+pub(crate) mod router;
 
 pub use api::Server;
 pub use batcher::{GenRequest, LaneResult, SamplingParams, StreamEvent};

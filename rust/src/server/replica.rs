@@ -1,0 +1,1273 @@
+//! One engine replica: a failure-domain-isolated worker thread owning a
+//! private Runtime + Engine + [`Scheduler`] + [`Pager`] + restart budget.
+//!
+//! PJRT handles are not `Send`, so each replica's engine lives on its own
+//! dedicated `fi-engine-<id>` thread; the router hands it requests over a
+//! bounded mpsc queue. Inside the worker, PR 7's supervision loop runs
+//! unchanged — panics are caught at the step boundary, busy lanes get
+//! structured errors, and a rolling [`RestartBudget`] decides when the
+//! replica has crossed from "absorbing the occasional panic" into a crash
+//! loop. What happens *then* depends on the fleet size:
+//!
+//! * `replicas == 1` — the PR 7 terminal latch, exactly: the server stays
+//!   up serving degraded, `/health` flips to 503, nothing respawns.
+//! * `replicas > 1` — the replica **quarantines**: it ejects itself from
+//!   rotation, fails its in-flight lanes (structured 500s, as before),
+//!   hands its never-admitted queued requests back to the supervisor for
+//!   failover to healthy replicas, and exits. The supervisor respawns it
+//!   with capped exponential backoff; a clean probe window later it is
+//!   promoted back into full rotation.
+//!
+//! The quarantine → probing → serving state machine lives in [`Replica`];
+//! the worker body in [`worker_main`] is the engine side of it.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{collect_batch, lane_len, GenRequest, LaneResult, SamplingParams, StreamEvent};
+use crate::config::ServerConfig;
+use crate::engine::{
+    Engine, EngineOpts, LaneCheckpoint, LaneInit, Pager, SamplerCfg, Session, StepOutput,
+};
+use crate::metrics::Counters;
+use crate::model::Variant;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::threadpool::payload_text;
+
+/// Startup handshake payload: the `/v1/info` document plus the
+/// *effective* `max_max_tokens` (clamped to the model's L — only the
+/// worker knows dims), which front-end validation must agree on.
+pub(crate) type ReadyMsg = std::result::Result<(Json, usize), String>;
+
+/// Where a replica stands in the quarantine/respawn state machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ReplicaState {
+    /// In full rotation: preferred dispatch target.
+    Serving,
+    /// Respawned after quarantine, serving probe traffic; promoted to
+    /// [`Serving`](ReplicaState::Serving) after a clean `probe_window_ms`.
+    Probing,
+    /// Out of rotation (budget exhausted or boot failed); the supervisor
+    /// respawns it once its backoff wait has elapsed.
+    Quarantined,
+}
+
+impl ReplicaState {
+    pub(crate) fn as_str(self) -> &'static str {
+        match self {
+            ReplicaState::Serving => "serving",
+            ReplicaState::Probing => "probing",
+            ReplicaState::Quarantined => "quarantined",
+        }
+    }
+}
+
+/// State-machine bookkeeping, guarded by one mutex so transitions are
+/// atomic with their timing fields.
+#[derive(Debug, Clone, Copy)]
+struct ReplicaStatus {
+    state: ReplicaState,
+    /// When the current state was entered.
+    since: Instant,
+    /// Quarantine only: how long to wait before respawning.
+    wait: Duration,
+    /// Backoff applied to the *next* quarantine (doubles per consecutive
+    /// quarantine, capped; reset on promotion to Serving).
+    backoff: Duration,
+}
+
+/// Per-replica gauges, written lock-free by the worker/router and summed
+/// into the global counters at `/metrics` scrape time.
+#[derive(Debug, Default)]
+pub(crate) struct ReplicaGauges {
+    /// Requests dispatched to this replica and not yet finished (the
+    /// router's least-loaded key; incremented at dispatch, decremented
+    /// when the request is replied to or failed over).
+    pub load: AtomicU64,
+    pub queue_depth: AtomicU64,
+    pub lanes_busy: AtomicU64,
+    pub pager_resident_values: AtomicU64,
+    /// In-place session rebuilds inside this worker (PR 7 semantics).
+    pub engine_restarts: AtomicU64,
+    /// Times the supervisor respawned this replica after quarantine.
+    pub respawns: AtomicU64,
+}
+
+/// Everything a replica worker needs from the server, cloneable so the
+/// supervisor can mint a fresh context per respawn.
+#[derive(Clone)]
+pub(crate) struct ReplicaCtx {
+    pub cfg: ServerConfig,
+    pub counters: Counters,
+    pub inflight: Arc<AtomicU64>,
+    /// Fleet-of-one only: the PR 7 terminal health latch.
+    pub healthy: Arc<AtomicBool>,
+    pub draining: Arc<AtomicBool>,
+    /// Quarantining replicas hand their never-admitted queued requests
+    /// back to the supervisor here for failover to healthy replicas.
+    pub failback: Sender<GenRequest>,
+}
+
+/// Handle to one replica: id, state machine, request-queue sender, and
+/// the worker thread's join handle. Shared between the router (dispatch),
+/// the supervisor (respawn/promote), and the worker itself (transitions).
+pub(crate) struct Replica {
+    pub id: usize,
+    pub gauges: Arc<ReplicaGauges>,
+    status: Mutex<ReplicaStatus>,
+    sender: Mutex<Option<Sender<GenRequest>>>,
+    thread: Mutex<Option<thread::JoinHandle<()>>>,
+    backoff_initial: Duration,
+    backoff_max: Duration,
+}
+
+fn plock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Replica {
+    /// A new replica starts `Quarantined` with a zero wait: not
+    /// serviceable until its first boot succeeds, respawnable immediately
+    /// if that boot fails fast.
+    pub(crate) fn new(id: usize, cfg: &ServerConfig) -> Arc<Replica> {
+        Arc::new(Replica {
+            id,
+            gauges: Arc::new(ReplicaGauges::default()),
+            status: Mutex::new(ReplicaStatus {
+                state: ReplicaState::Quarantined,
+                since: Instant::now(),
+                wait: Duration::ZERO,
+                backoff: Duration::from_millis(cfg.quarantine_backoff_ms.max(1)),
+            }),
+            sender: Mutex::new(None),
+            thread: Mutex::new(None),
+            backoff_initial: Duration::from_millis(cfg.quarantine_backoff_ms.max(1)),
+            backoff_max: Duration::from_millis(
+                cfg.quarantine_backoff_max_ms.max(cfg.quarantine_backoff_ms.max(1)),
+            ),
+        })
+    }
+
+    pub(crate) fn state(&self) -> ReplicaState {
+        plock(&self.status).state
+    }
+
+    /// In full rotation (health aggregation counts these).
+    pub(crate) fn is_serving(&self) -> bool {
+        self.state() == ReplicaState::Serving
+    }
+
+    /// Can take traffic at all: Serving or Probing with a live queue.
+    /// `/health` only reports 503 when no replica is serviceable.
+    pub(crate) fn is_serviceable(&self) -> bool {
+        matches!(self.state(), ReplicaState::Serving | ReplicaState::Probing)
+            && plock(&self.sender).is_some()
+    }
+
+    /// Requests dispatched but not yet admitted to a lane — this
+    /// replica's waiting-queue depth, bounded by `max_queue`.
+    pub(crate) fn waiting(&self) -> u64 {
+        let load = self.gauges.load.load(Ordering::Relaxed);
+        load.saturating_sub(self.gauges.lanes_busy.load(Ordering::Relaxed))
+    }
+
+    pub(crate) fn queue_full(&self, max_queue: usize) -> bool {
+        self.waiting() >= max_queue as u64
+    }
+
+    /// Hand a request to the worker; gives it back if the queue is gone
+    /// (quarantined/draining) so the caller can re-dispatch.
+    pub(crate) fn send(&self, req: GenRequest) -> std::result::Result<(), GenRequest> {
+        match plock(&self.sender).as_ref() {
+            Some(tx) => tx.send(req).map_err(|e| e.0),
+            None => Err(req),
+        }
+    }
+
+    fn set_sender(&self, tx: Sender<GenRequest>) {
+        *plock(&self.sender) = Some(tx);
+    }
+
+    /// Drop the queue sender: the worker's `collect_batch` unparks on the
+    /// last sender drop, so this is also the per-replica shutdown nudge.
+    pub(crate) fn clear_sender(&self) {
+        *plock(&self.sender) = None;
+    }
+
+    fn enter(&self, state: ReplicaState) {
+        let mut st = plock(&self.status);
+        st.state = state;
+        st.since = Instant::now();
+        if state == ReplicaState::Serving {
+            st.backoff = self.backoff_initial;
+        }
+    }
+
+    /// Eject from rotation and schedule the respawn: wait the current
+    /// backoff, then double it (capped) for the next consecutive failure.
+    pub(crate) fn enter_quarantine(&self) {
+        let mut st = plock(&self.status);
+        st.state = ReplicaState::Quarantined;
+        st.since = Instant::now();
+        st.wait = st.backoff;
+        st.backoff = (st.backoff * 2).min(self.backoff_max);
+    }
+
+    /// Quarantined and past its backoff wait: the supervisor may respawn.
+    /// A quarantined replica with a live sender is still *booting* (the
+    /// worker enters Serving/Probing only after prewarm), so the sender
+    /// doubles as the not-currently-spawning guard.
+    pub(crate) fn respawn_due(&self) -> bool {
+        if plock(&self.sender).is_some() {
+            return false;
+        }
+        let st = plock(&self.status);
+        st.state == ReplicaState::Quarantined && st.since.elapsed() >= st.wait
+    }
+
+    /// Probing and past the clean window: promote to full rotation.
+    pub(crate) fn promote_due(&self, probe_window: Duration) -> bool {
+        let st = plock(&self.status);
+        st.state == ReplicaState::Probing && st.since.elapsed() >= probe_window
+    }
+
+    pub(crate) fn promote(&self) {
+        self.enter(ReplicaState::Serving);
+    }
+
+    /// Join the previous worker thread, if any (respawn and shutdown).
+    pub(crate) fn join_worker(&self) {
+        let handle = plock(&self.thread).take();
+        if let Some(t) = handle {
+            let _ = t.join();
+        }
+    }
+
+    /// Spawn the engine worker for this replica. `ready` is `Some` on the
+    /// initial boot (the server blocks on the handshake); respawns pass
+    /// `None` and report boot failures to stderr + the state machine.
+    pub(crate) fn spawn_worker(
+        self: Arc<Self>,
+        ctx: ReplicaCtx,
+        ready: Option<Sender<ReadyMsg>>,
+    ) {
+        let (tx, rx) = channel::<GenRequest>();
+        self.set_sender(tx);
+        let replica = self.clone();
+        let spawned = thread::Builder::new()
+            .name(format!("fi-engine-{}", self.id))
+            .spawn(move || worker_main(replica, ctx, ready, rx));
+        match spawned {
+            Ok(handle) => {
+                *plock(&self.thread) = Some(handle);
+            }
+            Err(e) => {
+                // the dropped `ready` sender surfaces as a startup error
+                // on the initial boot; respawns just stay quarantined
+                eprintln!("flashinfer: spawn fi-engine-{} failed: {e}", self.id);
+                self.clear_sender();
+                self.enter_quarantine();
+            }
+        }
+    }
+
+    #[cfg(test)]
+    pub(crate) fn test_rig(&self) -> Receiver<GenRequest> {
+        let (tx, rx) = channel();
+        self.set_sender(tx);
+        self.enter(ReplicaState::Serving);
+        rx
+    }
+
+    #[cfg(test)]
+    pub(crate) fn test_enter(&self, state: ReplicaState) {
+        self.enter(state);
+    }
+
+    #[cfg(test)]
+    pub(crate) fn test_status(&self) -> (ReplicaState, Duration, Duration) {
+        let st = plock(&self.status);
+        (st.state, st.wait, st.backoff)
+    }
+}
+
+/// Rolling-window panic budget for the replica supervisor: absorbing the
+/// occasional panic keeps serving alive, but a crash loop should eject
+/// the replica — quarantine in a fleet, the latched `/health` 503 when it
+/// is the only engine.
+pub(crate) struct RestartBudget {
+    budget: usize,
+    window: Duration,
+    panics: VecDeque<Instant>,
+}
+
+impl RestartBudget {
+    pub(crate) fn new(budget: usize, window: Duration) -> RestartBudget {
+        RestartBudget { budget, window, panics: VecDeque::new() }
+    }
+
+    /// Record one panic; returns `false` once the window holds more than
+    /// `budget` panics (the caller quarantines or latches).
+    pub(crate) fn record(&mut self, now: Instant) -> bool {
+        self.panics.push_back(now);
+        while let Some(&t) = self.panics.front() {
+            if now.duration_since(t) > self.window {
+                self.panics.pop_front();
+            } else {
+                break;
+            }
+        }
+        self.panics.len() <= self.budget
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler: one running session, per-lane request slots, a waiting queue
+// ---------------------------------------------------------------------------
+
+/// One busy lane: the request it serves plus its rebased bookkeeping.
+struct LaneSlot {
+    req: GenRequest,
+    /// Global batch position at admission (lane-local clock offset).
+    admitted_pos: usize,
+    /// Padded positions this lane generates (`lane_len(max_tokens)`).
+    limit: usize,
+    admitted_at: Instant,
+    queue_ms: f64,
+    /// Busy lanes (incl. this one) at admission.
+    batch_size: usize,
+    tokens: Vec<u32>,
+    /// Per-lane checksum running sum over the first `max_tokens` positions.
+    checksum_total: f64,
+    /// Times this request was evicted into the session pager.
+    evictions: u64,
+}
+
+/// A request swapped out of its lane under queue pressure: its serving
+/// slot (tokens so far, reply channel, stats) plus the engine-side lane
+/// checkpoint. Lives in the scheduler until a later session's clock
+/// reaches the checkpoint's suspension position (`Session::restore`'s
+/// same-alignment rule), at which point the slot goes back into a lane
+/// and the rollout continues bit-identically.
+struct EvictedLane {
+    slot: LaneSlot,
+    ckpt: LaneCheckpoint,
+}
+
+/// Continuous-admission scheduler: owns the running [`Session`], tracks
+/// free lanes, and seeds queued requests into them at step boundaries.
+/// One per replica — its queue, pager, and failure domain are private.
+struct Scheduler<'e, 'rt> {
+    engine: &'e Engine<'rt>,
+    session: Option<Session<'e, 'rt>>,
+    lanes: Vec<Option<LaneSlot>>,
+    queue: VecDeque<GenRequest>,
+    /// Session schedule length (padded `max_max_tokens`, clamped to L) —
+    /// every admissible request fits a fresh session by construction.
+    horizon: usize,
+    /// `false` = legacy drain-then-refill (admission only at position 0).
+    admit_mid_batch: bool,
+    /// Session pager for suspended-lane checkpoints (`None` = paging off;
+    /// forced off under drain-then-refill, which cannot re-seed lanes).
+    pager: Option<Pager>,
+    /// Requests evicted under queue pressure, waiting for a session whose
+    /// clock reaches their checkpoint's suspension position.
+    evicted: Vec<EvictedLane>,
+    counters: Counters,
+    inflight: Arc<AtomicU64>,
+    gauges: Arc<ReplicaGauges>,
+    replica_id: usize,
+}
+
+impl<'e, 'rt> Scheduler<'e, 'rt> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        engine: &'e Engine<'rt>,
+        horizon: usize,
+        admit_mid_batch: bool,
+        pager: Option<Pager>,
+        counters: Counters,
+        inflight: Arc<AtomicU64>,
+        gauges: Arc<ReplicaGauges>,
+        replica_id: usize,
+    ) -> Scheduler<'e, 'rt> {
+        let b = engine.runtime().dims.b;
+        Scheduler {
+            engine,
+            session: None,
+            lanes: (0..b).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            horizon,
+            admit_mid_batch,
+            pager: if admit_mid_batch { pager } else { None },
+            evicted: Vec::new(),
+            counters,
+            inflight,
+            gauges,
+            replica_id,
+        }
+    }
+
+    fn enqueue(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// Nothing running, nothing waiting, nothing paged out: the worker
+    /// may block.
+    fn is_idle(&self) -> bool {
+        self.session.is_none() && self.queue.is_empty() && self.evicted.is_empty()
+    }
+
+    fn busy_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// One request has left this replica with a reply: balance the global
+    /// inflight gauge and this replica's load (the router's dispatch key).
+    fn request_done(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.gauges.load.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Per-request sampling override → the admitted lane's `SamplerCfg`
+    /// (`None` = keep the engine default for this lane).
+    fn lane_sampler_cfg(&self, s: &SamplingParams) -> Option<SamplerCfg> {
+        let opts: &EngineOpts = self.engine.opts();
+        match self.engine.runtime().dims.variant {
+            Variant::Synthetic => s.sigma.map(|sigma| SamplerCfg::Synthetic { sigma }),
+            Variant::Hyena => {
+                if s.temperature.is_none() && s.top_k.is_none() {
+                    None
+                } else {
+                    Some(SamplerCfg::Lm {
+                        temperature: s.temperature.unwrap_or(opts.temperature),
+                        top_k: s.top_k.unwrap_or(opts.top_k),
+                    })
+                }
+            }
+        }
+    }
+
+    /// Restore evicted lanes whose checkpoint position matches the
+    /// session clock (the only position `Session::restore` is exact at).
+    /// Runs *before* `evict_phase` so a just-evicted lane is never
+    /// bounced straight back in the same boundary; returns the lanes it
+    /// restored so `evict_phase` cannot re-evict them before they have
+    /// stepped even once (the inverse bounce).
+    fn resume_phase(&mut self) -> Vec<usize> {
+        let mut restored = Vec::new();
+        let Some(now) = self.session.as_ref().map(Session::steps_done) else { return restored };
+        let mut i = 0;
+        while i < self.evicted.len() {
+            if self.evicted[i].ckpt.pos() != now {
+                i += 1;
+                continue;
+            }
+            let Some(lane) = (0..self.lanes.len()).find(|&l| self.lanes[l].is_none()) else {
+                break; // no free lane at the restore point: wait for a later session
+            };
+            let EvictedLane { slot, ckpt } = self.evicted.remove(i);
+            let res = self
+                .session
+                .as_mut()
+                .unwrap()
+                .restore(lane, ckpt, self.pager.as_mut().unwrap());
+            match res {
+                Ok(()) => {
+                    self.lanes[lane] = Some(slot);
+                    restored.push(lane);
+                    self.counters.lock().resumes_total += 1;
+                }
+                Err(e) => {
+                    // the checkpoint is gone (blocks already released):
+                    // fail exactly this request and keep serving
+                    let _ = slot.req.reply.send(Err(format!("resume: {e:#}")));
+                    self.request_done();
+                }
+            }
+        }
+        restored
+    }
+
+    /// Under queue pressure — a waiting request, no free lane — suspend
+    /// the busy lane with the most remaining schedule into the pager so
+    /// the waiting request can be admitted now. Eviction only pays off
+    /// when the incoming request finishes before the victim would have,
+    /// so shorter-than-victim requests are the only trigger. Lanes in
+    /// `protected` (restored this very boundary) are never victims, and
+    /// already-evicted requests are preferred last, so a paged-out
+    /// request always makes forward progress between evictions instead
+    /// of thrashing under sustained pressure.
+    fn evict_phase(&mut self, protected: &[usize]) {
+        if self.pager.is_none() || self.session.is_none() {
+            return;
+        }
+        let sess = self.session.as_mut().unwrap();
+        let now = sess.steps_done();
+        if self.queue.is_empty() || self.lanes.iter().any(|l| l.is_none()) {
+            return;
+        }
+        // lanes freed now are reserved for checkpoints waiting further
+        // down this session's schedule — evicting would not admit anyone
+        if self.evicted.iter().any(|e| e.ckpt.pos() > now) {
+            return;
+        }
+        let remaining = sess.remaining();
+        let Some(need) = self
+            .queue
+            .iter()
+            .map(|r| lane_len(r.max_tokens, self.horizon))
+            .find(|&n| n <= remaining)
+        else {
+            return;
+        };
+        let Some(lane) = (0..self.lanes.len())
+            .filter(|&l| self.lanes[l].is_some() && !protected.contains(&l))
+            .max_by_key(|&l| {
+                let evictions = self.lanes[l].as_ref().unwrap().evictions;
+                let left = sess.lane_limit(l).saturating_sub(sess.lane_pos(l));
+                // fewest prior evictions first, then most remaining
+                (std::cmp::Reverse(evictions), left)
+            })
+        else {
+            return;
+        };
+        let victim_remaining = sess.lane_limit(lane).saturating_sub(sess.lane_pos(lane));
+        if victim_remaining <= need {
+            return;
+        }
+        // a full pager (or any transient failure) leaves every lane
+        // untouched — the waiting request simply keeps waiting
+        if let Ok(ckpt) = sess.suspend(lane, self.pager.as_mut().unwrap()) {
+            let mut slot = self.lanes[lane].take().unwrap();
+            slot.evictions += 1;
+            self.evicted.push(EvictedLane { slot, ckpt });
+            self.counters.lock().evictions_total += 1;
+        }
+    }
+
+    /// Open a session if needed, then admit queued requests onto free
+    /// lanes (this is the step boundary: `tick` calls it before `step`).
+    /// Order matters: resume (exact-position restores) → evict (free a
+    /// lane under pressure) → fresh admissions (minus lanes reserved for
+    /// checkpoints waiting later in this session's schedule).
+    fn admit_phase(&mut self) {
+        if self.session.is_none() && !(self.queue.is_empty() && self.evicted.is_empty()) {
+            // with mid-batch admission, open at the full horizon so later
+            // arrivals always have schedule headroom (the cost is one
+            // horizon-sized store allocation per session open); under
+            // drain-then-refill nothing joins later, so size the session
+            // to the batch it will actually run — the first B queued
+            // requests — like the legacy collector did
+            let len = if self.admit_mid_batch {
+                self.horizon
+            } else {
+                self.queue
+                    .iter()
+                    .take(self.lanes.len())
+                    .map(|r| lane_len(r.max_tokens, self.horizon))
+                    .max()
+                    .unwrap_or(1)
+            };
+            match self.engine.session(len) {
+                Ok(sess) => {
+                    self.session = Some(sess);
+                    for slot in &mut self.lanes {
+                        *slot = None;
+                    }
+                    self.counters.lock().sessions_started += 1;
+                }
+                Err(e) => {
+                    // a session that cannot even open would error forever:
+                    // fail the whole queue (and any paged-out requests,
+                    // which need a session to ever resume) instead of
+                    // spinning on it
+                    self.fail_queued(&format!("open session: {e:#}"));
+                    self.fail_evicted(&format!("open session: {e:#}"));
+                    return;
+                }
+            }
+        }
+        let (mid_batch, remaining, now) = match self.session.as_ref() {
+            Some(sess) => (sess.steps_done() > 0, sess.remaining(), sess.steps_done()),
+            None => return,
+        };
+        if mid_batch && !self.admit_mid_batch {
+            return;
+        }
+        let restored = self.resume_phase();
+        self.evict_phase(&restored);
+        // lanes kept free for checkpoints that must restore later in this
+        // session's schedule (strictly later: a checkpoint at the current
+        // position either just resumed or just got evicted)
+        let reserved = self.evicted.iter().filter(|e| e.ckpt.pos() > now).count();
+        for lane in 0..self.lanes.len() {
+            if self.lanes[lane].is_some() {
+                continue;
+            }
+            let free_now = self.lanes.iter().filter(|l| l.is_none()).count();
+            if free_now <= reserved {
+                break;
+            }
+            // first queued request whose padded schedule fits what's left
+            let Some(qi) = self
+                .queue
+                .iter()
+                .position(|r| lane_len(r.max_tokens, self.horizon) <= remaining)
+            else {
+                break;
+            };
+            let req = self.queue.remove(qi).unwrap();
+            let limit = lane_len(req.max_tokens, self.horizon);
+            let init = LaneInit {
+                limit,
+                sampler_cfg: self.lane_sampler_cfg(&req.sampling),
+                seed: req.sampling.seed,
+            };
+            let admitted_pos = {
+                let sess = self.session.as_mut().unwrap();
+                match sess.admit(lane, init) {
+                    Ok(()) => sess.steps_done(),
+                    Err(e) => {
+                        // fail exactly this request (never silently drop
+                        // it or leak its inflight slot) and keep serving
+                        let _ = req.reply.send(Err(format!("admit: {e:#}")));
+                        self.request_done();
+                        continue;
+                    }
+                }
+            };
+            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let batch_size = self.lanes.iter().filter(|l| l.is_some()).count() + 1;
+            self.lanes[lane] = Some(LaneSlot {
+                req,
+                admitted_pos,
+                limit,
+                admitted_at: Instant::now(),
+                queue_ms,
+                batch_size,
+                tokens: Vec::new(),
+                checksum_total: 0.0,
+                evictions: 0,
+            });
+            let mut c = self.counters.lock();
+            c.admissions_total += 1;
+            if mid_batch {
+                c.admissions_mid_batch += 1;
+            }
+            c.admission_latency.record_ns(queue_ms * 1e6);
+        }
+    }
+
+    /// Fail every *queued* (not yet admitted) request.
+    fn fail_queued(&mut self, msg: &str) {
+        while let Some(req) = self.queue.pop_front() {
+            let _ = req.reply.send(Err(msg.to_string()));
+            self.request_done();
+        }
+    }
+
+    /// Hand every *queued* (never-admitted, zero tokens produced) request
+    /// back for failover instead of failing it: re-running one of these
+    /// from scratch on another replica is bit-identical by construction.
+    /// The global inflight count stays — the requests are still alive —
+    /// but this replica's load drops by the batch.
+    fn drain_for_failover(&mut self) -> Vec<GenRequest> {
+        let reqs: Vec<GenRequest> = self.queue.drain(..).collect();
+        self.gauges.load.fetch_sub(reqs.len() as u64, Ordering::Relaxed);
+        reqs
+    }
+
+    /// Fail every evicted (paged-out) request and release its checkpoint.
+    /// Used when no session can ever resume them again: open-session
+    /// failure, shutdown, and quarantine (the pager dies with the worker,
+    /// and a mid-rollout request is never retried elsewhere — the
+    /// retried-iff-zero-tokens rule).
+    fn fail_evicted(&mut self, msg: &str) {
+        for e in self.evicted.drain(..) {
+            if let Some(p) = self.pager.as_mut() {
+                p.discard(e.ckpt);
+            }
+            let _ = e.slot.req.reply.send(Err(msg.to_string()));
+            self.request_done();
+        }
+    }
+
+    /// Route one step's outputs to the busy lanes; complete any lane that
+    /// reached its padded schedule.
+    fn deliver(&mut self, step: &StepOutput) {
+        for lane in 0..self.lanes.len() {
+            let finished = {
+                let Some(slot) = self.lanes[lane].as_mut() else { continue };
+                let local = step.pos - slot.admitted_pos;
+                let checksum = step.lane_checksums.get(lane).copied().unwrap_or(0.0);
+                if let Some(toks) = &step.tokens {
+                    slot.tokens.push(toks[lane]);
+                }
+                // the lane generates min(max_tokens, limit) useful
+                // positions: with max_max_tokens clamped to L at startup
+                // the two are equal, but stay defensive so a request
+                // whose padded schedule got capped is never promised
+                // (or counted as) more positions than the lane runs
+                let wanted = slot.req.max_tokens.min(slot.limit);
+                if local <= wanted {
+                    slot.checksum_total += checksum as f64;
+                    if let Some(tx) = &slot.req.stream {
+                        let token = step.tokens.as_ref().map(|t| t[lane]);
+                        if tx.send(StreamEvent { pos: local, token, checksum }).is_err() {
+                            // receiver dropped: the streaming client hung
+                            // up — flag the lane so `cancel_phase` frees
+                            // it at the next step boundary
+                            slot.req.cancel.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+                if local >= wanted {
+                    slot.req.stream = None; // early stop: close the event stream
+                }
+                local >= slot.limit
+            };
+            if finished {
+                self.finish_lane(lane);
+            }
+        }
+    }
+
+    fn finish_lane(&mut self, lane: usize) {
+        let Some(slot) = self.lanes[lane].take() else { return };
+        let tokens = if slot.tokens.is_empty() {
+            None
+        } else {
+            Some(slot.tokens[..slot.req.max_tokens.min(slot.tokens.len())].to_vec())
+        };
+        let result = LaneResult {
+            tokens,
+            steps: slot.limit,
+            checksum_total: slot.checksum_total,
+            admitted_pos: slot.admitted_pos,
+            queue_ms: slot.queue_ms,
+            gen_ms: slot.admitted_at.elapsed().as_secs_f64() * 1e3,
+            batch_size: slot.batch_size,
+            evictions: slot.evictions,
+            replica: self.replica_id,
+        };
+        let _ = slot.req.reply.send(Ok(result));
+        self.request_done();
+    }
+
+    /// Fail exactly one busy lane with a structured error; the lane frees
+    /// at this step boundary and can be re-admitted immediately.
+    fn fail_lane(&mut self, lane: usize, msg: &str) {
+        let Some(slot) = self.lanes[lane].take() else { return };
+        let _ = slot.req.reply.send(Err(msg.to_string()));
+        self.request_done();
+        self.counters.lock().lanes_failed_total += 1;
+    }
+
+    /// Fail every busy lane (engine error or panic): each admitted request
+    /// gets the error; queued requests stay queued for the next session.
+    /// Dropping the session here is the panic-safe teardown path: AsyncTau's
+    /// Drop drains in-flight tile jobs swallowing join errors, and the
+    /// worker-side readiness guard has already balanced `end_write` on any
+    /// panicking job, so the take() can neither hang nor re-panic. Pager
+    /// checkpoints live *outside* the session and survive untouched.
+    fn fail_busy(&mut self, msg: &str) {
+        for lane in 0..self.lanes.len() {
+            self.fail_lane(lane, msg);
+        }
+        self.session = None;
+    }
+
+    /// Step-boundary sweep for requests that should stop early: the client
+    /// hung up (cancel flag) or the deadline passed. Busy lanes are failed
+    /// and freed for re-admission; queued and paged-out requests are
+    /// dropped before they ever (re)occupy a lane.
+    fn cancel_phase(&mut self) {
+        let now = Instant::now();
+        for lane in 0..self.lanes.len() {
+            let Some(c) = self.lanes[lane].as_ref().and_then(|s| check_cancel(&s.req, now))
+            else {
+                continue;
+            };
+            self.note_cancel(&c);
+            self.fail_lane(lane, c.message());
+        }
+        let mut i = 0;
+        while i < self.queue.len() {
+            match check_cancel(&self.queue[i], now) {
+                None => i += 1,
+                Some(c) => {
+                    let req = self.queue.remove(i).unwrap();
+                    self.note_cancel(&c);
+                    let _ = req.reply.send(Err(c.message().to_string()));
+                    self.request_done();
+                }
+            }
+        }
+        let mut i = 0;
+        while i < self.evicted.len() {
+            match check_cancel(&self.evicted[i].slot.req, now) {
+                None => i += 1,
+                Some(c) => {
+                    let e = self.evicted.remove(i);
+                    if let Some(p) = self.pager.as_mut() {
+                        p.discard(e.ckpt);
+                    }
+                    self.note_cancel(&c);
+                    let _ = e.slot.req.reply.send(Err(c.message().to_string()));
+                    self.request_done();
+                }
+            }
+        }
+    }
+
+    fn note_cancel(&mut self, c: &Cancel) {
+        let mut g = self.counters.lock();
+        match c {
+            Cancel::Deadline => g.requests_deadline_exceeded += 1,
+            Cancel::Disconnected => g.clients_disconnected += 1,
+        }
+    }
+
+    /// A queued request could be admitted into the current session at the
+    /// next step boundary: something queued fits the remaining schedule
+    /// AND this session may still take admissions (mid-batch admissions
+    /// are disabled under drain-then-refill once the session has moved).
+    fn queue_admissible(&self) -> bool {
+        let Some(sess) = self.session.as_ref() else { return !self.queue.is_empty() };
+        if sess.steps_done() > 0 && !self.admit_mid_batch {
+            return false;
+        }
+        let remaining = sess.remaining();
+        self.queue.iter().any(|r| lane_len(r.max_tokens, self.horizon) <= remaining)
+    }
+
+    /// A checkpoint can still be restored by the *current* session (its
+    /// suspension position has not been stepped past) — keeps an
+    /// otherwise-idle session alive until the restore point.
+    fn resumes_reachable(&self) -> bool {
+        let Some(sess) = self.session.as_ref() else { return false };
+        let now = sess.steps_done();
+        self.evicted.iter().any(|e| e.ckpt.pos() >= now)
+    }
+
+    fn publish_gauges(&self) {
+        self.gauges.queue_depth.store(self.queue.len() as u64, Ordering::Relaxed);
+        self.gauges.lanes_busy.store(self.busy_lanes() as u64, Ordering::Relaxed);
+        self.gauges.pager_resident_values.store(
+            self.pager.as_ref().map_or(0, |p| p.resident_values() as u64),
+            Ordering::Relaxed,
+        );
+    }
+
+    /// One step boundary: cancel, admit, advance one position, deliver,
+    /// and retire the session when it has nothing left to do.
+    fn tick(&mut self) -> Result<()> {
+        self.cancel_phase();
+        self.admit_phase();
+        if self.session.is_some() {
+            let step = self.session.as_mut().unwrap().step()?;
+            self.deliver(&step);
+            // retire: schedule exhausted, or every lane idle with nothing
+            // admissible left (a fresh session can always fit the queue)
+            // and no checkpoint still restorable at a later position of
+            // this session — an idle session otherwise keeps stepping
+            // toward the restore point (bounded by the horizon)
+            let done = step.done;
+            let parked = self.busy_lanes() == 0
+                && !self.queue_admissible()
+                && !self.resumes_reachable();
+            if done || parked {
+                if let Some(sess) = self.session.take() {
+                    // finish() drains in-flight async tiles before the
+                    // store drops — required even for an early retire
+                    let _ = sess.finish();
+                    self.counters.lock().batches_run += 1;
+                }
+                // a `done` session cannot have stragglers (admission
+                // guarantees limit <= remaining), but stay defensive
+                self.fail_busy("session retired with the lane still running");
+            }
+        }
+        self.publish_gauges();
+        Ok(())
+    }
+}
+
+/// Why a request is being cancelled at a step boundary.
+enum Cancel {
+    Deadline,
+    Disconnected,
+}
+
+impl Cancel {
+    fn message(&self) -> &'static str {
+        match self {
+            Cancel::Deadline => "deadline exceeded",
+            Cancel::Disconnected => "client disconnected",
+        }
+    }
+}
+
+/// Deadline first: a request that is both late *and* abandoned reports
+/// the deadline (the deterministic one of the two).
+fn check_cancel(req: &GenRequest, now: Instant) -> Option<Cancel> {
+    if req.deadline.is_some_and(|d| now >= d) {
+        return Some(Cancel::Deadline);
+    }
+    if req.cancel.load(Ordering::Relaxed) {
+        return Some(Cancel::Disconnected);
+    }
+    None
+}
+
+/// Boot failure: report it (over the ready channel on the initial boot,
+/// to stderr on respawns) and leave the replica quarantined so the
+/// supervisor retries with backoff.
+fn report_boot_failure(replica: &Replica, ready: &Option<Sender<ReadyMsg>>, msg: String) {
+    match ready {
+        Some(tx) => {
+            let _ = tx.send(Err(msg));
+        }
+        None => eprintln!("flashinfer: replica {} respawn failed: {msg}", replica.id),
+    }
+    replica.clear_sender();
+    replica.enter_quarantine();
+}
+
+/// The engine worker body: boot (load → init → prewarm → handshake),
+/// then PR 7's supervised scheduler loop with the fleet-mode quarantine
+/// exit grafted onto the budget-exhausted path.
+pub(crate) fn worker_main(
+    replica: Arc<Replica>,
+    ctx: ReplicaCtx,
+    ready: Option<Sender<ReadyMsg>>,
+    req_rx: Receiver<GenRequest>,
+) {
+    let initial = ready.is_some();
+    // chaos handle for fleet tests: fail/delay this replica's boot
+    if let Err(e) = crate::util::faultpoint::check("replica_spawn") {
+        report_boot_failure(&replica, &ready, format!("{e:#}"));
+        return;
+    }
+    let rt = match Runtime::load(&ctx.cfg.artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            report_boot_failure(&replica, &ready, format!("load runtime: {e:#}"));
+            return;
+        }
+    };
+    let mut engine = match Engine::new(&rt, ctx.cfg.engine.clone()) {
+        Ok(e) => e,
+        Err(e) => {
+            report_boot_failure(&replica, &ready, format!("init engine: {e:#}"));
+            return;
+        }
+    };
+    let dims = rt.dims;
+    let mut ecfg = ctx.cfg.clone();
+    // A request with max_tokens in (L, max_max_tokens] would get a lane
+    // schedule capped at L (`lane_len`) yet be accepted — and previously
+    // *accounted* — as max_tokens positions. Clamp the advertised ceiling
+    // to what a lane can actually run, once per boot, loudly.
+    if ecfg.max_max_tokens > dims.l {
+        if initial {
+            eprintln!(
+                "flashinfer: max_max_tokens {} exceeds the schedule ceiling L={}; \
+                 clamping (a lane can generate at most L positions)",
+                ecfg.max_max_tokens, dims.l
+            );
+        }
+        ecfg.max_max_tokens = dims.l;
+    }
+    // Cold-start: derive every per-U rho structure (spectra + PJRT tau
+    // executables) for the largest session a request can trigger, so the
+    // first request's measured gen_ms contains no one-time derivation
+    // cost (and a respawned replica re-probes the same path before it
+    // rejoins rotation).
+    let horizon = lane_len(ecfg.max_max_tokens, dims.l);
+    if let Err(e) = engine.prewarm(horizon) {
+        report_boot_failure(&replica, &ready, format!("prewarm engine: {e:#}"));
+        return;
+    }
+    if let Some(tx) = &ready {
+        let info = info_json(&ecfg, &ecfg.engine, &rt);
+        let _ = tx.send(Ok((info, ecfg.max_max_tokens)));
+    }
+    // initial boots go straight into rotation; respawns serve a probe
+    // window first and are promoted by the supervisor
+    replica.enter(if initial { ReplicaState::Serving } else { ReplicaState::Probing });
+
+    let engine = engine; // freeze: the scheduler borrows it
+    let fleet = ctx.cfg.replicas.max(1);
+    let window = Duration::from_millis(ecfg.batch_window_ms);
+    let pager = if ecfg.paging && ecfg.continuous_admission {
+        Some(engine.make_pager(ecfg.pager_capacity_mb))
+    } else {
+        None
+    };
+    let mut sched = Scheduler::new(
+        &engine,
+        horizon,
+        ecfg.continuous_admission,
+        pager,
+        ctx.counters.clone(),
+        ctx.inflight.clone(),
+        replica.gauges.clone(),
+        replica.id,
+    );
+    let mut budget =
+        RestartBudget::new(ecfg.restart_budget, Duration::from_secs(ecfg.restart_window_s));
+    let mut disconnected = false;
+    let mut quarantine = false;
+    loop {
+        if ctx.draining.load(Ordering::Relaxed) {
+            // graceful shutdown: stragglers get a retryable 503 instead
+            // of hanging past the drain deadline
+            sched.fail_busy("shutting down, retry later");
+            sched.fail_queued("shutting down, retry later");
+            sched.fail_evicted("shutting down, retry later");
+            break;
+        }
+        if sched.is_idle() {
+            if disconnected {
+                break;
+            }
+            // block for the first request; drain co-arrivals within the
+            // window so they share one session
+            match collect_batch(&req_rx, dims.b, window) {
+                Some(batch) => {
+                    for r in batch {
+                        sched.enqueue(r);
+                    }
+                }
+                None => {
+                    // all senders gone: re-check the drain flag at the
+                    // loop top before exiting
+                    disconnected = true;
+                    continue;
+                }
+            }
+        } else {
+            // step boundary: pick up new arrivals non-blocking
+            loop {
+                match req_rx.try_recv() {
+                    Ok(r) => sched.enqueue(r),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+        }
+        // One supervised step boundary. On panic every busy lane gets a
+        // structured error and the (possibly inconsistent) Session is
+        // dropped via the panic-safe drain, so no broken invariant
+        // survives into the next iteration; pager checkpoints are
+        // preserved and a fresh session opens on the next admissible
+        // tick. A panic that unwound *on a pool worker* surfaces here as
+        // a step error at the fence ("... panicked ...") — it tore the
+        // session down the same way, so it spends restart budget the
+        // same way.
+        let mut panicked: Option<String> = None;
+        match catch_unwind(AssertUnwindSafe(|| sched.tick())) {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let msg = format!("{e:#}");
+                let surfaced_panic = msg.contains("panicked");
+                sched.fail_busy(&format!("generate: {msg}"));
+                if surfaced_panic {
+                    panicked = Some(msg);
+                }
+            }
+            Err(payload) => {
+                let msg = payload_text(payload.as_ref());
+                sched.fail_busy(&format!("engine panicked: {msg}"));
+                panicked = Some(msg);
+            }
+        }
+        if let Some(msg) = panicked {
+            eprintln!("flashinfer: replica {} engine step panicked: {msg}", replica.id);
+            ctx.counters.lock().engine_restarts_total += 1;
+            replica.gauges.engine_restarts.fetch_add(1, Ordering::Relaxed);
+            if !budget.record(Instant::now()) {
+                if fleet > 1 {
+                    eprintln!(
+                        "flashinfer: replica {} restart budget exhausted (> {} panics \
+                         within {}s); quarantining",
+                        replica.id, ecfg.restart_budget, ecfg.restart_window_s
+                    );
+                    quarantine = true;
+                    break;
+                }
+                // fleet of one: the PR 7 terminal latch — keep serving
+                // degraded, let a load balancer drain us
+                eprintln!(
+                    "flashinfer: engine restart budget exhausted (> {} panics within \
+                     {}s); marking unhealthy",
+                    ecfg.restart_budget, ecfg.restart_window_s
+                );
+                ctx.counters.lock().healthy = 0;
+                ctx.healthy.store(false, Ordering::Relaxed);
+            }
+        }
+    }
+    if quarantine {
+        // eject from rotation first so the router stops dispatching here,
+        // then hand queued (zero-token) work back for failover; evicted
+        // requests already produced tokens, so the retried-iff-zero-tokens
+        // rule fails them with a structured error instead
+        replica.clear_sender();
+        replica.enter_quarantine();
+        sched.fail_evicted("replica quarantined: suspended session lost");
+        for req in sched.drain_for_failover() {
+            if let Err(send_err) = ctx.failback.send(req) {
+                fail_request(send_err.0, "shutting down, retry later", &ctx);
+            }
+        }
+        // requests still sitting in the channel never reached the
+        // scheduler: they are zero-token by construction — fail them over
+        // too (each was load-counted at dispatch)
+        while let Ok(req) = req_rx.try_recv() {
+            replica.gauges.load.fetch_sub(1, Ordering::Relaxed);
+            if let Err(send_err) = ctx.failback.send(req) {
+                fail_request(send_err.0, "shutting down, retry later", &ctx);
+            }
+        }
+    } else {
+        // clean exit (drain/shutdown): nothing to fail over — anything
+        // left in the channel is a straggler past the drain deadline
+        while let Ok(req) = req_rx.try_recv() {
+            replica.gauges.load.fetch_sub(1, Ordering::Relaxed);
+            fail_request(req, "shutting down, retry later", &ctx);
+        }
+    }
+    // zero the stale gauges so /metrics and the router's least-loaded
+    // key don't keep reporting a dead worker's last published state
+    sched.publish_gauges();
+}
+
+/// Fail one request that never reached a scheduler (channel stragglers,
+/// failback with the supervisor gone): reply + balance the inflight
+/// gauge. `requests_failed` is counted at the HTTP reply layer.
+pub(crate) fn fail_request(req: GenRequest, msg: &str, ctx: &ReplicaCtx) {
+    let _ = req.reply.send(Err(msg.to_string()));
+    ctx.inflight.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// The `/v1/info` document (model dims + engine opts + serving config).
+pub(crate) fn info_json(cfg: &ServerConfig, eng: &EngineOpts, rt: &Runtime) -> Json {
+    let d = rt.dims;
+    Json::from_pairs(vec![
+        ("variant", Json::Str(d.variant.as_str().into())),
+        ("M", Json::Num(d.m as f64)),
+        ("D", Json::Num(d.d as f64)),
+        ("L", Json::Num(d.l as f64)),
+        ("B", Json::Num(d.b as f64)),
+        ("V", Json::Num(d.v as f64)),
+        ("method", Json::Str(eng.method.as_str().into())),
+        ("tau", Json::Str(eng.tau.as_str().into())),
+        ("async_mixer", Json::Bool(eng.async_mixer)),
+        ("split_min_u", Json::Num(eng.split_min_u as f64)),
+        ("mixer_workers", Json::Num(eng.mixer_workers as f64)),
+        ("continuous_admission", Json::Bool(cfg.continuous_admission)),
+        ("max_queue", Json::Num(cfg.max_queue as f64)),
+        ("paging", Json::Bool(cfg.paging && cfg.continuous_admission)),
+        ("pager_capacity_mb", Json::Num(cfg.pager_capacity_mb as f64)),
+        ("max_max_tokens", Json::Num(cfg.max_max_tokens as f64)),
+        ("deadline_ms", Json::Num(cfg.deadline_ms as f64)),
+        ("max_connections", Json::Num(cfg.max_connections as f64)),
+        ("restart_budget", Json::Num(cfg.restart_budget as f64)),
+        ("restart_window_s", Json::Num(cfg.restart_window_s as f64)),
+        ("drain_deadline_ms", Json::Num(cfg.drain_deadline_ms as f64)),
+        ("replicas", Json::Num(cfg.replicas.max(1) as f64)),
+        ("failover_retries", Json::Num(cfg.failover_retries as f64)),
+        ("quarantine_backoff_ms", Json::Num(cfg.quarantine_backoff_ms as f64)),
+        ("quarantine_backoff_max_ms", Json::Num(cfg.quarantine_backoff_max_ms as f64)),
+        ("probe_window_ms", Json::Num(cfg.probe_window_ms as f64)),
+        ("artifacts", Json::Str(cfg.artifacts.display().to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn restart_budget_rolls_its_window() {
+        let mut b = RestartBudget::new(2, Duration::from_secs(60));
+        let t0 = Instant::now();
+        assert!(b.record(t0));
+        assert!(b.record(t0 + Duration::from_secs(1)));
+        // third panic inside the window exceeds budget=2
+        assert!(!b.record(t0 + Duration::from_secs(2)));
+        // far enough out, the old panics age off and the budget recovers
+        assert!(b.record(t0 + Duration::from_secs(120)));
+    }
+
+    #[test]
+    fn quarantine_backoff_doubles_and_caps() {
+        let cfg = ServerConfig {
+            quarantine_backoff_ms: 100,
+            quarantine_backoff_max_ms: 350,
+            ..Default::default()
+        };
+        let r = Replica::new(0, &cfg);
+        // pre-boot: quarantined with a zero wait (first boot is immediate)
+        let (state, wait, _) = r.test_status();
+        assert_eq!(state, ReplicaState::Quarantined);
+        assert_eq!(wait, Duration::ZERO);
+        assert!(r.respawn_due(), "first boot needs no backoff");
+        assert!(!r.is_serviceable());
+
+        r.enter_quarantine();
+        let (_, wait, backoff) = r.test_status();
+        assert_eq!(wait, Duration::from_millis(100));
+        assert_eq!(backoff, Duration::from_millis(200));
+        r.enter_quarantine();
+        r.enter_quarantine();
+        let (_, wait, backoff) = r.test_status();
+        assert_eq!(wait, Duration::from_millis(350), "wait caps at the max");
+        assert_eq!(backoff, Duration::from_millis(350));
+
+        // promotion back to Serving resets the backoff ladder
+        r.promote();
+        assert!(r.is_serving());
+        let (_, _, backoff) = r.test_status();
+        assert_eq!(backoff, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn probing_is_serviceable_but_not_serving() {
+        let r = Replica::new(1, &ServerConfig::default());
+        let _rx = r.test_rig();
+        r.test_enter(ReplicaState::Probing);
+        assert!(!r.is_serving());
+        assert!(r.is_serviceable());
+        assert!(r.promote_due(Duration::ZERO));
+        r.promote();
+        assert!(r.is_serving());
+        // dropping the sender makes it non-serviceable even while Serving
+        r.clear_sender();
+        assert!(!r.is_serviceable());
+    }
+
+    #[test]
+    fn waiting_subtracts_busy_lanes_from_load() {
+        let r = Replica::new(0, &ServerConfig::default());
+        r.gauges.load.store(5, Ordering::Relaxed);
+        r.gauges.lanes_busy.store(2, Ordering::Relaxed);
+        assert_eq!(r.waiting(), 3);
+        assert!(r.queue_full(3));
+        assert!(!r.queue_full(4));
+    }
+}

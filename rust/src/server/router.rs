@@ -1,0 +1,408 @@
+//! Replica router + fleet supervisor.
+//!
+//! The router dispatches each accepted request to one replica's bounded
+//! queue: checkpoint affinity first (a `"session"` key pins repeat
+//! requests to the replica that may hold their evicted checkpoint), then
+//! least-loaded among full-rotation replicas, falling back to probing
+//! replicas when nothing is in full rotation — degraded service beats a
+//! 503. The global shed only fires when *every* serviceable replica's
+//! queue is full.
+//!
+//! The supervisor thread (`fi-router`) owns the recoverable half of the
+//! failure model: it re-dispatches failed-over requests (queued work a
+//! quarantining replica handed back — never requests that produced a
+//! token), respawns quarantined replicas once their capped-exponential
+//! backoff has elapsed, and promotes respawned replicas back into full
+//! rotation after a clean probe window.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use super::batcher::GenRequest;
+use super::replica::{fail_request, Replica, ReplicaCtx, ReplicaState};
+use crate::config::ServerConfig;
+use crate::metrics::Counters;
+use crate::util::json::Json;
+
+/// Where a dispatch attempt ended up. The failure arms carry the request
+/// back so the caller can answer its reply channel.
+pub(crate) enum Dispatch {
+    /// Queued on a replica; the reply flows over the request's channel.
+    Ok,
+    /// The `router_dispatch` fault point fired.
+    Fault(String, GenRequest),
+    /// Every serviceable replica's queue is at `max_queue` (global shed).
+    AllFull(GenRequest),
+    /// Zero serviceable replicas.
+    NoReplica(GenRequest),
+}
+
+pub(crate) struct Router {
+    replicas: Vec<Arc<Replica>>,
+    /// session key → replica id: checkpoint-affinity pins. Stale pins
+    /// (quarantined replica) are dropped on the next dispatch.
+    affinity: Mutex<HashMap<String, usize>>,
+    max_queue: usize,
+}
+
+fn plock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Router {
+    pub(crate) fn new(replicas: Vec<Arc<Replica>>, cfg: &ServerConfig) -> Router {
+        Router { replicas, affinity: Mutex::new(HashMap::new()), max_queue: cfg.max_queue }
+    }
+
+    pub(crate) fn replicas(&self) -> &[Arc<Replica>] {
+        &self.replicas
+    }
+
+    /// Replicas in full rotation.
+    pub(crate) fn serving(&self) -> usize {
+        self.replicas.iter().filter(|r| r.is_serving()).count()
+    }
+
+    /// Replicas that can take traffic at all (Serving or Probing).
+    pub(crate) fn serviceable(&self) -> usize {
+        self.replicas.iter().filter(|r| r.is_serviceable()).count()
+    }
+
+    /// Serviceable and with queue headroom: eligible for a dispatch.
+    fn is_open(&self, r: &Arc<Replica>) -> bool {
+        r.is_serviceable() && !r.queue_full(self.max_queue)
+    }
+
+    /// Route one request: affinity pin → least-loaded Serving → least-
+    /// loaded Probing. A send that bounces (the replica quarantined
+    /// between the pick and the send) retries the pick; the loop is
+    /// bounded by the fleet size.
+    pub(crate) fn dispatch(&self, mut req: GenRequest) -> Dispatch {
+        if let Err(e) = crate::util::faultpoint::check("router_dispatch") {
+            return Dispatch::Fault(format!("{e:#}"), req);
+        }
+        for _ in 0..=self.replicas.len() {
+            if self.serviceable() == 0 {
+                return Dispatch::NoReplica(req);
+            }
+            let mut target: Option<usize> = None;
+            if let Some(key) = req.session.as_deref() {
+                let pinned = plock(&self.affinity).get(key).copied();
+                if let Some(id) = pinned {
+                    if self.replicas.get(id).is_some_and(|r| self.is_open(r)) {
+                        target = Some(id);
+                    } else {
+                        // the pinned replica left rotation (its pager —
+                        // and any checkpoint — died with it): unpin so
+                        // the session re-homes wherever it lands next
+                        plock(&self.affinity).remove(key);
+                    }
+                }
+            }
+            if target.is_none() {
+                let pick = |state: ReplicaState| {
+                    self.replicas
+                        .iter()
+                        .filter(|r| r.state() == state && self.is_open(r))
+                        .min_by_key(|r| r.gauges.load.load(Ordering::Relaxed))
+                        .map(|r| r.id)
+                };
+                target = pick(ReplicaState::Serving).or_else(|| pick(ReplicaState::Probing));
+            }
+            let Some(id) = target else {
+                return Dispatch::AllFull(req);
+            };
+            let replica = &self.replicas[id];
+            let session = req.session.clone();
+            // count the load before the send so a racing dispatch on
+            // another connection thread sees this one immediately
+            replica.gauges.load.fetch_add(1, Ordering::Relaxed);
+            match replica.send(req) {
+                Ok(()) => {
+                    if let Some(key) = session {
+                        plock(&self.affinity).insert(key, id);
+                    }
+                    return Dispatch::Ok;
+                }
+                Err(back) => {
+                    // quarantined under us: undo the count and re-pick
+                    replica.gauges.load.fetch_sub(1, Ordering::Relaxed);
+                    req = back;
+                }
+            }
+        }
+        Dispatch::NoReplica(req)
+    }
+
+    /// Roll the per-replica gauges up into the global counters (called at
+    /// `/metrics` scrape time) and render the fleet-only metric lines.
+    /// Single-replica servers keep every PR 7 metric name and meaning;
+    /// the fleet lines are additive.
+    pub(crate) fn publish(&self, counters: &Counters, healthy_latch: &AtomicBool) -> String {
+        let n = self.replicas.len();
+        let (mut queue_depth, mut lanes_busy, mut pager_resident) = (0u64, 0u64, 0u64);
+        for r in &self.replicas {
+            queue_depth += r.gauges.queue_depth.load(Ordering::Relaxed);
+            lanes_busy += r.gauges.lanes_busy.load(Ordering::Relaxed);
+            pager_resident += r.gauges.pager_resident_values.load(Ordering::Relaxed);
+        }
+        let serving = self.serving();
+        {
+            let mut c = counters.lock();
+            c.queue_depth = queue_depth;
+            c.lanes_busy = lanes_busy;
+            c.pager_resident_values = pager_resident;
+            if n > 1 {
+                // fleet health is recoverable: serviceable replicas exist
+                // = healthy enough to serve (the single-replica terminal
+                // latch writes this field itself)
+                c.healthy = u64::from(self.serviceable() > 0);
+            }
+        }
+        // fi_replicas_healthy: full-rotation count for a fleet; the PR 7
+        // latch for a fleet of one (so dashboards see the same 1→0 edge)
+        let replicas_healthy = if n > 1 {
+            serving as u64
+        } else {
+            u64::from(healthy_latch.load(Ordering::Relaxed))
+        };
+        let mut out = String::new();
+        out.push_str(&format!(
+            "# HELP fi_replicas engine replicas behind the router\n\
+             # TYPE fi_replicas gauge\nfi_replicas {n}\n"
+        ));
+        out.push_str(&format!(
+            "# HELP fi_replicas_healthy replicas in full rotation\n\
+             # TYPE fi_replicas_healthy gauge\nfi_replicas_healthy {replicas_healthy}\n"
+        ));
+        out.push_str(
+            "# HELP fi_router_queue_depth requests waiting in each replica's queue\n\
+             # TYPE fi_router_queue_depth gauge\n",
+        );
+        for r in &self.replicas {
+            out.push_str(&format!(
+                "fi_router_queue_depth{{replica=\"{}\"}} {}\n",
+                r.id,
+                r.waiting()
+            ));
+        }
+        out
+    }
+
+    /// Per-replica breakdown for `/v1/info` and the degraded `/health`
+    /// body.
+    pub(crate) fn replica_states(&self) -> Json {
+        Json::Arr(
+            self.replicas
+                .iter()
+                .map(|r| {
+                    Json::from_pairs(vec![
+                        ("replica", Json::Num(r.id as f64)),
+                        ("state", Json::Str(r.state().as_str().into())),
+                        (
+                            "engine_restarts",
+                            Json::Num(r.gauges.engine_restarts.load(Ordering::Relaxed) as f64),
+                        ),
+                        ("respawns", Json::Num(r.gauges.respawns.load(Ordering::Relaxed) as f64)),
+                        (
+                            "queue_depth",
+                            Json::Num(r.gauges.queue_depth.load(Ordering::Relaxed) as f64),
+                        ),
+                        ("lanes_busy", Json::Num(r.gauges.lanes_busy.load(Ordering::Relaxed) as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Drop every replica's queue sender (shutdown nudge: workers blocked
+    /// in `collect_batch` unpark and drain).
+    pub(crate) fn close(&self) {
+        for r in &self.replicas {
+            r.clear_sender();
+        }
+    }
+
+    /// Join every replica worker thread (shutdown, after `close`).
+    pub(crate) fn join_workers(&self) {
+        for r in &self.replicas {
+            r.join_worker();
+        }
+    }
+}
+
+/// The `fi-router` supervisor loop: failover re-dispatch, quarantine
+/// respawn with backoff, probe-window promotion. `shutdown` is flipped by
+/// `Server::stop` after the workers have been joined, so any final
+/// failback from a quarantining worker is still drained here.
+pub(crate) fn supervise(
+    router: Arc<Router>,
+    ctx: ReplicaCtx,
+    failback: Receiver<GenRequest>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let probe_window = Duration::from_millis(ctx.cfg.probe_window_ms);
+    while !shutdown.load(Ordering::Relaxed) {
+        match failback.recv_timeout(Duration::from_millis(50)) {
+            Ok(req) => redispatch(&router, &ctx, req),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        for r in router.replicas() {
+            if r.promote_due(probe_window) {
+                r.promote();
+                eprintln!(
+                    "flashinfer: replica {} completed its probe window; back in rotation",
+                    r.id
+                );
+            }
+            if r.respawn_due() && !ctx.draining.load(Ordering::Relaxed) {
+                eprintln!("flashinfer: respawning quarantined replica {}", r.id);
+                r.join_worker();
+                ctx.counters.lock().replica_restarts_total += 1;
+                r.gauges.respawns.fetch_add(1, Ordering::Relaxed);
+                r.clone().spawn_worker(ctx.clone(), None);
+            }
+        }
+    }
+    // shutdown: anything still on the failback channel is a straggler
+    while let Ok(req) = failback.try_recv() {
+        fail_request(req, "shutting down, retry later", &ctx);
+    }
+}
+
+/// One failed-over request: spend a retry, re-dispatch to a healthy
+/// replica, or fail it structurally once the retry budget is gone.
+fn redispatch(router: &Router, ctx: &ReplicaCtx, mut req: GenRequest) {
+    if ctx.draining.load(Ordering::Relaxed) {
+        fail_request(req, "shutting down, retry later", ctx);
+        return;
+    }
+    req.failovers += 1;
+    if req.failovers > ctx.cfg.failover_retries {
+        let msg = format!(
+            "replica quarantined; failover budget exhausted after {} attempts",
+            ctx.cfg.failover_retries
+        );
+        fail_request(req, &msg, ctx);
+        return;
+    }
+    ctx.counters.lock().failovers_total += 1;
+    match router.dispatch(req) {
+        Dispatch::Ok => {}
+        Dispatch::Fault(msg, req) => fail_request(req, &msg, ctx),
+        Dispatch::AllFull(req) | Dispatch::NoReplica(req) => {
+            fail_request(req, "no healthy replica, retry later", ctx)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::batcher::SamplingParams;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn req(session: Option<&str>) -> GenRequest {
+        // the reply receiver is dropped immediately: these tests only
+        // route, nothing ever answers the request
+        let (tx, _rx) = channel();
+        GenRequest {
+            max_tokens: 4,
+            sampling: SamplingParams::default(),
+            enqueued: Instant::now(),
+            reply: tx,
+            stream: None,
+            deadline: None,
+            cancel: Arc::new(AtomicBool::new(false)),
+            session: session.map(str::to_string),
+            failovers: 0,
+        }
+    }
+
+    fn fleet(n: usize, max_queue: usize) -> (Router, Vec<Receiver<GenRequest>>) {
+        let cfg = ServerConfig { max_queue, ..Default::default() };
+        let replicas: Vec<Arc<Replica>> = (0..n).map(|i| Replica::new(i, &cfg)).collect();
+        let rxs = replicas.iter().map(|r| r.test_rig()).collect();
+        (Router::new(replicas, &cfg), rxs)
+    }
+
+    #[test]
+    fn dispatch_is_least_loaded() {
+        let (router, rxs) = fleet(2, 64);
+        router.replicas()[0].gauges.load.store(3, Ordering::Relaxed);
+        assert!(matches!(router.dispatch(req(None)), Dispatch::Ok));
+        assert!(rxs[1].try_recv().is_ok(), "the emptier replica got the request");
+        assert!(rxs[0].try_recv().is_err());
+        // the dispatch itself bumped replica 1's load to 1
+        assert_eq!(router.replicas()[1].gauges.load.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn affinity_pins_a_session_until_its_replica_leaves_rotation() {
+        let (router, rxs) = fleet(2, 64);
+        assert!(matches!(router.dispatch(req(Some("abc"))), Dispatch::Ok));
+        let home = if rxs[0].try_recv().is_ok() { 0 } else { 1 };
+        // load the home replica: the pin still wins over least-loaded
+        router.replicas()[home].gauges.load.store(10, Ordering::Relaxed);
+        assert!(matches!(router.dispatch(req(Some("abc"))), Dispatch::Ok));
+        assert!(rxs[home].try_recv().is_ok(), "pinned despite the load");
+        // home quarantines: the pin is dropped and the session re-homes
+        router.replicas()[home].clear_sender();
+        router.replicas()[home].test_enter(ReplicaState::Quarantined);
+        assert!(matches!(router.dispatch(req(Some("abc"))), Dispatch::Ok));
+        assert!(rxs[1 - home].try_recv().is_ok());
+    }
+
+    #[test]
+    fn serving_beats_probing_and_shed_outcomes_are_distinct() {
+        let (router, rxs) = fleet(2, 1);
+        router.replicas()[0].test_enter(ReplicaState::Probing);
+        // a serving replica wins even at higher load than a probing one
+        router.replicas()[1].gauges.load.store(0, Ordering::Relaxed);
+        assert!(matches!(router.dispatch(req(None)), Dispatch::Ok));
+        assert!(rxs[1].try_recv().is_ok(), "full rotation preferred over probing");
+        assert_eq!(router.serving(), 1);
+        assert_eq!(router.serviceable(), 2);
+
+        // both queues full (waiting >= max_queue=1): global shed
+        for r in router.replicas() {
+            r.gauges.load.store(2, Ordering::Relaxed);
+            r.gauges.lanes_busy.store(0, Ordering::Relaxed);
+        }
+        assert!(matches!(router.dispatch(req(None)), Dispatch::AllFull(_)));
+
+        // zero serviceable replicas: not a shed, an outage
+        for r in router.replicas() {
+            r.clear_sender();
+            r.test_enter(ReplicaState::Quarantined);
+        }
+        assert!(matches!(router.dispatch(req(None)), Dispatch::NoReplica(_)));
+        assert_eq!(router.serviceable(), 0);
+    }
+
+    #[test]
+    fn publish_rolls_gauges_up_and_renders_fleet_lines() {
+        let (router, _rxs) = fleet(2, 64);
+        router.replicas()[0].gauges.queue_depth.store(2, Ordering::Relaxed);
+        router.replicas()[1].gauges.queue_depth.store(3, Ordering::Relaxed);
+        router.replicas()[1].gauges.lanes_busy.store(1, Ordering::Relaxed);
+        router.replicas()[1].gauges.load.store(4, Ordering::Relaxed);
+        let counters = Counters::new();
+        let latch = AtomicBool::new(true);
+        let text = router.publish(&counters, &latch);
+        assert_eq!(counters.lock().queue_depth, 5);
+        assert_eq!(counters.lock().lanes_busy, 1);
+        assert_eq!(counters.lock().healthy, 1);
+        assert!(text.contains("fi_replicas 2"));
+        assert!(text.contains("fi_replicas_healthy 2"));
+        assert!(text.contains("fi_router_queue_depth{replica=\"0\"} 0"));
+        assert!(text.contains("fi_router_queue_depth{replica=\"1\"} 3"));
+        let states = router.replica_states().to_string();
+        assert!(states.contains("\"serving\""), "{states}");
+    }
+}

@@ -19,6 +19,17 @@
 //! `nth` is 1-indexed; `engine_step:panic@3` panics on the third call to
 //! `check("engine_step")` and is inert before and after, so a supervised
 //! server recovers deterministically once the fault has fired.
+//!
+//! Armed points and their call sites:
+//!
+//! | point            | site                                             |
+//! |------------------|--------------------------------------------------|
+//! | `engine_step`    | per step, inside `Session::step_once`            |
+//! | `tau_tile`       | per gray τ tile, on the async-executor worker    |
+//! | `tile_delay`     | per gray τ tile, before compute (delay only)     |
+//! | `pager_alloc`    | per checkpoint allocation in the session pager   |
+//! | `replica_spawn`  | per replica engine boot (initial spawn + respawn)|
+//! | `router_dispatch`| per request dispatch in the replica router       |
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -241,6 +252,22 @@ mod tests {
         check("tile_delay").unwrap();
         check("tile_delay").unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(2));
+        clear();
+    }
+
+    #[test]
+    fn fleet_points_follow_the_same_grammar() {
+        let _s = serial();
+        // the fleet points are plain registry names — same one-shot
+        // semantics as the engine points, no special casing
+        install("replica_spawn:fail@1,router_dispatch:fail@2").unwrap();
+        let err = check("replica_spawn").unwrap_err();
+        assert!(err.to_string().contains("replica_spawn fail@1"), "{err}");
+        assert!(check("replica_spawn").is_ok(), "one-shot: a respawn boots clean");
+        assert!(check("router_dispatch").is_ok());
+        let err = check("router_dispatch").unwrap_err();
+        assert!(err.to_string().contains("router_dispatch fail@2"), "{err}");
+        assert!(check("router_dispatch").is_ok());
         clear();
     }
 

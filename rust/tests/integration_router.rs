@@ -1,0 +1,508 @@
+//! Router/fleet integration: multi-replica serving under fault injection.
+//!
+//! The replica fleet (server/replica.rs + server/router.rs) promises
+//! failure-domain isolation: killing one of two replicas mid-load fails
+//! only that replica's in-flight lanes (structured 500s), fails over its
+//! never-admitted queued requests to the healthy replica bit-identically,
+//! reports `degraded` (not 503) on `/health` throughout the outage, and
+//! respawns the quarantined replica — after its backoff and a clean probe
+//! window it is back in full rotation. A fleet of one must preserve PR
+//! 7's surface exactly.
+//!
+//! The fault registry (`util::faultpoint`) is process-global, so every
+//! test serializes on one mutex and disarms on exit (panic included).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::{Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use flash_inference::config::ServerConfig;
+use flash_inference::server::Server;
+use flash_inference::util::faultpoint;
+use flash_inference::util::json::Json;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Serialize tests and guarantee the global registry is disarmed when the
+/// test ends, even if it fails partway with faults still installed.
+struct FaultGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+impl Drop for FaultGuard<'_> {
+    fn drop(&mut self) {
+        faultpoint::clear();
+    }
+}
+
+fn serial() -> FaultGuard<'static> {
+    let g = SERIAL.lock().unwrap_or_else(PoisonError::into_inner);
+    faultpoint::clear();
+    FaultGuard(g)
+}
+
+fn start_server(cfg: ServerConfig) -> Option<Server> {
+    if !Path::new("artifacts/synthetic/manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    Some(Server::start(cfg).expect("start server"))
+}
+
+fn base_cfg() -> ServerConfig {
+    ServerConfig { port: 0, artifacts: "artifacts/synthetic".into(), ..Default::default() }
+}
+
+fn fleet_cfg(replicas: usize) -> ServerConfig {
+    ServerConfig { replicas, ..base_cfg() }
+}
+
+fn request_raw(addr: std::net::SocketAddr, raw: &str) -> (u16, String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(raw.as_bytes()).unwrap();
+    s.flush().unwrap();
+    // Tolerant read: a shed connection may be closed with the request
+    // bytes unread, so the kernel can follow the response with an RST —
+    // keep whatever arrived before it instead of panicking.
+    let mut bytes = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match s.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => bytes.extend_from_slice(&chunk[..n]),
+            Err(_) => break,
+        }
+    }
+    let buf = String::from_utf8_lossy(&bytes).into_owned();
+    let status = buf.split_whitespace().nth(1).and_then(|t| t.parse::<u16>().ok()).unwrap_or(0);
+    let headers = buf.split("\r\n\r\n").next().unwrap_or("").to_string();
+    let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, headers, body)
+}
+
+fn request(addr: std::net::SocketAddr, raw: &str) -> (u16, String) {
+    let (status, _, body) = request_raw(addr, raw);
+    (status, body)
+}
+
+fn post_generate(addr: std::net::SocketAddr, body: &str) -> (u16, String) {
+    request(
+        addr,
+        &format!(
+            "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        ),
+    )
+}
+
+fn metrics(addr: std::net::SocketAddr) -> String {
+    let (code, body) = request(addr, "GET /metrics HTTP/1.1\r\n\r\n");
+    assert_eq!(code, 200);
+    body
+}
+
+/// Parse one `fi_<name> <value>` line out of the metrics text. `name` may
+/// include a label set (`fi_router_queue_depth{replica="0"}`).
+fn metric(text: &str, name: &str) -> u64 {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            if let Ok(v) = rest.trim().parse::<f64>() {
+                return v as u64;
+            }
+        }
+    }
+    panic!("metric {name} not found in:\n{text}");
+}
+
+fn health(addr: std::net::SocketAddr) -> (u16, Json) {
+    let (code, body) = request(addr, "GET /health HTTP/1.1\r\n\r\n");
+    (code, Json::parse(&body).expect("health body"))
+}
+
+fn health_status(addr: std::net::SocketAddr) -> (u16, String) {
+    let (code, j) = health(addr);
+    (code, j.req_str("status").expect("status").to_string())
+}
+
+fn info(addr: std::net::SocketAddr) -> Json {
+    let (code, body) = request(addr, "GET /v1/info HTTP/1.1\r\n\r\n");
+    assert_eq!(code, 200);
+    Json::parse(&body).expect("info body")
+}
+
+/// Poll `cond` until it holds or `ms` elapses; panics with `what` on
+/// timeout so a hung recovery path fails loudly instead of wedging CI.
+fn wait_until(what: &str, ms: u64, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_millis(ms);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn checksum_of(body: &str) -> f64 {
+    Json::parse(body).expect("json body").get("checksum").unwrap().as_f64().unwrap()
+}
+
+fn replica_of(body: &str) -> usize {
+    Json::parse(body).expect("json body").req_usize("replica").unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Fleet surface: health aggregation, per-replica breakdowns, affinity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn two_replicas_serve_bit_identically_and_report_fleet_health() {
+    let _g = serial();
+    let Some(server) = start_server(fleet_cfg(2)) else { return };
+    let addr = server.addr;
+
+    let (code, h) = health(addr);
+    assert_eq!(code, 200);
+    assert_eq!(h.req_str("status").unwrap(), "healthy");
+    assert_eq!(h.req_usize("replicas_total").unwrap(), 2);
+    assert_eq!(h.req_usize("replicas_serving").unwrap(), 2);
+
+    // both replicas run the same artifacts: answers are bit-identical
+    // regardless of which one serves
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 16, \"seed\": 7}");
+    assert_eq!(code, 200, "{body}");
+    let baseline = checksum_of(&body);
+    assert!(replica_of(&body) < 2);
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 16, \"seed\": 7}");
+    assert_eq!(code, 200, "{body}");
+    assert_eq!(checksum_of(&body), baseline, "replicas must answer identically");
+
+    let m = metrics(addr);
+    assert_eq!(metric(&m, "fi_replicas"), 2, "{m}");
+    assert_eq!(metric(&m, "fi_replicas_healthy"), 2, "{m}");
+    assert_eq!(metric(&m, "fi_replica_restarts_total"), 0, "{m}");
+    assert_eq!(metric(&m, "fi_failovers_total"), 0, "{m}");
+    // per-replica queue-depth series exist for both replicas
+    assert_eq!(metric(&m, "fi_router_queue_depth{replica=\"0\"}"), 0, "{m}");
+    assert_eq!(metric(&m, "fi_router_queue_depth{replica=\"1\"}"), 0, "{m}");
+
+    let i = info(addr);
+    assert_eq!(i.req_usize("replicas").unwrap(), 2);
+    assert_eq!(i.req_usize("replicas_serviceable").unwrap(), 2);
+    let states = i.get("replica_states").unwrap().to_string();
+    assert!(states.contains("\"serving\""), "{states}");
+
+    server.stop();
+}
+
+#[test]
+fn session_key_pins_requests_to_one_replica() {
+    let _g = serial();
+    let Some(server) = start_server(fleet_cfg(2)) else { return };
+    let addr = server.addr;
+
+    // a "session" key is a checkpoint-affinity hint: repeat requests land
+    // on the replica whose pager may hold their evicted checkpoint
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 8, \"session\": \"abc\"}");
+    assert_eq!(code, 200, "{body}");
+    let home = replica_of(&body);
+    for _ in 0..3 {
+        let (code, body) = post_generate(addr, "{\"max_tokens\": 8, \"session\": \"abc\"}");
+        assert_eq!(code, 200, "{body}");
+        assert_eq!(replica_of(&body), home, "session must stay pinned");
+    }
+
+    // a non-string session is a client error, not a silent coercion
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 8, \"session\": 7}");
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("session must be a string"), "{body}");
+
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance chaos scenario: kill one of two replicas mid-load
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_replica_fails_over_bit_identically_and_respawns_into_rotation() {
+    let _g = serial();
+    let cfg = ServerConfig {
+        // zero tolerance: the first panic quarantines the replica
+        restart_budget: 0,
+        quarantine_backoff_ms: 400,
+        quarantine_backoff_max_ms: 2000,
+        probe_window_ms: 100,
+        ..fleet_cfg(2)
+    };
+    let Some(server) = start_server(cfg) else { return };
+    let addr = server.addr;
+    let b = info(addr).req_usize("B").unwrap();
+
+    let gen_body = "{\"max_tokens\": 96, \"seed\": 7}";
+    let (code, body) = post_generate(addr, gen_body);
+    assert_eq!(code, 200, "{body}");
+    let baseline = checksum_of(&body);
+
+    // slow every step so both replicas stay saturated with queued work
+    // long enough for the kill to land mid-load
+    faultpoint::install("engine_step:delay:2@0").unwrap();
+    let total = 2 * b + 6;
+    let mut loaded = Vec::new();
+    for _ in 0..total {
+        loaded.push(std::thread::spawn(move || post_generate(addr, gen_body)));
+    }
+    wait_until("both replicas saturated with queued work", 15_000, || {
+        let m = metrics(addr);
+        metric(&m, "fi_lanes_busy") as usize == 2 * b
+            && metric(&m, "fi_router_queue_depth{replica=\"0\"}") >= 1
+            && metric(&m, "fi_router_queue_depth{replica=\"1\"}") >= 1
+    });
+
+    // kill: the next engine step (on whichever replica gets there first)
+    // panics; budget 0 means that replica quarantines immediately. The
+    // install replaces the delay spec, so recovery is not slowed.
+    faultpoint::install("engine_step:panic@1").unwrap();
+
+    // the outage is an aggregate *degradation*: /health stays 200 with a
+    // per-replica breakdown naming the quarantined replica — a 503 here
+    // would tell a load balancer the whole box is dead, which it is not
+    wait_until("health to report degraded", 10_000, || health_status(addr) == (200, "degraded".into()));
+    let (_, h) = health(addr);
+    assert_eq!(h.req_usize("replicas_serviceable").unwrap(), 1, "{h}");
+    assert!(h.get("replicas").unwrap().to_string().contains("\"quarantined\""), "{h}");
+
+    // every in-flight lane on the dead replica gets a structured 500
+    // carrying the panic; every queued request fails over and completes
+    // bit-identically on the survivor
+    let (mut ok, mut killed) = (0, 0);
+    for t in loaded {
+        let (code, body) = t.join().unwrap();
+        match code {
+            200 => {
+                assert_eq!(checksum_of(&body), baseline, "failover must be bit-identical");
+                ok += 1;
+            }
+            500 => {
+                assert!(body.contains("panicked"), "{body}");
+                killed += 1;
+            }
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    assert!(ok >= 1, "the surviving replica must keep serving");
+    assert!(killed >= 1, "the killed replica's busy lanes must fail structurally");
+    let m = metrics(addr);
+    assert!(metric(&m, "fi_failovers_total") >= 1, "queued work must fail over: {m}");
+
+    // the supervisor respawns the quarantined replica after its backoff;
+    // a clean probe window later the fleet is whole again
+    wait_until("the quarantined replica to respawn and rejoin", 20_000, || {
+        health_status(addr) == (200, "healthy".into())
+    });
+    let m = metrics(addr);
+    assert!(metric(&m, "fi_replica_restarts_total") >= 1, "{m}");
+    assert_eq!(metric(&m, "fi_replicas_healthy"), 2, "{m}");
+    let (code, body) = post_generate(addr, gen_body);
+    assert_eq!(code, 200, "{body}");
+    assert_eq!(checksum_of(&body), baseline, "the healed fleet must answer identically");
+
+    // machine-readable evidence for the CI router-smoke summary
+    if let Ok(path) = std::env::var("FI_ROUTER_OUT") {
+        let doc = Json::from_pairs(vec![
+            ("bench", Json::Str("router_failover".into())),
+            ("fault", Json::Str("engine_step:panic@1".into())),
+            ("replicas", Json::Num(2.0)),
+            ("baseline_checksum", Json::Num(baseline)),
+            ("requests_ok", Json::Num(ok as f64)),
+            ("requests_killed", Json::Num(killed as f64)),
+            ("failovers", Json::Num(metric(&m, "fi_failovers_total") as f64)),
+            ("replica_restarts", Json::Num(metric(&m, "fi_replica_restarts_total") as f64)),
+            ("healed", Json::Bool(true)),
+            (
+                "scenarios",
+                Json::Arr(vec![
+                    Json::from_pairs(vec![
+                        ("scenario", Json::Str("panic kills one of two replicas".into())),
+                        ("status", Json::Str("degraded, 200 (never 503)".into())),
+                        ("recovered", Json::Bool(true)),
+                    ]),
+                    Json::from_pairs(vec![
+                        ("scenario", Json::Str("queued requests fail over".into())),
+                        ("status", Json::Str("200, bit-identical".into())),
+                        ("recovered", Json::Bool(true)),
+                    ]),
+                    Json::from_pairs(vec![
+                        ("scenario", Json::Str("quarantine respawn + probe window".into())),
+                        ("status", Json::Str("back in full rotation".into())),
+                        ("recovered", Json::Bool(true)),
+                    ]),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, doc.to_string()).expect("write router bench json");
+    }
+
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Shed unification and the boot/dispatch fault points
+// ---------------------------------------------------------------------------
+
+#[test]
+fn global_shed_is_429_for_one_replica_and_503_for_a_fleet() {
+    let _g = serial();
+
+    // Ramp the lanes one at a time: queue_full keys off published gauges,
+    // and `lanes_busy` only publishes at step boundaries — a parallel
+    // burst against max_queue=1 would shed during ramp-up and the queue
+    // would never actually fill.
+    fn saturate(
+        addr: std::net::SocketAddr,
+        lanes: usize,
+        extra: usize,
+    ) -> Vec<std::thread::JoinHandle<(u16, String)>> {
+        let mut loaded = Vec::new();
+        for i in 0..lanes {
+            loaded.push(std::thread::spawn(move || {
+                post_generate(addr, "{\"max_tokens\": 128}")
+            }));
+            wait_until("the lane to be admitted", 15_000, || {
+                metric(&metrics(addr), "fi_lanes_busy") as usize > i
+            });
+        }
+        for _ in 0..extra {
+            loaded.push(std::thread::spawn(move || {
+                post_generate(addr, "{\"max_tokens\": 128}")
+            }));
+        }
+        loaded
+    }
+
+    // fleet of one: PR 7's shape — a full queue sheds 429, with the same
+    // Retry-After contract as every other shed path
+    let cfg = ServerConfig { max_queue: 1, ..base_cfg() };
+    let Some(server) = start_server(cfg) else { return };
+    let addr = server.addr;
+    let b = info(addr).req_usize("B").unwrap();
+    faultpoint::install("engine_step:delay:5@0").unwrap();
+    let loaded = saturate(addr, b, 1);
+    wait_until("the single replica's queue to fill", 15_000, || {
+        metric(&metrics(addr), "fi_router_queue_depth{replica=\"0\"}") >= 1
+    });
+    let (code, headers, body) =
+        request_raw(addr, "POST /v1/generate HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}");
+    assert_eq!(code, 429, "single-replica overload is PR 7's 429: {body}");
+    assert!(headers.contains("Retry-After: 1"), "{headers}");
+    assert!(body.contains("queue full"), "{body}");
+    faultpoint::clear();
+    for t in loaded {
+        let (code, body) = t.join().unwrap();
+        assert!(code == 200 || code == 429, "unexpected status {code}: {body}");
+    }
+    server.stop();
+
+    // fleet of two: the shed only fires when *every* replica's queue is
+    // full, and it is a 503 — a capacity statement about the deployment
+    let cfg = ServerConfig { max_queue: 1, ..fleet_cfg(2) };
+    let Some(server) = start_server(cfg) else { return };
+    let addr = server.addr;
+    faultpoint::install("engine_step:delay:5@0").unwrap();
+    let loaded = saturate(addr, 2 * b, 2);
+    wait_until("every replica's queue to fill", 15_000, || {
+        let m = metrics(addr);
+        metric(&m, "fi_router_queue_depth{replica=\"0\"}") >= 1
+            && metric(&m, "fi_router_queue_depth{replica=\"1\"}") >= 1
+    });
+    let (code, headers, body) =
+        request_raw(addr, "POST /v1/generate HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}");
+    assert_eq!(code, 503, "fleet-wide overload is a 503: {body}");
+    assert!(headers.contains("Retry-After: 1"), "{headers}");
+    assert!(body.contains("all replica queues full"), "{body}");
+    assert!(metric(&metrics(addr), "fi_requests_shed") >= 1);
+    faultpoint::clear();
+    for t in loaded {
+        let (code, body) = t.join().unwrap();
+        assert!(code == 200 || code == 503, "unexpected status {code}: {body}");
+    }
+    server.stop();
+}
+
+#[test]
+fn router_dispatch_fault_fails_one_request_structurally() {
+    let _g = serial();
+    let Some(server) = start_server(base_cfg()) else { return };
+    let addr = server.addr;
+
+    faultpoint::install("router_dispatch:fail@1").unwrap();
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 4}");
+    assert_eq!(code, 500, "{body}");
+    assert!(body.contains("fault injection: router_dispatch"), "{body}");
+
+    // one-shot: the very next dispatch goes through
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 4}");
+    assert_eq!(code, 200, "{body}");
+    assert!(metric(&metrics(addr), "fi_requests_failed") >= 1);
+
+    server.stop();
+}
+
+#[test]
+fn boot_failure_degrades_the_fleet_until_the_respawn_succeeds() {
+    let _g = serial();
+    // armed *before* start: replica 0's first boot fails; the server must
+    // come up anyway on replica 1 and heal itself
+    faultpoint::install("replica_spawn:fail@1").unwrap();
+    let cfg = ServerConfig {
+        quarantine_backoff_ms: 500,
+        quarantine_backoff_max_ms: 2000,
+        probe_window_ms: 100,
+        ..fleet_cfg(2)
+    };
+    let Some(server) = start_server(cfg) else { return };
+    let addr = server.addr;
+
+    let (code, status) = health_status(addr);
+    assert_eq!((code, status.as_str()), (200, "degraded"), "one dead replica degrades");
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 8}");
+    assert_eq!(code, 200, "the booted replica must serve: {body}");
+
+    // the fault was one-shot: the supervisor's respawn boots clean, and
+    // after the probe window the fleet reports whole
+    wait_until("the failed replica to boot on respawn", 20_000, || {
+        health_status(addr) == (200, "healthy".into())
+    });
+    assert!(metric(&metrics(addr), "fi_replica_restarts_total") >= 1);
+
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// A fleet of one must be PR 7, exactly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_replica_preserves_the_pr7_surface() {
+    let _g = serial();
+    let Some(server) = start_server(base_cfg()) else { return };
+    let addr = server.addr;
+
+    // /health keeps PR 7's exact body, not the fleet aggregate
+    let (code, body) = request(addr, "GET /health HTTP/1.1\r\n\r\n");
+    assert_eq!(code, 200);
+    assert_eq!(body.trim(), "{\"status\":\"ok\"}");
+
+    let (code, body) = post_generate(addr, "{\"max_tokens\": 8}");
+    assert_eq!(code, 200, "{body}");
+    assert_eq!(replica_of(&body), 0);
+
+    // every PR 7 metric name is still present; the fleet lines are
+    // additive and report the trivial fleet
+    let m = metrics(addr);
+    assert_eq!(metric(&m, "fi_healthy"), 1, "{m}");
+    assert_eq!(metric(&m, "fi_requests_total"), 1, "{m}");
+    assert_eq!(metric(&m, "fi_replicas"), 1, "{m}");
+    assert_eq!(metric(&m, "fi_replicas_healthy"), 1, "{m}");
+    assert_eq!(info(addr).req_usize("replicas").unwrap(), 1);
+
+    server.stop();
+}
