@@ -1,19 +1,35 @@
 #!/usr/bin/env python3
-"""Compare a bench JSON against its checked-in baseline snapshot.
+"""Compare emitted BENCH_*.json files against their checked-in baselines.
 
-Usage: bench_compare.py CURRENT.json [BASELINE.json] [--strict]
+Usage: bench_compare.py [--strict] [--baseline-dir DIR] CURRENT.json...
 
-Modes:
-  * baseline exists  -> per-row numeric diff table (markdown, appended to
-    $GITHUB_STEP_SUMMARY when set, always printed to stdout), plus the
-    multi-worker fence-wait check: at the largest U, the highest worker
-    count's fence_wait_us must not exceed the single-worker value
-    (the "fence-wait -> ~0 at large U" gate from DESIGN.md §5).
-  * baseline missing -> snapshot mode: print the current rows and how to
-    commit the baseline; exit 0.
+Works on every bench schema this repo emits, not just step_probe: any
+top-level key holding an array of objects is treated as a row table
+(`rows`, `sweep`, `modes`, `scenarios`, ...). Rows are joined to the
+baseline on their "u" key when present, else by index, and every shared
+numeric field gets a percent-delta column. Markdown goes to stdout and is
+appended to $GITHUB_STEP_SUMMARY when set.
 
-The diff is report-only by default (shared CI runners are noisy); pass
---strict to turn a fence-wait regression into a nonzero exit.
+Per file:
+  * baseline exists  -> diff table + attribution line from the `meta`
+    header (sha/cpu/simd/workers); a cpu-brand mismatch against the
+    baseline's meta is called out, since cross-machine deltas are noise.
+  * baseline missing -> snapshot mode: print the current table and the
+    `cp` one-liner to commit it. After all files, a single combined
+    one-liner covers every missing baseline at once.
+  * current missing  -> skipped with a note (benches are allowed to be
+    conditional on artifacts), never an error.
+
+Strict gates (--strict turns a failure into a nonzero exit; default is
+report-only because shared CI runners are noisy):
+  1. fence-wait (step_probe): at the largest U, the highest worker
+     count's fence_wait_us must not exceed the single-worker value plus
+     slack — the "fence-wait -> ~0 at large U" gate from DESIGN.md §5.
+  2. crossover (tau_tile): measured_crossover_u must exist whenever the
+     baseline measured one, and must sit within a 2x band of it — the
+     direct<->fused-FFT switch point is the perf trajectory's headline
+     number and silently losing or quadrupling it is a regression even
+     when no single row trips a threshold.
 """
 
 import json
@@ -27,6 +43,8 @@ def load(path):
 
 
 def fmt(v):
+    if isinstance(v, bool):
+        return str(v)
     if isinstance(v, float):
         return f"{v:.1f}"
     return str(v)
@@ -41,20 +59,93 @@ def emit(lines):
             f.write(text)
 
 
+def row_tables(doc):
+    """Every top-level key whose value is a non-empty list of dicts."""
+    return {
+        k: v
+        for k, v in doc.items()
+        if isinstance(v, list) and v and all(isinstance(r, dict) for r in v)
+    }
+
+
 def numeric_keys(rows):
     keys = []
     for row in rows:
         for k, v in row.items():
-            if isinstance(v, (int, float)) and k not in keys:
+            if isinstance(v, (int, float)) and not isinstance(v, bool) and k not in keys:
                 keys.append(k)
     return keys
 
 
-def fence_check(doc):
-    """The machine-checkable gate: multi-worker fence wait at the largest
-    U must not exceed the single-worker baseline (target ~0)."""
-    rows = doc.get("rows", [])
-    workers = [int(w) for w in doc.get("workers", [])]
+def join_rows(cur_rows, base_rows):
+    """(cur, base-or-{}) pairs: join on "u" when both sides have it,
+    else positionally."""
+    if all("u" in r for r in cur_rows) and all("u" in r for r in base_rows):
+        base_by_u = {r["u"]: r for r in base_rows}
+        return [(r, base_by_u.get(r["u"], {})) for r in cur_rows]
+    pairs = []
+    for i, r in enumerate(cur_rows):
+        pairs.append((r, base_rows[i] if i < len(base_rows) else {}))
+    return pairs
+
+
+def table_lines(title, cur_rows, base_rows):
+    keys = numeric_keys(cur_rows)
+    if not keys:
+        return []
+    lines = [f"**{title}**", ""]
+    header = (["u"] if "u" in keys else []) + [k for k in keys if k != "u"]
+    lines.append("| " + " | ".join(header) + " |")
+    lines.append("|" + "---|" * len(header))
+    for row, ref in join_rows(cur_rows, base_rows):
+        cells = []
+        for k in header:
+            v = row.get(k)
+            r = ref.get(k)
+            if (
+                k != "u"
+                and isinstance(v, (int, float))
+                and isinstance(r, (int, float))
+                and r
+            ):
+                cells.append(f"{fmt(v)} ({(v - r) / r * 100.0:+.0f}%)")
+            else:
+                cells.append(fmt(v) if v is not None else "")
+        lines.append("| " + " | ".join(cells) + " |")
+    lines.append("")
+    return lines
+
+
+def meta_line(cur, base):
+    meta = cur.get("meta")
+    if not isinstance(meta, dict):
+        return []
+    bits = [f"sha `{str(meta.get('sha', '?'))[:12]}`", f"cpu: {meta.get('cpu', '?')}"]
+    if meta.get("cpu_features"):
+        bits.append(f"features: {meta['cpu_features']}")
+    bits.append(
+        "simd: "
+        + (meta.get("simd_backend", "?") if meta.get("simd_compiled") else "off")
+    )
+    if meta.get("workers") is not None:
+        bits.append(f"workers: {meta['workers']}")
+    lines = ["_" + " | ".join(str(b) for b in bits) + "_"]
+    base_meta = (base or {}).get("meta")
+    if isinstance(base_meta, dict) and base_meta.get("cpu") and meta.get("cpu"):
+        if base_meta["cpu"] != meta["cpu"]:
+            lines.append(
+                f"⚠️ cpu differs from baseline ({base_meta['cpu']}) — "
+                "deltas below are cross-machine and not comparable."
+            )
+    lines.append("")
+    return lines
+
+
+def fence_gate(cur, base):
+    """step_probe: multi-worker fence wait at the largest U must not exceed
+    the single-worker value (target ~0). Self-contained in the current doc."""
+    rows = cur.get("rows", [])
+    workers = [int(w) for w in cur.get("workers", [])]
     if not rows or len(workers) < 2:
         return None
     last = max(rows, key=lambda r: r.get("u", 0))
@@ -65,100 +156,116 @@ def fence_check(doc):
     lo, hi = float(last[k_lo]), float(last[k_hi])
     # absolute slack absorbs scheduler jitter when both values are ~0
     ok = hi <= lo + max(0.25 * lo, 5.0)
-    return {
-        "u": last.get("u"),
-        "w_lo": w_lo,
-        "w_hi": w_hi,
-        "fence_lo": lo,
-        "fence_hi": hi,
-        "ok": ok,
-    }
+    return (
+        ok,
+        f"fence-wait gate ({'PASS' if ok else 'REGRESSION'}): at U={last.get('u')}, "
+        f"{w_hi} workers wait {hi:.1f}us vs {lo:.1f}us single-worker",
+    )
+
+
+def crossover_gate(cur, base):
+    """tau_tile: the measured direct<->fft crossover must not silently
+    vanish or drift outside a 2x tolerance band of the baseline's."""
+    if "measured_crossover_u" not in cur:
+        return None
+    got = cur.get("measured_crossover_u")
+    want = (base or {}).get("measured_crossover_u")
+    if want is None:
+        if base:
+            return (True, "crossover gate (PASS): baseline has no measured crossover")
+        return None  # snapshot mode: nothing to band against
+    if got is None:
+        return (
+            False,
+            f"crossover gate (REGRESSION): baseline measured U={want:g} "
+            "but the current run found none in its sweep",
+        )
+    ok = want / 2.0 <= float(got) <= want * 2.0
+    return (
+        ok,
+        f"crossover gate ({'PASS' if ok else 'REGRESSION'}): measured U={got:g} "
+        f"vs baseline U={want:g} (2x band)",
+    )
+
+
+GATES = (fence_gate, crossover_gate)
+
+
+def compare_one(cur_path, base_path):
+    """Returns (failed_gates, missing_baseline_pair_or_None)."""
+    if not os.path.exists(cur_path):
+        emit([f"### {os.path.basename(cur_path)}: not produced by this run — skipped"])
+        return 0, None
+
+    cur = load(cur_path)
+    name = cur.get("bench", os.path.basename(cur_path))
+    base = load(base_path) if os.path.exists(base_path) else None
+
+    if base is None:
+        lines = [
+            f"### {name}: no baseline snapshot",
+            "",
+            f"`{base_path}` does not exist yet — running in snapshot mode.",
+            f"To enable PR-over-PR comparison: `cp {cur_path} {base_path}`.",
+            "",
+        ]
+        for title, rows in row_tables(cur).items():
+            lines += table_lines(title, rows, [])
+        emit(lines)
+    else:
+        lines = [f"### {name}: current vs baseline (`{base_path}`)", ""]
+        lines += meta_line(cur, base)
+        base_tables = row_tables(base)
+        for title, rows in row_tables(cur).items():
+            lines += table_lines(title, rows, base_tables.get(title, []))
+        emit(lines)
+
+    failed = 0
+    for gate in GATES:
+        verdict = gate(cur, base)
+        if verdict is None:
+            continue
+        ok, text = verdict
+        emit([text])
+        if not ok:
+            failed += 1
+    return failed, (None if base is not None else (cur_path, base_path))
 
 
 def main(argv):
     strict = "--strict" in argv
     args = [a for a in argv if not a.startswith("--")]
+    if "--baseline-dir" in argv:
+        base_dir = argv[argv.index("--baseline-dir") + 1]
+        args = [a for a in args if a != base_dir]
+    else:
+        base_dir = os.path.join("benches", "baselines")
     if not args:
         print(__doc__)
         return 2
-    cur_path = args[0]
-    base_path = (
-        args[1]
-        if len(args) > 1
-        else os.path.join("benches", "baselines", os.path.basename(cur_path))
-    )
 
-    cur = load(cur_path)
-    name = cur.get("bench", os.path.basename(cur_path))
-    cur_rows = cur.get("rows", [])
+    failed = 0
+    missing = []
+    for cur_path in args:
+        base_path = os.path.join(base_dir, os.path.basename(cur_path))
+        f, miss = compare_one(cur_path, base_path)
+        failed += f
+        if miss:
+            missing.append(miss)
 
-    if not os.path.exists(base_path):
-        lines = [
-            f"### {name}: no baseline snapshot",
-            "",
-            f"`{base_path}` does not exist yet — running in snapshot mode.",
-            "To enable PR-over-PR comparison, commit the current JSON as the "
-            f"baseline: `cp {cur_path} {base_path}`.",
-            "",
-        ]
-        keys = numeric_keys(cur_rows)
-        if keys:
-            lines.append("| " + " | ".join(keys) + " |")
-            lines.append("|" + "---|" * len(keys))
-            for row in cur_rows:
-                lines.append(
-                    "| " + " | ".join(fmt(row.get(k, "")) for k in keys) + " |"
-                )
-        emit(lines)
-        gate = fence_check(cur)
-        if gate:
-            status = "PASS" if gate["ok"] else "REGRESSION"
-            emit(
-                [
-                    f"fence-wait gate ({status}): U={gate['u']} "
-                    f"w{gate['w_hi']}={gate['fence_hi']:.1f}us vs "
-                    f"w{gate['w_lo']}={gate['fence_lo']:.1f}us"
-                ]
-            )
-            if strict and not gate["ok"]:
-                return 1
-        return 0
-
-    base = load(base_path)
-    base_by_u = {r.get("u"): r for r in base.get("rows", [])}
-    keys = numeric_keys(cur_rows)
-    lines = [f"### {name}: current vs baseline (`{base_path}`)", ""]
-    header = ["u"] + [k for k in keys if k != "u"]
-    lines.append("| " + " | ".join(header) + " |")
-    lines.append("|" + "---|" * len(header))
-    for row in cur_rows:
-        u = row.get("u")
-        ref = base_by_u.get(u, {})
-        cells = [fmt(u)]
-        for k in header[1:]:
-            v = row.get(k)
-            r = ref.get(k)
-            if isinstance(v, (int, float)) and isinstance(r, (int, float)) and r:
-                cells.append(f"{fmt(v)} ({(v - r) / r * 100.0:+.0f}%)")
-            else:
-                cells.append(fmt(v) if v is not None else "")
-        lines.append("| " + " | ".join(cells) + " |")
-    lines.append("")
-    emit(lines)
-
-    gate = fence_check(cur)
-    if gate:
-        status = "PASS" if gate["ok"] else "REGRESSION"
+    if missing:
+        cps = " && ".join(f"cp {c} {b}" for c, b in missing)
         emit(
             [
-                f"fence-wait gate ({status}): at U={gate['u']}, "
-                f"{gate['w_hi']} workers wait {gate['fence_hi']:.1f}us vs "
-                f"{gate['fence_lo']:.1f}us single-worker"
+                "To commit every missing baseline in one go (run from `rust/`):",
+                "",
+                f"    {cps}",
+                "",
             ]
         )
-        if strict and not gate["ok"]:
-            return 1
-    return 0
+    if failed:
+        emit([f"{failed} strict gate(s) failed" + ("" if strict else " (report-only)")])
+    return 1 if (strict and failed) else 0
 
 
 if __name__ == "__main__":

@@ -265,6 +265,7 @@ fn paging_probe(addr: std::net::SocketAddr) -> anyhow::Result<Json> {
     );
     Ok(Json::from_pairs(vec![
         ("bench", Json::Str("paging".into())),
+        ("meta", benchkit::bench_meta(None)),
         ("lanes", Json::Num(b as f64)),
         ("concurrent_requests", Json::Num((b + 2) as f64)),
         ("evictions_total", Json::Num(metric("fi_evictions_total"))),

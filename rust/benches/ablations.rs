@@ -40,12 +40,12 @@ fn main() -> anyhow::Result<()> {
         let y: Vec<f32> = (0..u * d).map(|_| rng.normal_f32()).collect();
         let seg = cache.seg(0, u).to_vec();
         let spectra = cache.spectra(u);
-        let (sre, sim) = spectra.planes(0);
+        let (sre, sim) = spectra.halfplanes(0);
         let mut scratch = TileScratch::with_capacity(2 * u, d);
         let mut out = vec![0.0f32; u * d];
 
         let cached = benchkit::bench(warmup, runs, || {
-            fft::tile_conv_rfft_into(&plan, &y, sre, sim, &mut out, &mut scratch, d);
+            fft::tile_conv_rfft_into(&plan, &y, &sre, &sim, &mut out, &mut scratch, d);
         });
         let recompute = benchkit::bench(warmup, runs, || {
             let (re, im) = fft::spectrum_halfplanes(&plan, &seg, d); // the 3rd DFT
@@ -70,14 +70,14 @@ fn main() -> anyhow::Result<()> {
         let y: Vec<f32> = (0..u * d).map(|_| rng.normal_f32()).collect();
         let seg = cache.seg(0, u);
         let spectra = cache.spectra(u);
-        let (sre, sim) = spectra.planes(0);
+        let (sre, sim) = spectra.halfplanes(0);
         let (sre4, sim4) = fft::spectrum_planes(&plan4, seg, d);
         let mut scratch = TileScratch::with_capacity(4 * u, d);
 
         let mut out2 = vec![0.0f32; u * d];
         let cyclic = benchkit::bench(warmup, runs, || {
             out2.fill(0.0);
-            fft::tile_conv_rfft_into(&plan2, &y, sre, sim, &mut out2, &mut scratch, d);
+            fft::tile_conv_rfft_into(&plan2, &y, &sre, &sim, &mut out2, &mut scratch, d);
         });
 
         // canonical: zero-pad input to 4U, full linear conv, slice [U, 2U)

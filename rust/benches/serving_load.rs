@@ -243,6 +243,7 @@ fn main() -> anyhow::Result<()> {
 
     let doc = Json::from_pairs(vec![
         ("bench", Json::Str("serving_load".into())),
+        ("meta", benchkit::bench_meta(None)),
         ("requests", Json::Num(n as f64)),
         ("arrival_rate_rps", Json::Num(rate)),
         ("tokens_min", Json::Num(min_tokens as f64)),

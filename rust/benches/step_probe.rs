@@ -240,6 +240,7 @@ fn overlap_probe() -> anyhow::Result<()> {
 
     let doc = Json::from_pairs(vec![
         ("bench", Json::Str("step_probe_overlap".into())),
+        ("meta", benchkit::bench_meta(workers_list.iter().copied().max())),
         ("g", Json::Num(g as f64)),
         ("d", Json::Num(d as f64)),
         ("red_us", Json::Num(red_us)),

@@ -1,18 +1,20 @@
-//! τ tile-kernel microbench: `rust-direct` vs `rust-fft` (complex and
-//! rfft half-spectrum pipelines) across tile sizes, emitting
-//! `BENCH_tau_tile.json` — the machine-readable perf-trajectory baseline.
+//! τ tile-kernel microbench: `rust-direct` vs `rust-fft` (complex, rfft
+//! half-spectrum, and fused D-blocked rfft pipelines) across tile sizes,
+//! emitting `BENCH_tau_tile.json` — the machine-readable perf-trajectory
+//! baseline, `meta`-stamped so runs are attributable across runners.
 //!
 //! Pure native kernels on synthetic data: needs no artifacts, so it runs
-//! anywhere (including the CI bench-smoke job at a tiny config). The
-//! measured direct↔FFT crossover printed at the end is the empirical
-//! counterpart of `tau::calibrate::predicted_crossover`; the engine's own
-//! table is still produced by `flashinfer calibrate` (it includes the PJRT
-//! impls and real dims).
+//! anywhere (including the CI bench-smoke job at a tiny config, once per
+//! simd feature mode). The measured direct↔FFT crossover printed at the
+//! end — against the *fused* kernel, the path the engine actually runs —
+//! is the empirical counterpart of `tau::calibrate::predicted_crossover`;
+//! the engine's own table is still produced by `flashinfer calibrate`
+//! (it includes the PJRT impls and real dims).
 //!
 //! Knobs: FI_TAU_TILE_MIN_U, FI_TAU_TILE_MAX_U, FI_D, FI_WARMUP, FI_RUNS,
-//! FI_BENCH_OUT.
+//! FI_BENCH_OUT, FI_SIMD (=0 forces the scalar backend).
 
-use flash_inference::fft::{self, Plan, RfftPlan, TileScratch};
+use flash_inference::fft::{self, BlockedSpectrum, Plan, RfftPlan, TileScratch, FUSED_BLOCK_D};
 use flash_inference::tiling::flops;
 use flash_inference::util::benchkit::{self, fmt_ns, Table};
 use flash_inference::util::json::Json;
@@ -27,8 +29,11 @@ fn main() -> anyhow::Result<()> {
     let out_path = benchkit::env_str("FI_BENCH_OUT", "BENCH_tau_tile.json");
     assert!(min_u.is_power_of_two() && max_u.is_power_of_two() && min_u <= max_u);
 
-    println!("\n=== tau tile kernels: direct vs fft(complex) vs fft(rfft) ===");
-    println!("D={d} | per-tile medians over {runs} runs, {warmup} warmup\n");
+    println!("\n=== tau tile kernels: direct vs fft(complex) vs rfft vs rfft-fused ===");
+    println!(
+        "D={d} | simd backend: {} | per-tile medians over {runs} runs, {warmup} warmup\n",
+        fft::simd::backend_name()
+    );
 
     let mut rng = Prng::new(0x7A117);
     let mut table = Table::new(&[
@@ -36,8 +41,9 @@ fn main() -> anyhow::Result<()> {
         "rust_direct",
         "fft_complex",
         "fft_rfft",
-        "rfft_vs_complex",
-        "rfft_vs_direct",
+        "fft_rfft_fused",
+        "fused_vs_rfft",
+        "fused_vs_direct",
     ]);
     let mut rows = Vec::new();
     let mut crossover: Option<usize> = None;
@@ -68,7 +74,15 @@ fn main() -> anyhow::Result<()> {
             fft::tile_conv_rfft_into(&plan_r, &y, &hre, &him, &mut out, &mut scratch, d);
         });
 
-        if crossover.is_none() && rfft.median_ns < direct.median_ns {
+        let blocked = BlockedSpectrum::from_halfplanes(&hre, &him, d);
+        let fused = benchkit::bench(warmup, runs, || {
+            out.fill(0.0);
+            fft::tile_conv_rfft_fused_into(&plan_r, &y, &blocked, &mut out, &mut scratch, d);
+        });
+
+        // the crossover the engine cares about is against the hot path —
+        // the fused kernel, not the PR 2 unfused one
+        if crossover.is_none() && fused.median_ns < direct.median_ns {
             crossover = Some(u);
         }
         table.row(vec![
@@ -76,17 +90,26 @@ fn main() -> anyhow::Result<()> {
             fmt_ns(direct.median_ns),
             fmt_ns(complex.median_ns),
             fmt_ns(rfft.median_ns),
-            format!("{:.2}x", complex.median_ns / rfft.median_ns),
-            format!("{:.2}x", direct.median_ns / rfft.median_ns),
+            fmt_ns(fused.median_ns),
+            format!("{:.2}x", rfft.median_ns / fused.median_ns),
+            format!("{:.2}x", direct.median_ns / fused.median_ns),
         ]);
         rows.push(Json::from_pairs(vec![
             ("u", Json::Num(u as f64)),
             ("direct_ns", Json::Num(direct.median_ns)),
             ("fft_complex_ns", Json::Num(complex.median_ns)),
             ("fft_rfft_ns", Json::Num(rfft.median_ns)),
+            ("fft_rfft_fused_ns", Json::Num(fused.median_ns)),
             ("direct_flops", Json::Num(flops::tile_direct_flops(u, d) as f64)),
             ("fft_complex_flops", Json::Num(flops::tile_fft_flops(u, d) as f64)),
             ("fft_rfft_flops", Json::Num(flops::tile_rfft_flops(u, d) as f64)),
+            // fused FLOPs == rfft FLOPs by construction; what changes is
+            // scratch traffic/residency — emit the byte models alongside
+            ("rfft_scratch_bytes", Json::Num(flops::tile_rfft_scratch_bytes(u, d) as f64)),
+            (
+                "fused_scratch_bytes",
+                Json::Num(flops::tile_rfft_fused_scratch_bytes(u, FUSED_BLOCK_D) as f64),
+            ),
         ]));
         u *= 2;
     }
@@ -95,7 +118,7 @@ fn main() -> anyhow::Result<()> {
     let predicted = flash_inference::tau::calibrate::predicted_crossover();
     match crossover {
         Some(c) => println!(
-            "\nmeasured direct->fft crossover: U = {c} (model predicts {predicted}); \
+            "\nmeasured direct->fft(fused) crossover: U = {c} (model predicts {predicted}); \
              run `flashinfer calibrate` to persist the full hybrid table."
         ),
         None => println!(
@@ -106,6 +129,7 @@ fn main() -> anyhow::Result<()> {
 
     let doc = Json::from_pairs(vec![
         ("bench", Json::Str("tau_tile".into())),
+        ("meta", benchkit::bench_meta(None)),
         ("d", Json::Num(d as f64)),
         ("warmup", Json::Num(warmup as f64)),
         ("runs", Json::Num(runs as f64)),

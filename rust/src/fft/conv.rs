@@ -6,13 +6,18 @@
 //! filter-prefix spectrum can be precomputed per (layer, U) — dropping the
 //! per-tile cost from 3 DFTs to 2.
 //!
-//! Two pipelines implement the same tile: [`tile_conv_fft_into`] on full
-//! complex spectra (the original kernel, kept as the comparison baseline)
-//! and [`tile_conv_rfft_into`] on real-input half-spectra (the hot path:
-//! packed transforms of order U, U+1 cached filter bins — see `fft::rfft`).
+//! Three pipelines implement the same tile: [`tile_conv_fft_into`] on full
+//! complex spectra (the original kernel, kept as the comparison baseline),
+//! [`tile_conv_rfft_into`] on real-input half-spectra (packed transforms of
+//! order U, U+1 cached filter bins — see `fft::rfft`), and
+//! [`tile_conv_rfft_fused_into`] — the hot path — which runs the whole
+//! pack→rfft→cmul→irfft→accumulate chain per D-block over a
+//! [`BlockedSpectrum`] filter so the half-spectrum never materializes in
+//! `TileScratch` (the Flash-Attention lesson: bytes moved, not FLOPs).
 
 use super::plan::Plan;
 use super::rfft::{self, RfftPlan};
+use super::simd;
 use super::vecfft;
 
 /// Reusable scratch planes for tile convolutions (sized to the largest
@@ -72,6 +77,127 @@ impl TileScratch {
             &mut self.half_re[..xlen],
             &mut self.half_im[..xlen],
         )
+    }
+
+    /// Scratch for the fused kernel at packed order `m` over one lane
+    /// block of width `bd`: packed `[m][bd]` planes plus two pair-temp
+    /// rows per plane (`X[k]`/`X[m-k]` live in registers-adjacent temps,
+    /// never as full half-spectrum planes).
+    #[allow(clippy::type_complexity)]
+    fn fused_planes(
+        &mut self,
+        m: usize,
+        bd: usize,
+    ) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+        let zlen = m * bd;
+        let tlen = 2 * bd;
+        if self.re.len() < zlen {
+            self.re.resize(zlen, 0.0);
+            self.im.resize(zlen, 0.0);
+        }
+        if self.half_re.len() < tlen {
+            self.half_re.resize(tlen, 0.0);
+            self.half_im.resize(tlen, 0.0);
+        }
+        (
+            &mut self.re[..zlen],
+            &mut self.im[..zlen],
+            &mut self.half_re[..tlen],
+            &mut self.half_im[..tlen],
+        )
+    }
+}
+
+/// Lane-block width of the fused rfft kernel. The per-block working set
+/// is `2·U·FUSED_BLOCK_D` packed floats plus 4 temp rows — at U = 256
+/// that is ~64 KiB, L1/L2-resident where the unfused whole-width planes
+/// (D = 64: ~512 KiB with the half-spectrum pair) are not. 16 lanes is
+/// also two AVX2 vectors / four NEON vectors, so every row op runs
+/// tail-free on both targets.
+pub const FUSED_BLOCK_D: usize = 16;
+
+/// Filter-prefix half-spectrum re-laid for the fused kernel: the D lanes
+/// are split into blocks of ≤ [`FUSED_BLOCK_D`], each block holding its
+/// `U+1` bins contiguously (`[nblocks][bins][bd]`). The fused per-block
+/// pass then streams the filter sequentially instead of striding through
+/// `[bins][D]` rows at a `D`-lane pitch — this is the blocked layout the
+/// EXPERIMENTS.md §2 D-blocking experiment lacked (it blocked the loops
+/// but kept the flat layout, so every block walk still paid full-row
+/// cache lines).
+///
+/// Same total memory as the flat half-planes; [`Self::to_halfplanes`]
+/// reconstructs the flat `[bins][D]` layout for the PJRT
+/// `@rho_re/@rho_im` uploads.
+#[derive(Debug)]
+pub struct BlockedSpectrum {
+    re: Vec<f32>,
+    im: Vec<f32>,
+    d: usize,
+    bins: usize,
+}
+
+impl BlockedSpectrum {
+    /// Re-block flat `[bins][d]` half-spectrum planes.
+    pub fn from_halfplanes(re: &[f32], im: &[f32], d: usize) -> BlockedSpectrum {
+        assert!(d > 0 && re.len() % d == 0, "plane len {} not a multiple of d={d}", re.len());
+        assert_eq!(re.len(), im.len());
+        let bins = re.len() / d;
+        let mut bre = Vec::with_capacity(re.len());
+        let mut bim = Vec::with_capacity(im.len());
+        for t0 in (0..d).step_by(FUSED_BLOCK_D) {
+            let bd = (d - t0).min(FUSED_BLOCK_D);
+            for k in 0..bins {
+                bre.extend_from_slice(&re[k * d + t0..k * d + t0 + bd]);
+                bim.extend_from_slice(&im[k * d + t0..k * d + t0 + bd]);
+            }
+        }
+        BlockedSpectrum { re: bre, im: bim, d, bins }
+    }
+
+    /// Number of half-spectrum bins per lane (U + 1).
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    /// Total lane count D.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.d.div_ceil(FUSED_BLOCK_D)
+    }
+
+    /// `(lane offset, block width)` of block `blk`.
+    pub fn block_geom(&self, blk: usize) -> (usize, usize) {
+        let t0 = blk * FUSED_BLOCK_D;
+        (t0, (self.d - t0).min(FUSED_BLOCK_D))
+    }
+
+    /// The `[bins][bd]` re/im planes of block `blk`.
+    pub fn block(&self, blk: usize) -> (&[f32], &[f32]) {
+        let (t0, bd) = self.block_geom(blk);
+        let start = t0 * self.bins; // blocks are packed in lane order
+        let len = self.bins * bd;
+        (&self.re[start..start + len], &self.im[start..start + len])
+    }
+
+    /// Reconstruct the flat `[bins][D]` half-planes (the PJRT
+    /// `@rho_re/@rho_im` buffer layout).
+    pub fn to_halfplanes(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut re = vec![0.0f32; self.bins * self.d];
+        let mut im = vec![0.0f32; self.bins * self.d];
+        for blk in 0..self.num_blocks() {
+            let (t0, bd) = self.block_geom(blk);
+            let (bre, bim) = self.block(blk);
+            for k in 0..self.bins {
+                re[k * self.d + t0..k * self.d + t0 + bd]
+                    .copy_from_slice(&bre[k * bd..(k + 1) * bd]);
+                im[k * self.d + t0..k * self.d + t0 + bd]
+                    .copy_from_slice(&bim[k * bd..(k + 1) * bd]);
+            }
+        }
+        (re, im)
     }
 }
 
@@ -184,6 +310,181 @@ pub fn tile_conv_rfft_into(
             for t in 0..d {
                 out_add[r0 + t] += zre[k * d + t] * s;
                 out_add[r0 + d + t] += zim[k * d + t] * s;
+            }
+        }
+    }
+}
+
+/// Fused rfft tile — the native τ hot path. Same contract as
+/// [`tile_conv_rfft_into`] but the whole pack→rfft→cmul→irfft→accumulate
+/// chain runs per lane block of ≤ [`FUSED_BLOCK_D`] lanes against a
+/// [`BlockedSpectrum`] filter, and the half-spectrum is never stored:
+/// each conjugate bin pair `(k, m-k)` is unpacked into four temp rows,
+/// multiplied by the filter bins, and repacked straight back into the
+/// packed planes. Versus [`tile_conv_rfft_into`] this removes the
+/// `[(U+1)][D]` half-spectrum round-trip through `TileScratch` (≈ half
+/// the scratch traffic) and shrinks the resident working set from
+/// `O(U·D)` to `O(U·FUSED_BLOCK_D)` — see `tiling::flops` for the model.
+///
+/// Bit-exactness: every per-lane arithmetic expression is identical to
+/// the unfused pipeline (same primitives from `fft::simd`, same
+/// association, no FMA), and lane blocking never reorders a lane's op
+/// sequence — so results equal [`tile_conv_rfft_into`]'s *bit-for-bit*,
+/// which the tests below assert with `assert_eq!`.
+pub fn tile_conv_rfft_fused_into(
+    plan: &RfftPlan,
+    y: &[f32],
+    spec: &BlockedSpectrum,
+    out_add: &mut [f32],
+    scratch: &mut TileScratch,
+    d: usize,
+) {
+    let n = plan.n;
+    let u = n / 2;
+    let m = plan.m; // == u
+    debug_assert_eq!(y.len(), u * d);
+    debug_assert_eq!(spec.d(), d);
+    debug_assert_eq!(spec.bins(), m + 1);
+    debug_assert_eq!(out_add.len(), u * d);
+    let s = 1.0 / n as f32;
+    let rows = u; // provided input rows; [U, 2U) is the logical zero-pad
+
+    for blk in 0..spec.num_blocks() {
+        let (t0, bd) = spec.block_geom(blk);
+        let (zre, zim, tp_re, tp_im) = scratch.fused_planes(m, bd);
+
+        // pack this lane block: z[k] = x[2k] + i·x[2k+1], zero-padded
+        for k in 0..m {
+            let (even, odd) = (2 * k, 2 * k + 1);
+            let zr = &mut zre[k * bd..(k + 1) * bd];
+            if even < rows {
+                zr.copy_from_slice(&y[even * d + t0..even * d + t0 + bd]);
+            } else {
+                zr.fill(0.0);
+            }
+            let zi = &mut zim[k * bd..(k + 1) * bd];
+            if odd < rows {
+                zi.copy_from_slice(&y[odd * d + t0..odd * d + t0 + bd]);
+            } else {
+                zi.fill(0.0);
+            }
+        }
+
+        vecfft::forward(&plan.half, zre, zim, bd);
+
+        let (bre, bim) = spec.block(blk);
+
+        // endpoint bins (0, m): both come from Z[0]; X'[0] and X'[m]
+        // meet again in the repack of Z'[0] (the k = 0 pair)
+        {
+            let (xk_re, xj_re) = tp_re.split_at_mut(bd);
+            let (xk_im, xj_im) = tp_im.split_at_mut(bd);
+            simd::rfft_endpoints_row(xk_re, xk_im, xj_re, xj_im, &zre[..bd], &zim[..bd]);
+            simd::cmul_rows(xk_re, xk_im, &bre[..bd], &bim[..bd]);
+            simd::cmul_rows(xj_re, xj_im, &bre[m * bd..(m + 1) * bd], &bim[m * bd..(m + 1) * bd]);
+            simd::irfft_repack_row(
+                &mut zre[..bd],
+                &mut zim[..bd],
+                xk_re,
+                xk_im,
+                xj_re,
+                xj_im,
+                plan.tw_re[0],
+                plan.tw_im[0],
+            );
+        }
+
+        // conjugate bin pairs (k, j = m-k), k ∈ [1, m/2): unpack both
+        // from Z, multiply, repack both — Z rows k and j are each read
+        // before either is overwritten
+        for k in 1..=(m.saturating_sub(1)) / 2 {
+            let j = m - k;
+            let (xk_re, xj_re) = tp_re.split_at_mut(bd);
+            let (xk_im, xj_im) = tp_im.split_at_mut(bd);
+            simd::rfft_unpack_row(
+                xk_re,
+                xk_im,
+                &zre[k * bd..(k + 1) * bd],
+                &zim[k * bd..(k + 1) * bd],
+                &zre[j * bd..(j + 1) * bd],
+                &zim[j * bd..(j + 1) * bd],
+                plan.tw_re[k],
+                plan.tw_im[k],
+            );
+            simd::rfft_unpack_row(
+                xj_re,
+                xj_im,
+                &zre[j * bd..(j + 1) * bd],
+                &zim[j * bd..(j + 1) * bd],
+                &zre[k * bd..(k + 1) * bd],
+                &zim[k * bd..(k + 1) * bd],
+                plan.tw_re[j],
+                plan.tw_im[j],
+            );
+            simd::cmul_rows(xk_re, xk_im, &bre[k * bd..(k + 1) * bd], &bim[k * bd..(k + 1) * bd]);
+            simd::cmul_rows(xj_re, xj_im, &bre[j * bd..(j + 1) * bd], &bim[j * bd..(j + 1) * bd]);
+            simd::irfft_repack_row(
+                &mut zre[k * bd..(k + 1) * bd],
+                &mut zim[k * bd..(k + 1) * bd],
+                xk_re,
+                xk_im,
+                xj_re,
+                xj_im,
+                plan.tw_re[k],
+                plan.tw_im[k],
+            );
+            simd::irfft_repack_row(
+                &mut zre[j * bd..(j + 1) * bd],
+                &mut zim[j * bd..(j + 1) * bd],
+                xj_re,
+                xj_im,
+                xk_re,
+                xk_im,
+                plan.tw_re[j],
+                plan.tw_im[j],
+            );
+        }
+
+        // self-paired middle bin k = m/2 (m even): j == k
+        if m >= 2 && m % 2 == 0 {
+            let k = m / 2;
+            let (xk_re, _) = tp_re.split_at_mut(bd);
+            let (xk_im, _) = tp_im.split_at_mut(bd);
+            simd::rfft_unpack_row(
+                xk_re,
+                xk_im,
+                &zre[k * bd..(k + 1) * bd],
+                &zim[k * bd..(k + 1) * bd],
+                &zre[k * bd..(k + 1) * bd],
+                &zim[k * bd..(k + 1) * bd],
+                plan.tw_re[k],
+                plan.tw_im[k],
+            );
+            simd::cmul_rows(xk_re, xk_im, &bre[k * bd..(k + 1) * bd], &bim[k * bd..(k + 1) * bd]);
+            simd::irfft_repack_row(
+                &mut zre[k * bd..(k + 1) * bd],
+                &mut zim[k * bd..(k + 1) * bd],
+                xk_re,
+                xk_im,
+                xk_re,
+                xk_im,
+                plan.tw_re[k],
+                plan.tw_im[k],
+            );
+        }
+
+        vecfft::inverse_unscaled(&plan.half, zre, zim, bd);
+
+        // keep rows [U, 2U), 1/n folded into the accumulate (packed
+        // layout: zre[k] = n·x[2k], zim[k] = n·x[2k+1])
+        if u == 1 {
+            // the single kept row (t = 1) is odd: it lives in the im plane
+            simd::acc_scaled(&mut out_add[t0..t0 + bd], &zim[..bd], s);
+        } else {
+            for k in u / 2..u {
+                let r0 = (2 * k - u) * d + t0; // even kept row ← re plane
+                simd::acc_scaled(&mut out_add[r0..r0 + bd], &zre[k * bd..(k + 1) * bd], s);
+                simd::acc_scaled(&mut out_add[r0 + d..r0 + d + bd], &zim[k * bd..(k + 1) * bd], s);
             }
         }
     }
@@ -388,6 +689,111 @@ mod tests {
         let mut fresh = TileScratch::default();
         let mut out_c = vec![0.0f32; u * d];
         tile_conv_rfft_into(&plan, &y2, &sre, &sim, &mut out_c, &mut fresh, d);
+        for (b, c) in out_b.iter().zip(&out_c) {
+            assert_eq!(b, c);
+        }
+    }
+
+    /// Satellite gate: the fused kernel must be *bit-identical* to the
+    /// unfused rfft pipeline (which itself dispatches through fft::simd,
+    /// so with `--features simd` this also pins SIMD == scalar shapes):
+    /// same per-lane expressions, no FMA, blocking never reorders a
+    /// lane. Covers the ISSUE grid — U ∈ {1, 2, 4, 32, 256}, odd D,
+    /// tail lanes < vector width, D straddling FUSED_BLOCK_D.
+    #[test]
+    fn fused_matches_unfused_bitexact() {
+        for (u, d) in [
+            (1usize, 1usize),
+            (1, 5),
+            (2, 3),
+            (4, 7),
+            (4, 16),
+            (32, 17),
+            (32, 33),
+            (256, 8),
+            (16, 64),
+        ] {
+            let plan = RfftPlan::new(2 * u);
+            let y = rand_vec(u * d, 70 + (u + d) as u64);
+            let rho = rand_vec(2 * u * d, 71 + (u + d) as u64);
+            let (sre, sim) = rfft::spectrum_halfplanes(&plan, &rho, d);
+
+            let mut scratch = TileScratch::default();
+            let mut out_ref = vec![0.5f32; u * d];
+            tile_conv_rfft_into(&plan, &y, &sre, &sim, &mut out_ref, &mut scratch, d);
+
+            let spec = BlockedSpectrum::from_halfplanes(&sre, &sim, d);
+            let mut out_fused = vec![0.5f32; u * d];
+            tile_conv_rfft_fused_into(&plan, &y, &spec, &mut out_fused, &mut scratch, d);
+
+            for (i, (a, b)) in out_fused.iter().zip(&out_ref).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "u={u} d={d} i={i}: fused {a} != unfused {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_direct() {
+        for (u, d) in [(1usize, 1usize), (2, 2), (4, 3), (32, 16), (256, 8), (64, 1), (16, 64)] {
+            let plan = RfftPlan::new(2 * u);
+            let y = rand_vec(u * d, 80 + u as u64);
+            let rho = rand_vec(2 * u * d, 81 + u as u64);
+            let (sre, sim) = rfft::spectrum_halfplanes(&plan, &rho, d);
+            let spec = BlockedSpectrum::from_halfplanes(&sre, &sim, d);
+            let mut scratch = TileScratch::default();
+            let mut got = vec![0.0f32; u * d];
+            tile_conv_rfft_fused_into(&plan, &y, &spec, &mut got, &mut scratch, d);
+            let want = naive_tile(&y, &rho, u, d);
+            let tol = 1e-3 * (u as f32).sqrt();
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < tol, "u={u} d={d}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_spectrum_roundtrips_to_halfplanes() {
+        // the PJRT upload path depends on to_halfplanes being exact
+        for d in [1usize, 3, 16, 17, 32, 50, 64] {
+            let bins = 9;
+            let re = rand_vec(bins * d, 90 + d as u64);
+            let im = rand_vec(bins * d, 91 + d as u64);
+            let spec = BlockedSpectrum::from_halfplanes(&re, &im, d);
+            assert_eq!(spec.bins(), bins);
+            assert_eq!(spec.num_blocks(), d.div_ceil(FUSED_BLOCK_D));
+            let (rre, rim) = spec.to_halfplanes();
+            assert_eq!(rre, re);
+            assert_eq!(rim, im);
+        }
+    }
+
+    #[test]
+    fn fused_scratch_reuse_is_clean() {
+        // a fused call after unfused/complex calls on the same scratch
+        // must not see residue, and vice versa
+        let (u, d) = (16usize, 21usize);
+        let plan = RfftPlan::new(2 * u);
+        let rho = rand_vec(2 * u * d, 95);
+        let (sre, sim) = rfft::spectrum_halfplanes(&plan, &rho, d);
+        let spec = BlockedSpectrum::from_halfplanes(&sre, &sim, d);
+        let y1 = rand_vec(u * d, 96);
+        let y2 = rand_vec(u * d, 97);
+
+        let mut scratch = TileScratch::with_capacity(2 * u, d);
+        let mut out_a = vec![0.0f32; u * d];
+        tile_conv_rfft_fused_into(&plan, &y1, &spec, &mut out_a, &mut scratch, d);
+        let mut out_x = vec![0.0f32; u * d];
+        tile_conv_rfft_into(&plan, &y1, &sre, &sim, &mut out_x, &mut scratch, d);
+        let mut out_b = vec![0.0f32; u * d];
+        tile_conv_rfft_fused_into(&plan, &y2, &spec, &mut out_b, &mut scratch, d);
+
+        let mut fresh = TileScratch::default();
+        let mut out_c = vec![0.0f32; u * d];
+        tile_conv_rfft_fused_into(&plan, &y2, &spec, &mut out_c, &mut fresh, d);
         for (b, c) in out_b.iter().zip(&out_c) {
             assert_eq!(b, c);
         }

@@ -8,11 +8,13 @@ pub mod conv;
 pub mod plan;
 pub mod radix2;
 pub mod rfft;
+pub mod simd;
 pub mod vecfft;
 
 pub use complex::Cpx;
 pub use conv::{
-    spectrum_planes, tile_conv_direct_into, tile_conv_fft_into, tile_conv_rfft_into, TileScratch,
+    spectrum_planes, tile_conv_direct_into, tile_conv_fft_into, tile_conv_rfft_fused_into,
+    tile_conv_rfft_into, BlockedSpectrum, TileScratch, FUSED_BLOCK_D,
 };
 pub use plan::{Plan, PlanCache};
 pub use rfft::{spectrum_halfplanes, RfftPlan, RfftPlanCache};

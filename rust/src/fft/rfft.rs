@@ -19,6 +19,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use super::complex::Cpx;
 use super::plan::{Plan, PlanCache};
+use super::simd;
 use super::vecfft;
 
 /// Plan for a real FFT of (even, power-of-two) order `n`: the order-n/2
@@ -32,8 +33,8 @@ pub struct RfftPlan {
     pub m: usize,
     /// Complex plan of order `m` shared with any other user of that size.
     pub half: Arc<Plan>,
-    tw_re: Vec<f32>,
-    tw_im: Vec<f32>,
+    pub(crate) tw_re: Vec<f32>,
+    pub(crate) tw_im: Vec<f32>,
 }
 
 impl RfftPlan {
@@ -108,28 +109,31 @@ pub fn rfft_into(
     // X[k] = E[k] + w^k·O[k] with E[k] = (Z[k] + conj(Z[m-k]))/2,
     // O[k] = -i·(Z[k] - conj(Z[m-k]))/2, Z[m] ≡ Z[0].
     // Endpoints are real: X[0] = Re Z₀ + Im Z₀, X[m] = Re Z₀ - Im Z₀.
-    for t in 0..d {
-        let (a, b) = (zre[t], zim[t]);
-        out_re[t] = a + b;
-        out_im[t] = 0.0;
-        out_re[m * d + t] = a - b;
-        out_im[m * d + t] = 0.0;
+    {
+        let (x0_re, xm_re) = out_re.split_at_mut(m * d);
+        let (x0_im, xm_im) = out_im.split_at_mut(m * d);
+        simd::rfft_endpoints_row(
+            &mut x0_re[..d],
+            &mut x0_im[..d],
+            &mut xm_re[..d],
+            &mut xm_im[..d],
+            &zre[..d],
+            &zim[..d],
+        );
     }
     for k in 1..m {
         let j = m - k;
         let (wr, wi) = (plan.tw_re[k], plan.tw_im[k]);
-        for t in 0..d {
-            let ar = zre[k * d + t];
-            let ai = zim[k * d + t];
-            let br = zre[j * d + t];
-            let bi = zim[j * d + t];
-            let her = 0.5 * (ar + br); // Re E[k]
-            let hei = 0.5 * (ai - bi); // Im E[k]
-            let hor = 0.5 * (ai + bi); // Re O[k]
-            let hoi = 0.5 * (br - ar); // Im O[k]
-            out_re[k * d + t] = her + wr * hor - wi * hoi;
-            out_im[k * d + t] = hei + wr * hoi + wi * hor;
-        }
+        simd::rfft_unpack_row(
+            &mut out_re[k * d..(k + 1) * d],
+            &mut out_im[k * d..(k + 1) * d],
+            &zre[k * d..(k + 1) * d],
+            &zim[k * d..(k + 1) * d],
+            &zre[j * d..(j + 1) * d],
+            &zim[j * d..(j + 1) * d],
+            wr,
+            wi,
+        );
     }
 }
 
@@ -157,20 +161,16 @@ pub fn irfft_packed_unscaled(
     for k in 0..m {
         let j = m - k; // X has m+1 bins, so no wrap-around
         let (wr, wi) = (plan.tw_re[k], plan.tw_im[k]);
-        for t in 0..d {
-            let ar = spec_re[k * d + t];
-            let ai = spec_im[k * d + t];
-            let br = spec_re[j * d + t];
-            let bi = spec_im[j * d + t];
-            let s_re = ar + br; // X[k] + conj(X[j])
-            let s_im = ai - bi;
-            let dd_re = ar - br; // X[k] - conj(X[j])
-            let dd_im = ai + bi;
-            let t_re = wr * dd_re + wi * dd_im; // conj(w^k)·D
-            let t_im = wr * dd_im - wi * dd_re;
-            zre[k * d + t] = s_re - t_im;
-            zim[k * d + t] = s_im + t_re;
-        }
+        simd::irfft_repack_row(
+            &mut zre[k * d..(k + 1) * d],
+            &mut zim[k * d..(k + 1) * d],
+            &spec_re[k * d..(k + 1) * d],
+            &spec_im[k * d..(k + 1) * d],
+            &spec_re[j * d..(j + 1) * d],
+            &spec_im[j * d..(j + 1) * d],
+            wr,
+            wi,
+        );
     }
 
     vecfft::inverse_unscaled(&plan.half, zre, zim, d);

@@ -1,0 +1,846 @@
+//! Runtime-dispatched SIMD row primitives for the tau hot path.
+//!
+//! Every inner loop of the native rfft pipeline (butterflies, the
+//! half-spectrum unpack/repack, the pointwise complex multiply, and the
+//! scaled accumulate) walks contiguous D-lane rows of SoA `[n][d]`
+//! planes. This module lifts those loops into named row primitives with
+//! three implementations:
+//!
+//! - **scalar** — always compiled, the reference semantics. Tier-1 must
+//!   stay green with the `simd` cargo feature off, so nothing outside
+//!   the dispatch arms is ever `cfg`'d away.
+//! - **AVX2** (x86_64, 8 lanes) and **NEON** (aarch64, 4 lanes) —
+//!   compiled only under `--features simd`, selected at runtime via
+//!   feature detection. On x86_64 the AVX2 path is taken only when
+//!   `is_x86_feature_detected!("avx2")` says so; aarch64 always has
+//!   NEON. Rows shorter than the vector width, and tail lanes of longer
+//!   rows, fall through to the scalar loop.
+//!
+//! **Bit-exactness contract** (load-bearing — see DESIGN.md §9): the
+//! vector paths use only mul/add/sub in *exactly* the same per-lane
+//! expression shape as the scalar loop, and never FMA. IEEE-754 makes
+//! each lane's result bit-identical to the scalar computation, which is
+//! what lets `integration_async` assert bit-identity through the
+//! multi-worker executor regardless of feature mode, and what makes the
+//! equivalence tests below `assert_eq!` on bits rather than tolerances.
+//!
+//! Kill-switch: `FI_SIMD=0` (or `off`) forces the scalar backend even
+//! when compiled with the feature — the first dispatch caches the
+//! decision for the process lifetime.
+
+/// Which implementation the row primitives dispatch to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Backend {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+/// Resolve the backend once per process (feature flags + runtime
+/// detection + `FI_SIMD` kill-switch), then cache it.
+pub fn backend() -> Backend {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static CACHED: AtomicU8 = AtomicU8::new(0);
+    match CACHED.load(Ordering::Relaxed) {
+        1 => return Backend::Scalar,
+        2 => return Backend::Avx2,
+        3 => return Backend::Neon,
+        _ => {}
+    }
+    let b = detect();
+    CACHED.store(
+        match b {
+            Backend::Scalar => 1,
+            Backend::Avx2 => 2,
+            Backend::Neon => 3,
+        },
+        Ordering::Relaxed,
+    );
+    b
+}
+
+/// Backend name for bench `meta` stamping and calibration attribution.
+pub fn backend_name() -> &'static str {
+    match backend() {
+        Backend::Scalar => "scalar",
+        Backend::Avx2 => "avx2",
+        Backend::Neon => "neon",
+    }
+}
+
+fn detect() -> Backend {
+    if matches!(std::env::var("FI_SIMD").as_deref(), Ok("0") | Ok("off")) {
+        return Backend::Scalar;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        // NEON is baseline on aarch64 — no runtime probe needed.
+        return Backend::Neon;
+    }
+    Backend::Scalar
+}
+
+/// Scalar reference implementations. Public so the equivalence tests
+/// (and any caller that must sidestep dispatch) can compare the
+/// dispatched primitives against these bit-for-bit.
+pub mod scalar {
+    /// `(a_re, a_im) *= (b_re, b_im)` lane-wise.
+    pub fn cmul_rows(are: &mut [f32], aim: &mut [f32], bre: &[f32], bim: &[f32]) {
+        for k in 0..are.len() {
+            let ar = are[k];
+            let ai = aim[k];
+            are[k] = ar * bre[k] - ai * bim[k];
+            aim[k] = ar * bim[k] + ai * bre[k];
+        }
+    }
+
+    /// Radix-2 butterfly with twiddle `w` over paired rows:
+    /// `t = w·b; b = a - t; a = a + t`.
+    pub fn butterfly_rows(
+        re_a: &mut [f32],
+        im_a: &mut [f32],
+        re_b: &mut [f32],
+        im_b: &mut [f32],
+        wre: f32,
+        wim: f32,
+    ) {
+        for k in 0..re_a.len() {
+            let tre = wre * re_b[k] - wim * im_b[k];
+            let tim = wre * im_b[k] + wim * re_b[k];
+            re_b[k] = re_a[k] - tre;
+            im_b[k] = im_a[k] - tim;
+            re_a[k] += tre;
+            im_a[k] += tim;
+        }
+    }
+
+    /// Twiddle-free butterfly (`w == 1`): saves 4 mults/lane.
+    pub fn butterfly_rows_w1(
+        re_a: &mut [f32],
+        im_a: &mut [f32],
+        re_b: &mut [f32],
+        im_b: &mut [f32],
+    ) {
+        for k in 0..re_a.len() {
+            let tre = re_b[k];
+            let tim = im_b[k];
+            re_b[k] = re_a[k] - tre;
+            im_b[k] = im_a[k] - tim;
+            re_a[k] += tre;
+            im_a[k] += tim;
+        }
+    }
+
+    /// Forward half-spectrum unpack for bin `k` of the packed real
+    /// transform: split `Z[k]`, `Z[j=m-k]` into even/odd parts and
+    /// twiddle with `w^k = (wr, wi)`:
+    /// `X[k] = He + w·Ho` (see `rfft::rfft_into`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn rfft_unpack_row(
+        xre: &mut [f32],
+        xim: &mut [f32],
+        zk_re: &[f32],
+        zk_im: &[f32],
+        zj_re: &[f32],
+        zj_im: &[f32],
+        wr: f32,
+        wi: f32,
+    ) {
+        for t in 0..xre.len() {
+            let ar = zk_re[t];
+            let ai = zk_im[t];
+            let br = zj_re[t];
+            let bi = zj_im[t];
+            let her = 0.5 * (ar + br);
+            let hei = 0.5 * (ai - bi);
+            let hor = 0.5 * (ai + bi);
+            let hoi = 0.5 * (br - ar);
+            xre[t] = her + wr * hor - wi * hoi;
+            xim[t] = hei + wr * hoi + wi * hor;
+        }
+    }
+
+    /// Inverse repack for bin `k`: fold `X[k]`, `X[j=m-k]` back into the
+    /// packed complex spectrum `Z'[k]` with twiddle `w^k = (wr, wi)`
+    /// (see `rfft::irfft_packed_unscaled`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn irfft_repack_row(
+        zre: &mut [f32],
+        zim: &mut [f32],
+        xk_re: &[f32],
+        xk_im: &[f32],
+        xj_re: &[f32],
+        xj_im: &[f32],
+        wr: f32,
+        wi: f32,
+    ) {
+        for t in 0..zre.len() {
+            let ar = xk_re[t];
+            let ai = xk_im[t];
+            let br = xj_re[t];
+            let bi = xj_im[t];
+            let s_re = ar + br;
+            let s_im = ai - bi;
+            let dd_re = ar - br;
+            let dd_im = ai + bi;
+            let t_re = wr * dd_re + wi * dd_im;
+            let t_im = wr * dd_im - wi * dd_re;
+            zre[t] = s_re - t_im;
+            zim[t] = s_im + t_re;
+        }
+    }
+
+    /// `dst += src · s` lane-wise (the 1/n-folded accumulate).
+    pub fn acc_scaled(dst: &mut [f32], src: &[f32], s: f32) {
+        for t in 0..dst.len() {
+            dst[t] += src[t] * s;
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    //! AVX2 row primitives: 8 f32 lanes per op, scalar tail. NO FMA —
+    //! `_mm256_fmadd_ps` would change rounding vs the scalar loop and
+    //! break the bit-exactness contract, so every expression is built
+    //! from mul/add/sub in the scalar evaluation order.
+    use super::scalar;
+    use std::arch::x86_64::*;
+
+    const W: usize = 8;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn cmul_rows(are: &mut [f32], aim: &mut [f32], bre: &[f32], bim: &[f32]) {
+        let n = are.len();
+        let mut k = 0;
+        while k + W <= n {
+            let ar = _mm256_loadu_ps(are.as_ptr().add(k));
+            let ai = _mm256_loadu_ps(aim.as_ptr().add(k));
+            let br = _mm256_loadu_ps(bre.as_ptr().add(k));
+            let bi = _mm256_loadu_ps(bim.as_ptr().add(k));
+            let re = _mm256_sub_ps(_mm256_mul_ps(ar, br), _mm256_mul_ps(ai, bi));
+            let im = _mm256_add_ps(_mm256_mul_ps(ar, bi), _mm256_mul_ps(ai, br));
+            _mm256_storeu_ps(are.as_mut_ptr().add(k), re);
+            _mm256_storeu_ps(aim.as_mut_ptr().add(k), im);
+            k += W;
+        }
+        scalar::cmul_rows(&mut are[k..], &mut aim[k..], &bre[k..], &bim[k..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn butterfly_rows(
+        re_a: &mut [f32],
+        im_a: &mut [f32],
+        re_b: &mut [f32],
+        im_b: &mut [f32],
+        wre: f32,
+        wim: f32,
+    ) {
+        let n = re_a.len();
+        let wr = _mm256_set1_ps(wre);
+        let wi = _mm256_set1_ps(wim);
+        let mut k = 0;
+        while k + W <= n {
+            let br = _mm256_loadu_ps(re_b.as_ptr().add(k));
+            let bi = _mm256_loadu_ps(im_b.as_ptr().add(k));
+            let ar = _mm256_loadu_ps(re_a.as_ptr().add(k));
+            let ai = _mm256_loadu_ps(im_a.as_ptr().add(k));
+            let tre = _mm256_sub_ps(_mm256_mul_ps(wr, br), _mm256_mul_ps(wi, bi));
+            let tim = _mm256_add_ps(_mm256_mul_ps(wr, bi), _mm256_mul_ps(wi, br));
+            _mm256_storeu_ps(re_b.as_mut_ptr().add(k), _mm256_sub_ps(ar, tre));
+            _mm256_storeu_ps(im_b.as_mut_ptr().add(k), _mm256_sub_ps(ai, tim));
+            _mm256_storeu_ps(re_a.as_mut_ptr().add(k), _mm256_add_ps(ar, tre));
+            _mm256_storeu_ps(im_a.as_mut_ptr().add(k), _mm256_add_ps(ai, tim));
+            k += W;
+        }
+        let (ra, ia) = (&mut re_a[k..], &mut im_a[k..]);
+        scalar::butterfly_rows(ra, ia, &mut re_b[k..], &mut im_b[k..], wre, wim);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn butterfly_rows_w1(
+        re_a: &mut [f32],
+        im_a: &mut [f32],
+        re_b: &mut [f32],
+        im_b: &mut [f32],
+    ) {
+        let n = re_a.len();
+        let mut k = 0;
+        while k + W <= n {
+            let br = _mm256_loadu_ps(re_b.as_ptr().add(k));
+            let bi = _mm256_loadu_ps(im_b.as_ptr().add(k));
+            let ar = _mm256_loadu_ps(re_a.as_ptr().add(k));
+            let ai = _mm256_loadu_ps(im_a.as_ptr().add(k));
+            _mm256_storeu_ps(re_b.as_mut_ptr().add(k), _mm256_sub_ps(ar, br));
+            _mm256_storeu_ps(im_b.as_mut_ptr().add(k), _mm256_sub_ps(ai, bi));
+            _mm256_storeu_ps(re_a.as_mut_ptr().add(k), _mm256_add_ps(ar, br));
+            _mm256_storeu_ps(im_a.as_mut_ptr().add(k), _mm256_add_ps(ai, bi));
+            k += W;
+        }
+        scalar::butterfly_rows_w1(&mut re_a[k..], &mut im_a[k..], &mut re_b[k..], &mut im_b[k..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn rfft_unpack_row(
+        xre: &mut [f32],
+        xim: &mut [f32],
+        zk_re: &[f32],
+        zk_im: &[f32],
+        zj_re: &[f32],
+        zj_im: &[f32],
+        wr: f32,
+        wi: f32,
+    ) {
+        let n = xre.len();
+        let half = _mm256_set1_ps(0.5);
+        let vwr = _mm256_set1_ps(wr);
+        let vwi = _mm256_set1_ps(wi);
+        let mut t = 0;
+        while t + W <= n {
+            let ar = _mm256_loadu_ps(zk_re.as_ptr().add(t));
+            let ai = _mm256_loadu_ps(zk_im.as_ptr().add(t));
+            let br = _mm256_loadu_ps(zj_re.as_ptr().add(t));
+            let bi = _mm256_loadu_ps(zj_im.as_ptr().add(t));
+            let her = _mm256_mul_ps(half, _mm256_add_ps(ar, br));
+            let hei = _mm256_mul_ps(half, _mm256_sub_ps(ai, bi));
+            let hor = _mm256_mul_ps(half, _mm256_add_ps(ai, bi));
+            let hoi = _mm256_mul_ps(half, _mm256_sub_ps(br, ar));
+            // (her + wr·hor) - wi·hoi — same association as scalar
+            let re = _mm256_sub_ps(
+                _mm256_add_ps(her, _mm256_mul_ps(vwr, hor)),
+                _mm256_mul_ps(vwi, hoi),
+            );
+            let im = _mm256_add_ps(
+                _mm256_add_ps(hei, _mm256_mul_ps(vwr, hoi)),
+                _mm256_mul_ps(vwi, hor),
+            );
+            _mm256_storeu_ps(xre.as_mut_ptr().add(t), re);
+            _mm256_storeu_ps(xim.as_mut_ptr().add(t), im);
+            t += W;
+        }
+        scalar::rfft_unpack_row(
+            &mut xre[t..],
+            &mut xim[t..],
+            &zk_re[t..],
+            &zk_im[t..],
+            &zj_re[t..],
+            &zj_im[t..],
+            wr,
+            wi,
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn irfft_repack_row(
+        zre: &mut [f32],
+        zim: &mut [f32],
+        xk_re: &[f32],
+        xk_im: &[f32],
+        xj_re: &[f32],
+        xj_im: &[f32],
+        wr: f32,
+        wi: f32,
+    ) {
+        let n = zre.len();
+        let vwr = _mm256_set1_ps(wr);
+        let vwi = _mm256_set1_ps(wi);
+        let mut t = 0;
+        while t + W <= n {
+            let ar = _mm256_loadu_ps(xk_re.as_ptr().add(t));
+            let ai = _mm256_loadu_ps(xk_im.as_ptr().add(t));
+            let br = _mm256_loadu_ps(xj_re.as_ptr().add(t));
+            let bi = _mm256_loadu_ps(xj_im.as_ptr().add(t));
+            let s_re = _mm256_add_ps(ar, br);
+            let s_im = _mm256_sub_ps(ai, bi);
+            let dd_re = _mm256_sub_ps(ar, br);
+            let dd_im = _mm256_add_ps(ai, bi);
+            let t_re = _mm256_add_ps(_mm256_mul_ps(vwr, dd_re), _mm256_mul_ps(vwi, dd_im));
+            let t_im = _mm256_sub_ps(_mm256_mul_ps(vwr, dd_im), _mm256_mul_ps(vwi, dd_re));
+            _mm256_storeu_ps(zre.as_mut_ptr().add(t), _mm256_sub_ps(s_re, t_im));
+            _mm256_storeu_ps(zim.as_mut_ptr().add(t), _mm256_add_ps(s_im, t_re));
+            t += W;
+        }
+        scalar::irfft_repack_row(
+            &mut zre[t..],
+            &mut zim[t..],
+            &xk_re[t..],
+            &xk_im[t..],
+            &xj_re[t..],
+            &xj_im[t..],
+            wr,
+            wi,
+        );
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn acc_scaled(dst: &mut [f32], src: &[f32], s: f32) {
+        let n = dst.len();
+        let vs = _mm256_set1_ps(s);
+        let mut t = 0;
+        while t + W <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(t));
+            let v = _mm256_loadu_ps(src.as_ptr().add(t));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(t), _mm256_add_ps(d, _mm256_mul_ps(v, vs)));
+            t += W;
+        }
+        scalar::acc_scaled(&mut dst[t..], &src[t..], s);
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    //! NEON row primitives: 4 f32 lanes per op, scalar tail. Like the
+    //! AVX2 path, strictly mul/add/sub (no `vfmaq_f32`) so every lane is
+    //! bit-identical to the scalar loop.
+    use super::scalar;
+    use std::arch::aarch64::*;
+
+    const W: usize = 4;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn cmul_rows(are: &mut [f32], aim: &mut [f32], bre: &[f32], bim: &[f32]) {
+        let n = are.len();
+        let mut k = 0;
+        while k + W <= n {
+            let ar = vld1q_f32(are.as_ptr().add(k));
+            let ai = vld1q_f32(aim.as_ptr().add(k));
+            let br = vld1q_f32(bre.as_ptr().add(k));
+            let bi = vld1q_f32(bim.as_ptr().add(k));
+            let re = vsubq_f32(vmulq_f32(ar, br), vmulq_f32(ai, bi));
+            let im = vaddq_f32(vmulq_f32(ar, bi), vmulq_f32(ai, br));
+            vst1q_f32(are.as_mut_ptr().add(k), re);
+            vst1q_f32(aim.as_mut_ptr().add(k), im);
+            k += W;
+        }
+        scalar::cmul_rows(&mut are[k..], &mut aim[k..], &bre[k..], &bim[k..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn butterfly_rows(
+        re_a: &mut [f32],
+        im_a: &mut [f32],
+        re_b: &mut [f32],
+        im_b: &mut [f32],
+        wre: f32,
+        wim: f32,
+    ) {
+        let n = re_a.len();
+        let wr = vdupq_n_f32(wre);
+        let wi = vdupq_n_f32(wim);
+        let mut k = 0;
+        while k + W <= n {
+            let br = vld1q_f32(re_b.as_ptr().add(k));
+            let bi = vld1q_f32(im_b.as_ptr().add(k));
+            let ar = vld1q_f32(re_a.as_ptr().add(k));
+            let ai = vld1q_f32(im_a.as_ptr().add(k));
+            let tre = vsubq_f32(vmulq_f32(wr, br), vmulq_f32(wi, bi));
+            let tim = vaddq_f32(vmulq_f32(wr, bi), vmulq_f32(wi, br));
+            vst1q_f32(re_b.as_mut_ptr().add(k), vsubq_f32(ar, tre));
+            vst1q_f32(im_b.as_mut_ptr().add(k), vsubq_f32(ai, tim));
+            vst1q_f32(re_a.as_mut_ptr().add(k), vaddq_f32(ar, tre));
+            vst1q_f32(im_a.as_mut_ptr().add(k), vaddq_f32(ai, tim));
+            k += W;
+        }
+        let (ra, ia) = (&mut re_a[k..], &mut im_a[k..]);
+        scalar::butterfly_rows(ra, ia, &mut re_b[k..], &mut im_b[k..], wre, wim);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn butterfly_rows_w1(
+        re_a: &mut [f32],
+        im_a: &mut [f32],
+        re_b: &mut [f32],
+        im_b: &mut [f32],
+    ) {
+        let n = re_a.len();
+        let mut k = 0;
+        while k + W <= n {
+            let br = vld1q_f32(re_b.as_ptr().add(k));
+            let bi = vld1q_f32(im_b.as_ptr().add(k));
+            let ar = vld1q_f32(re_a.as_ptr().add(k));
+            let ai = vld1q_f32(im_a.as_ptr().add(k));
+            vst1q_f32(re_b.as_mut_ptr().add(k), vsubq_f32(ar, br));
+            vst1q_f32(im_b.as_mut_ptr().add(k), vsubq_f32(ai, bi));
+            vst1q_f32(re_a.as_mut_ptr().add(k), vaddq_f32(ar, br));
+            vst1q_f32(im_a.as_mut_ptr().add(k), vaddq_f32(ai, bi));
+            k += W;
+        }
+        scalar::butterfly_rows_w1(&mut re_a[k..], &mut im_a[k..], &mut re_b[k..], &mut im_b[k..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn rfft_unpack_row(
+        xre: &mut [f32],
+        xim: &mut [f32],
+        zk_re: &[f32],
+        zk_im: &[f32],
+        zj_re: &[f32],
+        zj_im: &[f32],
+        wr: f32,
+        wi: f32,
+    ) {
+        let n = xre.len();
+        let half = vdupq_n_f32(0.5);
+        let vwr = vdupq_n_f32(wr);
+        let vwi = vdupq_n_f32(wi);
+        let mut t = 0;
+        while t + W <= n {
+            let ar = vld1q_f32(zk_re.as_ptr().add(t));
+            let ai = vld1q_f32(zk_im.as_ptr().add(t));
+            let br = vld1q_f32(zj_re.as_ptr().add(t));
+            let bi = vld1q_f32(zj_im.as_ptr().add(t));
+            let her = vmulq_f32(half, vaddq_f32(ar, br));
+            let hei = vmulq_f32(half, vsubq_f32(ai, bi));
+            let hor = vmulq_f32(half, vaddq_f32(ai, bi));
+            let hoi = vmulq_f32(half, vsubq_f32(br, ar));
+            let re = vsubq_f32(vaddq_f32(her, vmulq_f32(vwr, hor)), vmulq_f32(vwi, hoi));
+            let im = vaddq_f32(vaddq_f32(hei, vmulq_f32(vwr, hoi)), vmulq_f32(vwi, hor));
+            vst1q_f32(xre.as_mut_ptr().add(t), re);
+            vst1q_f32(xim.as_mut_ptr().add(t), im);
+            t += W;
+        }
+        scalar::rfft_unpack_row(
+            &mut xre[t..],
+            &mut xim[t..],
+            &zk_re[t..],
+            &zk_im[t..],
+            &zj_re[t..],
+            &zj_im[t..],
+            wr,
+            wi,
+        );
+    }
+
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn irfft_repack_row(
+        zre: &mut [f32],
+        zim: &mut [f32],
+        xk_re: &[f32],
+        xk_im: &[f32],
+        xj_re: &[f32],
+        xj_im: &[f32],
+        wr: f32,
+        wi: f32,
+    ) {
+        let n = zre.len();
+        let vwr = vdupq_n_f32(wr);
+        let vwi = vdupq_n_f32(wi);
+        let mut t = 0;
+        while t + W <= n {
+            let ar = vld1q_f32(xk_re.as_ptr().add(t));
+            let ai = vld1q_f32(xk_im.as_ptr().add(t));
+            let br = vld1q_f32(xj_re.as_ptr().add(t));
+            let bi = vld1q_f32(xj_im.as_ptr().add(t));
+            let s_re = vaddq_f32(ar, br);
+            let s_im = vsubq_f32(ai, bi);
+            let dd_re = vsubq_f32(ar, br);
+            let dd_im = vaddq_f32(ai, bi);
+            let t_re = vaddq_f32(vmulq_f32(vwr, dd_re), vmulq_f32(vwi, dd_im));
+            let t_im = vsubq_f32(vmulq_f32(vwr, dd_im), vmulq_f32(vwi, dd_re));
+            vst1q_f32(zre.as_mut_ptr().add(t), vsubq_f32(s_re, t_im));
+            vst1q_f32(zim.as_mut_ptr().add(t), vaddq_f32(s_im, t_re));
+            t += W;
+        }
+        scalar::irfft_repack_row(
+            &mut zre[t..],
+            &mut zim[t..],
+            &xk_re[t..],
+            &xk_im[t..],
+            &xj_re[t..],
+            &xj_im[t..],
+            wr,
+            wi,
+        );
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn acc_scaled(dst: &mut [f32], src: &[f32], s: f32) {
+        let n = dst.len();
+        let vs = vdupq_n_f32(s);
+        let mut t = 0;
+        while t + W <= n {
+            let d = vld1q_f32(dst.as_ptr().add(t));
+            let v = vld1q_f32(src.as_ptr().add(t));
+            vst1q_f32(dst.as_mut_ptr().add(t), vaddq_f32(d, vmulq_f32(v, vs)));
+            t += W;
+        }
+        scalar::acc_scaled(&mut dst[t..], &src[t..], s);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatched entry points. Each checks the cached backend and forwards;
+// the `unsafe` blocks are sound because the Avx2 arm is only reachable
+// after `is_x86_feature_detected!("avx2")` returned true (and Neon only
+// on aarch64 where NEON is architectural baseline).
+// ---------------------------------------------------------------------
+
+/// `(a_re, a_im) *= (b_re, b_im)` lane-wise, dispatched.
+#[inline]
+pub fn cmul_rows(are: &mut [f32], aim: &mut [f32], bre: &[f32], bim: &[f32]) {
+    debug_assert_eq!(are.len(), aim.len());
+    debug_assert_eq!(are.len(), bre.len());
+    debug_assert_eq!(are.len(), bim.len());
+    match backend() {
+        Backend::Scalar => scalar::cmul_rows(are, aim, bre, bim),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Backend::Avx2 => unsafe { avx2::cmul_rows(are, aim, bre, bim) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Backend::Neon => unsafe { neon::cmul_rows(are, aim, bre, bim) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::cmul_rows(are, aim, bre, bim),
+    }
+}
+
+/// Twiddled radix-2 butterfly over paired rows, dispatched.
+#[inline]
+pub fn butterfly_rows(
+    re_a: &mut [f32],
+    im_a: &mut [f32],
+    re_b: &mut [f32],
+    im_b: &mut [f32],
+    wre: f32,
+    wim: f32,
+) {
+    match backend() {
+        Backend::Scalar => scalar::butterfly_rows(re_a, im_a, re_b, im_b, wre, wim),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Backend::Avx2 => unsafe { avx2::butterfly_rows(re_a, im_a, re_b, im_b, wre, wim) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Backend::Neon => unsafe { neon::butterfly_rows(re_a, im_a, re_b, im_b, wre, wim) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::butterfly_rows(re_a, im_a, re_b, im_b, wre, wim),
+    }
+}
+
+/// Twiddle-free butterfly (`w == 1`), dispatched.
+#[inline]
+pub fn butterfly_rows_w1(re_a: &mut [f32], im_a: &mut [f32], re_b: &mut [f32], im_b: &mut [f32]) {
+    match backend() {
+        Backend::Scalar => scalar::butterfly_rows_w1(re_a, im_a, re_b, im_b),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Backend::Avx2 => unsafe { avx2::butterfly_rows_w1(re_a, im_a, re_b, im_b) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Backend::Neon => unsafe { neon::butterfly_rows_w1(re_a, im_a, re_b, im_b) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::butterfly_rows_w1(re_a, im_a, re_b, im_b),
+    }
+}
+
+/// Forward half-spectrum unpack for one bin row, dispatched.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn rfft_unpack_row(
+    xre: &mut [f32],
+    xim: &mut [f32],
+    zk_re: &[f32],
+    zk_im: &[f32],
+    zj_re: &[f32],
+    zj_im: &[f32],
+    wr: f32,
+    wi: f32,
+) {
+    match backend() {
+        Backend::Scalar => scalar::rfft_unpack_row(xre, xim, zk_re, zk_im, zj_re, zj_im, wr, wi),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Backend::Avx2 => unsafe {
+            avx2::rfft_unpack_row(xre, xim, zk_re, zk_im, zj_re, zj_im, wr, wi)
+        },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Backend::Neon => unsafe {
+            neon::rfft_unpack_row(xre, xim, zk_re, zk_im, zj_re, zj_im, wr, wi)
+        },
+        #[allow(unreachable_patterns)]
+        _ => scalar::rfft_unpack_row(xre, xim, zk_re, zk_im, zj_re, zj_im, wr, wi),
+    }
+}
+
+/// Inverse half-spectrum repack for one bin row, dispatched.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn irfft_repack_row(
+    zre: &mut [f32],
+    zim: &mut [f32],
+    xk_re: &[f32],
+    xk_im: &[f32],
+    xj_re: &[f32],
+    xj_im: &[f32],
+    wr: f32,
+    wi: f32,
+) {
+    match backend() {
+        Backend::Scalar => scalar::irfft_repack_row(zre, zim, xk_re, xk_im, xj_re, xj_im, wr, wi),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Backend::Avx2 => unsafe {
+            avx2::irfft_repack_row(zre, zim, xk_re, xk_im, xj_re, xj_im, wr, wi)
+        },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Backend::Neon => unsafe {
+            neon::irfft_repack_row(zre, zim, xk_re, xk_im, xj_re, xj_im, wr, wi)
+        },
+        #[allow(unreachable_patterns)]
+        _ => scalar::irfft_repack_row(zre, zim, xk_re, xk_im, xj_re, xj_im, wr, wi),
+    }
+}
+
+/// `dst += src · s` lane-wise, dispatched.
+#[inline]
+pub fn acc_scaled(dst: &mut [f32], src: &[f32], s: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    match backend() {
+        Backend::Scalar => scalar::acc_scaled(dst, src, s),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Backend::Avx2 => unsafe { avx2::acc_scaled(dst, src, s) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Backend::Neon => unsafe { neon::acc_scaled(dst, src, s) },
+        #[allow(unreachable_patterns)]
+        _ => scalar::acc_scaled(dst, src, s),
+    }
+}
+
+/// Endpoint bins of the packed real transform: `X[0] = (a+b, 0)`,
+/// `X[m] = (a-b, 0)` from `Z[0] = (a, b)`. Pure add/sub — the compiler
+/// auto-vectorizes this trivially, so it has no hand-rolled vector arm.
+pub fn rfft_endpoints_row(
+    x0_re: &mut [f32],
+    x0_im: &mut [f32],
+    xm_re: &mut [f32],
+    xm_im: &mut [f32],
+    z0_re: &[f32],
+    z0_im: &[f32],
+) {
+    for t in 0..x0_re.len() {
+        let a = z0_re[t];
+        let b = z0_im[t];
+        x0_re[t] = a + b;
+        x0_im[t] = 0.0;
+        xm_re[t] = a - b;
+        xm_im[t] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_row(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    /// Every dispatched primitive must be bit-identical to the scalar
+    /// reference — including tail lanes shorter than the vector width
+    /// (d = 1, 3, 7) and widths straddling one/two vectors (9, 15, 17).
+    #[test]
+    fn dispatched_matches_scalar_bitexact() {
+        for d in [1usize, 3, 7, 8, 9, 15, 16, 17, 64] {
+            for seed in 0..3u64 {
+                let bre = rand_row(d, 100 + seed);
+                let bim = rand_row(d, 200 + seed);
+                let (wr, wi) = (0.731f32, -0.682f32);
+
+                // cmul
+                let mut re_s = rand_row(d, seed);
+                let mut im_s = rand_row(d, 10 + seed);
+                let mut re_v = re_s.clone();
+                let mut im_v = im_s.clone();
+                scalar::cmul_rows(&mut re_s, &mut im_s, &bre, &bim);
+                cmul_rows(&mut re_v, &mut im_v, &bre, &bim);
+                assert_eq!(re_s, re_v, "cmul re d={d}");
+                assert_eq!(im_s, im_v, "cmul im d={d}");
+
+                // butterfly (twiddled + w1)
+                let mut ra_s = rand_row(d, 20 + seed);
+                let mut ia_s = rand_row(d, 30 + seed);
+                let mut rb_s = rand_row(d, 40 + seed);
+                let mut ib_s = rand_row(d, 50 + seed);
+                let (mut ra_v, mut ia_v, mut rb_v, mut ib_v) =
+                    (ra_s.clone(), ia_s.clone(), rb_s.clone(), ib_s.clone());
+                scalar::butterfly_rows(&mut ra_s, &mut ia_s, &mut rb_s, &mut ib_s, wr, wi);
+                butterfly_rows(&mut ra_v, &mut ia_v, &mut rb_v, &mut ib_v, wr, wi);
+                assert_eq!((ra_s, ia_s, rb_s, ib_s), (ra_v, ia_v, rb_v, ib_v), "bfly d={d}");
+
+                let mut ra_s = rand_row(d, 21 + seed);
+                let mut ia_s = rand_row(d, 31 + seed);
+                let mut rb_s = rand_row(d, 41 + seed);
+                let mut ib_s = rand_row(d, 51 + seed);
+                let (mut ra_v, mut ia_v, mut rb_v, mut ib_v) =
+                    (ra_s.clone(), ia_s.clone(), rb_s.clone(), ib_s.clone());
+                scalar::butterfly_rows_w1(&mut ra_s, &mut ia_s, &mut rb_s, &mut ib_s);
+                butterfly_rows_w1(&mut ra_v, &mut ia_v, &mut rb_v, &mut ib_v);
+                assert_eq!((ra_s, ia_s, rb_s, ib_s), (ra_v, ia_v, rb_v, ib_v), "bfly_w1 d={d}");
+
+                // rfft unpack / irfft repack
+                let zk_re = rand_row(d, 60 + seed);
+                let zk_im = rand_row(d, 70 + seed);
+                let zj_re = rand_row(d, 80 + seed);
+                let zj_im = rand_row(d, 90 + seed);
+                let mut xr_s = vec![0.0; d];
+                let mut xi_s = vec![0.0; d];
+                let mut xr_v = vec![0.0; d];
+                let mut xi_v = vec![0.0; d];
+                let (xr, xi) = (&mut xr_s, &mut xi_s);
+                scalar::rfft_unpack_row(xr, xi, &zk_re, &zk_im, &zj_re, &zj_im, wr, wi);
+                rfft_unpack_row(&mut xr_v, &mut xi_v, &zk_re, &zk_im, &zj_re, &zj_im, wr, wi);
+                assert_eq!((xr_s, xi_s), (xr_v, xi_v), "unpack d={d}");
+
+                let mut zr_s = vec![0.0; d];
+                let mut zi_s = vec![0.0; d];
+                let mut zr_v = vec![0.0; d];
+                let mut zi_v = vec![0.0; d];
+                let (zr, zi) = (&mut zr_s, &mut zi_s);
+                scalar::irfft_repack_row(zr, zi, &zk_re, &zk_im, &zj_re, &zj_im, wr, wi);
+                irfft_repack_row(&mut zr_v, &mut zi_v, &zk_re, &zk_im, &zj_re, &zj_im, wr, wi);
+                assert_eq!((zr_s, zi_s), (zr_v, zi_v), "repack d={d}");
+
+                // scaled accumulate
+                let mut a_s = rand_row(d, 110 + seed);
+                let mut a_v = a_s.clone();
+                let src = rand_row(d, 120 + seed);
+                scalar::acc_scaled(&mut a_s, &src, 0.125);
+                acc_scaled(&mut a_v, &src, 0.125);
+                assert_eq!(a_s, a_v, "acc d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn backend_is_cached_and_named() {
+        let b = backend();
+        assert_eq!(backend(), b, "dispatch decision must be stable");
+        let name = backend_name();
+        assert!(["scalar", "avx2", "neon"].contains(&name));
+        // without the cargo feature, the backend is always scalar
+        if !cfg!(feature = "simd") {
+            assert_eq!(b, Backend::Scalar);
+        }
+    }
+
+    #[test]
+    fn endpoints_row_matches_definition() {
+        let z0_re = [1.5f32, -2.0, 0.25];
+        let z0_im = [0.5f32, 1.0, -4.0];
+        let mut x0_re = [0.0f32; 3];
+        let mut x0_im = [9.0f32; 3];
+        let mut xm_re = [0.0f32; 3];
+        let mut xm_im = [9.0f32; 3];
+        rfft_endpoints_row(&mut x0_re, &mut x0_im, &mut xm_re, &mut xm_im, &z0_re, &z0_im);
+        for t in 0..3 {
+            assert_eq!(x0_re[t], z0_re[t] + z0_im[t]);
+            assert_eq!(xm_re[t], z0_re[t] - z0_im[t]);
+            assert_eq!(x0_im[t], 0.0);
+            assert_eq!(xm_im[t], 0.0);
+        }
+    }
+}

@@ -3,11 +3,14 @@
 //!
 //! This is the native hot path for the FFT tau implementation. Data layout
 //! is two planes `re`, `im`, each `[n][d]` row-major — every butterfly
-//! touches whole contiguous D-rows, which the compiler auto-vectorizes and
+//! touches whole contiguous D-rows. The row loops dispatch through
+//! `fft::simd` (runtime AVX2/NEON under `--features simd`, scalar
+//! reference otherwise — bit-identical either way; see DESIGN.md §9),
 //! which mirrors exactly how the Pallas kernel lays the tile out in VMEM
 //! (DESIGN.md §Hardware-Adaptation): `d` is the lane axis on both targets.
 
 use super::plan::Plan;
+use super::simd;
 
 /// Forward transform over the first axis of `[n][d]` planes.
 pub fn forward(plan: &Plan, re: &mut [f32], im: &mut [f32], d: usize) {
@@ -42,23 +45,9 @@ fn transform<const INV: bool>(plan: &Plan, re: &mut [f32], im: &mut [f32], d: us
                 let (im_a, im_b) = split_rows(im, ai, bi, d);
                 if wim == 0.0 && wre == 1.0 {
                     // twiddle-free butterfly (j == 0): saves 4 mults/lane
-                    for k in 0..d {
-                        let tre = re_b[k];
-                        let tim = im_b[k];
-                        re_b[k] = re_a[k] - tre;
-                        im_b[k] = im_a[k] - tim;
-                        re_a[k] += tre;
-                        im_a[k] += tim;
-                    }
+                    simd::butterfly_rows_w1(re_a, im_a, re_b, im_b);
                 } else {
-                    for k in 0..d {
-                        let tre = wre * re_b[k] - wim * im_b[k];
-                        let tim = wre * im_b[k] + wim * re_b[k];
-                        re_b[k] = re_a[k] - tre;
-                        im_b[k] = im_a[k] - tim;
-                        re_a[k] += tre;
-                        im_a[k] += tim;
-                    }
+                    simd::butterfly_rows(re_a, im_a, re_b, im_b, wre, wim);
                 }
             }
         }
@@ -78,12 +67,7 @@ fn split_rows(data: &mut [f32], a: usize, b: usize, d: usize) -> (&mut [f32], &m
 /// (re, im) *= (bre, bim), all planes `[n][d]`.
 pub fn cmul_inplace(re: &mut [f32], im: &mut [f32], bre: &[f32], bim: &[f32]) {
     debug_assert_eq!(re.len(), bre.len());
-    for k in 0..re.len() {
-        let ar = re[k];
-        let ai = im[k];
-        re[k] = ar * bre[k] - ai * bim[k];
-        im[k] = ar * bim[k] + ai * bre[k];
-    }
+    simd::cmul_rows(re, im, bre, bim);
 }
 
 #[cfg(test)]

@@ -96,7 +96,7 @@ use anyhow::{anyhow, Result};
 
 use super::{FenceStats, RhoCache, TauImpl, TauKind};
 use crate::engine::store::RowReadiness;
-use crate::fft::{tile_conv_rfft_into, RfftPlan, TileScratch};
+use crate::fft::{tile_conv_rfft_fused_into, RfftPlan, TileScratch};
 use crate::tau::rho_cache::Spectra;
 use crate::tiling::Tile;
 use crate::util::faultpoint;
@@ -536,16 +536,16 @@ fn run_tile(
             let out = unsafe { pending.block_mut(gi, tile.dst_l - 1 + k0, tile.dst_l - 1 + k1) };
             match kernel {
                 Kernel::Fft { plan, spectra } => {
-                    let (sre, sim) = spectra.planes(m);
+                    let spec = spectra.blocked(m);
                     if k0 == 0 && k1 == u {
-                        tile_conv_rfft_into(plan, y, sre, sim, out, scratch, d);
+                        tile_conv_rfft_fused_into(plan, y, spec, out, scratch, d);
                     } else {
                         // tail chunk: full cyclic conv into the
                         // accumulator, land only rows [k0, k1) (earlier
                         // rows belong to the direct-prefix chunks)
                         acc.clear();
                         acc.resize(u * d, 0.0);
-                        tile_conv_rfft_into(plan, y, sre, sim, acc, scratch, d);
+                        tile_conv_rfft_fused_into(plan, y, spec, acc, scratch, d);
                         for (o, v) in out.iter_mut().zip(&acc[k0 * d..k1 * d]) {
                             *o += v;
                         }

@@ -61,7 +61,14 @@ impl CalibrationTable {
                 ])
             })
             .collect();
-        Json::from_pairs(vec![("table", Json::Arr(arr))])
+        // the simd backend is attribution metadata: a table calibrated on
+        // an AVX2 runner does not transfer to a scalar one (the fft-side
+        // crossover moves). `load` ignores unknown keys, so old tables
+        // and new readers interoperate both ways.
+        Json::from_pairs(vec![
+            ("table", Json::Arr(arr)),
+            ("simd", Json::Str(crate::fft::simd::backend_name().into())),
+        ])
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {

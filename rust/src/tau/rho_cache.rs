@@ -21,19 +21,21 @@ use crate::fft::{self, RfftPlan, RfftPlanCache};
 use crate::runtime::{BoundArtifact, Runtime};
 use crate::util::tensor::Tensor;
 
-/// Native filter-prefix *half*-spectrum planes for one tile size U:
-/// `[M, U+1, D]` re/im (rfft bins [0, U] of the order-2U prefix DFT),
-/// per-mixer plane at `m * (U+1) * D`.
+/// Native filter-prefix *half*-spectrum state for one tile size U: per
+/// mixer m, the rfft bins [0, U] of the order-2U prefix DFT, stored in
+/// the D-blocked layout the fused tile kernel consumes
+/// ([`fft::BlockedSpectrum`], `[nblocks][U+1][bd]` per m).
 ///
-/// Real filters have conjugate-symmetric spectra, so the half layout holds
-/// the full information at half the cached memory of the former `[M, 2U,
-/// D]` planes — and is bin-for-bin the layout the PJRT `@rho_re/@rho_im`
-/// buffers consume, so [`RhoCache::pjrt`] copies planes without slicing.
+/// Real filters have conjugate-symmetric spectra, so the half layout
+/// holds the full information at half the cached memory of the former
+/// `[M, 2U, D]` planes; blocking is a pure permutation (same footprint).
+/// The PJRT `@rho_re/@rho_im` buffers still want flat `[U+1, D]` planes —
+/// [`Spectra::halfplanes`] reconstructs them (an init-time copy, off the
+/// token loop).
 pub struct Spectra {
     pub u: usize,
-    pub re: Vec<f32>,
-    pub im: Vec<f32>,
-    plane: usize,
+    pub d: usize,
+    blocks: Vec<fft::BlockedSpectrum>,
 }
 
 impl Spectra {
@@ -42,9 +44,15 @@ impl Spectra {
         self.u + 1
     }
 
-    pub fn planes(&self, m: usize) -> (&[f32], &[f32]) {
-        let off = m * self.plane;
-        (&self.re[off..off + self.plane], &self.im[off..off + self.plane])
+    /// Blocked filter planes of mixer `m` — the fused-kernel operand.
+    pub fn blocked(&self, m: usize) -> &fft::BlockedSpectrum {
+        &self.blocks[m]
+    }
+
+    /// Flat `[U+1, D]` re/im planes of mixer `m` (PJRT upload layout and
+    /// the unfused-kernel operand). Allocates: init-time callers only.
+    pub fn halfplanes(&self, m: usize) -> (Vec<f32>, Vec<f32>) {
+        self.blocks[m].to_halfplanes()
     }
 }
 
@@ -134,15 +142,12 @@ impl<'rt> RhoCache<'rt> {
         }
         let dims = self.rt.dims;
         let plan = self.plan(u);
-        let plane = plan.bins() * dims.d;
-        let mut re = vec![0.0f32; dims.m * plane];
-        let mut im = vec![0.0f32; dims.m * plane];
+        let mut blocks = Vec::with_capacity(dims.m);
         for m in 0..dims.m {
             let (r, i) = fft::spectrum_halfplanes(&plan, self.seg(m, u), dims.d);
-            re[m * plane..(m + 1) * plane].copy_from_slice(&r);
-            im[m * plane..(m + 1) * plane].copy_from_slice(&i);
+            blocks.push(fft::BlockedSpectrum::from_halfplanes(&r, &i, dims.d));
         }
-        let s = Arc::new(Spectra { u, re, im, plane });
+        let s = Arc::new(Spectra { u, d: dims.d, blocks });
         self.spectra.borrow_mut().insert(u, s.clone());
         s
     }
@@ -151,8 +156,9 @@ impl<'rt> RhoCache<'rt> {
     ///
     /// The `@rho_re/@rho_im` buffers hold rfft bins `[0, U]` of the filter
     /// prefix, repeated across the batch lanes of the `G = M·B` axis —
-    /// whole [`Spectra`] planes, which share that layout; the `@rho_seg`
-    /// buffer holds the raw prefix for the Pallas direct kernel.
+    /// flat planes un-blocked from [`Spectra`] at bind time; the
+    /// `@rho_seg` buffer holds the raw prefix for the Pallas direct
+    /// kernel.
     pub fn pjrt(&self, u: usize) -> Result<Arc<PjrtTau>> {
         if let Some(p) = self.pjrt.borrow().get(&u) {
             return Ok(p.clone());
@@ -166,11 +172,11 @@ impl<'rt> RhoCache<'rt> {
         let mut im = vec![0.0f32; g * bins * d];
         let mut seg = vec![0.0f32; g * 2 * u * d];
         for m in 0..dims.m {
-            let (sre, sim) = spectra.planes(m);
+            let (sre, sim) = spectra.halfplanes(m);
             for bi in 0..b {
                 let gi = m * b + bi;
-                re[gi * bins * d..(gi + 1) * bins * d].copy_from_slice(sre);
-                im[gi * bins * d..(gi + 1) * bins * d].copy_from_slice(sim);
+                re[gi * bins * d..(gi + 1) * bins * d].copy_from_slice(&sre);
+                im[gi * bins * d..(gi + 1) * bins * d].copy_from_slice(&sim);
                 seg[gi * 2 * u * d..(gi + 1) * 2 * u * d].copy_from_slice(self.seg(m, u));
             }
         }

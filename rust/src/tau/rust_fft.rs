@@ -2,14 +2,17 @@
 //! (order-2U cyclic convolution via the real-input half-spectrum rfft
 //! pipeline, precomputed filter half-spectra ⇒ 2 packed transforms of
 //! order U per tile), quasilinear FLOPs. The large-U winner on the Pareto
-//! frontier (Fig 3a).
+//! frontier (Fig 3a). Since PR 9 the kernel is the *fused* D-blocked
+//! pass (`fft::tile_conv_rfft_fused_into`): SIMD-dispatched row ops and
+//! no half-spectrum round-trip through scratch, bit-identical to the
+//! unfused pipeline.
 
 use std::cell::RefCell;
 
 use anyhow::Result;
 
 use super::{RhoCache, TauImpl, TauKind};
-use crate::fft::{tile_conv_rfft_into, TileScratch};
+use crate::fft::{tile_conv_rfft_fused_into, TileScratch};
 use crate::tiling::Tile;
 use crate::util::tensor::CellTensor;
 use crate::util::threadpool::ThreadPool;
@@ -53,12 +56,12 @@ impl TauImpl for RustFft<'_, '_> {
         if self.pool.size() == 0 {
             for gi in 0..g {
                 let m = gi / b;
-                let (sre, sim) = spectra.planes(m);
+                let spec = spectra.blocked(m);
                 let y = streams.block(gi, tile.src_l - 1, tile.src_r);
                 // SAFETY: synchronous apply under the deadline contract —
                 // the tile's dst rows are exclusively this caller's
                 let out = unsafe { pending.block_mut(gi, tile.dst_l - 1, tile.dst_r) };
-                tile_conv_rfft_into(&plan, y, sre, sim, out, &mut self.scratch, d);
+                tile_conv_rfft_fused_into(&plan, y, spec, out, &mut self.scratch, d);
             }
             return Ok(());
         }
@@ -71,13 +74,13 @@ impl TauImpl for RustFft<'_, '_> {
         let spectra_ref = spectra.as_ref();
         self.pool.scoped_for(g, |gi| {
             let m = gi / b;
-            let (sre, sim) = spectra_ref.planes(m);
+            let spec = spectra_ref.blocked(m);
             let y = streams.block(gi, tile.src_l - 1, tile.src_r);
             // SAFETY: dst blocks are disjoint across gi, and the tile's
             // rows are this apply call's per the deadline contract.
             let out = unsafe { pending.block_mut(gi, tile.dst_l - 1, tile.dst_r) };
             WORKER_SCRATCH.with(|scratch| {
-                tile_conv_rfft_into(plan_ref, y, sre, sim, out, &mut scratch.borrow_mut(), d);
+                tile_conv_rfft_fused_into(plan_ref, y, spec, out, &mut scratch.borrow_mut(), d);
             });
         });
         Ok(())

@@ -44,6 +44,30 @@ pub fn tile_rfft_flops(u: usize, d: usize) -> u64 {
     per_lane * d as u64
 }
 
+/// Scratch bytes the *unfused* rfft tile kernel streams per group:
+/// packed `[U][D]` re/im planes plus the `[(U+1)][D]` half-spectrum
+/// re/im pair that round-trips through `TileScratch` (f32). The fused
+/// kernel's FLOPs are identical to [`tile_rfft_flops`] — the win is
+/// entirely in this traffic and in working-set residency, which is why
+/// the models are bytes, not FLOPs (the Flash-Attention accounting).
+pub fn tile_rfft_scratch_bytes(u: usize, d: usize) -> u64 {
+    let packed = 2 * u as u64 * d as u64;
+    let half_spec = 2 * (u as u64 + 1) * d as u64;
+    4 * (packed + half_spec)
+}
+
+/// Resident scratch of one pass of the fused rfft kernel
+/// (`tile_conv_rfft_fused_into`) at lane-block width `block_d`
+/// (`fft::FUSED_BLOCK_D`): packed `[U][block_d]` re/im planes plus four
+/// pair-temp rows. The half-spectrum never materializes, so the
+/// working set shrinks by ~`d / block_d`× versus the unfused kernel and
+/// total scratch traffic roughly halves (no half-spectrum write+read).
+pub fn tile_rfft_fused_scratch_bytes(u: usize, block_d: usize) -> u64 {
+    let packed = 2 * u as u64 * block_d as u64;
+    let pair_temps = 4 * block_d as u64;
+    4 * (packed + pair_temps)
+}
+
 /// Mixer-side FLOPs to generate `len` positions with the flash tiling,
 /// per Proposition 2, for `g` groups (= B·M) of `d` lanes, counting red
 /// cells (2 FLOPs per position-lane) plus all gray tiles. The `fft` branch
@@ -144,6 +168,22 @@ mod tests {
         let large = tile_rfft_flops(2048, 1) as f64 / tile_direct_flops(2048, 1) as f64;
         assert!(small > 1.0, "small={small}");
         assert!(large < 0.1, "large={large}");
+    }
+
+    #[test]
+    fn fused_working_set_shrinks_with_block() {
+        // the fused kernel's resident set is ~block_d/d of the unfused
+        // kernel's streamed scratch (plus the pair temps), independent
+        // of D — the memory-movement claim of the fused pass in numbers
+        let (u, d, block_d) = (256usize, 64usize, 16usize);
+        let unfused = tile_rfft_scratch_bytes(u, d);
+        let fused = tile_rfft_fused_scratch_bytes(u, block_d);
+        assert!(fused * 3 < unfused, "fused={fused} unfused={unfused}");
+        // at block_d == d the fused pass still drops the half-spectrum pair
+        let fused_full = tile_rfft_fused_scratch_bytes(u, d);
+        assert!(fused_full < unfused);
+        // and the resident set does not grow with D
+        assert!(tile_rfft_fused_scratch_bytes(u, block_d) < tile_rfft_scratch_bytes(u, 2 * d));
     }
 
     #[test]

@@ -160,6 +160,74 @@ pub fn require_artifacts(dir: &str) -> Option<std::path::PathBuf> {
     }
 }
 
+/// `meta` header stamped into every emitted `BENCH_*.json` so trajectory
+/// diffs are attributable across runners: git sha, cpu brand + runtime
+/// feature flags, simd compile/dispatch state, and (when the bench has
+/// one) the worker count. `bench_compare.py` prints this attribution and
+/// warns when the cpu differs from the committed baseline's.
+pub fn bench_meta(workers: Option<usize>) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let sha = std::env::var("GITHUB_SHA")
+        .ok()
+        .or_else(|| {
+            std::process::Command::new("git")
+                .args(["rev-parse", "HEAD"])
+                .output()
+                .ok()
+                .filter(|o| o.status.success())
+                .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        })
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into());
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    Json::from_pairs(vec![
+        ("sha", Json::Str(sha)),
+        ("cpu", Json::Str(cpu_brand().unwrap_or_else(|| std::env::consts::ARCH.to_string()))),
+        ("cpu_features", Json::Str(cpu_features())),
+        ("os", Json::Str(std::env::consts::OS.into())),
+        ("arch", Json::Str(std::env::consts::ARCH.into())),
+        ("threads", Json::Num(threads as f64)),
+        ("simd_compiled", Json::Bool(cfg!(feature = "simd"))),
+        ("simd_backend", Json::Str(crate::fft::simd::backend_name().into())),
+        ("workers", workers.map_or(Json::Null, |w| Json::Num(w as f64))),
+    ])
+}
+
+/// CPU brand string from /proc/cpuinfo (Linux); None elsewhere.
+fn cpu_brand() -> Option<String> {
+    let text = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+    text.lines()
+        .find(|l| l.starts_with("model name"))
+        .and_then(|l| l.split(':').nth(1))
+        .map(|s| s.trim().to_string())
+}
+
+/// Runtime-detected vector feature flags relevant to `fft::simd`.
+fn cpu_features() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let mut f = Vec::new();
+        if is_x86_feature_detected!("avx2") {
+            f.push("avx2");
+        }
+        if is_x86_feature_detected!("fma") {
+            f.push("fma");
+        }
+        if is_x86_feature_detected!("avx512f") {
+            f.push("avx512f");
+        }
+        f.join(",")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        "neon".to_string()
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        String::new()
+    }
+}
+
 /// Format a nanosecond count human-readably.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -203,6 +271,22 @@ mod tests {
             t.row(vec!["1".into()])
         }));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn bench_meta_has_attribution_keys() {
+        let m = bench_meta(Some(3));
+        for key in ["sha", "cpu", "cpu_features", "os", "arch", "simd_compiled", "simd_backend"] {
+            assert!(m.get(key).is_some(), "missing meta key {key}");
+        }
+        assert!(!m.get("sha").unwrap().as_str().unwrap().is_empty());
+        assert_eq!(m.get("workers").unwrap().as_usize(), Some(3));
+        assert!(matches!(
+            m.get("simd_backend").unwrap().as_str(),
+            Some("scalar" | "avx2" | "neon")
+        ));
+        // without a worker count the field is explicit null, not absent
+        assert!(bench_meta(None).get("workers").is_some());
     }
 
     #[test]

@@ -239,10 +239,25 @@ impl Inner {
             work: Condvar::new(),
             done: Condvar::new(),
         });
+        // Pin workers to distinct cores when the pool undersubscribes the
+        // machine: each persistent worker carries thread-local TileScratch
+        // (tau::rust_fft / tau::async_exec), and OS migration invalidates
+        // the private-cache residency the fused D-blocked kernel is built
+        // around. Core 0 is left for the engine/sampler thread; an exactly-
+        // or over-subscribed pool is not pinned (the scheduler needs the
+        // freedom), and FI_PIN_WORKERS=0 opts out entirely.
+        let cores = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let pin = size < cores
+            && !matches!(std::env::var("FI_PIN_WORKERS").as_deref(), Ok("0") | Ok("off"));
         let workers = (0..size)
-            .map(|_| {
+            .map(|i| {
                 let shared = shared.clone();
-                thread::spawn(move || worker_loop(&shared))
+                thread::spawn(move || {
+                    if pin {
+                        pin_current_thread((i + 1) % cores);
+                    }
+                    worker_loop(&shared)
+                })
             })
             .collect();
         Inner { shared, workers, submit: Mutex::new(()) }
@@ -401,6 +416,33 @@ enum Work {
     Task(QueuedTask),
 }
 
+/// Maximum CPUs representable in the hand-rolled affinity mask (16 × 64).
+const AFFINITY_WORDS: usize = 16;
+
+/// Pin the calling thread to `cpu`. Linux-only; a no-op that returns
+/// `false` elsewhere or on failure (pinning is an optimization, never a
+/// correctness requirement). Hand-rolled `sched_setaffinity(2)` binding —
+/// the libc crate is unavailable offline, and glibc is always linked
+/// (same pattern as the `signal(2)` binding in `cli/commands/serve.rs`).
+#[cfg(target_os = "linux")]
+fn pin_current_thread(cpu: usize) -> bool {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    if cpu >= AFFINITY_WORDS * 64 {
+        return false;
+    }
+    let mut mask = [0u64; AFFINITY_WORDS];
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    // pid 0 = the calling thread
+    unsafe { sched_setaffinity(0, AFFINITY_WORDS * 8, mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_cpu: usize) -> bool {
+    false
+}
+
 fn worker_loop(shared: &Shared) {
     let mut last_epoch = 0u64;
     loop {
@@ -487,6 +529,32 @@ mod tests {
     use super::*;
     use std::collections::HashSet;
     use std::sync::Mutex;
+
+    /// The pin primitive must actually narrow the affinity mask (read
+    /// back via sched_getaffinity) and be restorable — run on a spawned
+    /// thread so the harness thread's affinity is never touched.
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn pin_primitive_restricts_affinity() {
+        extern "C" {
+            fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+        }
+        thread::spawn(|| {
+            let mut before = [0u64; AFFINITY_WORDS];
+            let rc = unsafe { sched_getaffinity(0, AFFINITY_WORDS * 8, before.as_mut_ptr()) };
+            assert_eq!(rc, 0, "sched_getaffinity failed");
+            assert!(pin_current_thread(0), "pinning to cpu 0 must succeed");
+            let mut after = [0u64; AFFINITY_WORDS];
+            let rc = unsafe { sched_getaffinity(0, AFFINITY_WORDS * 8, after.as_mut_ptr()) };
+            assert_eq!(rc, 0);
+            assert_eq!(after[0], 1, "mask must be exactly {{cpu 0}}");
+            assert!(after[1..].iter().all(|&w| w == 0));
+            // out-of-range cpu is rejected without touching the mask
+            assert!(!pin_current_thread(AFFINITY_WORDS * 64));
+        })
+        .join()
+        .unwrap();
+    }
 
     #[test]
     fn inline_pool_runs_everything_in_order() {

@@ -240,6 +240,31 @@ fn multi_worker_unsplit_is_bit_identical_to_sync() {
 }
 
 #[test]
+fn fused_simd_kernel_bit_identical_through_executor_at_all_worker_counts() {
+    // PR 9 equivalence matrix, end to end: the async executor's FFT branch
+    // now runs the fused D-blocked rfft kernel over dispatched simd row
+    // primitives. Because the vector paths never use FMA and lane blocking
+    // never reorders a lane's op sequence, the rollout must stay
+    // bit-identical to the sync reference at mixer_workers ∈ {1, 2, 4} —
+    // in BOTH cargo feature modes (`simd` on/off) and under FI_SIMD=0.
+    // CI runs this file once per feature mode, so a vectorization change
+    // that perturbs even one ulp anywhere in the pipeline fails here.
+    let Some(rt) = runtime("synthetic") else { return };
+    let len = 64;
+    let sync = Engine::new(&rt, opts(TauKind::RustFft, false)).unwrap().generate(len).unwrap();
+    for workers in [1usize, 2, 4] {
+        let asy = Engine::new(
+            &rt,
+            EngineOpts { mixer_workers: workers, ..opts(TauKind::RustFft, true) },
+        )
+        .unwrap()
+        .generate(len)
+        .unwrap();
+        assert_bit_identical(&sync, &asy, &format!("fused rfft workers={workers}"));
+    }
+}
+
+#[test]
 fn multi_worker_matches_sync_with_half_store() {
     // the wrapped store's row reuse is the hardest aliasing case for
     // concurrent tiles: per-row versioning + dep edges must still yield

@@ -273,6 +273,7 @@ fn server_recovers_bit_identically_after_an_engine_panic() {
     if let Ok(path) = std::env::var("FI_CHAOS_OUT") {
         let doc = Json::from_pairs(vec![
             ("bench", Json::Str("chaos_recovery".into())),
+            ("meta", flash_inference::util::benchkit::bench_meta(None)),
             ("fault", Json::Str("engine_step:panic@1".into())),
             ("baseline_checksum", Json::Num(baseline)),
             ("recovered_checksum", Json::Num(recovered)),

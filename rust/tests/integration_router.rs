@@ -265,7 +265,9 @@ fn killed_replica_fails_over_bit_identically_and_respawns_into_rotation() {
     // the outage is an aggregate *degradation*: /health stays 200 with a
     // per-replica breakdown naming the quarantined replica — a 503 here
     // would tell a load balancer the whole box is dead, which it is not
-    wait_until("health to report degraded", 10_000, || health_status(addr) == (200, "degraded".into()));
+    wait_until("health to report degraded", 10_000, || {
+        health_status(addr) == (200, "degraded".into())
+    });
     let (_, h) = health(addr);
     assert_eq!(h.req_usize("replicas_serviceable").unwrap(), 1, "{h}");
     assert!(h.get("replicas").unwrap().to_string().contains("\"quarantined\""), "{h}");
@@ -309,6 +311,7 @@ fn killed_replica_fails_over_bit_identically_and_respawns_into_rotation() {
     if let Ok(path) = std::env::var("FI_ROUTER_OUT") {
         let doc = Json::from_pairs(vec![
             ("bench", Json::Str("router_failover".into())),
+            ("meta", flash_inference::util::benchkit::bench_meta(None)),
             ("fault", Json::Str("engine_step:panic@1".into())),
             ("replicas", Json::Num(2.0)),
             ("baseline_checksum", Json::Num(baseline)),

@@ -132,10 +132,11 @@ fn calibration_produces_complete_table() {
 
 #[test]
 fn spectra_are_half_spectrum_planes() {
-    // the rho cache stores [M, U+1, D] half-spectrum planes: half the
-    // memory of the former [M, 2U, D] full planes, and bin-for-bin the
-    // content the PJRT @rho_re/@rho_im buffers are built from (bins [0, U]
-    // of the full order-2U filter-prefix DFT).
+    // the rho cache stores per-m half-spectrum state (D-blocked for the
+    // fused kernel): half the memory of the former [M, 2U, D] full
+    // planes, and bin-for-bin the content the PJRT @rho_re/@rho_im
+    // buffers are built from (bins [0, U] of the full order-2U
+    // filter-prefix DFT) once un-blocked via halfplanes().
     let Some(rt) = runtime() else { return };
     let cache = RhoCache::new(&rt).expect("rho cache");
     let d = rt.dims.d;
@@ -143,15 +144,15 @@ fn spectra_are_half_spectrum_planes() {
         let spectra = cache.spectra(u);
         let bins = u + 1;
         assert_eq!(spectra.bins(), bins);
-        assert_eq!(spectra.re.len(), rt.dims.m * bins * d);
-        assert_eq!(spectra.im.len(), rt.dims.m * bins * d);
+        assert_eq!(spectra.d, d);
 
         let full_plan = fft::Plan::new(2 * u);
         let tol = 1e-3 * (u as f32).sqrt();
         for m in 0..rt.dims.m {
             let (full_re, full_im) = fft::spectrum_planes(&full_plan, cache.seg(m, u), d);
-            let (hre, him) = spectra.planes(m);
+            let (hre, him) = spectra.halfplanes(m);
             assert_eq!(hre.len(), bins * d);
+            assert_eq!(spectra.blocked(m).bins(), bins);
             for k in 0..bins * d {
                 assert!(
                     (hre[k] - full_re[k]).abs() < tol && (him[k] - full_im[k]).abs() < tol,
