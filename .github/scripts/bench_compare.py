@@ -30,6 +30,9 @@ report-only because shared CI runners are noisy):
      direct<->fused-FFT switch point is the perf trajectory's headline
      number and silently losing or quadrupling it is a regression even
      when no single row trips a threshold.
+  3. session-cache (serving smoke): every fold/spill/resume row must
+     report checksum_match — a False is a correctness break, not noise,
+     so it is reported even in report-only mode.
 """
 
 import json
@@ -188,7 +191,26 @@ def crossover_gate(cur, base):
     )
 
 
-GATES = (fence_gate, crossover_gate)
+def session_cache_gate(cur, base):
+    """session_cache: each fold -> spill -> cross-session resume must be
+    bit-identical; the probe itself fails hard, but a hand-edited or stale
+    JSON must not read as a pass."""
+    if cur.get("bench") != "session_cache":
+        return None
+    rows = cur.get("rows", [])
+    if not rows:
+        return None
+    bad = [r.get("suspend_at") for r in rows if r.get("checksum_match") is not True]
+    ok = not bad
+    detail = (
+        f"all {len(rows)} folds resumed bit-identically"
+        if ok
+        else f"checksum mismatch at suspend positions {bad}"
+    )
+    return (ok, f"session-cache gate ({'PASS' if ok else 'REGRESSION'}): {detail}")
+
+
+GATES = (fence_gate, crossover_gate, session_cache_gate)
 
 
 def compare_one(cur_path, base_path):

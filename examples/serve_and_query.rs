@@ -274,6 +274,136 @@ fn paging_probe(addr: std::net::SocketAddr) -> anyhow::Result<Json> {
     ]))
 }
 
+/// The session-cache probe (BENCH_session_cache.json): fold a lane out
+/// of a running session (`suspend_folded` — the FutureFill fold at
+/// suspend), spill the serialized FICK blob to disk, and resume it in a
+/// **different** session at a **different** global position, requiring
+/// per-position checksums bit-identical to an uninterrupted run. Times
+/// the fold, the spill write, and the reload, so the O(p·(L−p)) fold
+/// cost from DESIGN.md §6 has a measured counterpart per position.
+fn session_cache_probe(artifacts: &str) -> anyhow::Result<Json> {
+    use flash_inference::engine::{Engine, LaneInit, Method, SamplerCfg};
+    use flash_inference::runtime::Runtime;
+
+    let rt = Runtime::load(std::path::Path::new(artifacts))?;
+    let engine = Engine::new(
+        &rt,
+        EngineOpts {
+            method: Method::Flash,
+            // direct τ: the folded deposit is bit-identical (DESIGN.md §6)
+            tau: TauKind::RustDirect,
+            async_mixer: true,
+            ..Default::default()
+        },
+    )?;
+    let mut pager = engine.make_pager(64);
+    let spill_dir =
+        std::env::temp_dir().join(format!("fi-session-cache-{}", std::process::id()));
+    pager.set_spill_dir(&spill_dir)?;
+
+    let lane = 0usize;
+    let (len, admit_at, limit) = (128usize, 8usize, 64usize);
+    let mk_init = |seed: u64| LaneInit {
+        limit,
+        sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.25 }),
+        seed: Some(seed),
+        pending_seed: None,
+    };
+
+    let mut rows = Vec::new();
+    // early / middle / late folds; each restores at an unaligned position
+    let cases = [(16usize, 10usize), (32, 48), (56, 90)];
+    for (k, &(suspend_at, restore_at)) in cases.iter().enumerate() {
+        let seed = 900 + k as u64;
+        let lane_pos = suspend_at - admit_at;
+        let span = limit - lane_pos;
+
+        // uninterrupted baseline
+        let mut base = engine.session(len)?;
+        for _ in 0..admit_at {
+            base.step()?;
+        }
+        base.admit(lane, mk_init(seed))?;
+        let mut want = Vec::with_capacity(limit);
+        for _ in 0..limit {
+            want.push(base.step()?.lane_checksums[lane]);
+        }
+        base.finish();
+
+        // session 1: run to the suspend position, fold, spill, move on
+        let mut s1 = engine.session(len)?;
+        for _ in 0..admit_at {
+            s1.step()?;
+        }
+        s1.admit(lane, mk_init(seed))?;
+        let mut got = Vec::with_capacity(limit);
+        for _ in 0..lane_pos {
+            got.push(s1.step()?.lane_checksums[lane]);
+        }
+        let t = Instant::now();
+        let ckpt = s1.suspend_folded(lane, &mut pager)?;
+        let fold_ms = t.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(ckpt.folded() && ckpt.span() == span, "unexpected checkpoint shape");
+        let key = format!("cache-{k}");
+        let blob = pager.serialize(&ckpt, None);
+        let blob_bytes = blob.len();
+        let t = Instant::now();
+        pager.spill_blob(&key, &blob)?;
+        let spill_ms = t.elapsed().as_secs_f64() * 1e3;
+        pager.discard(ckpt);
+        // the spilled copy must be byte-exact (it is the durable handle)
+        let on_disk = std::fs::read_dir(&spill_dir)?
+            .filter_map(|e| e.ok())
+            .find(|e| e.path().extension().and_then(|x| x.to_str()) == Some("fick"))
+            .ok_or_else(|| anyhow::anyhow!("no .fick file after spill"))?;
+        anyhow::ensure!(std::fs::read(on_disk.path())? == blob, "spilled blob not byte-exact");
+        for _ in 0..4 {
+            s1.step()?;
+        }
+        s1.finish();
+
+        // session 2: a fresh session at an arbitrary clock — reload the
+        // spilled checkpoint and resume, no alignment wait
+        let mut s2 = engine.session(len)?;
+        for _ in 0..restore_at {
+            s2.step()?;
+        }
+        let t = Instant::now();
+        let (ckpt, _meta) = pager.load_spilled(&key)?;
+        let reload_ms = t.elapsed().as_secs_f64() * 1e3;
+        s2.restore(lane, ckpt, &mut pager)?;
+        while !s2.lane_done(lane) {
+            got.push(s2.step()?.lane_checksums[lane]);
+        }
+        s2.finish();
+        anyhow::ensure!(
+            want == got,
+            "fold at {suspend_at} / resume at {restore_at}: checksums diverged from baseline"
+        );
+        println!(
+            "  fold at pos {suspend_at} (span {span}) -> spill ({blob_bytes} B) -> resume at \
+             pos {restore_at}: bit-identical; fold {fold_ms:.2}ms, reload {reload_ms:.2}ms"
+        );
+        rows.push(Json::from_pairs(vec![
+            ("suspend_at", Json::Num(suspend_at as f64)),
+            ("restore_at", Json::Num(restore_at as f64)),
+            ("span", Json::Num(span as f64)),
+            ("fold_ms", Json::Num(fold_ms)),
+            ("spill_ms", Json::Num(spill_ms)),
+            ("reload_ms", Json::Num(reload_ms)),
+            ("blob_bytes", Json::Num(blob_bytes as f64)),
+            ("checksum_match", Json::Bool(true)),
+        ]));
+    }
+    let _ = std::fs::remove_dir_all(&spill_dir);
+    Ok(Json::from_pairs(vec![
+        ("bench", Json::Str("session_cache".into())),
+        ("meta", benchkit::bench_meta(None)),
+        ("limit", Json::Num(limit as f64)),
+        ("rows", Json::Arr(rows)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts/hyena".into());
     let cfg = ServerConfig {
@@ -385,6 +515,14 @@ fn main() -> anyhow::Result<()> {
     let out_path = benchkit::env_str("FI_PAGING_OUT", "BENCH_paging.json");
     std::fs::write(&out_path, paging_doc.to_string_pretty())?;
     println!("  wrote {out_path}");
+
+    // position-independent checkpoints: fold -> spill -> resume in a
+    // different session at a different position (BENCH_session_cache.json)
+    println!("\n=== session-cache probe (fold -> spill -> cross-session resume) ===");
+    let sc_doc = session_cache_probe(&artifacts)?;
+    let sc_path = benchkit::env_str("FI_SESSION_CACHE_OUT", "BENCH_session_cache.json");
+    std::fs::write(&sc_path, sc_doc.to_string_pretty())?;
+    println!("  wrote {sc_path}");
 
     // scrape the server's own metrics
     let metrics = scrape_metrics(addr)?;

@@ -14,7 +14,7 @@
 //! Knobs: FI_TAU_TILE_MIN_U, FI_TAU_TILE_MAX_U, FI_D, FI_WARMUP, FI_RUNS,
 //! FI_BENCH_OUT, FI_SIMD (=0 forces the scalar backend).
 
-use flash_inference::fft::{self, BlockedSpectrum, Plan, RfftPlan, TileScratch, FUSED_BLOCK_D};
+use flash_inference::fft::{self, BlockedSpectrum, Plan, RfftPlan, TileScratch};
 use flash_inference::tiling::flops;
 use flash_inference::util::benchkit::{self, fmt_ns, Table};
 use flash_inference::util::json::Json;
@@ -108,7 +108,9 @@ fn main() -> anyhow::Result<()> {
             ("rfft_scratch_bytes", Json::Num(flops::tile_rfft_scratch_bytes(u, d) as f64)),
             (
                 "fused_scratch_bytes",
-                Json::Num(flops::tile_rfft_fused_scratch_bytes(u, FUSED_BLOCK_D) as f64),
+                Json::Num(
+                    flops::tile_rfft_fused_scratch_bytes(u, fft::simd::fused_block_d()) as f64,
+                ),
             ),
         ]));
         u *= 2;

@@ -56,6 +56,10 @@ pub fn run(argv: &[String]) -> Result<i32> {
         .value("max-queue", "waiting-queue bound before shedding 429s (default 1024)")
         .switch("no-paging", "disable session paging (no lane eviction under queue pressure)")
         .value("pager-capacity-mb", "slab capacity for suspended-lane checkpoints (default 256)")
+        .switch("no-fold", "disable position-independent (folded) checkpoints at suspend")
+        .value("spill-dir", "disk-spill directory for cold checkpoints (default: spilling off)")
+        .value("spill-watermark-pct", "slab occupancy percent that triggers spilling (default 80)")
+        .value("keepalive-max-requests", "HTTP requests per connection, 0 = no keep-alive (default 32)")
         .value("deadline-ms", "per-request wall-clock budget, 0 = unlimited (default 0)")
         .value("max-connections", "live connection cap before shedding 503s (default 256)")
         .value("restart-budget", "engine panics tolerated per rolling window (default 3)")

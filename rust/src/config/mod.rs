@@ -39,6 +39,21 @@ pub struct ServerConfig {
     pub paging: bool,
     /// Slab capacity for suspended-lane checkpoints, in megabytes.
     pub pager_capacity_mb: usize,
+    /// Fold pending future contributions into the checkpoint at suspend
+    /// (position-independent checkpoints, DESIGN.md §6). Off = every
+    /// suspend takes the clock-aligned path and can only resume when the
+    /// batch clock catches back up to the suspension position.
+    pub fold: bool,
+    /// Disk-spill directory for cold checkpoints. Empty = spilling off;
+    /// each replica spills into its own `replica-<id>` subdirectory and
+    /// rescans it at boot so spilled sessions survive a restart.
+    pub spill_dir: String,
+    /// Slab occupancy percentage above which the scheduler spills the
+    /// oldest suspended checkpoints to `spill_dir`.
+    pub spill_watermark_pct: u64,
+    /// HTTP keep-alive: maximum requests served per connection before the
+    /// server closes it (0 = no keep-alive, one request per connection).
+    pub keepalive_max_requests: u64,
     /// Per-request wall-clock deadline in milliseconds, measured from
     /// enqueue (0 = none). A request may *lower* it via the JSON
     /// `deadline_ms` field; expired lanes are cancelled at the next step
@@ -96,6 +111,10 @@ impl Default for ServerConfig {
             max_queue: 1024,
             paging: true,
             pager_capacity_mb: 256,
+            fold: true,
+            spill_dir: String::new(),
+            spill_watermark_pct: 80,
+            keepalive_max_requests: 32,
             deadline_ms: 0,
             max_connections: 256,
             restart_budget: 3,
@@ -162,6 +181,18 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("pager_capacity_mb").and_then(Json::as_usize) {
             self.pager_capacity_mb = v;
+        }
+        if let Some(v) = j.get("fold").and_then(Json::as_bool) {
+            self.fold = v;
+        }
+        if let Some(v) = j.get("spill_dir").and_then(Json::as_str) {
+            self.spill_dir = v.to_string();
+        }
+        if let Some(v) = j.get("spill_watermark_pct").and_then(Json::as_usize) {
+            self.spill_watermark_pct = v as u64;
+        }
+        if let Some(v) = j.get("keepalive_max_requests").and_then(Json::as_usize) {
+            self.keepalive_max_requests = v as u64;
         }
         if let Some(v) = j.get("deadline_ms").and_then(Json::as_usize) {
             self.deadline_ms = v as u64;
@@ -259,6 +290,16 @@ impl ServerConfig {
             self.paging = false;
         }
         self.pager_capacity_mb = a.get_usize("pager-capacity-mb", self.pager_capacity_mb)?;
+        if a.has("no-fold") {
+            self.fold = false;
+        }
+        if let Some(v) = a.get("spill-dir") {
+            self.spill_dir = v.to_string();
+        }
+        self.spill_watermark_pct =
+            a.get_u64("spill-watermark-pct", self.spill_watermark_pct)?;
+        self.keepalive_max_requests =
+            a.get_u64("keepalive-max-requests", self.keepalive_max_requests)?;
         self.deadline_ms = a.get_u64("deadline-ms", self.deadline_ms)?;
         self.max_connections = a.get_usize("max-connections", self.max_connections)?;
         self.restart_budget = a.get_usize("restart-budget", self.restart_budget)?;
@@ -446,6 +487,48 @@ mod tests {
         let a = schema.parse(&["--no-paging".to_string()]).unwrap();
         cfg2.apply_args(&a).unwrap();
         assert!(!cfg2.paging);
+    }
+
+    #[test]
+    fn checkpoint_keys_layer_correctly() {
+        let mut cfg = ServerConfig::default();
+        assert!(cfg.fold, "folded checkpoints on by default");
+        assert!(cfg.spill_dir.is_empty(), "spilling off by default");
+        assert_eq!(cfg.spill_watermark_pct, 80);
+        assert_eq!(cfg.keepalive_max_requests, 32);
+        let j = Json::parse(
+            r#"{"fold": false, "spill_dir": "/tmp/fi-spill",
+                "spill_watermark_pct": 50, "keepalive_max_requests": 4}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert!(!cfg.fold);
+        assert_eq!(cfg.spill_dir, "/tmp/fi-spill");
+        assert_eq!(cfg.spill_watermark_pct, 50);
+        assert_eq!(cfg.keepalive_max_requests, 4);
+
+        let schema = Schema::new()
+            .switch("no-fold", "")
+            .value("spill-dir", "")
+            .value("spill-watermark-pct", "")
+            .value("keepalive-max-requests", "");
+        let a = schema
+            .parse(&[
+                "--spill-dir".to_string(),
+                "/tmp/other".to_string(),
+                "--keepalive-max-requests".to_string(),
+                "0".to_string(),
+            ])
+            .unwrap();
+        cfg.apply_args(&a).unwrap();
+        assert!(!cfg.fold, "json-set value survives: no --no-fold given");
+        assert_eq!(cfg.spill_dir, "/tmp/other", "flag wins over json");
+        assert_eq!(cfg.spill_watermark_pct, 50);
+        assert_eq!(cfg.keepalive_max_requests, 0, "0 disables keep-alive");
+        let a = schema.parse(&["--no-fold".to_string()]).unwrap();
+        let mut cfg2 = ServerConfig::default();
+        cfg2.apply_args(&a).unwrap();
+        assert!(!cfg2.fold);
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod store;
 
 use anyhow::{bail, Context, Result};
 
-pub use pager::{LaneCheckpoint, Pager, SamplerSnapshot};
+pub use pager::{CkptRef, LaneCheckpoint, Pager, SamplerSnapshot, ServingMeta};
 pub use sampler::{Sampler, SamplerCfg};
 pub use session::{LaneInit, Session, SessionInit, StepOutput};
 pub use store::{RowReadiness, Store};

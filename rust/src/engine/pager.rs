@@ -25,7 +25,21 @@
 //! The bit-identity contract (why restore is exact) lives with
 //! [`super::Session::suspend`]/[`super::Session::restore`]; this module is
 //! only the storage substrate. See `rust/DESIGN.md` §6.
+//!
+//! Two extensions make checkpoints durable and mobile (DESIGN.md §6/§8):
+//! a versioned, geometry-guarded **serialization format** (`FICK` v1,
+//! [`Pager::serialize`] / [`Pager::deserialize`]) capturing the full
+//! checkpoint — store rows, sampler PRNG state, lane clocks — plus a
+//! **disk-spill tier**: the slab stays hot, cold checkpoints spill as
+//! serialized blobs into a spill directory ([`Pager::spill_blob`]), and
+//! [`Pager::fetch`] transparently reloads a [`CkptRef::Spilled`] entry.
+//! Spilled blobs double as the fleet's shipping format — a quarantined
+//! replica's checkpoints travel to a healthy replica byte-for-byte — and
+//! as durable session handles: [`Pager::set_spill_dir`] scans the
+//! directory at boot, so spilled sessions survive a server restart.
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
@@ -50,6 +64,22 @@ pub const DEFAULT_ROWS_CHUNK: usize = 16;
 pub struct SamplerSnapshot {
     pub cfg: SamplerCfg,
     pub prng_state: [u64; 4],
+}
+
+/// Serving-layer progress that must travel *with* a shipped checkpoint.
+///
+/// `checksum_total` is a left-fold f64 accumulator: the whole-sequence
+/// value equals folding the remaining outputs onto the part-1 value, but
+/// does **not** equal part-1 plus a separately folded part-2 (f64
+/// addition is not associative). So a continuation must resume the
+/// accumulator itself, which is why this rides inside the blob instead
+/// of being recomputed on the receiving replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingMeta {
+    pub checksum_total: f64,
+    pub queue_ms: f64,
+    pub evictions: u64,
+    pub batch_size: usize,
 }
 
 /// Handle to a row range stored in the slab: block ids plus the logical
@@ -109,6 +139,13 @@ pub struct LaneCheckpoint {
     /// with the identical row layout.
     pub(crate) rows: usize,
     pub(crate) half: bool,
+    /// Checkpoint flavor. `false` = aligned (PR 5 contract: restore only
+    /// at the identical global `pos`, streams + pending both paged).
+    /// `true` = folded: [`super::Session::suspend_folded`] baked every
+    /// history contribution into the pending tail, so `streams` is empty
+    /// and restore is legal at any step boundary with
+    /// `steps_done() >= lane_pos()` (fresh lane-clock rebase).
+    pub(crate) folded: bool,
 }
 
 impl LaneCheckpoint {
@@ -129,6 +166,32 @@ impl LaneCheckpoint {
     pub fn lane_pos(&self) -> usize {
         self.pos - self.lane_start
     }
+
+    /// Whether this is a folded (position-independent) checkpoint.
+    pub fn folded(&self) -> bool {
+        self.folded
+    }
+
+    /// Future span the lane still has to generate (folded checkpoints
+    /// carry exactly this many pending rows).
+    pub fn span(&self) -> usize {
+        self.lane_limit.saturating_sub(self.lane_pos())
+    }
+}
+
+/// Where a suspended session's checkpoint currently lives: hot in the
+/// slab, or cold on disk under its session key. [`Pager::fetch`] resolves
+/// either into a restorable [`LaneCheckpoint`].
+#[derive(Debug)]
+pub enum CkptRef {
+    Resident(LaneCheckpoint),
+    Spilled(String),
+}
+
+impl CkptRef {
+    pub fn is_spilled(&self) -> bool {
+        matches!(self, CkptRef::Spilled(_))
+    }
 }
 
 /// Slab allocator over `[groups, rows_chunk, D]` f32 blocks.
@@ -146,6 +209,10 @@ pub struct Pager {
     data: Vec<f32>,
     free: Vec<usize>,
     total_blocks: usize,
+    /// Disk-spill tier root (None = spilling disabled).
+    spill_dir: Option<PathBuf>,
+    /// Session key -> spill file for every blob currently on disk.
+    spilled: BTreeMap<String, PathBuf>,
 }
 
 impl Pager {
@@ -164,6 +231,8 @@ impl Pager {
             data: vec![0.0; total_blocks * block_values],
             free: (0..total_blocks).rev().collect(),
             total_blocks,
+            spill_dir: None,
+            spilled: BTreeMap::new(),
         }
     }
 
@@ -274,6 +343,439 @@ impl Pager {
         self.release(ckpt.streams);
         self.release(ckpt.pending);
     }
+
+    /// Copy a paged range out into `[groups, rows, D]` layout *without*
+    /// consuming the handle (serialization reads, spill writes).
+    pub fn peek_rows(&self, pr: &PagedRows, out: &mut Vec<f32>) {
+        assert_eq!(pr.pager, self.id, "slab handle belongs to a different pager");
+        let rows = pr.rows;
+        out.resize(self.groups * rows * self.d, 0.0);
+        let (rc, d, bv) = (self.rows_chunk, self.d, self.block_values());
+        for (k, &blk) in pr.blocks.iter().enumerate() {
+            let take = rc.min(rows - k * rc);
+            for g in 0..self.groups {
+                let src = blk * bv + g * rc * d;
+                let dst = (g * rows + k * rc) * d..(g * rows + k * rc + take) * d;
+                out[dst].copy_from_slice(&self.data[src..src + take * d]);
+            }
+        }
+    }
+
+    /// Serialize a checkpoint (plus optional serving-layer progress) into
+    /// a self-contained `FICK` v1 blob. The checkpoint stays resident;
+    /// the caller decides whether to [`Pager::discard`] it afterwards
+    /// (spill) or keep both (shipping a copy).
+    ///
+    /// Layout (little-endian): magic `"FICK"`, `u32` version, `u8` flags
+    /// (bit0 folded, bit1 half, bit2 scstate, bit3 tokens, bit4 meta),
+    /// nine `u32` geometry words (M, D, rows, row0, pos, lane_start,
+    /// lane_limit, streams-rows, pending-rows), sampler (`u8` tag + `f32`
+    /// + `u32` params), `[u64; 4]` PRNG state, `a0` (`D` f32s), optional
+    /// scstate / tokens / [`ServingMeta`], then the streams and pending
+    /// payloads as `[M, rows, D]` f32s. Deserialize checks every length
+    /// and rejects trailing bytes, so truncated or size-corrupted blobs
+    /// fail cleanly instead of panicking.
+    pub fn serialize(&self, ckpt: &LaneCheckpoint, meta: Option<&ServingMeta>) -> Vec<u8> {
+        let mut sbuf = Vec::new();
+        let mut pbuf = Vec::new();
+        self.peek_rows(&ckpt.streams, &mut sbuf);
+        self.peek_rows(&ckpt.pending, &mut pbuf);
+        let mut out = Vec::with_capacity(128 + 4 * (sbuf.len() + pbuf.len()));
+        out.extend_from_slice(&CKPT_MAGIC);
+        put_u32(&mut out, CKPT_VERSION);
+        let mut flags = 0u8;
+        if ckpt.folded {
+            flags |= 1;
+        }
+        if ckpt.half {
+            flags |= 2;
+        }
+        if ckpt.scstate.is_some() {
+            flags |= 4;
+        }
+        if ckpt.tokens.is_some() {
+            flags |= 8;
+        }
+        if meta.is_some() {
+            flags |= 16;
+        }
+        out.push(flags);
+        for v in [
+            self.groups,
+            self.d,
+            ckpt.rows,
+            ckpt.row0,
+            ckpt.pos,
+            ckpt.lane_start,
+            ckpt.lane_limit,
+            ckpt.streams.rows,
+            ckpt.pending.rows,
+        ] {
+            put_u32(&mut out, v as u32);
+        }
+        // Sampler is a fixed-width record (tag + f32 + u32) so the two
+        // variants parse identically.
+        match ckpt.sampler.cfg {
+            SamplerCfg::Synthetic { sigma } => {
+                out.push(0);
+                put_f32(&mut out, sigma);
+                put_u32(&mut out, 0);
+            }
+            SamplerCfg::Lm { temperature, top_k } => {
+                out.push(1);
+                put_f32(&mut out, temperature);
+                // top_k is a vocab cutoff; u32 range is ample.
+                put_u32(&mut out, top_k.min(u32::MAX as usize) as u32);
+            }
+        }
+        for w in ckpt.sampler.prng_state {
+            put_u64(&mut out, w);
+        }
+        put_f32s(&mut out, &ckpt.a0);
+        if let Some(sc) = &ckpt.scstate {
+            put_u32(&mut out, sc.len() as u32);
+            put_f32s(&mut out, sc);
+        }
+        if let Some(tk) = &ckpt.tokens {
+            put_u32(&mut out, tk.len() as u32);
+            for &t in tk {
+                put_u32(&mut out, t);
+            }
+        }
+        if let Some(m) = meta {
+            put_f64(&mut out, m.checksum_total);
+            put_f64(&mut out, m.queue_ms);
+            put_u64(&mut out, m.evictions);
+            put_u32(&mut out, m.batch_size as u32);
+        }
+        put_f32s(&mut out, &sbuf);
+        put_f32s(&mut out, &pbuf);
+        out
+    }
+
+    /// Parse a `FICK` blob back into a slab-resident checkpoint.
+    ///
+    /// Guards: magic, version, flag bits, `[M, D]` geometry against this
+    /// pager's shape, and exact blob length. Slab allocation can still
+    /// fail under pressure — on any error nothing stays allocated.
+    pub fn deserialize(&mut self, blob: &[u8]) -> Result<(LaneCheckpoint, Option<ServingMeta>)> {
+        let mut cur = Cur { b: blob, at: 0 };
+        if cur.take(4)? != CKPT_MAGIC {
+            bail!("checkpoint blob: bad magic");
+        }
+        let ver = cur.u32()?;
+        if ver != CKPT_VERSION {
+            bail!("checkpoint blob: unsupported version {ver} (want {CKPT_VERSION})");
+        }
+        let flags = cur.u8()?;
+        if flags & !0x1f != 0 {
+            bail!("checkpoint blob: unknown flag bits {flags:#04x}");
+        }
+        let mut geom = [0usize; 9];
+        for g in &mut geom {
+            *g = cur.u32()? as usize;
+        }
+        let [m, d, rows, row0, pos, lane_start, lane_limit, ns, np] = geom;
+        if m != self.groups || d != self.d {
+            bail!(
+                "checkpoint geometry [M={m}, D={d}] does not match pager [M={}, D={}]",
+                self.groups,
+                self.d
+            );
+        }
+        if rows == 0 || ns > rows || np > rows || row0 > rows || pos < lane_start {
+            bail!("checkpoint blob: inconsistent geometry");
+        }
+        let tag = cur.u8()?;
+        let p_f = cur.f32()?;
+        let p_u = cur.u32()? as usize;
+        let cfg = match tag {
+            0 => SamplerCfg::Synthetic { sigma: p_f },
+            1 => SamplerCfg::Lm { temperature: p_f, top_k: p_u },
+            t => bail!("checkpoint blob: unknown sampler tag {t}"),
+        };
+        let mut prng_state = [0u64; 4];
+        for w in &mut prng_state {
+            *w = cur.u64()?;
+        }
+        let a0 = cur.f32s(d)?;
+        let scstate = if flags & 4 != 0 {
+            let n = cur.u32()? as usize;
+            Some(cur.f32s(n)?)
+        } else {
+            None
+        };
+        let tokens = if flags & 8 != 0 {
+            let n = cur.u32()? as usize;
+            Some(cur.u32s(n)?)
+        } else {
+            None
+        };
+        let meta = if flags & 16 != 0 {
+            Some(ServingMeta {
+                checksum_total: cur.f64()?,
+                queue_ms: cur.f64()?,
+                evictions: cur.u64()?,
+                batch_size: cur.u32()? as usize,
+            })
+        } else {
+            None
+        };
+        let Some(sn) = m.checked_mul(ns).and_then(|x| x.checked_mul(d)) else {
+            bail!("checkpoint blob: geometry overflow");
+        };
+        let Some(pn) = m.checked_mul(np).and_then(|x| x.checked_mul(d)) else {
+            bail!("checkpoint blob: geometry overflow");
+        };
+        let sbuf = cur.f32s(sn)?;
+        let pbuf = cur.f32s(pn)?;
+        if cur.at != blob.len() {
+            bail!("checkpoint blob: {} trailing bytes", blob.len() - cur.at);
+        }
+        let streams = self.store_rows(&sbuf, ns)?;
+        let pending = match self.store_rows(&pbuf, np) {
+            Ok(p) => p,
+            Err(e) => {
+                self.release(streams);
+                return Err(e);
+            }
+        };
+        Ok((
+            LaneCheckpoint {
+                row0,
+                streams,
+                pending,
+                a0,
+                scstate,
+                sampler: SamplerSnapshot { cfg, prng_state },
+                tokens,
+                pos,
+                lane_start,
+                lane_limit,
+                rows,
+                half: flags & 2 != 0,
+                folded: flags & 1 != 0,
+            },
+            meta,
+        ))
+    }
+
+    // ---- disk-spill tier -------------------------------------------------
+
+    /// Enable the spill tier rooted at `dir` (created if missing) and
+    /// boot-scan it: every `*.fick` file whose name hex-decodes to a
+    /// session key is registered as a spilled checkpoint, so sessions
+    /// spilled by a previous process survive a restart as durable
+    /// handles. Returns the number of checkpoints found.
+    pub fn set_spill_dir(&mut self, dir: &Path) -> Result<usize> {
+        std::fs::create_dir_all(dir)?;
+        let mut found = 0;
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("fick") {
+                continue;
+            }
+            let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else {
+                continue;
+            };
+            let Some(key) = hex_decode(stem) else {
+                continue;
+            };
+            self.spilled.insert(key, path);
+            found += 1;
+        }
+        self.spill_dir = Some(dir.to_path_buf());
+        Ok(found)
+    }
+
+    pub fn spill_enabled(&self) -> bool {
+        self.spill_dir.is_some()
+    }
+
+    pub fn has_spilled(&self, key: &str) -> bool {
+        self.spilled.contains_key(key)
+    }
+
+    pub fn spilled_count(&self) -> usize {
+        self.spilled.len()
+    }
+
+    pub fn spilled_keys(&self) -> Vec<String> {
+        self.spilled.keys().cloned().collect()
+    }
+
+    /// Write a serialized blob to the spill dir under `key`. The caller
+    /// composes spilling: `serialize` -> `spill_blob` -> `discard`, and
+    /// keeps the checkpoint resident if the write fails (spill errors are
+    /// soft, like slab-full errors).
+    pub fn spill_blob(&mut self, key: &str, blob: &[u8]) -> Result<()> {
+        // Chaos handle: `pager_spill:fail@k` simulates a full/broken disk.
+        crate::util::faultpoint::check("pager_spill")?;
+        let Some(dir) = &self.spill_dir else {
+            bail!("spill tier disabled: no spill dir configured");
+        };
+        let path = dir.join(format!("{}.fick", hex_encode(key)));
+        std::fs::write(&path, blob)?;
+        self.spilled.insert(key.to_string(), path);
+        Ok(())
+    }
+
+    /// Take the raw spilled blob for `key` off disk (shipping path). The
+    /// file is deleted only after a successful read.
+    pub fn take_spilled_blob(&mut self, key: &str) -> Result<Vec<u8>> {
+        let Some(path) = self.spilled.get(key) else {
+            bail!("no spilled checkpoint for session {key:?}");
+        };
+        let blob = std::fs::read(path)?;
+        if let Some(path) = self.spilled.remove(key) {
+            let _ = std::fs::remove_file(path);
+        }
+        Ok(blob)
+    }
+
+    /// Reload a spilled checkpoint into the slab. The file is deleted
+    /// only once the blob parsed and its rows are resident, so a slab-full
+    /// failure leaves the spilled copy intact for a later retry.
+    pub fn load_spilled(&mut self, key: &str) -> Result<(LaneCheckpoint, Option<ServingMeta>)> {
+        let Some(path) = self.spilled.get(key) else {
+            bail!("no spilled checkpoint for session {key:?}");
+        };
+        let blob = std::fs::read(path)?;
+        let out = self.deserialize(&blob)?;
+        if let Some(path) = self.spilled.remove(key) {
+            let _ = std::fs::remove_file(path);
+        }
+        Ok(out)
+    }
+
+    /// Resolve a [`CkptRef`] into a restorable checkpoint, transparently
+    /// reloading from the spill tier. Spilled entries also yield the
+    /// [`ServingMeta`] persisted in the blob (resident ones keep that
+    /// state in the scheduler slot, so they return `None`).
+    pub fn fetch(&mut self, r: CkptRef) -> Result<(LaneCheckpoint, Option<ServingMeta>)> {
+        match r {
+            CkptRef::Resident(c) => Ok((c, None)),
+            CkptRef::Spilled(key) => self.load_spilled(&key),
+        }
+    }
+
+    /// Drop a checkpoint wherever it lives (slab blocks freed, spill file
+    /// unlinked best-effort).
+    pub fn discard_ref(&mut self, r: CkptRef) {
+        match r {
+            CkptRef::Resident(c) => self.discard(c),
+            CkptRef::Spilled(key) => {
+                if let Some(path) = self.spilled.remove(&key) {
+                    let _ = std::fs::remove_file(path);
+                }
+            }
+        }
+    }
+}
+
+const CKPT_MAGIC: [u8; 4] = *b"FICK";
+const CKPT_VERSION: u32 = 1;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    out.reserve(vals.len() * 4);
+    for &v in vals {
+        put_f32(out, v);
+    }
+}
+
+/// Length-checked little-endian reader over a blob: every read bails (no
+/// panic, no partial state) when the blob is shorter than its headers
+/// claim.
+struct Cur<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let Some(end) = self.at.checked_add(n).filter(|&e| e <= self.b.len()) else {
+            bail!("checkpoint blob truncated: need {n} bytes at offset {}", self.at);
+        };
+        let s = &self.b[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let Some(bytes) = n.checked_mul(4) else {
+            bail!("checkpoint blob: length overflow");
+        };
+        let raw = self.take(bytes)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let Some(bytes) = n.checked_mul(4) else {
+            bail!("checkpoint blob: length overflow");
+        };
+        let raw = self.take(bytes)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Spill file names are the hex of the session key, so arbitrary keys
+/// (any UTF-8 the HTTP layer accepts) map to safe, reversible file names.
+fn hex_encode(key: &str) -> String {
+    let mut s = String::with_capacity(key.len() * 2);
+    for b in key.bytes() {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+fn hex_decode(name: &str) -> Option<String> {
+    let bytes = name.as_bytes();
+    if bytes.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    for pair in bytes.chunks_exact(2) {
+        let hi = (pair[0] as char).to_digit(16)?;
+        let lo = (pair[1] as char).to_digit(16)?;
+        out.push((hi * 16 + lo) as u8);
+    }
+    String::from_utf8(out).ok()
 }
 
 #[cfg(test)]
@@ -357,6 +859,8 @@ mod tests {
                     data: vec![0.0; 8 * groups * rc * d],
                     free: (0..8).rev().collect(),
                     total_blocks: 8,
+                    spill_dir: None,
+                    spilled: BTreeMap::new(),
                 };
                 let mut live: Vec<(PagedRows, Vec<f32>)> = Vec::new();
                 let mut stamp = 1.0f32;
@@ -408,6 +912,160 @@ mod tests {
         assert!(res.is_err(), "cross-pager fetch must panic");
     }
 
+    /// Build a checkpoint with every optional section populated, payload
+    /// values derived from `seed` (deterministic, no Prng needed).
+    fn full_ckpt(p: &mut Pager, ns: usize, np: usize, seed: u64) -> LaneCheckpoint {
+        let fill = |n: usize, off: u64| -> Vec<f32> {
+            (0..n).map(|i| (seed.wrapping_add(off + i as u64) % 997) as f32 - 498.5).collect()
+        };
+        LaneCheckpoint {
+            row0: 1,
+            streams: p.store_rows(&fill(2 * ns * 2, 0), ns).unwrap(),
+            pending: p.store_rows(&fill(2 * np * 2, 7), np).unwrap(),
+            a0: fill(2, 13),
+            scstate: Some(fill(6, 17)),
+            sampler: SamplerSnapshot {
+                cfg: SamplerCfg::Lm { temperature: 0.75, top_k: 40 },
+                prng_state: [seed | 1, seed ^ 0xdecafbad, 3, 4],
+            },
+            tokens: Some(vec![7, 9, 11]),
+            pos: 6,
+            lane_start: 2,
+            lane_limit: 9,
+            rows: 8,
+            half: false,
+            folded: false,
+        }
+    }
+
+    /// Property: serialize -> deserialize into a second pager ->
+    /// re-serialize is byte-identical across random payloads and every
+    /// combination of optional sections, and a rejected or consumed blob
+    /// never leaks slab blocks.
+    #[test]
+    fn prop_serde_roundtrip_byte_exact() {
+        propcheck::check(
+            "ckpt_serde_roundtrip",
+            48,
+            |rng: &mut Prng| {
+                let ns = rng.range(0, 7);
+                let np = rng.range(1, 7);
+                let opts = rng.range(0, 32); // bit per optional/flavor toggle
+                let seed = rng.range(1, 1_000_000) as u64;
+                (ns, np, opts, seed)
+            },
+            |&(ns, np, opts, seed)| {
+                let mut a = tiny(1);
+                let mut ckpt = full_ckpt(&mut a, ns, np, seed);
+                ckpt.folded = opts & 1 != 0;
+                ckpt.half = opts & 2 != 0;
+                if opts & 4 == 0 {
+                    ckpt.scstate = None;
+                }
+                if opts & 8 == 0 {
+                    ckpt.tokens = None;
+                    ckpt.sampler.cfg = SamplerCfg::Synthetic { sigma: 0.25 };
+                }
+                if ckpt.folded {
+                    ckpt.row0 = 0;
+                }
+                let meta = (opts & 16 != 0).then_some(ServingMeta {
+                    checksum_total: seed as f64 * 0.5,
+                    queue_ms: 2.25,
+                    evictions: 3,
+                    batch_size: 4,
+                });
+                let blob = a.serialize(&ckpt, meta.as_ref());
+                let mut b = tiny(1);
+                let (ckpt2, meta2) = b.deserialize(&blob).map_err(|e| e.to_string())?;
+                ensure(meta2 == meta, format!("meta mismatch: {meta2:?} != {meta:?}"))?;
+                let blob2 = b.serialize(&ckpt2, meta2.as_ref());
+                ensure(blob2 == blob, "re-serialized blob differs".to_string())?;
+                a.discard(ckpt);
+                b.discard(ckpt2);
+                ensure(
+                    b.free_blocks() == b.total_blocks(),
+                    "deserialize leaked slab blocks".to_string(),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn serde_rejects_corrupt_and_truncated_blobs() {
+        let mut a = tiny(1);
+        let ckpt = full_ckpt(&mut a, 3, 5, 42);
+        let blob = a.serialize(
+            &ckpt,
+            Some(&ServingMeta {
+                checksum_total: 1.5,
+                queue_ms: 0.5,
+                evictions: 1,
+                batch_size: 2,
+            }),
+        );
+        let mut b = tiny(1);
+        // every strict prefix must fail (length-checked cursor + payload
+        // sizes implied by the geometry header)
+        for cut in 0..blob.len() {
+            assert!(b.deserialize(&blob[..cut]).is_err(), "truncated at {cut} must parse as error");
+        }
+        // trailing garbage
+        let mut long = blob.clone();
+        long.push(0);
+        assert!(b.deserialize(&long).is_err(), "trailing bytes must be rejected");
+        // bad magic / unsupported version / unknown flag bits
+        let mut bad = blob.clone();
+        bad[0] ^= 0xff;
+        assert!(b.deserialize(&bad).is_err(), "bad magic");
+        let mut bad = blob.clone();
+        bad[4] = 99;
+        assert!(b.deserialize(&bad).is_err(), "future version");
+        let mut bad = blob.clone();
+        bad[8] |= 0x80;
+        assert!(b.deserialize(&bad).is_err(), "unknown flags");
+        // geometry guard: same blob, wrong-shaped pager
+        let mut c = Pager::new(3, 2, 4, 1);
+        assert!(c.deserialize(&blob).is_err(), "M mismatch must be rejected");
+        // none of the rejects may leak slab blocks
+        assert_eq!(b.free_blocks(), b.total_blocks());
+        assert_eq!(c.free_blocks(), c.total_blocks());
+        a.discard(ckpt);
+    }
+
+    #[test]
+    fn spill_roundtrip_and_boot_scan() {
+        let dir = std::env::temp_dir()
+            .join(format!("fi_pager_spill_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut a = tiny(1);
+        assert!(a.spill_blob("k", b"x").is_err(), "spill before set_spill_dir must fail");
+        assert_eq!(a.set_spill_dir(&dir).unwrap(), 0);
+        let ckpt = full_ckpt(&mut a, 2, 4, 7);
+        let blob = a.serialize(&ckpt, None);
+        a.discard(ckpt);
+        a.spill_blob("sess-1", &blob).unwrap();
+        assert!(a.has_spilled("sess-1"));
+        assert!(!a.has_spilled("sess-2"));
+        // shipping path: raw blob comes back byte-exact and leaves disk
+        let shipped = a.take_spilled_blob("sess-1").unwrap();
+        assert_eq!(shipped, blob, "spill -> reload must be byte-exact");
+        assert!(!a.has_spilled("sess-1"));
+        // durable-handle path: a fresh pager boot-scans the dir
+        a.spill_blob("sess-1", &blob).unwrap();
+        drop(a);
+        let mut b = tiny(1);
+        assert_eq!(b.set_spill_dir(&dir).unwrap(), 1, "boot scan must find the spill");
+        assert_eq!(b.spilled_keys(), vec!["sess-1".to_string()]);
+        let (ckpt2, meta2) = b.fetch(CkptRef::Spilled("sess-1".into())).unwrap();
+        assert!(meta2.is_none());
+        let blob2 = b.serialize(&ckpt2, None);
+        assert_eq!(blob2, blob, "boot-scanned checkpoint must reload byte-exactly");
+        assert!(!b.has_spilled("sess-1"), "load consumes the spill file");
+        b.discard(ckpt2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     #[test]
     fn discard_frees_both_tensors() {
         let mut p = tiny(1);
@@ -428,6 +1086,7 @@ mod tests {
             lane_limit: 8,
             rows: 8,
             half: false,
+            folded: false,
         };
         assert_eq!(p.free_blocks(), p.total_blocks() - 2);
         p.discard(ckpt);

@@ -46,10 +46,11 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::fft;
 use crate::metrics::{Breakdown, SessionMetrics};
 use crate::model::Variant;
 use crate::runtime::Runtime;
-use crate::tau::{make_session_impl, TauExecCfg, TauImpl};
+use crate::tau::{make_session_impl, TauExecCfg, TauImpl, TauKind};
 use crate::tiling::{FlopCounter, Tile};
 
 use super::pager::{LaneCheckpoint, Pager};
@@ -77,7 +78,7 @@ pub struct SessionInit {
 /// activation history is cleared, its sampler stream rebased, and its
 /// length bookkeeping restarted, so the lane's rollout from here on is
 /// bit-identical to a fresh session running the same request.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct LaneInit {
     /// Positions this lane will generate (its padded request length).
     /// 0 means "run to the end of the session" (`len - pos`).
@@ -86,6 +87,12 @@ pub struct LaneInit {
     pub sampler_cfg: Option<SamplerCfg>,
     /// Sampler seed override (`None` = engine seed + lane index).
     pub seed: Option<u64>,
+    /// `(fut, span)` — a prefill-style pending seed for this lane alone:
+    /// `[M, span, D]` group-major contributions to the lane's next `span`
+    /// positions, written into the pending plane at admission (the lane
+    /// analogue of [`SessionInit::pending_seed`]; folded restores reuse
+    /// the same deposit mechanism — DESIGN.md §6).
+    pub pending_seed: Option<(Vec<f32>, usize)>,
 }
 
 /// What one [`Session::step`] call produced.
@@ -152,6 +159,11 @@ pub struct Session<'e, 'rt> {
     /// Per-lane length bookkeeping: positions the lane generates before
     /// it is done (admission rebases this alongside `lane_start`).
     lane_limit: Vec<usize>,
+    /// Per-lane exclusive upper bound of *seeded* pending store rows
+    /// (prompt seeds at admission, folded-restore deposits): rows the
+    /// lane's tiles did not write, so the aligned suspend's `2·pos` bound
+    /// does not cover them. 0 = no seeded rows beyond the usual bounds.
+    lane_pend_hi: Vec<usize>,
     metrics: SessionMetrics,
     flops: FlopCounter,
     tokens: Option<Vec<Vec<u32>>>,
@@ -266,6 +278,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
             seed_span,
             lane_start: vec![0; b],
             lane_limit: vec![len; b],
+            lane_pend_hi: vec![0; b],
             metrics: SessionMetrics::with_capacity(len),
             flops: FlopCounter::new(),
             tokens,
@@ -392,6 +405,36 @@ impl<'e, 'rt> Session<'e, 'rt> {
         if self.pos < self.forced_steps {
             bail!("cannot admit a lane while teacher forcing is active");
         }
+        let m = dims.g / b;
+        // Prompt-style pending seed: validate shape before touching any
+        // lane state. Contributions past the lane's own schedule are
+        // never consumed by it, so the span is clipped to `limit`; in the
+        // wrapped half store a clipped span that still exceeds the row
+        // count would alias recycled rows (same rule as the session-level
+        // seed), so refuse.
+        let seed = match &init.pending_seed {
+            None => None,
+            Some((fut, fut_span)) => {
+                if *fut_span == 0 || fut.len() != m * fut_span * d {
+                    bail!(
+                        "lane pending seed must be a [M={m}, span, D={d}] tensor \
+                         ({} values for span {fut_span}, got {})",
+                        m * fut_span * d,
+                        fut.len()
+                    );
+                }
+                let span = (*fut_span).min(limit);
+                if self.half && span > self.rows {
+                    bail!(
+                        "lane pending seed spans {span} positions but the wrapped half \
+                         store holds {}: prompt contributions past len/2 would be lost \
+                         (disable half_store for prompt prefill)",
+                        self.rows
+                    );
+                }
+                Some(span)
+            }
+        };
 
         // 1. fence: drain every in-flight tile covering the recycled lane
         // (all of them — a tile's dst spans every group).
@@ -401,8 +444,27 @@ impl<'e, 'rt> Session<'e, 'rt> {
             self.metrics.totals.tau_worker_ns += tau.take_worker_ns() as f64;
         }
 
-        // 2. store: clear the lane's activation history (asserts quiet).
+        // 2. store: clear the lane's activation history (asserts quiet),
+        // then deposit the prompt seed (if any) onto the lane's next
+        // `span` pending columns — store row of position `pos + 1 + t` is
+        // `(pos + t) % rows`, the same mapping the folded restore uses.
         self.store.reset_lane(lane, b);
+        self.lane_pend_hi[lane] = 0;
+        if let Some(span) = seed {
+            let (fut, fut_span) = init.pending_seed.as_ref().unwrap();
+            let r0 = self.pos % self.rows;
+            for mi in 0..m {
+                let gi = mi * b + lane;
+                for t in 0..span {
+                    self.store.write_pending_row(
+                        gi,
+                        (r0 + t) % self.rows,
+                        &fut[(mi * fut_span + t) * d..(mi * fut_span + t + 1) * d],
+                    );
+                }
+            }
+            self.lane_pend_hi[lane] = if r0 + span > self.rows { self.rows } else { r0 + span };
+        }
 
         // 3. lane state: rollout start input, short-conv state, sampler
         // stream, token buffer, admission clocks.
@@ -472,8 +534,12 @@ impl<'e, 'rt> Session<'e, 'rt> {
         // (lane_start == 0, never re-admitted) has non-zero pending rows
         // up to `seed_span` before any tile ran — checkpoint those too
         let seed_floor = if self.lane_start[lane] == 0 { self.seed_span } else { 0 };
+        // `lane_pend_hi` covers rows seeded outside tile writes (a lane
+        // prompt seed or a folded-restore deposit), which can reach past
+        // the tile-derived `2·pos` bound.
         let streams_rows = row0..self.pos.min(self.rows);
-        let pending_rows = row0..(2 * self.pos).max(seed_floor).min(self.rows);
+        let pending_rows =
+            row0..(2 * self.pos).max(seed_floor).max(self.lane_pend_hi[lane]).min(self.rows);
         let (ns, np) = (streams_rows.len(), pending_rows.len());
         let needed = pager.blocks_for(ns) + pager.blocks_for(np);
         if !pager.fits(needed) {
@@ -528,6 +594,7 @@ impl<'e, 'rt> Session<'e, 'rt> {
             lane_limit: self.lane_limit[lane],
             rows: self.rows,
             half: self.half,
+            folded: false,
         };
 
         // the lane is now free: clear its activation history (asserts
@@ -535,6 +602,204 @@ impl<'e, 'rt> Session<'e, 'rt> {
         self.store.reset_lane(lane, b);
         self.lane_start[lane] = self.pos;
         self.lane_limit[lane] = 0;
+        self.lane_pend_hi[lane] = 0;
+        Ok(ckpt)
+    }
+
+    /// Session paging, FutureFill flavor: fold the lane's entire history
+    /// into completed contributions to its *remaining* positions, and
+    /// checkpoint only that pending tail — a **position-independent**
+    /// checkpoint restorable at any step boundary of any session over the
+    /// same model (DESIGN.md §6, FutureFill / arxiv 2410.03766).
+    ///
+    /// The fold replays, on the host, exactly the tiles of the remaining
+    /// schedule whose source block straddles the suspension position `p`
+    /// (~log₂ L of them), with future sources masked to zero: the fractal
+    /// schedule covers every (source ≤ p → destination > p) pair exactly
+    /// once across {already-run tiles (partials already in the pending
+    /// plane), straddling tiles (folded here)}, so afterwards the pending
+    /// tail holds the history's complete contribution to every remaining
+    /// position — `O(p·(L−p))` MACs per mixer lane, paid once. The
+    /// activation rows themselves are *not* checkpointed: after a folded
+    /// restore they are zero, exactly like a freshly admitted lane's.
+    ///
+    /// Direct-τ sessions (`rust-direct`/`pjrt-direct`) fold with the
+    /// direct kernel so each surviving term accumulates in the same
+    /// ascending-source order as the uninterrupted run — the resumed
+    /// rollout is bit-identical under the host direct kernel (the extra
+    /// masked-zero terms can only flip an exact `-0.0`, the same class of
+    /// ±0.0 caveat as admission's zero-prefix argument, DESIGN.md §4).
+    /// FFT-τ sessions fold with `tile_conv_rfft_fused_into`; the linear
+    /// split FFT(h) + FFT(f) matches FFT(h+f) only to rounding, so those
+    /// resumes are tolerance-equal, not bit-equal.
+    ///
+    /// Fails without touching lane state if the lane has no remaining
+    /// schedule, the wrapped half store cannot represent the tail
+    /// (`span > rows`), or the pager lacks capacity.
+    pub fn suspend_folded(&mut self, lane: usize, pager: &mut Pager) -> Result<LaneCheckpoint> {
+        let dims = self.engine.runtime().dims;
+        let (d, b) = (dims.d, dims.b);
+        if lane >= b {
+            bail!("lane {lane} out of range (B={b})");
+        }
+        if self.pos >= self.len {
+            bail!("session complete: nothing to suspend");
+        }
+        if self.pos < self.forced_steps {
+            bail!("cannot suspend a lane while teacher forcing is active");
+        }
+        let m = dims.g / b;
+        if pager.groups() != m || pager.dim() != d {
+            bail!(
+                "pager shape [{}, ., {}] does not match lane shape [{m}, ., {d}]",
+                pager.groups(),
+                pager.dim()
+            );
+        }
+        let lane_pos = self.pos - self.lane_start[lane];
+        let span = self.lane_limit[lane].saturating_sub(lane_pos);
+        if span == 0 {
+            bail!("lane {lane} has no remaining schedule to fold");
+        }
+        if self.half && span > self.rows {
+            bail!(
+                "folded tail spans {span} positions but the wrapped half store holds {}: \
+                 fold would alias recycled rows (use the aligned path)",
+                self.rows
+            );
+        }
+        let needed = pager.blocks_for(span);
+        if !pager.fits(needed) {
+            bail!(
+                "pager full: folded checkpoint needs {needed} blocks, {} free",
+                pager.free_blocks()
+            );
+        }
+
+        // fence: the fold below reads streams/pending rows tiles may
+        // still be writing (same rule as the aligned suspend).
+        if let Some(tau) = self.tau.as_mut() {
+            let fs = tau.fence_all()?;
+            self.metrics.totals.fence_ns += fs.wait_ns as f64;
+            self.metrics.totals.tau_worker_ns += tau.take_worker_ns() as f64;
+        }
+
+        // Start from the partial sums already deposited for the remaining
+        // positions p+1..=p+span (store row of position q is (q-1) % rows;
+        // in the half store these are exactly the live, distinct rows).
+        // The buffer is padded to the largest straddling tile's dst reach
+        // so whole tile kernels can accumulate in place; only the first
+        // `span` rows are checkpointed.
+        let p = self.pos;
+        let lane_end = p + span;
+        let mut pad = span;
+        {
+            let mut i = p + 1;
+            while i < lane_end {
+                let u = 1usize << i.trailing_zeros();
+                if i + 1 - u <= p {
+                    pad = pad.max(i + u - p);
+                }
+                i += 1;
+            }
+        }
+        let r0 = p % self.rows;
+        let mut tail = Vec::new();
+        self.store.copy_lane_pending_rows_wrapped(lane, b, r0, span, &mut tail);
+        let mut fut = vec![0.0f32; m * pad * d];
+        for mi in 0..m {
+            fut[mi * pad * d..(mi * pad + span) * d]
+                .copy_from_slice(&tail[mi * span * d..(mi + 1) * span * d]);
+        }
+
+        // Replay the straddling tiles of the remaining schedule with
+        // future sources masked to zero (the post-restore tiles will
+        // contribute those — over zeroed history rows, closing the
+        // exactly-once coverage of every pair).
+        let cache = &self.engine.cache;
+        let direct = matches!(self.engine.opts().tau, TauKind::RustDirect | TauKind::PjrtDirect);
+        let mut scratch = fft::TileScratch::default();
+        let mut y = Vec::new();
+        for i in (p + 1)..lane_end {
+            let u = 1usize << i.trailing_zeros();
+            let src_l = i + 1 - u; // 1-indexed source block [src_l, i]
+            if src_l > p {
+                continue;
+            }
+            y.resize(u * d, 0.0);
+            for mi in 0..m {
+                let gi = mi * b + lane;
+                for j0 in 0..u {
+                    let j = src_l + j0; // global source position
+                    let yr = &mut y[j0 * d..(j0 + 1) * d];
+                    if j <= p {
+                        yr.copy_from_slice(self.store.streams.at2(gi, (j - 1) % self.rows));
+                    } else {
+                        yr.fill(0.0);
+                    }
+                }
+                // dst positions i+1..i+U land on fut rows i-p..i-p+U
+                let out = &mut fut[(mi * pad + (i - p)) * d..(mi * pad + (i - p) + u) * d];
+                if direct {
+                    fft::tile_conv_direct_into(&y, cache.seg(mi, u), out, d);
+                } else {
+                    fft::tile_conv_rfft_fused_into(
+                        &cache.plan(u),
+                        &y,
+                        cache.spectra(u).blocked(mi),
+                        out,
+                        &mut scratch,
+                        d,
+                    );
+                }
+            }
+        }
+
+        // Persist the first `span` rows per mixer ([M, span, D]).
+        for mi in 0..m {
+            tail[mi * span * d..(mi + 1) * span * d]
+                .copy_from_slice(&fut[mi * pad * d..(mi * pad + span) * d]);
+        }
+        let streams = pager.store_rows(&[], 0)?;
+        let pending = match pager.store_rows(&tail, span) {
+            Ok(pr) => pr,
+            Err(e) => {
+                pager.release(streams);
+                return Err(e);
+            }
+        };
+
+        let a0 = self.a0[lane * d..(lane + 1) * d].to_vec();
+        let sc_offs = self.sc_lane_offsets(lane, b);
+        let w = self.sc_dims[3];
+        let scstate = self.scstate.as_ref().map(|sc| {
+            let mut out = vec![0.0; sc_offs.len() * w];
+            for &(base, src) in &sc_offs {
+                out[src..src + w].copy_from_slice(&sc[base..base + w]);
+            }
+            out
+        });
+        let tokens = self.tokens.as_mut().map(|all| std::mem::take(&mut all[lane]));
+        let ckpt = LaneCheckpoint {
+            row0: 0,
+            streams,
+            pending,
+            a0,
+            scstate,
+            sampler: self.sampler.snapshot_lane(lane),
+            tokens,
+            pos: self.pos,
+            lane_start: self.lane_start[lane],
+            lane_limit: self.lane_limit[lane],
+            rows: self.rows,
+            half: self.half,
+            folded: true,
+        };
+
+        self.store.reset_lane(lane, b);
+        self.lane_start[lane] = self.pos;
+        self.lane_limit[lane] = 0;
+        self.lane_pend_hi[lane] = 0;
         Ok(ckpt)
     }
 
@@ -554,9 +819,22 @@ impl<'e, 'rt> Session<'e, 'rt> {
     /// (`tests/integration_paging.rs`). At any other position the
     /// restore refuses rather than double-count or drop contributions.
     ///
+    /// **Folded checkpoints** ([`Session::suspend_folded`]) carry no
+    /// alignment requirement: the lane's whole history is already baked
+    /// into its pending tail, so the restore deposits the tail onto the
+    /// next `span` pending columns (the admission-seed mechanism) and
+    /// *rebases* the lane clock — `lane_start = pos − lane_pos`, a virtual
+    /// admission point. Two fit conditions replace the alignment rule:
+    /// the session must have at least `span` positions remaining, and its
+    /// clock must be ≥ the lane's generated-position count (so the
+    /// virtual admission point is not before the session's origin).
+    ///
     /// The checkpoint is consumed either way; on error its slab blocks
     /// are returned to the pager and the lane is left untouched.
     pub fn restore(&mut self, lane: usize, ckpt: LaneCheckpoint, pager: &mut Pager) -> Result<()> {
+        if ckpt.folded {
+            return self.restore_folded(lane, ckpt, pager);
+        }
         let dims = self.engine.runtime().dims;
         let (d, b) = (dims.d, dims.b);
         let check = || -> Result<()> {
@@ -650,6 +928,124 @@ impl<'e, 'rt> Session<'e, 'rt> {
         }
         self.lane_start[lane] = ckpt.lane_start;
         self.lane_limit[lane] = ckpt.lane_limit;
+        // a later aligned suspend must checkpoint at least the restored
+        // pending range, even where `2·pos` does not reach it
+        self.lane_pend_hi[lane] = row0 + n_pending;
+        Ok(())
+    }
+
+    /// Folded-restore half of [`Session::restore`]: deposit the pending
+    /// tail at the *current* clock and rebase the lane (DESIGN.md §6).
+    fn restore_folded(
+        &mut self,
+        lane: usize,
+        ckpt: LaneCheckpoint,
+        pager: &mut Pager,
+    ) -> Result<()> {
+        let dims = self.engine.runtime().dims;
+        let (d, b) = (dims.d, dims.b);
+        let lane_pos = ckpt.pos - ckpt.lane_start;
+        let span = ckpt.pending.rows();
+        let check = || -> Result<()> {
+            if lane >= b {
+                bail!("lane {lane} out of range (B={b})");
+            }
+            if span != ckpt.lane_limit.saturating_sub(lane_pos) || ckpt.streams.rows() != 0 {
+                bail!(
+                    "malformed folded checkpoint: pending tail {} rows, streams {} rows, \
+                     remaining schedule {}",
+                    span,
+                    ckpt.streams.rows(),
+                    ckpt.lane_limit.saturating_sub(lane_pos)
+                );
+            }
+            if self.rows != ckpt.rows || self.half != ckpt.half {
+                bail!(
+                    "store geometry mismatch: session rows={} half={} vs checkpoint \
+                     rows={} half={}",
+                    self.rows,
+                    self.half,
+                    ckpt.rows,
+                    ckpt.half
+                );
+            }
+            if self.pos >= self.len {
+                bail!("session complete: cannot restore into a finished schedule");
+            }
+            if self.pos + span > self.len {
+                bail!(
+                    "folded checkpoint needs {span} positions but only {} remain of {}",
+                    self.len - self.pos,
+                    self.len
+                );
+            }
+            if self.pos < lane_pos {
+                bail!(
+                    "folded restore at position {} but the lane has generated {lane_pos} \
+                     positions: the rebased admission point would precede the session \
+                     (wait for the clock to reach {lane_pos})",
+                    self.pos
+                );
+            }
+            if self.half && span > self.rows {
+                bail!(
+                    "folded tail spans {span} positions but the wrapped half store \
+                     holds {}",
+                    self.rows
+                );
+            }
+            if self.pos < self.forced_steps {
+                bail!("cannot restore a lane while teacher forcing is active");
+            }
+            if ckpt.scstate.is_some() != self.scstate.is_some() {
+                bail!("checkpoint/session short-conv state mismatch");
+            }
+            Ok(())
+        };
+        if let Err(e) = check() {
+            pager.discard(ckpt);
+            return Err(e);
+        }
+
+        if let Some(tau) = self.tau.as_mut() {
+            match tau.fence_all() {
+                Ok(fs) => self.metrics.totals.fence_ns += fs.wait_ns as f64,
+                Err(e) => {
+                    pager.discard(ckpt);
+                    return Err(e);
+                }
+            }
+            self.metrics.totals.tau_worker_ns += tau.take_worker_ns() as f64;
+        }
+
+        // deposit the tail onto the next `span` pending columns: store row
+        // of position pos+1+t is (pos+t) % rows — the admission-seed
+        // mapping, wrapped for the half store
+        self.store.reset_lane(lane, b);
+        let (mut sbuf, mut pbuf) = (Vec::new(), Vec::new());
+        pager.fetch_rows(ckpt.streams, &mut sbuf);
+        pager.fetch_rows(ckpt.pending, &mut pbuf);
+        let r0 = self.pos % self.rows;
+        self.store.copy_lane_pending_rows_wrapped_in(lane, b, r0, span, &pbuf);
+
+        self.a0[lane * d..(lane + 1) * d].copy_from_slice(&ckpt.a0);
+        let sc_offs = self.sc_lane_offsets(lane, b);
+        let w = self.sc_dims[3];
+        if let Some(sc) = self.scstate.as_mut() {
+            let lane_sc = ckpt.scstate.as_ref().unwrap();
+            for &(base, src) in &sc_offs {
+                sc[base..base + w].copy_from_slice(&lane_sc[src..src + w]);
+            }
+        }
+        self.sampler.restore_lane(lane, &ckpt.sampler);
+        if let Some(all) = self.tokens.as_mut() {
+            all[lane] = ckpt.tokens.unwrap_or_default();
+        }
+        // fresh lane-clock rebase: the lane behaves as if admitted at
+        // `pos - lane_pos` — its local clock continues from `lane_pos`
+        self.lane_start[lane] = self.pos - lane_pos;
+        self.lane_limit[lane] = ckpt.lane_limit;
+        self.lane_pend_hi[lane] = if r0 + span > self.rows { self.rows } else { r0 + span };
         Ok(())
     }
 

@@ -295,6 +295,69 @@ impl Store {
         }
     }
 
+    /// Copy `span` consecutive *future* pending rows of one lane out,
+    /// starting at store row `r0` and wrapping modulo the row count —
+    /// the folded-checkpoint tail copy (`Session::suspend_folded`). The
+    /// output is `[M, span, D]` group-major, same layout as
+    /// [`Store::copy_lane_rows_out`]. Rows must be quiet (caller fences).
+    pub fn copy_lane_pending_rows_wrapped(
+        &self,
+        lane: usize,
+        b: usize,
+        r0: usize,
+        span: usize,
+        buf: &mut Vec<f32>,
+    ) {
+        assert!(lane < b, "lane {lane} out of range (B={b})");
+        assert_eq!(self.g % b, 0, "group axis {} not a multiple of B={b}", self.g);
+        assert!(span <= self.t, "wrapped span {span} exceeds {} store rows", self.t);
+        for row in 0..self.t {
+            self.readiness.assert_quiet(row);
+        }
+        let m = self.g / b;
+        buf.resize(m * span * self.d, 0.0);
+        for mi in 0..m {
+            let gi = mi * b + lane;
+            for t in 0..span {
+                let row = (r0 + t) % self.t;
+                buf[(mi * span + t) * self.d..(mi * span + t + 1) * self.d]
+                    .copy_from_slice(self.pending.at2(gi, row));
+            }
+        }
+    }
+
+    /// Inverse of [`Store::copy_lane_pending_rows_wrapped`]: deposit a
+    /// `[M, span, D]` pending tail onto rows `r0, r0+1, …` (mod the row
+    /// count) of one lane — the folded-restore / prompt-seed write. The
+    /// caller resets the lane first; rows must be quiet.
+    pub fn copy_lane_pending_rows_wrapped_in(
+        &mut self,
+        lane: usize,
+        b: usize,
+        r0: usize,
+        span: usize,
+        buf: &[f32],
+    ) {
+        assert!(lane < b, "lane {lane} out of range (B={b})");
+        assert_eq!(self.g % b, 0, "group axis {} not a multiple of B={b}", self.g);
+        assert!(span <= self.t, "wrapped span {span} exceeds {} store rows", self.t);
+        let m = self.g / b;
+        debug_assert_eq!(buf.len(), m * span * self.d);
+        for row in 0..self.t {
+            self.readiness.assert_quiet(row);
+        }
+        for mi in 0..m {
+            let gi = mi * b + lane;
+            for t in 0..span {
+                let row = (r0 + t) % self.t;
+                // SAFETY: all rows quiet (asserted above) + `&mut self`.
+                unsafe { self.pending.at2_mut(gi, row) }.copy_from_slice(
+                    &buf[(mi * span + t) * self.d..(mi * span + t + 1) * self.d],
+                );
+            }
+        }
+    }
+
     /// Scatter a `[G, D]` step output into `streams[:, col, :]`.
     ///
     /// In-flight tile jobs only *read* streams, and only rows of columns
@@ -503,6 +566,35 @@ mod tests {
         assert_eq!(s.pending.at2(0, 3), &[-4.0, -4.0]);
         assert_eq!(s.pending.at2(0, 5), &[-6.0, -6.0]);
         assert!(s.pending.at2(0, 2).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn wrapped_pending_rows_roundtrip_across_the_seam() {
+        // M = 2, B = 2, 6 rows: a span of 4 starting at row 4 wraps to
+        // rows {4, 5, 0, 1} — the half-store folded-tail case
+        let (m, b, t, d) = (2usize, 2usize, 6usize, 2usize);
+        let mut s = Store::new(m * b, t, d);
+        for gi in 0..m * b {
+            for row in 0..t {
+                fill_row(&s.pending, gi, row, (gi * 10 + row) as f32);
+            }
+        }
+        let mut buf = Vec::new();
+        s.copy_lane_pending_rows_wrapped(1, b, 4, 4, &mut buf);
+        assert_eq!(buf.len(), m * 4 * d);
+        // group-major: [gi=1 rows 4,5,0,1][gi=3 rows 4,5,0,1]
+        assert_eq!(&buf[..d], &[14.0; 2]);
+        assert_eq!(&buf[2 * d..3 * d], &[10.0; 2]);
+        assert_eq!(&buf[4 * d..5 * d], &[34.0; 2]);
+
+        s.reset_lane(1, b);
+        s.copy_lane_pending_rows_wrapped_in(1, b, 4, 4, &buf);
+        assert_eq!(s.pending.at2(1, 4), &[14.0; 2]);
+        assert_eq!(s.pending.at2(1, 0), &[10.0; 2]);
+        assert_eq!(s.pending.at2(3, 1), &[31.0; 2]);
+        // rows outside the wrapped span stay cleared; other lane untouched
+        assert!(s.pending.at2(1, 2).iter().all(|&v| v == 0.0));
+        assert_eq!(s.pending.at2(0, 3), &[3.0; 2]);
     }
 
     #[test]

@@ -108,12 +108,19 @@ impl TileScratch {
     }
 }
 
-/// Lane-block width of the fused rfft kernel. The per-block working set
-/// is `2·U·FUSED_BLOCK_D` packed floats plus 4 temp rows — at U = 256
-/// that is ~64 KiB, L1/L2-resident where the unfused whole-width planes
-/// (D = 64: ~512 KiB with the half-spectrum pair) are not. 16 lanes is
-/// also two AVX2 vectors / four NEON vectors, so every row op runs
-/// tail-free on both targets.
+/// Measured-default lane-block width of the fused rfft kernel. The
+/// per-block working set is `2·U·bd` packed floats plus 4 temp rows — at
+/// U = 256 and bd = 16 that is ~64 KiB, L1/L2-resident where the unfused
+/// whole-width planes (D = 64: ~512 KiB with the half-spectrum pair) are
+/// not. 16 lanes is also two AVX2 vectors / four NEON vectors, so every
+/// row op runs tail-free on both targets.
+///
+/// The width actually used is resolved per process by
+/// [`simd::fused_block_d`], which probes the L1d size from the sysfs
+/// cache topology and falls back to this constant when the hierarchy is
+/// unreadable (`FI_FUSED_BLOCK_D` overrides both). Each
+/// [`BlockedSpectrum`] captures the width it was built with, so a
+/// mid-process override cannot desynchronize layout and iteration.
 pub const FUSED_BLOCK_D: usize = 16;
 
 /// Filter-prefix half-spectrum re-laid for the fused kernel: the D lanes
@@ -134,24 +141,44 @@ pub struct BlockedSpectrum {
     im: Vec<f32>,
     d: usize,
     bins: usize,
+    /// Block width this spectrum was laid out with (frozen at build time
+    /// so layout and iteration can never disagree).
+    bd: usize,
 }
 
 impl BlockedSpectrum {
-    /// Re-block flat `[bins][d]` half-spectrum planes.
+    /// Re-block flat `[bins][d]` half-spectrum planes at the
+    /// cache-adapted width from [`simd::fused_block_d`].
     pub fn from_halfplanes(re: &[f32], im: &[f32], d: usize) -> BlockedSpectrum {
+        Self::from_halfplanes_with(re, im, d, simd::fused_block_d())
+    }
+
+    /// Re-block at an explicit width (tests and width experiments).
+    pub fn from_halfplanes_with(
+        re: &[f32],
+        im: &[f32],
+        d: usize,
+        block_d: usize,
+    ) -> BlockedSpectrum {
         assert!(d > 0 && re.len() % d == 0, "plane len {} not a multiple of d={d}", re.len());
         assert_eq!(re.len(), im.len());
+        assert!(block_d > 0, "block width must be positive");
         let bins = re.len() / d;
         let mut bre = Vec::with_capacity(re.len());
         let mut bim = Vec::with_capacity(im.len());
-        for t0 in (0..d).step_by(FUSED_BLOCK_D) {
-            let bd = (d - t0).min(FUSED_BLOCK_D);
+        for t0 in (0..d).step_by(block_d) {
+            let bd = (d - t0).min(block_d);
             for k in 0..bins {
                 bre.extend_from_slice(&re[k * d + t0..k * d + t0 + bd]);
                 bim.extend_from_slice(&im[k * d + t0..k * d + t0 + bd]);
             }
         }
-        BlockedSpectrum { re: bre, im: bim, d, bins }
+        BlockedSpectrum { re: bre, im: bim, d, bins, bd: block_d }
+    }
+
+    /// The block width this spectrum was laid out with.
+    pub fn block_d(&self) -> usize {
+        self.bd
     }
 
     /// Number of half-spectrum bins per lane (U + 1).
@@ -165,13 +192,13 @@ impl BlockedSpectrum {
     }
 
     pub fn num_blocks(&self) -> usize {
-        self.d.div_ceil(FUSED_BLOCK_D)
+        self.d.div_ceil(self.bd)
     }
 
     /// `(lane offset, block width)` of block `blk`.
     pub fn block_geom(&self, blk: usize) -> (usize, usize) {
-        let t0 = blk * FUSED_BLOCK_D;
-        (t0, (self.d - t0).min(FUSED_BLOCK_D))
+        let t0 = blk * self.bd;
+        (t0, (self.d - t0).min(self.bd))
     }
 
     /// The `[bins][bd]` re/im planes of block `blk`.
@@ -757,17 +784,54 @@ mod tests {
 
     #[test]
     fn blocked_spectrum_roundtrips_to_halfplanes() {
-        // the PJRT upload path depends on to_halfplanes being exact
+        // the PJRT upload path depends on to_halfplanes being exact,
+        // whatever block width the cache probe resolved to
         for d in [1usize, 3, 16, 17, 32, 50, 64] {
             let bins = 9;
             let re = rand_vec(bins * d, 90 + d as u64);
             let im = rand_vec(bins * d, 91 + d as u64);
             let spec = BlockedSpectrum::from_halfplanes(&re, &im, d);
             assert_eq!(spec.bins(), bins);
-            assert_eq!(spec.num_blocks(), d.div_ceil(FUSED_BLOCK_D));
+            assert_eq!(spec.num_blocks(), d.div_ceil(spec.block_d()));
             let (rre, rim) = spec.to_halfplanes();
             assert_eq!(rre, re);
             assert_eq!(rim, im);
+            // explicit widths (including awkward ones) round-trip too
+            for bd in [1usize, 8, 13, 64] {
+                let spec = BlockedSpectrum::from_halfplanes_with(&re, &im, d, bd);
+                assert_eq!(spec.block_d(), bd);
+                assert_eq!(spec.num_blocks(), d.div_ceil(bd));
+                let (rre, rim) = spec.to_halfplanes();
+                assert_eq!(rre, re, "d={d} bd={bd}");
+                assert_eq!(rim, im, "d={d} bd={bd}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_kernel_bitexact_across_block_widths() {
+        // the block width changes which lanes share a pass, never the
+        // per-lane arithmetic — results must be bit-identical across
+        // widths (the invariant that makes the cache probe safe)
+        let (u, d) = (32usize, 33usize);
+        let plan = RfftPlan::new(2 * u);
+        let y = rand_vec(u * d, 120);
+        let rho = rand_vec(2 * u * d, 121);
+        let (sre, sim) = rfft::spectrum_halfplanes(&plan, &rho, d);
+        let mut reference: Option<Vec<f32>> = None;
+        for bd in [1usize, 8, 16, 33, 64] {
+            let spec = BlockedSpectrum::from_halfplanes_with(&sre, &sim, d, bd);
+            let mut scratch = TileScratch::default();
+            let mut out = vec![0.25f32; u * d];
+            tile_conv_rfft_fused_into(&plan, &y, &spec, &mut out, &mut scratch, d);
+            match &reference {
+                None => reference = Some(out),
+                Some(want) => {
+                    for (i, (a, b)) in out.iter().zip(want).enumerate() {
+                        assert_eq!(a.to_bits(), b.to_bits(), "bd={bd} i={i}");
+                    }
+                }
+            }
         }
     }
 

@@ -86,6 +86,77 @@ fn detect() -> Backend {
     Backend::Scalar
 }
 
+/// Lane-block width of the fused rfft tile kernel, adapted to the
+/// detected cache hierarchy. Resolved once per process and cached, like
+/// [`backend`].
+///
+/// The fused kernel's per-block working set is ~`2·U·bd` packed f32s
+/// plus four temp rows (`tiling::flops::tile_rfft_fused_scratch_bytes`);
+/// the block width only changes *which* lanes share a pass, never the
+/// per-lane expression shape, so any width preserves the module's
+/// bit-exactness contract. Sizing: half the L1d budget for the packed
+/// planes at the largest common tile (U = 256) gives
+/// `bd = l1d_bytes / 2048`, rounded down to a multiple of 8 (whole AVX2
+/// vectors, pairs of NEON vectors) and clamped to [8, 64]. Boxes whose
+/// cache topology is unreadable (non-Linux, restricted /sys) keep the
+/// measured default [`crate::fft::FUSED_BLOCK_D`] = 16. The
+/// `FI_FUSED_BLOCK_D` env var overrides the probe for experiments and
+/// bench reproducibility.
+pub fn fused_block_d() -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let got = CACHED.load(Ordering::Relaxed);
+    if got != 0 {
+        return got;
+    }
+    let bd = resolve_fused_block_d();
+    CACHED.store(bd, Ordering::Relaxed);
+    bd
+}
+
+fn resolve_fused_block_d() -> usize {
+    if let Ok(v) = std::env::var("FI_FUSED_BLOCK_D") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    match l1d_cache_bytes() {
+        Some(l1d) => ((l1d / 2048) & !7).clamp(8, 64),
+        None => super::conv::FUSED_BLOCK_D,
+    }
+}
+
+/// Probe the L1 data cache size from the Linux sysfs cache topology
+/// (`/sys/devices/system/cpu/cpu0/cache/index*/`). Returns `None` when
+/// the hierarchy is unreadable — callers fall back to the measured
+/// default rather than guessing.
+fn l1d_cache_bytes() -> Option<usize> {
+    let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    for idx in 0..8 {
+        let dir = base.join(format!("index{idx}"));
+        let read = |f: &str| std::fs::read_to_string(dir.join(f)).ok();
+        let (Some(level), Some(ty)) = (read("level"), read("type")) else {
+            continue; // missing index dir: keep scanning the rest
+        };
+        if level.trim() != "1" || !ty.trim().eq_ignore_ascii_case("data") {
+            continue;
+        }
+        let size = read("size")?;
+        let size = size.trim();
+        let (num, mult) = match size.strip_suffix(['K', 'k']) {
+            Some(n) => (n, 1024),
+            None => match size.strip_suffix(['M', 'm']) {
+                Some(n) => (n, 1024 * 1024),
+                None => (size, 1),
+            },
+        };
+        return num.parse::<usize>().ok().map(|n| n * mult);
+    }
+    None
+}
+
 /// Scalar reference implementations. Public so the equivalence tests
 /// (and any caller that must sidestep dispatch) can compare the
 /// dispatched primitives against these bit-for-bit.
@@ -737,6 +808,22 @@ mod tests {
     fn rand_row(n: usize, seed: u64) -> Vec<f32> {
         let mut rng = Prng::new(seed);
         (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn fused_block_d_is_cached_and_sane() {
+        let bd = fused_block_d();
+        assert!(bd > 0, "block width must be positive");
+        assert_eq!(bd, fused_block_d(), "one-shot resolution must be stable");
+        // Unless FI_FUSED_BLOCK_D forces something else, the probe result
+        // is either the cache-derived width (multiple of 8 in [8, 64]) or
+        // the measured fallback constant.
+        if std::env::var("FI_FUSED_BLOCK_D").is_err() {
+            assert!(
+                (bd % 8 == 0 && (8..=64).contains(&bd)) || bd == super::super::conv::FUSED_BLOCK_D,
+                "unexpected probed width {bd}"
+            );
+        }
     }
 
     /// Every dispatched primitive must be bit-identical to the scalar

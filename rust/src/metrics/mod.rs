@@ -130,6 +130,18 @@ pub struct ServerCounters {
     pub evictions_total: u64,
     /// Evicted lanes restored from the pager and run to completion.
     pub resumes_total: u64,
+    /// Suspends that took the position-independent fold path (history
+    /// deposited onto pending columns; resumable at any step boundary).
+    pub folds_total: u64,
+    /// Resident checkpoints serialized and spilled to the disk tier under
+    /// slab capacity pressure.
+    pub spills_total: u64,
+    /// Spilled checkpoints reloaded from disk (scheduler resume or
+    /// session-key intake after a restart).
+    pub spill_reloads_total: u64,
+    /// Checkpoints serialized and shipped off a quarantined replica over
+    /// the failback channel for re-homing on a healthy replica.
+    pub checkpoints_shipped_total: u64,
     /// Gauge: f32 values held by live checkpoints in the session pager.
     pub pager_resident_values: u64,
     /// Gauge: requests waiting for a free lane right now.
@@ -204,6 +216,26 @@ impl ServerCounters {
             self.evictions_total as f64,
         );
         metric("fi_resumes_total", "evicted lanes restored", self.resumes_total as f64);
+        metric(
+            "fi_folds_total",
+            "suspends that took the position-independent fold path",
+            self.folds_total as f64,
+        );
+        metric(
+            "fi_spills_total",
+            "checkpoints spilled to the disk tier",
+            self.spills_total as f64,
+        );
+        metric(
+            "fi_spill_reloads_total",
+            "spilled checkpoints reloaded from disk",
+            self.spill_reloads_total as f64,
+        );
+        metric(
+            "fi_checkpoints_shipped_total",
+            "checkpoints shipped off a quarantined replica",
+            self.checkpoints_shipped_total as f64,
+        );
         metric(
             "fi_engine_restarts_total",
             "engine panics absorbed by the supervisor",
@@ -430,5 +462,24 @@ mod tests {
         assert!(text.contains("fi_evictions_total 5"));
         assert!(text.contains("fi_resumes_total 4"));
         assert!(text.contains("fi_pager_resident_values 8192"));
+    }
+
+    #[test]
+    fn checkpoint_counters_render() {
+        let mut c = ServerCounters::new();
+        c.folds_total = 3;
+        c.spills_total = 2;
+        c.spill_reloads_total = 2;
+        c.checkpoints_shipped_total = 1;
+        let text = c.render();
+        assert!(text.contains("fi_folds_total 3"));
+        assert!(text.contains("fi_spills_total 2"));
+        assert!(text.contains("fi_spill_reloads_total 2"));
+        assert!(text.contains("fi_checkpoints_shipped_total 1"));
+        // series exist at zero so dashboards can rely on them even when
+        // folding/spilling/shipping never triggered
+        let text = ServerCounters::new().render();
+        assert!(text.contains("fi_folds_total 0"));
+        assert!(text.contains("fi_checkpoints_shipped_total 0"));
     }
 }

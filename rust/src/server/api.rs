@@ -8,10 +8,17 @@
 //! * `GET  /v1/info`     — model dims, engine opts, per-replica states
 //! * `POST /v1/generate` — `{"max_tokens": N}` → per-lane generation
 //!   result; optional per-request sampling (`"temperature"`, `"top_k"`,
-//!   `"sigma"`, `"seed"`), an optional `"session"` affinity key, and
-//!   `{"stream": true}` → chunked NDJSON with one event per position as
-//!   the lane advances, ending in a `{"done":true,...}` summary line
-//!   (see DESIGN.md for the wire format).
+//!   `"sigma"`, `"seed"`), an optional `"session"` affinity key, an
+//!   optional `"prompt"` (flat `[M, span, D]` array of f32 future
+//!   contributions, seeded onto the lane's pending columns at admission —
+//!   prefill), and `{"stream": true}` → chunked NDJSON with one event per
+//!   position as the lane advances, ending in a `{"done":true,...}`
+//!   summary line (see DESIGN.md for the wire format).
+//!
+//! Connections are reusable: a client that sends `Connection:
+//! keep-alive` gets up to `ServerConfig::keepalive_max_requests`
+//! requests per socket (idle bounded by the read timeout); streaming
+//! responses always close the connection.
 //!
 //! The engine side lives in [`super::replica`]: `--replicas N` spawns N
 //! `fi-engine-<id>` worker threads, each owning a private Runtime +
@@ -35,7 +42,7 @@ use anyhow::{Context, Result};
 use super::batcher::{GenRequest, LaneResult, SamplingParams, StreamEvent};
 use super::http::{
     configure_stream, finish_chunks, read_request, write_chunk, write_chunked_head,
-    write_response, Request, Response,
+    write_response, write_response_conn, Request, Response,
 };
 use super::replica::{ReadyMsg, Replica, ReplicaCtx};
 use super::router::{supervise, Dispatch, Router};
@@ -285,21 +292,46 @@ fn handle_connection(mut stream: TcpStream, shared: Arc<Shared>) {
         shared.cfg.socket_read_timeout_ms,
         shared.cfg.socket_write_timeout_ms,
     );
-    let req = match read_request(&mut stream) {
-        Ok(req) => req,
-        Err(e) => {
-            let _ = write_response(&mut stream, &Response::bad_request(&format!("{e:#}")));
+    // Keep-alive loop: each iteration serves one request. The socket
+    // read timeout doubles as the idle bound between requests, so a
+    // parked keep-alive connection cannot pin an fi-conn thread longer
+    // than a stuck first read could.
+    let mut served: u64 = 0;
+    loop {
+        let req = match read_request(&mut stream) {
+            Ok(req) => req,
+            Err(e) => {
+                // On a reused connection a read error is normally just
+                // the client closing or idling past the timeout; only a
+                // fresh connection's garbage earns a 400.
+                if served == 0 {
+                    let _ =
+                        write_response(&mut stream, &Response::bad_request(&format!("{e:#}")));
+                }
+                return;
+            }
+        };
+        served += 1;
+        let wants_keep_alive = req
+            .headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("keep-alive"))
+            .unwrap_or(false);
+        let keep = wants_keep_alive && served < shared.cfg.keepalive_max_requests;
+        if req.method == "POST" && req.path == "/v1/generate" {
+            // generation writes its own response: one buffered JSON
+            // document (connection reusable), or a chunked NDJSON stream
+            // (always Connection: close)
+            if !generate(&req, &shared, &mut stream, keep) {
+                return;
+            }
+            continue;
+        }
+        let resp = route(&req, &shared);
+        if write_response_conn(&mut stream, &resp, keep).is_err() || !keep {
             return;
         }
-    };
-    if req.method == "POST" && req.path == "/v1/generate" {
-        // generation writes its own response: one buffered JSON document,
-        // or a chunked NDJSON stream
-        generate(&req, &shared, &mut stream);
-        return;
     }
-    let resp = route(&req, &shared);
-    let _ = write_response(&mut stream, &resp);
 }
 
 /// `true` = the server can take traffic: the PR 7 latch for a fleet of
@@ -398,12 +430,17 @@ fn parse_sampling(j: &Json) -> std::result::Result<SamplingParams, String> {
     Ok(s)
 }
 
-fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
+/// Serve one `POST /v1/generate`. Returns `true` when the connection is
+/// still reusable for another request (buffered response written with a
+/// `Connection: keep-alive` advertisement), `false` when the caller must
+/// close it (streaming response, or keep-alive not in effect).
+fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream, keep: bool) -> bool {
     shared.counters.lock().requests_total += 1;
     if shared.draining.load(Ordering::Relaxed) {
         shared.counters.lock().requests_failed += 1;
-        let _ = write_response(stream, &Response::unavailable("shutting down, retry later", 1));
-        return;
+        let resp = Response::unavailable("shutting down, retry later", 1);
+        let _ = write_response_conn(stream, &resp, keep);
+        return keep;
     }
     let reject = |msg: String| {
         shared.counters.lock().requests_failed += 1;
@@ -416,8 +453,8 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
     let j = match Json::parse(body) {
         Ok(j) => j,
         Err(e) => {
-            let _ = write_response(stream, &reject(format!("invalid JSON: {e}")));
-            return;
+            let _ = write_response_conn(stream, &reject(format!("invalid JSON: {e}")), keep);
+            return keep;
         }
     };
     let max_tokens = j
@@ -426,14 +463,14 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
         .unwrap_or(shared.cfg.default_max_tokens);
     if max_tokens == 0 || max_tokens > shared.cfg.max_max_tokens {
         let msg = format!("max_tokens must be in [1, {}]", shared.cfg.max_max_tokens);
-        let _ = write_response(stream, &reject(msg));
-        return;
+        let _ = write_response_conn(stream, &reject(msg), keep);
+        return keep;
     }
     let sampling = match parse_sampling(&j) {
         Ok(s) => s,
         Err(msg) => {
-            let _ = write_response(stream, &reject(msg));
-            return;
+            let _ = write_response_conn(stream, &reject(msg), keep);
+            return keep;
         }
     };
     let session = match j.get("session") {
@@ -441,10 +478,54 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
         Some(v) => match v.as_str() {
             Some(s) => Some(s.to_string()),
             None => {
-                let _ = write_response(stream, &reject("session must be a string".into()));
-                return;
+                let _ =
+                    write_response_conn(stream, &reject("session must be a string".into()), keep);
+                return keep;
             }
         },
+    };
+    // {"prompt": [...]} — a flat [M, span, D] group-major f32 array of
+    // future contributions, seeded onto the lane's pending columns at
+    // admission (prefill-style). Validated against the model geometry
+    // the fleet reported at boot: length divisible by M*D, span in
+    // [1, L]; anything else is a client error, not an engine panic.
+    let prompt = match j.get("prompt") {
+        None => None,
+        Some(v) => {
+            let m = shared.info.get("M").and_then(Json::as_usize).unwrap_or(0);
+            let d = shared.info.get("D").and_then(Json::as_usize).unwrap_or(0);
+            let l = shared.info.get("L").and_then(Json::as_usize).unwrap_or(0);
+            let arr = match v.as_arr() {
+                Some(a) if !a.is_empty() => a,
+                _ => {
+                    let msg = "prompt must be a non-empty array of numbers".to_string();
+                    let _ = write_response_conn(stream, &reject(msg), keep);
+                    return keep;
+                }
+            };
+            let md = m * d;
+            if md == 0 || arr.len() % md != 0 || arr.len() / md > l {
+                let msg = format!(
+                    "prompt must be a flat [M, span, D] array with M={m}, D={d}, \
+                     span in [1, {l}] (got {} values)",
+                    arr.len()
+                );
+                let _ = write_response_conn(stream, &reject(msg), keep);
+                return keep;
+            }
+            let mut vals = Vec::with_capacity(arr.len());
+            for x in arr {
+                match x.as_f64() {
+                    Some(f) => vals.push(f as f32),
+                    None => {
+                        let msg = "prompt entries must be numbers".to_string();
+                        let _ = write_response_conn(stream, &reject(msg), keep);
+                        return keep;
+                    }
+                }
+            }
+            Some(vals)
+        }
     };
     let want_stream = j.get("stream").and_then(Json::as_bool).unwrap_or(false);
     let req_deadline_ms = match j.get("deadline_ms") {
@@ -453,8 +534,8 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
             Some(ms) => Some(ms as u64),
             None => {
                 let msg = "deadline_ms must be a non-negative integer".to_string();
-                let _ = write_response(stream, &reject(msg));
-                return;
+                let _ = write_response_conn(stream, &reject(msg), keep);
+                return keep;
             }
         },
     };
@@ -490,6 +571,9 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
         cancel: cancel.clone(),
         session,
         failovers: 0,
+        prompt,
+        // clients cannot ship checkpoints; only the failover path sets this
+        resume: None,
     };
     // The router is the shed gate: per-replica queues are bounded at
     // `max_queue`, and only when *every* serviceable replica is full
@@ -502,8 +586,8 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
         Dispatch::Fault(msg, _req) => {
             shared.inflight.fetch_sub(1, Ordering::Relaxed);
             shared.counters.lock().requests_failed += 1;
-            let _ = write_response(stream, &error_response(msg));
-            return;
+            let _ = write_response_conn(stream, &error_response(msg), keep);
+            return keep;
         }
         Dispatch::AllFull(_req) => {
             shared.inflight.fetch_sub(1, Ordering::Relaxed);
@@ -516,22 +600,27 @@ fn generate(req: &Request, shared: &Shared, stream: &mut TcpStream) {
             } else {
                 Response::shed(503, "all replica queues full, retry later", 1)
             };
-            let _ = write_response(stream, &resp);
-            return;
+            let _ = write_response_conn(stream, &resp, keep);
+            return keep;
         }
         Dispatch::NoReplica(_req) => {
             shared.inflight.fetch_sub(1, Ordering::Relaxed);
             shared.counters.lock().requests_failed += 1;
             let resp = Response::unavailable("no healthy replica, retry later", 1);
-            let _ = write_response(stream, &resp);
-            return;
+            let _ = write_response_conn(stream, &resp, keep);
+            return keep;
         }
     }
     match event_rx {
-        Some(events) => stream_reply(shared, stream, events, rx, max_tokens, &cancel),
+        Some(events) => {
+            // streaming writes a chunked head with Connection: close
+            stream_reply(shared, stream, events, rx, max_tokens, &cancel);
+            false
+        }
         None => {
             let resp = buffered_reply(shared, stream, rx, max_tokens, &cancel);
-            let _ = write_response(stream, &resp);
+            let _ = write_response_conn(stream, &resp, keep);
+            keep
         }
     }
 }

@@ -32,6 +32,28 @@ pub struct SamplingParams {
     pub seed: Option<u64>,
 }
 
+/// Serialized continuation state attached to a re-dispatched request
+/// whose checkpoint was shipped off a quarantined replica: the `FICK`
+/// blob plus the serving-layer progress the receiving scheduler must
+/// resume (tokens already streamed, running checksum accumulator,
+/// queue/eviction counters). Built by the shipping path in
+/// `server/replica.rs`, consumed by the receiving scheduler's `accept`.
+#[derive(Debug, Clone)]
+pub struct ResumeState {
+    /// Serialized checkpoint (`Pager::serialize` output).
+    pub blob: Vec<u8>,
+    /// Tokens the lane already produced (LM variant; empty otherwise).
+    pub tokens: Vec<u32>,
+    /// f64 checksum left-fold up to the suspension point.
+    pub checksum_total: f64,
+    /// Queue time accrued before the first admission.
+    pub queue_ms: f64,
+    /// Checkpoint/resume cycles so far (this shipping counts as one).
+    pub evictions: u64,
+    /// Busy-lane count observed at the original admission.
+    pub batch_size: usize,
+}
+
 /// One queued generation request.
 #[derive(Debug)]
 pub struct GenRequest {
@@ -59,10 +81,19 @@ pub struct GenRequest {
     /// the same replica so an evicted checkpoint can be resumed there.
     pub session: Option<String>,
     /// Times this request has been re-dispatched after its replica was
-    /// quarantined. Only requests that never produced a token are
-    /// retried (retried-iff-zero-tokens), bounded by
+    /// quarantined. Requests that never produced a token are retried
+    /// from scratch; requests whose checkpoint was shipped off the dying
+    /// replica are retried carrying `resume` (retried-iff-zero-tokens
+    /// **or** carries-its-checkpoint), bounded by
     /// `ServerConfig::failover_retries`.
     pub failovers: u32,
+    /// Prefill-style pending seed (`{"prompt": [...]}`): flat
+    /// `[M, span, D]` group-major future contributions handed to
+    /// `LaneInit::pending_seed` at admission.
+    pub prompt: Option<Vec<f32>>,
+    /// Shipped continuation: restore this checkpoint instead of admitting
+    /// a fresh lane. Set only by the failover path, never by clients.
+    pub resume: Option<ResumeState>,
 }
 
 /// One incremental per-position event on a streaming lane.
@@ -160,6 +191,8 @@ mod tests {
                 cancel: Arc::new(AtomicBool::new(false)),
                 session: None,
                 failovers: 0,
+                prompt: None,
+                resume: None,
             },
             rx,
         )

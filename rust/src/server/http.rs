@@ -1,7 +1,10 @@
 //! Minimal HTTP/1.1 substrate on `std::net` (hyper/axum unavailable
 //! offline). Enough protocol for a serving API: request line, headers,
 //! Content-Length bodies, chunked transfer encoding for streaming
-//! responses, keep-alive off (Connection: close per response).
+//! responses, and opt-in keep-alive: a client sending
+//! `Connection: keep-alive` gets the socket back for up to
+//! `ServerConfig::keepalive_max_requests` requests (idle bounded by the
+//! socket read timeout); streaming responses always close.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -232,17 +235,32 @@ pub fn decode_chunked(body: &str) -> String {
 
 /// Serialize and send a response, closing the connection after.
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    write_response_conn(stream, resp, false)
+}
+
+/// Serialize and send a response, advertising whether the server will
+/// keep the connection open for another request (`Connection:
+/// keep-alive`) or close it after this one (`Connection: close`). The
+/// advertisement must match what the caller actually does — the
+/// connection loop in `server/api.rs` owns that decision.
+pub fn write_response_conn(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+) -> Result<()> {
     let retry = resp
         .retry_after_s
         .map(|s| format!("Retry-After: {s}\r\n"))
         .unwrap_or_default();
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}Connection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}Connection: {}\r\n\r\n",
         resp.status,
         resp.reason,
         resp.content_type,
         resp.body.len(),
-        retry
+        retry,
+        conn
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
@@ -357,6 +375,28 @@ mod tests {
         assert_eq!(r.status, 503);
         assert_eq!(r.retry_after_s, Some(2));
         assert!(String::from_utf8_lossy(&r.body).contains("replica queues"));
+    }
+
+    #[test]
+    fn keep_alive_header_reflects_caller_decision() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            let mut buf = String::new();
+            c.read_to_string(&mut buf).unwrap();
+            buf
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        write_response_conn(&mut s, &Response::json(200, "{}".into()), true).unwrap();
+        write_response_conn(&mut s, &Response::json(200, "{}".into()), false).unwrap();
+        drop(s);
+        let got = h.join().unwrap();
+        let mut parts = got.split("\r\n\r\n");
+        assert!(parts.next().unwrap().contains("Connection: keep-alive"));
+        // second response rides the same socket and announces the close
+        assert!(got.matches("Connection: close").count() == 1);
+        assert!(got.matches("HTTP/1.1 200 OK").count() == 2);
     }
 
     #[test]

@@ -31,10 +31,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{collect_batch, lane_len, GenRequest, LaneResult, SamplingParams, StreamEvent};
+use super::batcher::{
+    collect_batch, lane_len, GenRequest, LaneResult, ResumeState, SamplingParams, StreamEvent,
+};
 use crate::config::ServerConfig;
 use crate::engine::{
-    Engine, EngineOpts, LaneCheckpoint, LaneInit, Pager, SamplerCfg, Session, StepOutput,
+    CkptRef, Engine, EngineOpts, LaneCheckpoint, LaneInit, Pager, SamplerCfg, ServingMeta,
+    Session, StepOutput,
 };
 use crate::metrics::Counters;
 use crate::model::Variant;
@@ -353,13 +356,51 @@ struct LaneSlot {
 
 /// A request swapped out of its lane under queue pressure: its serving
 /// slot (tokens so far, reply channel, stats) plus the engine-side lane
-/// checkpoint. Lives in the scheduler until a later session's clock
-/// reaches the checkpoint's suspension position (`Session::restore`'s
-/// same-alignment rule), at which point the slot goes back into a lane
-/// and the rollout continues bit-identically.
+/// checkpoint — hot in the pager slab or spilled to disk. An *aligned*
+/// checkpoint waits until a session's clock reaches its suspension
+/// position (`Session::restore`'s same-alignment rule); a *folded* one
+/// resumes into the first free lane once the clock has generated at
+/// least `lane_pos` positions (the rebased admission point must be
+/// non-negative) and `span` positions still remain. The scheduling
+/// fields are cached here so spilled entries answer gating questions
+/// without a disk read.
 struct EvictedLane {
     slot: LaneSlot,
-    ckpt: LaneCheckpoint,
+    ckpt: CkptRef,
+    /// Suspension position (aligned restores happen exactly here).
+    pos: usize,
+    folded: bool,
+    /// Positions the lane had generated when suspended.
+    lane_pos: usize,
+    /// Positions the lane still has to generate.
+    span: usize,
+    /// Monotonic suspension order — the LRU key for the spill watermark
+    /// (oldest resident suspension spills first).
+    suspended_at: u64,
+}
+
+impl EvictedLane {
+    /// Whether this checkpoint can still restore at a strictly later
+    /// boundary of a session currently at `now` with schedule length
+    /// `len`. Gates both lane reservation (don't evict a victim to admit
+    /// queue work when the freed lane is owed to a checkpoint) and early
+    /// session retirement.
+    fn restorable_later(&self, now: usize, len: usize) -> bool {
+        if self.folded {
+            now.max(self.lane_pos) + self.span <= len
+        } else {
+            self.pos > now
+        }
+    }
+
+    /// Whether this checkpoint can restore at the current boundary.
+    fn restorable_now(&self, now: usize, len: usize) -> bool {
+        if self.folded {
+            now >= self.lane_pos && now + self.span <= len
+        } else {
+            self.pos == now
+        }
+    }
 }
 
 /// Continuous-admission scheduler: owns the running [`Session`], tracks
@@ -379,8 +420,17 @@ struct Scheduler<'e, 'rt> {
     /// forced off under drain-then-refill, which cannot re-seed lanes).
     pager: Option<Pager>,
     /// Requests evicted under queue pressure, waiting for a session whose
-    /// clock reaches their checkpoint's suspension position.
+    /// clock reaches their checkpoint's suspension position (aligned) or
+    /// for any free lane past their rebased admission point (folded).
     evicted: Vec<EvictedLane>,
+    /// Prefer folded (position-independent) suspends for long-tail
+    /// victims (`ServerConfig::fold`).
+    fold: bool,
+    /// Slab-usage percentage above which cold resident checkpoints spill
+    /// to disk (when the pager has a spill dir).
+    spill_watermark_pct: u64,
+    /// Monotonic suspend counter (LRU order for the spill watermark).
+    suspend_seq: u64,
     counters: Counters,
     inflight: Arc<AtomicU64>,
     gauges: Arc<ReplicaGauges>,
@@ -394,6 +444,8 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         horizon: usize,
         admit_mid_batch: bool,
         pager: Option<Pager>,
+        fold: bool,
+        spill_watermark_pct: u64,
         counters: Counters,
         inflight: Arc<AtomicU64>,
         gauges: Arc<ReplicaGauges>,
@@ -409,6 +461,9 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
             admit_mid_batch,
             pager: if admit_mid_batch { pager } else { None },
             evicted: Vec::new(),
+            fold,
+            spill_watermark_pct,
+            suspend_seq: 0,
             counters,
             inflight,
             gauges,
@@ -416,8 +471,122 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         }
     }
 
-    fn enqueue(&mut self, req: GenRequest) {
+    /// Intake: shipped continuations and durable spilled sessions rejoin
+    /// as evicted entries (they already hold a checkpoint and must not be
+    /// admitted as fresh lanes); everything else queues.
+    fn enqueue(&mut self, mut req: GenRequest) {
+        if let Some(rs) = req.resume.take() {
+            self.accept_resume(req, rs);
+            return;
+        }
+        let spilled_key = match (&req.session, self.pager.as_ref()) {
+            (Some(key), Some(p)) if p.has_spilled(key) => Some(key.clone()),
+            _ => None,
+        };
+        if let Some(key) = spilled_key {
+            self.accept_spilled(req, &key);
+            return;
+        }
         self.queue.push_back(req);
+    }
+
+    /// A checkpoint shipped off a quarantined replica: rebuild its
+    /// serving slot from the [`ResumeState`] and park it as an evicted
+    /// entry; the resume phase re-seats it into the first eligible lane.
+    fn accept_resume(&mut self, req: GenRequest, rs: ResumeState) {
+        let Some(pager) = self.pager.as_mut() else {
+            let _ = req
+                .reply
+                .send(Err("shipped checkpoint arrived at a replica without paging".to_string()));
+            self.request_done();
+            return;
+        };
+        match pager.deserialize(&rs.blob) {
+            Ok((ckpt, _meta)) => {
+                // the explicit ResumeState supersedes the blob's embedded
+                // ServingMeta (they agree; the struct survives in-process)
+                self.park_checkpoint(
+                    req,
+                    ckpt,
+                    rs.tokens,
+                    rs.checksum_total,
+                    rs.queue_ms,
+                    rs.evictions,
+                    rs.batch_size,
+                );
+            }
+            Err(e) => {
+                let _ = req.reply.send(Err(format!("resume shipped checkpoint: {e:#}")));
+                self.request_done();
+            }
+        }
+    }
+
+    /// A fresh request whose session key matches a spilled checkpoint
+    /// (durable handle — the blob survived a replica death or a server
+    /// restart): reload it and continue the rollout instead of starting
+    /// a new one.
+    fn accept_spilled(&mut self, req: GenRequest, key: &str) {
+        let pager = self.pager.as_mut().unwrap();
+        match pager.load_spilled(key) {
+            Ok((ckpt, meta)) => {
+                self.counters.lock().spill_reloads_total += 1;
+                let meta = meta.unwrap_or(ServingMeta {
+                    checksum_total: 0.0,
+                    queue_ms: 0.0,
+                    evictions: 0,
+                    batch_size: 1,
+                });
+                let tokens = ckpt.tokens.clone().unwrap_or_default();
+                self.park_checkpoint(
+                    req,
+                    ckpt,
+                    tokens,
+                    meta.checksum_total,
+                    meta.queue_ms,
+                    meta.evictions,
+                    meta.batch_size,
+                );
+            }
+            Err(e) => {
+                let _ = req.reply.send(Err(format!("resume spilled session {key:?}: {e:#}")));
+                self.request_done();
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn park_checkpoint(
+        &mut self,
+        req: GenRequest,
+        ckpt: LaneCheckpoint,
+        tokens: Vec<u32>,
+        checksum_total: f64,
+        queue_ms: f64,
+        evictions: u64,
+        batch_size: usize,
+    ) {
+        self.suspend_seq += 1;
+        let slot = LaneSlot {
+            admitted_pos: 0, // rebased by the restore
+            limit: ckpt.lane_limit(),
+            admitted_at: Instant::now(),
+            queue_ms,
+            batch_size,
+            tokens,
+            checksum_total,
+            evictions,
+            req,
+        };
+        self.evicted.push(EvictedLane {
+            pos: ckpt.pos(),
+            folded: ckpt.folded(),
+            lane_pos: ckpt.lane_pos(),
+            span: ckpt.span(),
+            suspended_at: self.suspend_seq,
+            slot,
+            ckpt: CkptRef::Resident(ckpt),
+        });
     }
 
     /// Nothing running, nothing waiting, nothing paged out: the worker
@@ -456,8 +625,10 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         }
     }
 
-    /// Restore evicted lanes whose checkpoint position matches the
-    /// session clock (the only position `Session::restore` is exact at).
+    /// Restore evicted lanes that are eligible at the current boundary:
+    /// aligned checkpoints when the clock matches their suspension
+    /// position exactly, folded checkpoints into any free lane once the
+    /// clock is at or past their lane position with enough schedule left.
     /// Runs *before* `evict_phase` so a just-evicted lane is never
     /// bounced straight back in the same boundary; returns the lanes it
     /// restored so `evict_phase` cannot re-evict them before they have
@@ -465,16 +636,32 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
     fn resume_phase(&mut self) -> Vec<usize> {
         let mut restored = Vec::new();
         let Some(now) = self.session.as_ref().map(Session::steps_done) else { return restored };
+        let len = now + self.session.as_ref().unwrap().remaining();
         let mut i = 0;
         while i < self.evicted.len() {
-            if self.evicted[i].ckpt.pos() != now {
+            if !self.evicted[i].restorable_now(now, len) {
                 i += 1;
                 continue;
             }
             let Some(lane) = (0..self.lanes.len()).find(|&l| self.lanes[l].is_none()) else {
-                break; // no free lane at the restore point: wait for a later session
+                break; // no free lane right now: wait for a later boundary
             };
-            let EvictedLane { slot, ckpt } = self.evicted.remove(i);
+            let e = self.evicted.remove(i);
+            let EvictedLane { mut slot, ckpt, lane_pos, .. } = e;
+            let was_spilled = ckpt.is_spilled();
+            // transparently reload a spilled checkpoint; the slot already
+            // carries the serving progress, so the blob's meta is unused
+            let ckpt = match self.pager.as_mut().unwrap().fetch(ckpt) {
+                Ok((c, _meta)) => c,
+                Err(e) => {
+                    let _ = slot.req.reply.send(Err(format!("resume: reload spill: {e:#}")));
+                    self.request_done();
+                    continue;
+                }
+            };
+            if was_spilled {
+                self.counters.lock().spill_reloads_total += 1;
+            }
             let res = self
                 .session
                 .as_mut()
@@ -482,6 +669,10 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                 .restore(lane, ckpt, self.pager.as_mut().unwrap());
             match res {
                 Ok(()) => {
+                    // rebase the lane-local clock: the folded restore
+                    // re-admitted the lane at `now - lane_pos` (a no-op
+                    // for aligned restores, where now == ckpt.pos)
+                    slot.admitted_pos = now - lane_pos;
                     self.lanes[lane] = Some(slot);
                     restored.push(lane);
                     self.counters.lock().resumes_total += 1;
@@ -515,12 +706,14 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         if self.queue.is_empty() || self.lanes.iter().any(|l| l.is_none()) {
             return;
         }
-        // lanes freed now are reserved for checkpoints waiting further
-        // down this session's schedule — evicting would not admit anyone
-        if self.evicted.iter().any(|e| e.ckpt.pos() > now) {
+        let remaining = sess.remaining();
+        let len = now + remaining;
+        // lanes freed now are reserved for checkpoints that can still
+        // restore later in this session — evicting would not admit anyone
+        // (a restorable checkpoint takes the freed lane first)
+        if self.evicted.iter().any(|e| e.restorable_later(now, len)) {
             return;
         }
-        let remaining = sess.remaining();
         let Some(need) = self
             .queue
             .iter()
@@ -544,13 +737,100 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         if victim_remaining <= need {
             return;
         }
+        // Fold vs aligned: a folded suspend costs the history-vs-future
+        // convolution but resumes anywhere; aligned is free but must wait
+        // for a session to pass through this exact position again. Fold
+        // long-tail victims (remaining at least half of what is left of
+        // this session — they would otherwise park until a next session
+        // happens to reach `now`); keep aligned for short tails that a
+        // later boundary of this very session can re-seat. A fold that
+        // cannot run (half-store wrap) falls back to aligned.
+        let pager = self.pager.as_mut().unwrap();
+        let res = if self.fold && victim_remaining * 2 >= remaining {
+            sess.suspend_folded(lane, pager).or_else(|_| sess.suspend(lane, pager))
+        } else {
+            sess.suspend(lane, pager)
+        };
         // a full pager (or any transient failure) leaves every lane
         // untouched — the waiting request simply keeps waiting
-        if let Ok(ckpt) = sess.suspend(lane, self.pager.as_mut().unwrap()) {
+        if let Ok(ckpt) = res {
             let mut slot = self.lanes[lane].take().unwrap();
             slot.evictions += 1;
-            self.evicted.push(EvictedLane { slot, ckpt });
-            self.counters.lock().evictions_total += 1;
+            self.suspend_seq += 1;
+            let mut c = self.counters.lock();
+            c.evictions_total += 1;
+            if ckpt.folded() {
+                c.folds_total += 1;
+            }
+            drop(c);
+            self.evicted.push(EvictedLane {
+                pos: ckpt.pos(),
+                folded: ckpt.folded(),
+                lane_pos: ckpt.lane_pos(),
+                span: ckpt.span(),
+                suspended_at: self.suspend_seq,
+                slot,
+                ckpt: CkptRef::Resident(ckpt),
+            });
+        }
+    }
+
+    /// Spill tier: when slab usage crosses the watermark, serialize the
+    /// least-recently-suspended resident checkpoints to the spill dir and
+    /// free their blocks. The blob carries a [`ServingMeta`] trailer so
+    /// the serving-side accumulators survive even a process restart (the
+    /// durable-handle path rebuilds the slot from it). Spill errors are
+    /// soft: the checkpoint stays resident and we stop for this boundary.
+    fn spill_phase(&mut self) {
+        let Some(p) = self.pager.as_ref() else { return };
+        if !p.spill_enabled() {
+            return;
+        }
+        loop {
+            let p = self.pager.as_ref().unwrap();
+            let used = p.total_blocks() - p.free_blocks();
+            if used * 100 <= self.spill_watermark_pct as usize * p.total_blocks() {
+                return;
+            }
+            let Some(idx) = self
+                .evicted
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| !e.ckpt.is_spilled())
+                .min_by_key(|(_, e)| e.suspended_at)
+                .map(|(i, _)| i)
+            else {
+                return;
+            };
+            let mut e = self.evicted.remove(idx);
+            let key = e
+                .slot
+                .req
+                .session
+                .clone()
+                .unwrap_or_else(|| format!("r{}.{}", self.replica_id, e.suspended_at));
+            let CkptRef::Resident(ckpt) = e.ckpt else { unreachable!("filtered on resident") };
+            let meta = ServingMeta {
+                checksum_total: e.slot.checksum_total,
+                queue_ms: e.slot.queue_ms,
+                evictions: e.slot.evictions,
+                batch_size: e.slot.batch_size,
+            };
+            let pager = self.pager.as_mut().unwrap();
+            let blob = pager.serialize(&ckpt, Some(&meta));
+            match pager.spill_blob(&key, &blob) {
+                Ok(()) => {
+                    pager.discard(ckpt);
+                    e.ckpt = CkptRef::Spilled(key);
+                    self.evicted.push(e);
+                    self.counters.lock().spills_total += 1;
+                }
+                Err(_) => {
+                    e.ckpt = CkptRef::Resident(ckpt);
+                    self.evicted.push(e);
+                    return;
+                }
+            }
         }
     }
 
@@ -605,10 +885,12 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         }
         let restored = self.resume_phase();
         self.evict_phase(&restored);
+        self.spill_phase();
         // lanes kept free for checkpoints that must restore later in this
-        // session's schedule (strictly later: a checkpoint at the current
-        // position either just resumed or just got evicted)
-        let reserved = self.evicted.iter().filter(|e| e.ckpt.pos() > now).count();
+        // session's schedule (strictly later: a checkpoint restorable at
+        // the current position either just resumed or is lane-starved)
+        let len = now + remaining;
+        let reserved = self.evicted.iter().filter(|e| e.restorable_later(now, len)).count();
         for lane in 0..self.lanes.len() {
             if self.lanes[lane].is_some() {
                 continue;
@@ -625,12 +907,22 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
             else {
                 break;
             };
-            let req = self.queue.remove(qi).unwrap();
+            let mut req = self.queue.remove(qi).unwrap();
             let limit = lane_len(req.max_tokens, self.horizon);
+            // prompt seed: the HTTP layer validated the flat [M, span, D]
+            // shape, so the span falls straight out of the length
+            let dims = self.engine.runtime().dims;
+            let m = dims.g / dims.b;
+            let pending_seed =
+                req.prompt.take().map(|fut| {
+                    let span = fut.len() / (m * dims.d);
+                    (fut, span)
+                });
             let init = LaneInit {
                 limit,
                 sampler_cfg: self.lane_sampler_cfg(&req.sampling),
                 seed: req.sampling.seed,
+                pending_seed,
             };
             let admitted_pos = {
                 let sess = self.session.as_mut().unwrap();
@@ -688,17 +980,76 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
 
     /// Fail every evicted (paged-out) request and release its checkpoint.
     /// Used when no session can ever resume them again: open-session
-    /// failure, shutdown, and quarantine (the pager dies with the worker,
-    /// and a mid-rollout request is never retried elsewhere — the
-    /// retried-iff-zero-tokens rule).
+    /// failure and shutdown. (Quarantine no longer lands here — resident
+    /// and spilled checkpoints are *shipped* to a healthy replica via
+    /// [`Scheduler::ship_evicted`] instead.)
     fn fail_evicted(&mut self, msg: &str) {
-        for e in self.evicted.drain(..) {
+        for e in self.evicted.drain(..).collect::<Vec<_>>() {
             if let Some(p) = self.pager.as_mut() {
-                p.discard(e.ckpt);
+                p.discard_ref(e.ckpt);
             }
             let _ = e.slot.req.reply.send(Err(msg.to_string()));
             self.request_done();
         }
+    }
+
+    /// Quarantine path: turn every evicted entry — slab-resident or
+    /// spilled — into a shippable request carrying its serialized
+    /// checkpoint plus serving progress, for the supervisor to re-home on
+    /// a healthy replica. This amends the retried-iff-zero-tokens rule:
+    /// a request is re-dispatched if it never produced a token **or** it
+    /// carries its checkpoint (the continuation is bit-identical either
+    /// way). Like `drain_for_failover`, shipped requests stay inflight
+    /// globally but leave this replica's load.
+    fn ship_evicted(&mut self) -> Vec<GenRequest> {
+        let mut out = Vec::new();
+        if self.pager.is_none() {
+            return out;
+        }
+        let mut shipped = 0u64;
+        for e in self.evicted.drain(..).collect::<Vec<_>>() {
+            let EvictedLane { mut slot, ckpt, .. } = e;
+            let pager = self.pager.as_mut().unwrap();
+            let blob = match ckpt {
+                CkptRef::Resident(c) => {
+                    let meta = ServingMeta {
+                        checksum_total: slot.checksum_total,
+                        queue_ms: slot.queue_ms,
+                        evictions: slot.evictions,
+                        batch_size: slot.batch_size,
+                    };
+                    let b = pager.serialize(&c, Some(&meta));
+                    pager.discard(c);
+                    Ok(b)
+                }
+                CkptRef::Spilled(key) => pager.take_spilled_blob(&key),
+            };
+            match blob {
+                Ok(blob) => {
+                    slot.req.resume = Some(ResumeState {
+                        blob,
+                        tokens: std::mem::take(&mut slot.tokens),
+                        checksum_total: slot.checksum_total,
+                        queue_ms: slot.queue_ms,
+                        // shipping is one more checkpoint/resume cycle
+                        evictions: slot.evictions + 1,
+                        batch_size: slot.batch_size,
+                    });
+                    self.gauges.load.fetch_sub(1, Ordering::Relaxed);
+                    shipped += 1;
+                    out.push(slot.req);
+                }
+                Err(err) => {
+                    let _ = slot
+                        .req
+                        .reply
+                        .send(Err(format!("replica quarantined: ship checkpoint: {err:#}")));
+                    self.request_done();
+                }
+            }
+        }
+        self.counters.lock().checkpoints_shipped_total += shipped;
+        out
     }
 
     /// Route one step's outputs to the busy lanes; complete any lane that
@@ -819,7 +1170,7 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
                 Some(c) => {
                     let e = self.evicted.remove(i);
                     if let Some(p) = self.pager.as_mut() {
-                        p.discard(e.ckpt);
+                        p.discard_ref(e.ckpt);
                     }
                     self.note_cancel(&c);
                     let _ = e.slot.req.reply.send(Err(c.message().to_string()));
@@ -850,13 +1201,18 @@ impl<'e, 'rt> Scheduler<'e, 'rt> {
         self.queue.iter().any(|r| lane_len(r.max_tokens, self.horizon) <= remaining)
     }
 
-    /// A checkpoint can still be restored by the *current* session (its
-    /// suspension position has not been stepped past) — keeps an
-    /// otherwise-idle session alive until the restore point.
+    /// A checkpoint can still be restored by the *current* session —
+    /// aligned: its suspension position has not been stepped past;
+    /// folded: its span still fits the remaining schedule (stepping keeps
+    /// moving the clock toward / past its rebased admission point). Keeps
+    /// an otherwise-idle session alive until the restore happens.
     fn resumes_reachable(&self) -> bool {
         let Some(sess) = self.session.as_ref() else { return false };
         let now = sess.steps_done();
-        self.evicted.iter().any(|e| e.ckpt.pos() >= now)
+        let len = now + sess.remaining();
+        self.evicted
+            .iter()
+            .any(|e| e.restorable_now(now, len) || e.restorable_later(now, len))
     }
 
     fn publish_gauges(&self) {
@@ -1010,7 +1366,28 @@ pub(crate) fn worker_main(
     let fleet = ctx.cfg.replicas.max(1);
     let window = Duration::from_millis(ecfg.batch_window_ms);
     let pager = if ecfg.paging && ecfg.continuous_admission {
-        Some(engine.make_pager(ecfg.pager_capacity_mb))
+        let mut p = engine.make_pager(ecfg.pager_capacity_mb);
+        if !ecfg.spill_dir.is_empty() {
+            // per-replica subdir: replicas must not boot-scan (and race
+            // over) each other's spilled sessions; a respawn of the same
+            // id reclaims exactly its own
+            let dir = std::path::Path::new(&ecfg.spill_dir).join(format!("replica-{}", replica.id));
+            match p.set_spill_dir(&dir) {
+                Ok(found) if found > 0 => eprintln!(
+                    "flashinfer: replica {}: spill dir holds {found} spilled session(s); \
+                     serving them as durable handles",
+                    replica.id
+                ),
+                Ok(_) => {}
+                Err(e) => eprintln!(
+                    "flashinfer: replica {}: spill dir {} unavailable ({e:#}); \
+                     spilling disabled",
+                    replica.id,
+                    dir.display()
+                ),
+            }
+        }
+        Some(p)
     } else {
         None
     };
@@ -1019,6 +1396,8 @@ pub(crate) fn worker_main(
         horizon,
         ecfg.continuous_admission,
         pager,
+        ecfg.fold,
+        ecfg.spill_watermark_pct,
         ctx.counters.clone(),
         ctx.inflight.clone(),
         replica.gauges.clone(),
@@ -1123,12 +1502,18 @@ pub(crate) fn worker_main(
     }
     if quarantine {
         // eject from rotation first so the router stops dispatching here,
-        // then hand queued (zero-token) work back for failover; evicted
-        // requests already produced tokens, so the retried-iff-zero-tokens
-        // rule fails them with a structured error instead
+        // then hand work back for failover: queued requests are zero-token
+        // and re-run from scratch; evicted (suspended) requests *ship* —
+        // each leaves with its serialized checkpoint attached, and the
+        // receiving replica continues the rollout bit-identically instead
+        // of this replica failing it mid-flight
         replica.clear_sender();
         replica.enter_quarantine();
-        sched.fail_evicted("replica quarantined: suspended session lost");
+        for req in sched.ship_evicted() {
+            if let Err(send_err) = ctx.failback.send(req) {
+                fail_request(send_err.0, "shutting down, retry later", &ctx);
+            }
+        }
         for req in sched.drain_for_failover() {
             if let Err(send_err) = ctx.failback.send(req) {
                 fail_request(send_err.0, "shutting down, retry later", &ctx);
@@ -1183,6 +1568,10 @@ pub(crate) fn info_json(cfg: &ServerConfig, eng: &EngineOpts, rt: &Runtime) -> J
         ("max_queue", Json::Num(cfg.max_queue as f64)),
         ("paging", Json::Bool(cfg.paging && cfg.continuous_admission)),
         ("pager_capacity_mb", Json::Num(cfg.pager_capacity_mb as f64)),
+        ("fold", Json::Bool(cfg.fold)),
+        ("spill_dir", Json::Str(cfg.spill_dir.clone())),
+        ("spill_watermark_pct", Json::Num(cfg.spill_watermark_pct as f64)),
+        ("keepalive_max_requests", Json::Num(cfg.keepalive_max_requests as f64)),
         ("max_max_tokens", Json::Num(cfg.max_max_tokens as f64)),
         ("deadline_ms", Json::Num(cfg.deadline_ms as f64)),
         ("max_connections", Json::Num(cfg.max_connections as f64)),

@@ -9,11 +9,13 @@
 //! queue is full.
 //!
 //! The supervisor thread (`fi-router`) owns the recoverable half of the
-//! failure model: it re-dispatches failed-over requests (queued work a
-//! quarantining replica handed back — never requests that produced a
-//! token), respawns quarantined replicas once their capped-exponential
-//! backoff has elapsed, and promotes respawned replicas back into full
-//! rotation after a clean probe window.
+//! failure model: it re-dispatches failed-over requests — queued work a
+//! quarantining replica handed back (zero tokens produced, re-run from
+//! scratch) and suspended sessions shipped out with their serialized
+//! checkpoint attached (the receiving replica continues them
+//! bit-identically) — respawns quarantined replicas once their
+//! capped-exponential backoff has elapsed, and promotes respawned
+//! replicas back into full rotation after a clean probe window.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -95,9 +97,14 @@ impl Router {
                     if self.replicas.get(id).is_some_and(|r| self.is_open(r)) {
                         target = Some(id);
                     } else {
-                        // the pinned replica left rotation (its pager —
-                        // and any checkpoint — died with it): unpin so
-                        // the session re-homes wherever it lands next
+                        // the pinned replica left rotation: unpin so the
+                        // session re-homes wherever it lands next. Its
+                        // checkpoint is not lost — quarantine ships
+                        // resident+spilled checkpoints back through the
+                        // failback channel (the request re-arrives
+                        // carrying its blob and re-pins on dispatch), and
+                        // spilled blobs additionally survive on disk for
+                        // the respawned replica's boot scan
                         plock(&self.affinity).remove(key);
                     }
                 }
@@ -321,6 +328,8 @@ mod tests {
             cancel: Arc::new(AtomicBool::new(false)),
             session: session.map(str::to_string),
             failovers: 0,
+            prompt: None,
+            resume: None,
         }
     }
 

@@ -50,11 +50,12 @@ fn drive_admitted(
     for _ in 0..admit_at {
         sess.step().expect("pre-admission step");
     }
+    let limit = init.limit;
     sess.admit(lane, init).expect("admit");
     assert_eq!(sess.lane_start(lane), admit_at);
     assert_eq!(sess.lane_pos(lane), 0);
-    let mut checksums = Vec::with_capacity(init.limit);
-    for _ in 0..init.limit {
+    let mut checksums = Vec::with_capacity(limit);
+    for _ in 0..limit {
         let step = sess.step().expect("post-admission step");
         checksums.push(step.lane_checksums[lane]);
     }
@@ -75,10 +76,11 @@ fn admitted_lane_is_bit_identical_to_fresh_run() {
         limit: 32,
         sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.25 }),
         seed: Some(77),
+        pending_seed: None,
     };
-    let fresh = drive_admitted(&engine, 64, lane, 0, init);
+    let fresh = drive_admitted(&engine, 64, lane, 0, init.clone());
     for admit_at in [1, 16, 17] {
-        let mid = drive_admitted(&engine, 64, lane, admit_at, init);
+        let mid = drive_admitted(&engine, 64, lane, admit_at, init.clone());
         assert_eq!(fresh, mid, "admission at position {admit_at} diverged");
     }
 }
@@ -96,10 +98,11 @@ fn admission_after_half_store_wrap_is_bit_identical() {
         limit: 16,
         sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.5 }),
         seed: Some(3),
+        pending_seed: None,
     };
     // len 64 -> 32 wrapped rows; admitting at 40 recycles rows that have
     // already wrapped once, and the lane's tiles straddle row_of() seams
-    let fresh = drive_admitted(&engine, 64, lane, 0, init);
+    let fresh = drive_admitted(&engine, 64, lane, 0, init.clone());
     let wrapped = drive_admitted(&engine, 64, lane, 40, init);
     assert_eq!(fresh, wrapped, "half-store admission diverged");
 }
@@ -112,6 +115,7 @@ fn async_admission_matches_sync_admission_rust_fft() {
         limit: 32,
         sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.25 }),
         seed: Some(11),
+        pending_seed: None,
     };
     // same admission schedule, async vs forced-sync: the admission fence
     // drains the in-flight FFT tile before the lane reset, so the
@@ -119,7 +123,7 @@ fn async_admission_matches_sync_admission_rust_fft() {
     // fence would instead panic in RowReadiness or corrupt the rollout
     let run = |async_mixer| {
         let engine = Engine::new(&rt, opts(TauKind::RustFft, async_mixer)).unwrap();
-        drive_admitted(&engine, 64, lane, 24, init)
+        drive_admitted(&engine, 64, lane, 24, init.clone())
     };
     assert_eq!(run(true), run(false), "async admission diverged from sync");
 }
@@ -173,6 +177,7 @@ fn per_lane_seed_is_deterministic_under_admission_churn() {
         limit: 16,
         sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.3 }),
         seed: Some(123),
+        pending_seed: None,
     };
     // one continuously running batch, the same request admitted into the
     // same lane three times at different global positions: every rollout
@@ -180,7 +185,7 @@ fn per_lane_seed_is_deterministic_under_admission_churn() {
     let mut sess = engine.session(64).unwrap();
     let mut rollouts: Vec<Vec<f32>> = Vec::new();
     for _round in 0..3 {
-        sess.admit(lane, init).unwrap();
+        sess.admit(lane, init.clone()).unwrap();
         let mut cs = Vec::new();
         for _ in 0..16 {
             cs.push(sess.step().unwrap().lane_checksums[lane]);
@@ -240,13 +245,14 @@ fn admitted_lane_tokens_match_fresh_run_lm() {
         limit: 16,
         sampler_cfg: Some(SamplerCfg::Lm { temperature: 0.7, top_k: 8 }),
         seed: Some(9),
+        pending_seed: None,
     };
     let drive = |admit_at: usize| {
         let mut sess = engine.session(32).unwrap();
         for _ in 0..admit_at {
             sess.step().unwrap();
         }
-        sess.admit(lane, init).unwrap();
+        sess.admit(lane, init.clone()).unwrap();
         let mut toks = Vec::new();
         for _ in 0..16 {
             let step = sess.step().unwrap();

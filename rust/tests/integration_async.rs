@@ -368,6 +368,7 @@ fn multi_worker_paging_suspend_resume_is_deterministic() {
         limit,
         sampler_cfg: Some(SamplerCfg::Synthetic { sigma: 0.25 }),
         seed: Some(77),
+        pending_seed: None,
     };
 
     // uninterrupted baseline with the same multi-worker config
@@ -375,7 +376,7 @@ fn multi_worker_paging_suspend_resume_is_deterministic() {
     for _ in 0..admit_at {
         base.step().unwrap();
     }
-    base.admit(lane, li).unwrap();
+    base.admit(lane, li.clone()).unwrap();
     let mut want = Vec::with_capacity(limit);
     for _ in 0..limit {
         want.push(base.step().unwrap().lane_checksums[lane]);

@@ -45,6 +45,7 @@ fn init(limit: usize, sigma: f32, seed: u64) -> LaneInit {
         limit,
         sampler_cfg: Some(SamplerCfg::Synthetic { sigma }),
         seed: Some(seed),
+        pending_seed: None,
     }
 }
 
@@ -57,13 +58,14 @@ fn drive_uninterrupted(
     admit_at: usize,
     li: LaneInit,
 ) -> Vec<f32> {
+    let limit = li.limit;
     let mut sess = engine.session(len).expect("session");
     for _ in 0..admit_at {
         sess.step().expect("step");
     }
     sess.admit(lane, li).expect("admit");
-    let mut cs = Vec::with_capacity(li.limit);
-    for _ in 0..li.limit {
+    let mut cs = Vec::with_capacity(limit);
+    for _ in 0..limit {
         cs.push(sess.step().expect("step").lane_checksums[lane]);
     }
     sess.finish();
@@ -79,7 +81,7 @@ fn evict_then_resume_in_later_session_is_bit_identical() {
     let (len, admit_at, limit, suspend_at) = (64usize, 8usize, 32usize, 20usize);
     let li = init(limit, 0.25, 77);
 
-    let want = drive_uninterrupted(&engine, len, lane, admit_at, li);
+    let want = drive_uninterrupted(&engine, len, lane, admit_at, li.clone());
 
     // session 1: admit at 8, run to global position 20, suspend
     let mut s1 = engine.session(len).unwrap();
@@ -146,7 +148,7 @@ fn evict_then_resume_with_half_store_wrap_is_bit_identical() {
     let (len, limit, suspend_at) = (64usize, 64usize, 40usize);
     let li = init(limit, 0.5, 3);
 
-    let want = drive_uninterrupted(&engine, len, lane, 0, li);
+    let want = drive_uninterrupted(&engine, len, lane, 0, li.clone());
 
     let mut s1 = engine.session(len).unwrap();
     s1.admit(lane, li).unwrap();
@@ -183,7 +185,7 @@ fn suspend_restore_same_boundary_roundtrip() {
     let mut pager = engine.make_pager(64);
     let li = init(32, 0.25, 11);
 
-    let want = drive_uninterrupted(&engine, 64, lane, 0, li);
+    let want = drive_uninterrupted(&engine, 64, lane, 0, li.clone());
     let mut sess = engine.session(64).unwrap();
     sess.admit(lane, li).unwrap();
     let mut got = Vec::new();
@@ -197,6 +199,180 @@ fn suspend_restore_same_boundary_roundtrip() {
     }
     sess.finish();
     assert_eq!(want, got, "same-boundary suspend/restore round trip diverged");
+}
+
+#[test]
+fn folded_suspend_resumes_at_any_boundary_bit_identical() {
+    // The tentpole property: a *folded* checkpoint carries no clock
+    // alignment. Suspend at several positions and restore each into a
+    // different session at a global position that is earlier than, later
+    // than, or exactly at the lane's generated count — never at the
+    // aligned position — and require bit-identity with the uninterrupted
+    // run (rust-direct: ascending-source-order accumulation makes the
+    // rebased tile decomposition sum in the same float order).
+    let Some(rt) = runtime("synthetic") else { return };
+    let lane = rt.dims.b - 1;
+    let engine = Engine::new(&rt, opts(TauKind::RustDirect)).unwrap();
+    let mut pager = engine.make_pager(64);
+    let (len, admit_at, limit) = (64usize, 8usize, 32usize);
+
+    for (suspend_at, restore_at) in [(12usize, 5usize), (20, 31), (27, 19)] {
+        let lane_pos = suspend_at - admit_at;
+        let span = limit - lane_pos;
+        assert!(restore_at >= lane_pos && restore_at + span <= len, "bad case");
+        let li = init(limit, 0.25, 1000 + suspend_at as u64);
+        let want = drive_uninterrupted(&engine, len, lane, admit_at, li.clone());
+
+        let mut s1 = engine.session(len).unwrap();
+        for _ in 0..admit_at {
+            s1.step().unwrap();
+        }
+        s1.admit(lane, li).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..lane_pos {
+            got.push(s1.step().unwrap().lane_checksums[lane]);
+        }
+        let ckpt = s1.suspend_folded(lane, &mut pager).expect("suspend_folded");
+        assert!(ckpt.folded());
+        assert_eq!(ckpt.span(), span);
+        // a folded checkpoint pages only the pending tail — no history
+        assert_eq!(
+            pager.resident_values(),
+            pager.blocks_for(span) * pager.block_values(),
+            "folded checkpoint must hold exactly the [M, span, D] tail"
+        );
+        assert!(s1.lane_done(lane));
+        for _ in 0..3 {
+            s1.step().unwrap();
+        }
+        s1.finish();
+
+        // a different session, at an arbitrary step boundary — no
+        // clock-catch-up wait, the aligned path's defining restriction
+        let mut s2 = engine.session(len).unwrap();
+        for _ in 0..restore_at {
+            s2.step().unwrap();
+        }
+        s2.restore(lane, ckpt, &mut pager).expect("folded restore");
+        assert_eq!(pager.free_blocks(), pager.total_blocks(), "restore frees the slab");
+        assert_eq!(s2.lane_start(lane), restore_at - lane_pos, "lane clock rebased");
+        assert_eq!(s2.lane_pos(lane), lane_pos);
+        while !s2.lane_done(lane) {
+            got.push(s2.step().unwrap().lane_checksums[lane]);
+        }
+        s2.finish();
+        assert_eq!(want.len(), got.len());
+        assert_eq!(
+            want, got,
+            "folded resume (suspend at {suspend_at}, restore at {restore_at}) diverged"
+        );
+    }
+}
+
+#[test]
+fn folded_suspend_with_half_store_wrap_is_bit_identical() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let lane = 0;
+    let engine = Engine::new(
+        &rt,
+        EngineOpts { half_store: true, ..opts(TauKind::RustDirect) },
+    )
+    .unwrap();
+    let mut pager = engine.make_pager(64);
+    // len 64 -> 32 wrapped rows; suspending at global 40 folds a store
+    // that has already recycled rows once, and the tail (span 8) fits the
+    // wrapped window; the restore lands at an unaligned position
+    let (len, admit_at, limit) = (64usize, 16usize, 32usize);
+    let (suspend_at, restore_at) = (40usize, 26usize);
+    let lane_pos = suspend_at - admit_at;
+    let li = init(limit, 0.5, 21);
+    let want = drive_uninterrupted(&engine, len, lane, admit_at, li.clone());
+
+    let mut s1 = engine.session(len).unwrap();
+    for _ in 0..admit_at {
+        s1.step().unwrap();
+    }
+    s1.admit(lane, li).unwrap();
+    let mut got = Vec::new();
+    for _ in 0..lane_pos {
+        got.push(s1.step().unwrap().lane_checksums[lane]);
+    }
+    let ckpt = s1.suspend_folded(lane, &mut pager).expect("fold under wrap");
+    assert!(ckpt.folded());
+    for _ in 0..4 {
+        s1.step().unwrap();
+    }
+    s1.finish();
+
+    let mut s2 = engine.session(len).unwrap();
+    for _ in 0..restore_at {
+        s2.step().unwrap();
+    }
+    s2.restore(lane, ckpt, &mut pager).expect("folded restore under wrap");
+    while !s2.lane_done(lane) {
+        got.push(s2.step().unwrap().lane_checksums[lane]);
+    }
+    s2.finish();
+    assert_eq!(want, got, "half-store folded evict/resume diverged");
+}
+
+#[test]
+fn folded_restore_guards_fit_and_rebase() {
+    let Some(rt) = runtime("synthetic") else { return };
+    let engine = Engine::new(&rt, opts(TauKind::RustDirect)).unwrap();
+    let mut pager = engine.make_pager(64);
+
+    // fold a lane with 22 remaining positions at lane clock 10
+    let mut s1 = engine.session(32).unwrap();
+    s1.admit(0, init(32, 0.25, 5)).unwrap();
+    for _ in 0..10 {
+        s1.step().unwrap();
+    }
+    let ckpt = s1.suspend_folded(0, &mut pager).unwrap();
+    s1.finish();
+
+    // restoring before the lane's generated count would rebase the
+    // admission point before the session origin: refused, slab freed
+    let mut s2 = engine.session(32).unwrap();
+    for _ in 0..5 {
+        s2.step().unwrap();
+    }
+    assert!(s2.restore(0, ckpt, &mut pager).is_err(), "restore at pos < lane_pos must fail");
+    assert_eq!(pager.free_blocks(), pager.total_blocks(), "failed restore must not leak");
+
+    // a tail that cannot fit the remaining schedule is refused too
+    let mut s3 = engine.session(32).unwrap();
+    s3.admit(1, init(32, 0.25, 6)).unwrap();
+    for _ in 0..10 {
+        s3.step().unwrap();
+    }
+    let ckpt = s3.suspend_folded(1, &mut pager).unwrap();
+    s3.finish();
+    let mut late = engine.session(32).unwrap();
+    for _ in 0..12 {
+        late.step().unwrap();
+    }
+    // span 22 > 20 remaining of the 32-step schedule
+    assert!(late.restore(1, ckpt, &mut pager).is_err());
+    assert_eq!(pager.free_blocks(), pager.total_blocks());
+    late.finish();
+
+    // half store: a fold whose tail exceeds the wrapped window bails
+    // without touching the lane
+    let half = Engine::new(
+        &rt,
+        EngineOpts { half_store: true, ..opts(TauKind::RustDirect) },
+    )
+    .unwrap();
+    let mut s4 = half.session(16).unwrap(); // 8 wrapped rows
+    s4.admit(0, init(16, 0.25, 7)).unwrap();
+    for _ in 0..4 {
+        s4.step().unwrap();
+    }
+    // remaining span 12 > 8 rows
+    assert!(s4.suspend_folded(0, &mut pager).is_err());
+    s4.step().unwrap(); // the lane is untouched and keeps stepping
+    s4.finish();
 }
 
 #[test]

@@ -348,6 +348,117 @@ fn killed_replica_fails_over_bit_identically_and_respawns_into_rotation() {
 }
 
 // ---------------------------------------------------------------------------
+// Checkpoint shipping: a quarantined replica's paged-out lanes re-home
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quarantined_replica_ships_checkpoints_and_they_resume_elsewhere_bit_identically() {
+    let _g = serial();
+    let cfg = ServerConfig {
+        restart_budget: 0,
+        quarantine_backoff_ms: 400,
+        quarantine_backoff_max_ms: 2000,
+        probe_window_ms: 100,
+        max_max_tokens: 128,
+        default_max_tokens: 16,
+        engine: flash_inference::engine::EngineOpts {
+            // rust-direct τ: the folded checkpoint's history-vs-future
+            // deposit is bit-identical, so a shipped continuation must
+            // reproduce the uninterrupted checksum exactly
+            tau: flash_inference::tau::TauKind::RustDirect,
+            ..ServerConfig::default().engine
+        },
+        ..fleet_cfg(2)
+    };
+    let Some(server) = start_server(cfg) else { return };
+    let addr = server.addr;
+    let b = info(addr).req_usize("B").unwrap();
+
+    // every request in this test shares one session key: the probe pins it
+    // to `home`, so the whole load lands on one replica while the other
+    // stays idle — and the kill is deterministic (only `home` steps)
+    let long_body = "{\"max_tokens\": 120, \"sigma\": 0.05, \"seed\": 40, \"session\": \"ship\"}";
+    let (code, body) = post_generate(addr, long_body);
+    assert_eq!(code, 200, "{body}");
+    let baseline = checksum_of(&body);
+    let home = replica_of(&body);
+
+    // saturate home's lanes with identical longs, slowed so they are
+    // nowhere near done when the kill lands
+    faultpoint::install("engine_step:delay:5@0").unwrap();
+    let mut longs = Vec::new();
+    for _ in 0..b {
+        longs.push(std::thread::spawn(move || post_generate(addr, long_body)));
+    }
+    wait_until("home's lanes to fill", 15_000, || {
+        metric(&metrics(addr), "fi_lanes_busy") as usize == b
+    });
+
+    // queue pressure on home: the scheduler folds the longest-remaining
+    // long into the pager (long tail → fold, not aligned) and admits the
+    // short; the parked checkpoint cannot resume until the short's lane
+    // frees — that is the window the quarantine lands in
+    let short_body = "{\"max_tokens\": 24, \"sigma\": 0.05, \"seed\": 7, \"session\": \"ship\"}";
+    let short = std::thread::spawn(move || post_generate(addr, short_body));
+    wait_until("a long to be folded out", 15_000, || {
+        metric(&metrics(addr), "fi_folds_total") >= 1
+    });
+
+    // kill home while the folded checkpoint is parked: budget 0 means the
+    // next step's panic quarantines it, and ship_evicted must hand the
+    // checkpoint to the supervisor instead of failing the request with a
+    // 500. (The install replaces the delay, so the re-homed run is fast.)
+    faultpoint::install("engine_step:panic@1").unwrap();
+    wait_until("health to report degraded", 10_000, || {
+        health_status(addr) == (200, "degraded".into())
+    });
+
+    // the evicted long completes on the *other* replica with the exact
+    // uninterrupted checksum; home's busy lanes die structurally
+    let (mut shipped_ok, mut killed) = (0, 0);
+    for t in longs {
+        let (code, body) = t.join().unwrap();
+        match code {
+            200 => {
+                assert_eq!(checksum_of(&body), baseline, "shipped resume must be bit-identical");
+                assert_ne!(replica_of(&body), home, "continuation must re-home: {body}");
+                let tail = Json::parse(&body).unwrap();
+                assert!(
+                    tail.req_usize("evictions").unwrap() >= 2,
+                    "fold + ship are two checkpoint cycles: {body}"
+                );
+                shipped_ok += 1;
+            }
+            500 => {
+                assert!(body.contains("panicked"), "{body}");
+                killed += 1;
+            }
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    assert_eq!(shipped_ok, 1, "exactly the folded lane survives the kill");
+    assert_eq!(killed, b - 1, "the other busy lanes die with the replica");
+    let (code, body) = short.join().unwrap();
+    assert!(code == 200 || code == 500, "unexpected short status {code}: {body}");
+
+    let m = metrics(addr);
+    assert!(metric(&m, "fi_checkpoints_shipped_total") >= 1, "{m}");
+    assert!(metric(&m, "fi_folds_total") >= 1, "{m}");
+    assert!(metric(&m, "fi_resumes_total") >= 1, "the receiver must restore it: {m}");
+
+    // the fleet heals like any other quarantine, and the session key keeps
+    // serving (re-pinned to wherever the router sends it next)
+    wait_until("the quarantined replica to respawn and rejoin", 20_000, || {
+        health_status(addr) == (200, "healthy".into())
+    });
+    let (code, body) = post_generate(addr, long_body);
+    assert_eq!(code, 200, "{body}");
+    assert_eq!(checksum_of(&body), baseline, "the healed fleet must answer identically");
+
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
 // Shed unification and the boot/dispatch fault points
 // ---------------------------------------------------------------------------
 
